@@ -1,0 +1,162 @@
+//! HEP event pipeline: the paper's motivating domain end to end.
+//!
+//! High-energy-physics detectors produce values at hardware precision
+//! (12-bit ADCs), read in hot loops by some algorithms and cold ones by
+//! others. This example composes the §2/§3/§4 machinery the way the paper
+//! intends them to be used together:
+//!
+//! 1. ingest raw hits into a **BitpackIntSoA** view (12-bit storage),
+//! 2. calibrate into an analysis view whose layout **Split**s hot fields
+//!    (SoA) from cold ones (AoS) — with f64 arithmetic stored as f32 via
+//!    **ChangeType**,
+//! 3. run a clustering pass under **FieldAccessCount** to verify the
+//!    layout matches the access pattern,
+//! 4. archive with **Bytesplit** + zstd and report the compression win.
+//!
+//! Run with: `cargo run --release --example hep_event_pipeline`
+
+use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+use llama::compress::{measure_blobs, Codec};
+use llama::extents::{Dyn, RowMajor};
+use llama::mapping::aos::AoS;
+use llama::mapping::bitpack_int::BitpackIntSoA;
+use llama::mapping::bytesplit::Bytesplit;
+use llama::mapping::changetype::ChangeType;
+use llama::mapping::field_access_count::FieldAccessCount;
+use llama::mapping::soa::{MultiBlob, SoA};
+use llama::mapping::split::Split;
+use llama::record::Selection;
+use llama::testing::Rng;
+
+const N: usize = 1 << 15;
+
+llama::record! {
+    /// Raw detector hit: everything integral, at hardware precision.
+    pub struct RawHit, mod raw {
+        adc: u32,     // 12-bit ADC count
+        channel: u32, // 12-bit channel id
+        tdc: u32,     // 12-bit time-to-digital
+    }
+}
+
+llama::record! {
+    /// Calibrated hit, algorithm view (f64 math).
+    pub struct Hit, mod hit {
+        pos: { x: f64, y: f64 },
+        energy: f64,
+        time: f64,
+        channel: i64,
+    }
+}
+
+llama::record! {
+    /// Calibrated hit, storage types (f32/i32 — §3 Changetype).
+    pub struct HitStored, mod _hs {
+        pos: { x: f32, y: f32 },
+        energy: f32,
+        time: f32,
+        channel: i32,
+    }
+}
+
+type Ext = (Dyn<u32>,);
+const HOT: u64 = 0b00111; // pos.x, pos.y, energy -> SoA (clustering reads these)
+const COLD: u64 = 0b11000; // time, channel -> AoS (rarely touched)
+
+fn main() -> anyhow::Result<()> {
+    let e: Ext = (Dyn(N as u32),);
+    let mut rng = Rng::new(2024);
+
+    // ---- 1. ingest: 12-bit packed raw hits --------------------------------
+    let mut raw_view = alloc_view(BitpackIntSoA::<RawHit, _, 12>::new(e), &HeapAlloc);
+    for i in 0..N {
+        raw_view.set(&[i], raw::adc, rng.range_u64(0, 4095) as u32);
+        raw_view.set(&[i], raw::channel, (i % 3072) as u32);
+        raw_view.set(&[i], raw::tdc, rng.range_u64(0, 4095) as u32);
+    }
+    println!(
+        "1. ingested {N} raw hits, 12-bit packed: {} B (u32 SoA would be {} B, saving {:.0}%)",
+        raw_view.storage().total_bytes(),
+        N * 12,
+        100.0 * (1.0 - raw_view.storage().total_bytes() as f64 / (N * 12) as f64)
+    );
+
+    // ---- 2. calibrate into the hot/cold split analysis layout -------------
+    type HotMap = SoA<HitStored, Ext, MultiBlob, RowMajor, HOT>;
+    type ColdMap = AoS<HitStored, Ext, llama::mapping::aos::Aligned, RowMajor, COLD>;
+    let split = Split::new(HotMap::new(e), ColdMap::new(e), Selection::new(0, 3));
+    let storage_mapping = ChangeType::<Hit, HitStored, _>::new(split);
+    let counted = FieldAccessCount::new(storage_mapping);
+    let mut hits = alloc_view(counted, &HeapAlloc);
+
+    for i in 0..N {
+        let adc: u32 = raw_view.get(&[i], raw::adc);
+        let ch: u32 = raw_view.get(&[i], raw::channel);
+        let tdc: u32 = raw_view.get(&[i], raw::tdc);
+        // toy calibration: channel -> (x, y) pad position, adc -> energy
+        hits.set(&[i], hit::pos::x, (ch % 64) as f64 * 0.5 - 16.0);
+        hits.set(&[i], hit::pos::y, (ch / 64) as f64 * 0.5 - 12.0);
+        hits.set(&[i], hit::energy, adc as f64 * 0.0125);
+        hits.set(&[i], hit::time, tdc as f64 * 0.78125);
+        hits.set(&[i], hit::channel, ch as i64);
+    }
+    println!(
+        "2. calibrated into Split(hot pos/energy -> SoA f32 | cold time/channel -> AoS), {} B",
+        hits.storage().total_bytes()
+    );
+
+    // ---- 3. clustering pass under instrumentation -------------------------
+    hits.mapping().reset();
+    let mut clusters = 0usize;
+    let mut total_e = 0.0f64;
+    let threshold = 25.0;
+    for i in 0..N {
+        let e_i: f64 = hits.get(&[i], hit::energy);
+        if e_i < threshold {
+            continue;
+        }
+        // seed found: sum energy of spatial neighbours (toy 1D window)
+        let mut cluster_e = e_i;
+        for j in i.saturating_sub(3)..(i + 4).min(N) {
+            if j != i {
+                let dx: f64 =
+                    hits.get::<f64>(&[i], hit::pos::x) - hits.get::<f64>(&[j], hit::pos::x);
+                if dx.abs() < 1.0 {
+                    cluster_e += hits.get::<f64>(&[j], hit::energy);
+                }
+            }
+        }
+        clusters += 1;
+        total_e += cluster_e;
+    }
+    println!(
+        "3. clustering: {clusters} clusters, mean energy {:.2} — access profile:",
+        total_e / clusters.max(1) as f64
+    );
+    print!("{}", hits.mapping().render_table());
+    let rep = hits.mapping().report();
+    assert!(rep[hit::energy].reads > 0);
+    assert_eq!(rep[3].reads, 0, "cold field 'time' must not be touched by clustering");
+
+    // ---- 4. archive: Bytesplit + zstd --------------------------------------
+    let mut archive = alloc_view(Bytesplit::<HitStored, _>::new(e), &HeapAlloc);
+    for i in 0..N {
+        archive.set(&[i], hit::pos::x, hits.get::<f64>(&[i], hit::pos::x) as f32);
+        archive.set(&[i], hit::pos::y, hits.get::<f64>(&[i], hit::pos::y) as f32);
+        archive.set(&[i], hit::energy, hits.get::<f64>(&[i], hit::energy) as f32);
+        archive.set(&[i], hit::time, hits.get::<f64>(&[i], hit::time) as f32);
+        archive.set(&[i], hit::channel, hits.get::<i64>(&[i], hit::channel) as i32);
+    }
+    let blobs: Vec<&[u8]> =
+        (0..archive.storage().blob_count()).map(|b| archive.storage().blob(b)).collect();
+    let stat = measure_blobs(&blobs, Codec::Zstd)?;
+    println!(
+        "4. archived via Bytesplit+zstd: {} -> {} B (ratio {:.2})",
+        stat.raw,
+        stat.compressed,
+        stat.ratio()
+    );
+
+    println!("\npipeline OK");
+    Ok(())
+}

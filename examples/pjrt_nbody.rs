@@ -1,0 +1,203 @@
+//! End-to-end driver (experiment E9): the full three-layer stack on a real
+//! workload.
+//!
+//! Loads the AOT-compiled JAX/Pallas n-body artifacts (L1 Pallas kernel
+//! inside an L2 jax step, lowered to HLO text by `make artifacts`),
+//! executes 200 steps over 1024 particles through the Rust coordinator's
+//! PJRT service (L3), for every layout variant — reporting throughput,
+//! latency per step and energy drift, then cross-checks the final state
+//! against the native Rust integrator.
+//!
+//! Run with: `make e2e` (or `cargo run --release --example pjrt_nbody`)
+
+use std::time::Instant;
+
+use llama::coordinator::{Backend, Config, Coordinator, JobSpec, Layout};
+use llama::nbody::{init_particles, manual::SoaSim, total_energy};
+use llama::runtime::{default_artifacts_dir, PjrtService, TensorF32};
+
+const N: usize = 1024;
+const STEPS: usize = 200;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== E2E: AOT Pallas/JAX n-body through PJRT (n={N}, {STEPS} steps) ===\n");
+    let service = PjrtService::spawn(default_artifacts_dir())?;
+    println!("PJRT platform: {}", service.platform());
+
+    for layout in [Layout::SoaMb, Layout::Aos, Layout::Aosoa, Layout::Bf16] {
+        let artifact = layout.artifact();
+        if !service.artifact_available(artifact) {
+            println!("{:>9}: artifact missing — run `make artifacts`", layout.name());
+            continue;
+        }
+        let t0 = Instant::now();
+        service.load(artifact)?;
+        let compile = t0.elapsed();
+
+        // Drive the steps directly for per-step latency stats.
+        let init = init_particles(N, 42);
+        let e0 = total_energy(&init);
+        let sim = SoaSim::new(&init);
+        let mut state: Vec<TensorF32> =
+            [&sim.px, &sim.py, &sim.pz, &sim.vx, &sim.vy, &sim.vz, &sim.mass]
+                .into_iter()
+                .map(|v| TensorF32::vec(v.clone()))
+                .collect();
+
+        // The SoA-shaped artifacts take 7 arrays; AoS/AoSoA take one tensor.
+        let t0 = Instant::now();
+        let mut lat_min = f64::MAX;
+        let mut lat_max: f64 = 0.0;
+        match layout {
+            Layout::SoaMb | Layout::Bf16 => {
+                for _ in 0..STEPS {
+                    let t = Instant::now();
+                    let out = service.execute_f32(artifact, &state)?;
+                    let dt = t.elapsed().as_secs_f64();
+                    lat_min = lat_min.min(dt);
+                    lat_max = lat_max.max(dt);
+                    let mass = state[6].clone();
+                    state = out;
+                    state.push(mass);
+                }
+            }
+            Layout::Aos => {
+                let mut data = Vec::with_capacity(N * 7);
+                for i in 0..N {
+                    for f in 0..7 {
+                        data.push(match f {
+                            0 => sim.px[i],
+                            1 => sim.py[i],
+                            2 => sim.pz[i],
+                            3 => sim.vx[i],
+                            4 => sim.vy[i],
+                            5 => sim.vz[i],
+                            _ => sim.mass[i],
+                        });
+                    }
+                }
+                let mut t_state = TensorF32::new(data, vec![N, 7]);
+                for _ in 0..STEPS {
+                    let t = Instant::now();
+                    t_state = service.execute_f32(artifact, &[t_state])?.remove(0);
+                    let dt = t.elapsed().as_secs_f64();
+                    lat_min = lat_min.min(dt);
+                    lat_max = lat_max.max(dt);
+                }
+                // convert back to SoA-style state for the energy check
+                for f in 0..6 {
+                    for i in 0..N {
+                        state[f].data[i] = t_state.data[i * 7 + f];
+                    }
+                }
+            }
+            Layout::Aosoa => {
+                const L: usize = 8;
+                let mut data = vec![0.0f32; N * 7];
+                for i in 0..N {
+                    let (b, k) = (i / L, i % L);
+                    let fields =
+                        [sim.px[i], sim.py[i], sim.pz[i], sim.vx[i], sim.vy[i], sim.vz[i], sim.mass[i]];
+                    for (f, v) in fields.iter().enumerate() {
+                        data[b * 7 * L + f * L + k] = *v;
+                    }
+                }
+                let mut t_state = TensorF32::new(data, vec![N / L, 7, L]);
+                for _ in 0..STEPS {
+                    let t = Instant::now();
+                    t_state = service.execute_f32(artifact, &[t_state])?.remove(0);
+                    let dt = t.elapsed().as_secs_f64();
+                    lat_min = lat_min.min(dt);
+                    lat_max = lat_max.max(dt);
+                }
+                for f in 0..6 {
+                    for i in 0..N {
+                        let (b, k) = (i / L, i % L);
+                        state[f].data[i] = t_state.data[b * 7 * L + f * L + k];
+                    }
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        let finals: Vec<llama::nbody::ParticleData> = (0..N)
+            .map(|i| llama::nbody::ParticleData {
+                pos: llama::nbody::PVec {
+                    x: state[0].data[i],
+                    y: state[1].data[i],
+                    z: state[2].data[i],
+                },
+                vel: llama::nbody::PVec {
+                    x: state[3].data[i],
+                    y: state[4].data[i],
+                    z: state[5].data[i],
+                },
+                mass: sim.mass[i],
+            })
+            .collect();
+        let e1 = total_energy(&finals);
+        println!(
+            "{:>9}: compile {:>7.2?}, {STEPS} steps in {wall:.3}s -> {:>7.1} steps/s, \
+             {:.1}M interactions/s, latency/step [{:.2}ms..{:.2}ms], energy drift {:.2e}",
+            layout.name(),
+            compile,
+            STEPS as f64 / wall,
+            (N * N) as f64 * STEPS as f64 / wall / 1e6,
+            lat_min * 1e3,
+            lat_max * 1e3,
+            ((e1 - e0) / e0).abs()
+        );
+    }
+
+    // Cross-check against the native integrator (10 steps, SoA artifact).
+    println!("\ncross-check vs native Rust integrator (10 steps):");
+    let init = init_particles(N, 7);
+    let mut native = SoaSim::new(&init);
+    for _ in 0..10 {
+        native.update_scalar();
+        native.move_scalar();
+    }
+    let mut state: Vec<TensorF32> = {
+        let s = SoaSim::new(&init);
+        [&s.px, &s.py, &s.pz, &s.vx, &s.vy, &s.vz, &s.mass]
+            .into_iter()
+            .map(|v| TensorF32::vec(v.clone()))
+            .collect()
+    };
+    for _ in 0..10 {
+        let out = service.execute_f32("nbody_soa", &state)?;
+        let mass = state[6].clone();
+        state = out;
+        state.push(mass);
+    }
+    let max_d = native
+        .px
+        .iter()
+        .zip(&state[0].data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("  max |Δpos.x| PJRT vs native after 10 steps: {max_d:.2e}");
+    assert!(max_d < 1e-4, "PJRT and native diverged");
+
+    // And run the same through the coordinator as batched jobs.
+    println!("\ncoordinator path (4 batched PJRT jobs):");
+    let mut coord =
+        Coordinator::start(Config { workers: 2, max_batch: 4, engine: Some(service) });
+    let mut specs = Vec::new();
+    for _ in 0..4 {
+        let mut s = JobSpec {
+            id: 0,
+            layout: Layout::SoaMb,
+            backend: Backend::Pjrt,
+            n: N,
+            steps: 20,
+            seed: 3,
+        };
+        s.id = coord.submit(s.clone());
+        specs.push(s);
+    }
+    let results = coord.finish();
+    print!("{}", llama::coordinator::render_results(&specs, &results));
+    println!("\nE2E OK");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+"""AOT lowering: JAX/Pallas models -> HLO text artifacts for the Rust side.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--n 1024]
+(from the python/ directory; ``make artifacts`` does this.)
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path, donate_argnums=()):
+    """jit + lower fn at example_args and write HLO text to path."""
+    jitted = jax.jit(fn, donate_argnums=donate_argnums)
+    lowered = jitted.lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# name -> (model fn, example-args builder, donate_argnums)
+VARIANTS = {
+    "nbody_soa": (model.model_nbody_soa, model.soa_example_args, ()),
+    "nbody_aos": (model.model_nbody_aos, model.aos_example_args, ()),
+    "nbody_aosoa": (model.model_nbody_aosoa, model.aosoa_example_args, ()),
+    "nbody_bf16": (model.model_nbody_bf16, model.soa_example_args, ()),
+    "bitpack_roundtrip": (model.model_bitpack_roundtrip, model.bitpack_example_args, ()),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--n", type=int, default=1024, help="particle count baked into the artifacts")
+    ap.add_argument("--only", nargs="*", default=None, help="subset of variant names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or list(VARIANTS)
+    for name in names:
+        fn, example, donate = VARIANTS[name]
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        size = lower_to_file(fn, example(args.n), path, donate)
+        print(f"wrote {path} ({size} chars, n={args.n})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,286 @@
+"""L1 Pallas kernels: the n-body hot spot, one kernel per memory layout.
+
+TPU adaptation of the paper's CPU-SIMD/GPU framing (DESIGN.md
+§Hardware-Adaptation): the i-particles are tiled to VMEM via BlockSpec
+(TILE_I per grid step), the j-particles stream through VMEM in TILE_J
+chunks inside a ``fori_loop``, and each (TILE_I, TILE_J) interaction block
+is a broadcast outer computation that maps onto the VPU lanes. The memory
+layout (SoA / AoS / AoSoA) only changes how the refs are sliced — the
+arithmetic is shared, mirroring how the Rust views share one routine.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls; numerics are validated against
+``ref.py`` either way.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS2, NFIELDS, TIMESTEP
+
+# i-tile resident in VMEM per grid step; j streamed in TILE_J chunks.
+TILE_I = 128
+TILE_J = 128
+
+
+def _interaction_block(pix, piy, piz, pjx, pjy, pjz, mj):
+    """(TI,) i-particles x (TJ,) j-particles -> (TI,) accelerations."""
+    dx = pjx[None, :] - pix[:, None]
+    dy = pjy[None, :] - piy[:, None]
+    dz = pjz[None, :] - piz[:, None]
+    dist_sqr = EPS2 + dx * dx + dy * dy + dz * dz
+    inv_dist_cube = 1.0 / jnp.sqrt(dist_sqr) ** 3
+    sts = mj[None, :] * inv_dist_cube * TIMESTEP
+    return (
+        jnp.sum(dx * sts, axis=1),
+        jnp.sum(dy * sts, axis=1),
+        jnp.sum(dz * sts, axis=1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SoA: seven (n,) arrays
+# ---------------------------------------------------------------------------
+
+
+def _update_soa_kernel(pxi, pyi, pzi, vxi, vyi, vzi, pxj, pyj, pzj, mj, ovx, ovy, ovz):
+    """One i-tile of the update; j-arrays are full-length refs."""
+    n = pxj.shape[0]
+    pix, piy, piz = pxi[...], pyi[...], pzi[...]
+
+    def body(jt, acc):
+        ax, ay, az = acc
+        sl = pl.dslice(jt * TILE_J, TILE_J)
+        bx, by, bz = _interaction_block(
+            pix, piy, piz, pxj[sl], pyj[sl], pzj[sl], mj[sl]
+        )
+        return ax + bx, ay + by, az + bz
+
+    zero = jnp.zeros_like(pix)
+    ax, ay, az = jax.lax.fori_loop(0, n // TILE_J, body, (zero, zero, zero))
+    ovx[...] = vxi[...] + ax
+    ovy[...] = vyi[...] + ay
+    ovz[...] = vzi[...] + az
+
+
+def update_soa(px, py, pz, vx, vy, vz, mass):
+    """Velocity update over SoA arrays ((n,) each, n % TILE == 0)."""
+    n = px.shape[0]
+    assert n % TILE_I == 0 and n % TILE_J == 0, n
+    tile = lambda: pl.BlockSpec((TILE_I,), lambda i: (i,))
+    full = lambda: pl.BlockSpec((n,), lambda i: (0,))
+    out = jax.ShapeDtypeStruct((n,), px.dtype)
+    return pl.pallas_call(
+        _update_soa_kernel,
+        grid=(n // TILE_I,),
+        in_specs=[tile(), tile(), tile(), tile(), tile(), tile(), full(), full(), full(), full()],
+        out_specs=[tile(), tile(), tile()],
+        out_shape=[out, out, out],
+        interpret=True,
+    )(px, py, pz, vx, vy, vz, px, py, pz, mass)
+
+
+def _move_kernel(p, v, o):
+    o[...] = p[...] + v[...] * TIMESTEP
+
+
+def move_axis(p, v):
+    """Move one coordinate axis: p += v * dt ((n,) arrays)."""
+    n = p.shape[0]
+    tile = pl.BlockSpec((TILE_I,), lambda i: (i,))
+    return pl.pallas_call(
+        _move_kernel,
+        grid=(n // TILE_I,),
+        in_specs=[tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((n,), p.dtype),
+        interpret=True,
+    )(p, v)
+
+
+def step_soa(px, py, pz, vx, vy, vz, mass):
+    """One full step (update + move) over SoA arrays."""
+    vx, vy, vz = update_soa(px, py, pz, vx, vy, vz, mass)
+    return move_axis(px, vx), move_axis(py, vy), move_axis(pz, vz), vx, vy, vz
+
+
+# ---------------------------------------------------------------------------
+# AoS: one (n, 7) array
+# ---------------------------------------------------------------------------
+
+
+def _update_aos_kernel(tile_ref, all_ref, out_ref):
+    """i-tile (TILE_I, 7); j from the full (n, 7) array.
+
+    The column slices below are the AoS strided loads: on real hardware
+    these are the transpose-on-load the paper's AoS numbers pay for.
+    """
+    n = all_ref.shape[0]
+    pix = tile_ref[:, 0]
+    piy = tile_ref[:, 1]
+    piz = tile_ref[:, 2]
+
+    def body(jt, acc):
+        ax, ay, az = acc
+        sl = pl.dslice(jt * TILE_J, TILE_J)
+        blk = all_ref[sl, :]  # (TILE_J, 7) strided gather per column
+        bx, by, bz = _interaction_block(
+            pix, piy, piz, blk[:, 0], blk[:, 1], blk[:, 2], blk[:, 6]
+        )
+        return ax + bx, ay + by, az + bz
+
+    zero = jnp.zeros_like(pix)
+    ax, ay, az = jax.lax.fori_loop(0, n // TILE_J, body, (zero, zero, zero))
+    newv = jnp.stack(
+        [tile_ref[:, 3] + ax, tile_ref[:, 4] + ay, tile_ref[:, 5] + az], axis=1
+    )
+    out_ref[...] = jnp.concatenate(
+        [tile_ref[:, 0:3], newv, tile_ref[:, 6:7]], axis=1
+    )
+
+
+def update_aos(particles):
+    """Velocity update over an (n, 7) AoS array; returns the new (n, 7)."""
+    n = particles.shape[0]
+    assert particles.shape[1] == NFIELDS
+    tile = pl.BlockSpec((TILE_I, NFIELDS), lambda i: (i, 0))
+    full = pl.BlockSpec((n, NFIELDS), lambda i: (0, 0))
+    return pl.pallas_call(
+        _update_aos_kernel,
+        grid=(n // TILE_I,),
+        in_specs=[tile, full],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((n, NFIELDS), particles.dtype),
+        interpret=True,
+    )(particles, particles)
+
+
+def _move_aos_kernel(tile_ref, out_ref):
+    pos = tile_ref[:, 0:3] + tile_ref[:, 3:6] * TIMESTEP
+    out_ref[...] = jnp.concatenate([pos, tile_ref[:, 3:7]], axis=1)
+
+
+def move_aos(particles):
+    """Move step over an (n, 7) AoS array."""
+    n = particles.shape[0]
+    tile = pl.BlockSpec((TILE_I, NFIELDS), lambda i: (i, 0))
+    return pl.pallas_call(
+        _move_aos_kernel,
+        grid=(n // TILE_I,),
+        in_specs=[tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((n, NFIELDS), particles.dtype),
+        interpret=True,
+    )(particles)
+
+
+def step_aos(particles):
+    """One full AoS step."""
+    return move_aos(update_aos(particles))
+
+
+# ---------------------------------------------------------------------------
+# AoSoA: (nb, 7, L)
+# ---------------------------------------------------------------------------
+
+LANES = 8
+
+
+def _update_aosoa_kernel(tile_ref, all_ref, out_ref):
+    """i-tile (TB, 7, L) viewed as TB*L contiguous lanes; j from the full
+    (nb, 7, L) array, block by block (the layout's natural traversal)."""
+    tb = tile_ref.shape[0]
+    nb = all_ref.shape[0]
+    pix = tile_ref[:, 0, :].reshape(tb * LANES)
+    piy = tile_ref[:, 1, :].reshape(tb * LANES)
+    piz = tile_ref[:, 2, :].reshape(tb * LANES)
+
+    jblocks = TILE_J // LANES
+
+    def body(jt, acc):
+        ax, ay, az = acc
+        sl = pl.dslice(jt * jblocks, jblocks)
+        blk = all_ref[sl, :, :]  # (jblocks, 7, L)
+        bx, by, bz = _interaction_block(
+            pix,
+            piy,
+            piz,
+            blk[:, 0, :].reshape(jblocks * LANES),
+            blk[:, 1, :].reshape(jblocks * LANES),
+            blk[:, 2, :].reshape(jblocks * LANES),
+            blk[:, 6, :].reshape(jblocks * LANES),
+        )
+        return ax + bx, ay + by, az + bz
+
+    zero = jnp.zeros_like(pix)
+    ax, ay, az = jax.lax.fori_loop(0, nb // jblocks, body, (zero, zero, zero))
+    newv = jnp.stack(
+        [
+            tile_ref[:, 3, :] + ax.reshape(tb, LANES),
+            tile_ref[:, 4, :] + ay.reshape(tb, LANES),
+            tile_ref[:, 5, :] + az.reshape(tb, LANES),
+        ],
+        axis=1,
+    )
+    out_ref[...] = jnp.concatenate(
+        [tile_ref[:, 0:3, :], newv, tile_ref[:, 6:7, :]], axis=1
+    )
+
+
+def update_aosoa(blocks):
+    """Velocity update over an (nb, 7, LANES) AoSoA array."""
+    nb = blocks.shape[0]
+    assert blocks.shape[1:] == (NFIELDS, LANES)
+    tb = TILE_I // LANES
+    assert nb % tb == 0
+    tile = pl.BlockSpec((tb, NFIELDS, LANES), lambda i: (i, 0, 0))
+    full = pl.BlockSpec((nb, NFIELDS, LANES), lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        _update_aosoa_kernel,
+        grid=(nb // tb,),
+        in_specs=[tile, full],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
+        interpret=True,
+    )(blocks, blocks)
+
+
+def _move_aosoa_kernel(tile_ref, out_ref):
+    pos = tile_ref[:, 0:3, :] + tile_ref[:, 3:6, :] * TIMESTEP
+    out_ref[...] = jnp.concatenate([pos, tile_ref[:, 3:7, :]], axis=1)
+
+
+def move_aosoa(blocks):
+    """Move step over an (nb, 7, LANES) AoSoA array."""
+    nb = blocks.shape[0]
+    tb = TILE_I // LANES
+    tile = pl.BlockSpec((tb, NFIELDS, LANES), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _move_aosoa_kernel,
+        grid=(nb // tb,),
+        in_specs=[tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
+        interpret=True,
+    )(blocks)
+
+
+def step_aosoa(blocks):
+    """One full AoSoA step."""
+    return move_aosoa(update_aosoa(blocks))
+
+
+# ---------------------------------------------------------------------------
+# Changetype: bf16 storage, f32 compute (§3 Changetype / TPU-native pairing)
+# ---------------------------------------------------------------------------
+
+
+def step_changetype_bf16(px, py, pz, vx, vy, vz, mass):
+    """One step with bf16 storage semantics: f32 in/out at the API (the
+    PJRT boundary feeds f32), every array rounds through bf16 at the
+    storage boundary, compute in f32 — the Changetype mapping."""
+    stored = [a.astype(jnp.bfloat16).astype(jnp.float32) for a in (px, py, pz, vx, vy, vz, mass)]
+    px, py, pz, vx, vy, vz, mass = stored
+    out = step_soa(px, py, pz, vx, vy, vz, mass)
+    return tuple(a.astype(jnp.bfloat16).astype(jnp.float32) for a in out)

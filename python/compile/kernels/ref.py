@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package is checked against these references by
+``python/tests/test_kernels.py`` (exact or tight-tolerance allclose).
+The n-body math mirrors ``rust/src/nbody/mod.rs::pp_interaction`` so L1
+and L3 integrate the same system.
+"""
+
+import jax.numpy as jnp
+
+TIMESTEP = 1e-4
+EPS2 = 0.01
+
+# Field order of the AoS / AoSoA layouts (matches the Rust Particle record).
+FIELDS = ("pos_x", "pos_y", "pos_z", "vel_x", "vel_y", "vel_z", "mass")
+NFIELDS = len(FIELDS)
+
+
+def nbody_update_ref(px, py, pz, vx, vy, vz, mass):
+    """All-pairs gravity velocity update (SoA arrays of shape (n,))."""
+    dx = px[None, :] - px[:, None]
+    dy = py[None, :] - py[:, None]
+    dz = pz[None, :] - pz[:, None]
+    dist_sqr = EPS2 + dx * dx + dy * dy + dz * dz
+    inv_dist_cube = 1.0 / jnp.sqrt(dist_sqr) ** 3
+    sts = mass[None, :] * inv_dist_cube * TIMESTEP
+    ax = jnp.sum(dx * sts, axis=1)
+    ay = jnp.sum(dy * sts, axis=1)
+    az = jnp.sum(dz * sts, axis=1)
+    return vx + ax, vy + ay, vz + az
+
+
+def nbody_move_ref(px, py, pz, vx, vy, vz):
+    """Position integration (memory-bound move step)."""
+    return px + vx * TIMESTEP, py + vy * TIMESTEP, pz + vz * TIMESTEP
+
+
+def nbody_step_ref(px, py, pz, vx, vy, vz, mass):
+    """One full step: update then move."""
+    vx, vy, vz = nbody_update_ref(px, py, pz, vx, vy, vz, mass)
+    px, py, pz = nbody_move_ref(px, py, pz, vx, vy, vz)
+    return px, py, pz, vx, vy, vz
+
+
+def aos_to_soa(particles):
+    """(n, 7) AoS array -> tuple of 7 (n,) arrays."""
+    return tuple(particles[:, f] for f in range(NFIELDS))
+
+
+def soa_to_aos(cols):
+    """tuple of 7 (n,) arrays -> (n, 7)."""
+    return jnp.stack(cols, axis=1)
+
+
+def aosoa_to_soa(blocks):
+    """(nb, 7, L) AoSoA array -> tuple of 7 (nb*L,) arrays."""
+    nb, nf, lanes = blocks.shape
+    assert nf == NFIELDS
+    return tuple(blocks[:, f, :].reshape(nb * lanes) for f in range(NFIELDS))
+
+
+def soa_to_aosoa(cols, lanes):
+    """tuple of 7 (n,) arrays -> (n//lanes, 7, lanes)."""
+    n = cols[0].shape[0]
+    assert n % lanes == 0
+    return jnp.stack([c.reshape(n // lanes, lanes) for c in cols], axis=1)
+
+
+def changetype_step_ref(px, py, pz, vx, vy, vz, mass):
+    """One step where *storage* is bfloat16 but compute is f32 — the
+    Changetype mapping (§3): values round through bf16 at the memory
+    boundary, exactly once per load/store."""
+    stored = [a.astype(jnp.bfloat16) for a in (px, py, pz, vx, vy, vz, mass)]
+    loaded = [a.astype(jnp.float32) for a in stored]
+    out = nbody_step_ref(*loaded)
+    return tuple(a.astype(jnp.bfloat16).astype(jnp.float32) for a in out)
+
+
+# -- BitpackIntSoA reference (uint32 words, little-endian bit order) --------
+
+
+def bitpack_ref(values, bits):
+    """Pack (n,) uint32 values of `bits` bits each into uint32 words.
+
+    Bit i*bits..(i+1)*bits of the stream holds value i, LSB-first within
+    words — the same convention as rust's mapping::bitpack_int.
+    """
+    import numpy as np
+
+    values = np.asarray(values, dtype=np.uint64)
+    n = len(values)
+    total_bits = n * bits
+    nwords = (total_bits + 31) // 32
+    words = np.zeros(nwords + 1, dtype=np.uint64)  # +1 spill
+    mask = (1 << bits) - 1
+    for i, v in enumerate(values):
+        v &= mask
+        bit = i * bits
+        w, off = bit // 32, bit % 32
+        words[w] |= (v << off) & 0xFFFFFFFF
+        spill = v >> (32 - off) if off + bits > 32 else 0
+        words[w + 1] |= spill
+    return jnp.asarray(words[:nwords], dtype=jnp.uint32)
+
+
+def bitunpack_ref(words, n, bits):
+    """Inverse of :func:`bitpack_ref`: extract n values of `bits` bits."""
+    import numpy as np
+
+    words = np.asarray(words, dtype=np.uint64)
+    out = np.zeros(n, dtype=np.uint64)
+    mask = (1 << bits) - 1
+    for i in range(n):
+        bit = i * bits
+        w, off = bit // 32, bit % 32
+        v = words[w] >> off
+        if off + bits > 32 and w + 1 < len(words):
+            v |= words[w + 1] << (32 - off)
+        out[i] = v & mask
+    return jnp.asarray(out, dtype=jnp.uint32)

@@ -1,0 +1,76 @@
+"""L2: the JAX compute graph — n-body simulation steps per memory layout.
+
+Each ``model_*`` function is the jit-able computation the Rust coordinator
+executes through PJRT. They call the L1 Pallas kernels (``kernels.nbody``,
+``kernels.bitpack``) so the kernels lower into the same HLO module.
+Returns are tuples (lowered with ``return_tuple=True`` for the rust side's
+``to_tuple()``).
+
+Buffer donation note (perf §L2): positions/velocities are donated at the
+jit boundary in ``aot.py`` where supported; the step functions are written
+state-in/state-out to make that legal.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bitpack, nbody
+from .kernels.ref import NFIELDS
+
+
+def model_nbody_soa(px, py, pz, vx, vy, vz, mass):
+    """One n-body step over SoA arrays: 7 in, 6 out (mass is constant)."""
+    px, py, pz, vx, vy, vz = nbody.step_soa(px, py, pz, vx, vy, vz, mass)
+    return (px, py, pz, vx, vy, vz)
+
+
+def model_nbody_aos(particles):
+    """One n-body step over an (n, 7) AoS array."""
+    return (nbody.step_aos(particles),)
+
+
+def model_nbody_aosoa(blocks):
+    """One n-body step over an (nb, 7, 8) AoSoA array."""
+    return (nbody.step_aosoa(blocks),)
+
+
+def model_nbody_bf16(px, py, pz, vx, vy, vz, mass):
+    """One n-body step with bf16 storage semantics (Changetype)."""
+    return tuple(nbody.step_changetype_bf16(px, py, pz, vx, vy, vz, mass))
+
+
+def model_bitpack_roundtrip(words):
+    """Increment BITS-bit packed values (n inferred from word count)."""
+    n = words.shape[0] * 32 // bitpack.BITS
+    return (bitpack.bitpack_increment(words, n),)
+
+
+def soa_example_args(n, dtype=jnp.float32):
+    """ShapeDtypeStructs for the SoA model of size n."""
+    import jax
+
+    a = jax.ShapeDtypeStruct((n,), dtype)
+    return (a,) * 7
+
+
+def aos_example_args(n, dtype=jnp.float32):
+    """ShapeDtypeStructs for the AoS model of size n."""
+    import jax
+
+    return (jax.ShapeDtypeStruct((n, NFIELDS), dtype),)
+
+
+def aosoa_example_args(n, dtype=jnp.float32):
+    """ShapeDtypeStructs for the AoSoA model of size n."""
+    import jax
+
+    assert n % nbody.LANES == 0
+    return (jax.ShapeDtypeStruct((n // nbody.LANES, NFIELDS, nbody.LANES), dtype),)
+
+
+def bitpack_example_args(n):
+    """ShapeDtypeStructs for the bitpack model of n values."""
+    import jax
+
+    assert n * bitpack.BITS % 32 == 0, "choose n with whole-word packing"
+    nwords = n * bitpack.BITS // 32
+    return (jax.ShapeDtypeStruct((nwords,), jnp.uint32),)

@@ -1,0 +1,171 @@
+//! Experiment E7 — §3 BitpackIntSoA / BitpackFloatSoA / Changetype:
+//! storage saved vs access cost.
+//!
+//! Paper claims: bit-packing trades pack/unpack arithmetic for storage;
+//! "a mere change of the storage data type is computationally more
+//! efficient, because the hardware may have appropriate conversion
+//! instructions" (Changetype vs Bitpack). We sweep integer bit counts and
+//! float (exp, man) configs, reporting bytes + ns/access, with plain SoA
+//! and ChangeType rows as baselines.
+//!
+//! Run: `cargo bench --bench bitpack`
+
+use llama::bench::{black_box, Bencher};
+use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+use llama::extents::Dyn;
+use llama::mapping::bitpack_float::BitpackFloatSoA;
+use llama::mapping::bitpack_int::BitpackIntSoA;
+use llama::mapping::changetype::ChangeType;
+use llama::mapping::soa::SoA;
+use llama::record::F16;
+use llama::testing::Rng;
+
+llama::record! {
+    pub struct Hits, mod hits {
+        adc: u32,
+    }
+}
+
+llama::record! {
+    pub struct Vals, mod vals {
+        v: f64,
+    }
+}
+
+llama::record! {
+    pub struct ValsF32, mod _vals32 {
+        v: f32,
+    }
+}
+
+llama::record! {
+    pub struct ValsF16, mod _vals16 {
+        v: F16,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 1 << 13 } else { 1 << 16 };
+    let mut rng = Rng::new(5);
+    let ints: Vec<u32> = (0..n).map(|_| rng.range_u64(0, (1 << 12) - 1) as u32).collect();
+    let floats: Vec<f64> = (0..n).map(|_| rng.f64_range(-100.0, 100.0)).collect();
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 9) };
+
+    println!("E7: bitpack/changetype storage-vs-speed, n={n}\n");
+    println!("-- integers (12-bit ADC values stored in u32 fields) --");
+    println!("{:>22} {:>12}", "mapping", "bytes");
+
+    // Storage table.
+    macro_rules! int_row {
+        ($name:expr, $m:expr) => {{
+            let v = alloc_view($m, &HeapAlloc);
+            println!("{:>22} {:>12}", $name, v.storage().total_bytes());
+        }};
+    }
+    let e = (Dyn(n as u32),);
+    int_row!("SoA u32", SoA::<Hits, _>::new(e));
+    int_row!("BitpackIntSoA<26>", BitpackIntSoA::<Hits, _, 26>::new(e));
+    int_row!("BitpackIntSoA<17>", BitpackIntSoA::<Hits, _, 17>::new(e));
+    int_row!("BitpackIntSoA<12>", BitpackIntSoA::<Hits, _, 12>::new(e));
+    int_row!("BitpackIntSoA<7>", BitpackIntSoA::<Hits, _, 7>::new(e));
+    println!();
+
+    // Speed: sum all values through each mapping.
+    {
+        let mut v = alloc_view(SoA::<Hits, _>::new(e), &HeapAlloc);
+        for (i, &x) in ints.iter().enumerate() {
+            v.set(&[i], hits::adc, x);
+        }
+        b.bench("load u32 SoA", n as u64, || {
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc += v.get::<u32>(&[i], hits::adc) as u64;
+            }
+            black_box(acc);
+        });
+    }
+    macro_rules! int_speed {
+        ($name:expr, $bits:literal) => {{
+            let mut v = alloc_view(BitpackIntSoA::<Hits, _, $bits>::new(e), &HeapAlloc);
+            for (i, &x) in ints.iter().enumerate() {
+                v.set(&[i], hits::adc, x);
+            }
+            b.bench($name, n as u64, || {
+                let mut acc = 0u64;
+                for i in 0..n {
+                    acc += v.get::<u32>(&[i], hits::adc) as u64;
+                }
+                black_box(acc);
+            });
+        }};
+    }
+    int_speed!("load bitpack 26b", 26);
+    int_speed!("load bitpack 17b", 17);
+    int_speed!("load bitpack 12b", 12);
+    int_speed!("load bitpack 7b", 7);
+    println!("{}", b.render_table("integer load cost", Some("load u32 SoA")));
+
+    // -- floats --
+    println!("-- floats (f64 algorithm type) --");
+    println!("{:>26} {:>12}", "mapping", "bytes");
+    macro_rules! float_row {
+        ($name:expr, $m:expr) => {{
+            let v = alloc_view($m, &HeapAlloc);
+            println!("{:>26} {:>12}", $name, v.storage().total_bytes());
+        }};
+    }
+    float_row!("SoA f64", SoA::<Vals, _>::new(e));
+    float_row!("BitpackFloatSoA e11m52", BitpackFloatSoA::<Vals, _, 11, 52>::new(e));
+    float_row!("BitpackFloatSoA e8m23", BitpackFloatSoA::<Vals, _, 8, 23>::new(e));
+    float_row!("BitpackFloatSoA e8m7", BitpackFloatSoA::<Vals, _, 8, 7>::new(e));
+    float_row!("BitpackFloatSoA e5m10", BitpackFloatSoA::<Vals, _, 5, 10>::new(e));
+    float_row!("ChangeType f64->f32", ChangeType::<Vals, ValsF32, _>::new(SoA::<ValsF32, _>::new(e)));
+    float_row!("ChangeType f64->f16", ChangeType::<Vals, ValsF16, _>::new(SoA::<ValsF16, _>::new(e)));
+    println!();
+
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 9) };
+    {
+        let mut v = alloc_view(SoA::<Vals, _>::new(e), &HeapAlloc);
+        for (i, &x) in floats.iter().enumerate() {
+            v.set(&[i], vals::v, x);
+        }
+        b.bench("load f64 SoA", n as u64, || {
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                acc += v.get::<f64>(&[i], vals::v);
+            }
+            black_box(acc);
+        });
+    }
+    macro_rules! float_speed {
+        ($name:expr, $m:expr) => {{
+            let mut v = alloc_view($m, &HeapAlloc);
+            for (i, &x) in floats.iter().enumerate() {
+                v.set(&[i], vals::v, x);
+            }
+            b.bench($name, n as u64, || {
+                let mut acc = 0.0f64;
+                for i in 0..n {
+                    acc += v.get::<f64>(&[i], vals::v);
+                }
+                black_box(acc);
+            });
+        }};
+    }
+    float_speed!("load bitpack e8m23", BitpackFloatSoA::<Vals, _, 8, 23>::new(e));
+    float_speed!("load bitpack e5m10", BitpackFloatSoA::<Vals, _, 5, 10>::new(e));
+    float_speed!(
+        "load changetype f32",
+        ChangeType::<Vals, ValsF32, _>::new(SoA::<ValsF32, _>::new(e))
+    );
+    float_speed!(
+        "load changetype f16",
+        ChangeType::<Vals, ValsF16, _>::new(SoA::<ValsF16, _>::new(e))
+    );
+    println!("{}", b.render_table("float load cost", Some("load f64 SoA")));
+    println!(
+        "expected shape (paper §3): changetype-f32 ≈ plain load (hardware cvt);\n\
+         bitpack pays shift/mask on every access; both save the same storage at 32 bits."
+    );
+}

@@ -1,0 +1,113 @@
+//! Experiment E6 — §3 Bytesplit: compression-ratio study.
+//!
+//! Paper claim: splitting values into byte planes colocates zero bytes and
+//! improves compression of small-valued data. We sweep value magnitude
+//! (bits of entropy per u32/u64 field) × layout (AoS, SoA, Bytesplit) ×
+//! codec (RLE, DEFLATE, zstd) and also measure the access-time cost
+//! Bytesplit pays for its scattered bytes.
+//!
+//! Run: `cargo bench --bench bytesplit`
+
+use llama::bench::{black_box, Bencher};
+use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+use llama::compress::{measure_blobs, Codec};
+use llama::extents::Dyn;
+use llama::mapping::aos::AoS;
+use llama::mapping::bytesplit::Bytesplit;
+use llama::mapping::soa::SoA;
+use llama::mapping::MemoryAccess;
+use llama::testing::Rng;
+use llama::view::View;
+
+llama::record! {
+    pub struct Event, mod ev {
+        adc: u32,
+        channel: u16,
+        time: u64,
+        energy: f32,
+    }
+}
+
+fn fill<M: MemoryAccess<Event>, S: BlobStorage>(
+    v: &mut View<Event, M, S>,
+    n: usize,
+    value_bits: u32,
+) {
+    let mut rng = Rng::new(17);
+    for i in 0..n {
+        v.set(&[i], ev::adc, rng.range_u64(0, (1u64 << value_bits) - 1) as u32);
+        v.set(&[i], ev::channel, rng.range_u64(0, 1023) as u16);
+        v.set(&[i], ev::time, i as u64 * 40 + rng.range_u64(0, 39));
+        v.set(&[i], ev::energy, rng.f64_range(0.0, 100.0) as f32);
+    }
+}
+
+fn blobs_of<S: BlobStorage>(s: &S) -> Vec<&[u8]> {
+    (0..s.blob_count()).map(|b| s.blob(b)).collect()
+}
+
+fn main() {
+    let fast = std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 1 << 13 } else { 1 << 17 };
+    println!("E6: Bytesplit compression, {n} events\n");
+
+    println!(
+        "{:>10} {:>9} {:>11} {:>12} {:>8}",
+        "adc bits", "codec", "layout", "bytes", "ratio"
+    );
+    for value_bits in [8u32, 12, 16, 24] {
+        let e = (Dyn(n as u32),);
+        let mut aos = alloc_view(AoS::<Event, _>::new(e), &HeapAlloc);
+        let mut soa = alloc_view(SoA::<Event, _>::new(e), &HeapAlloc);
+        let mut bs = alloc_view(Bytesplit::<Event, _>::new(e), &HeapAlloc);
+        fill(&mut aos, n, value_bits);
+        fill(&mut soa, n, value_bits);
+        fill(&mut bs, n, value_bits);
+        for codec in Codec::ALL {
+            for (label, blobs) in [
+                ("AoS", blobs_of(aos.storage())),
+                ("SoA", blobs_of(soa.storage())),
+                ("Bytesplit", blobs_of(bs.storage())),
+            ] {
+                let stat = measure_blobs(&blobs, codec).expect("compress");
+                println!(
+                    "{:>10} {:>9} {:>11} {:>12} {:>8.2}",
+                    value_bits,
+                    codec.name(),
+                    label,
+                    stat.compressed,
+                    stat.ratio()
+                );
+            }
+        }
+        println!();
+    }
+    println!("expected shape: ratio(Bytesplit) >= ratio(SoA) > ratio(AoS), growing as adc bits shrink.\n");
+
+    // ---- access cost of the bytesplit layout ----
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
+    let e = (Dyn(n as u32),);
+    {
+        let mut v = alloc_view(SoA::<Event, _>::new(e), &HeapAlloc);
+        fill(&mut v, n, 12);
+        b.bench("sum adc via SoA", n as u64, || {
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc += v.get::<u32>(&[i], ev::adc) as u64;
+            }
+            black_box(acc);
+        });
+    }
+    {
+        let mut v = alloc_view(Bytesplit::<Event, _>::new(e), &HeapAlloc);
+        fill(&mut v, n, 12);
+        b.bench("sum adc via Bytesplit", n as u64, || {
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc += v.get::<u32>(&[i], ev::adc) as u64;
+            }
+            black_box(acc);
+        });
+    }
+    println!("{}", b.render_table("Bytesplit access cost (scattered bytes)", Some("sum adc via SoA")));
+}

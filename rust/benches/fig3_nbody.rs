@@ -1,0 +1,145 @@
+//! Experiment E1 — Figure 3: single-threaded n-body runtime across
+//! {AoS, SoA multi-blob, AoSoA8} × {manually written, LLAMA} × {scalar,
+//! SIMD-8}, update and move steps separately.
+//!
+//! The paper's claim under test: LLAMA matches the manually written code
+//! (zero overhead), SoA/AoSoA SIMD are fastest for update, SoA wins move,
+//! and AoSoA has a known penalty in the single-loop LLAMA traversal
+//! (footnote 13). Absolute numbers differ from the paper's Ryzen 5950X;
+//! the *ordering and ratios* are what reproduce.
+//!
+//! Run: `cargo bench --bench fig3_nbody [-- N]`  (default N=16384 like the
+//! paper's CPU plot; LLAMA_BENCH_FAST=1 shrinks to a smoke run)
+
+use llama::bench::{black_box, Bencher};
+use llama::nbody::{init_particles, manual, views};
+
+fn main() {
+    let arg_n: Option<usize> =
+        std::env::args().skip(1).find(|a| !a.starts_with('-')).and_then(|a| a.parse().ok());
+    let fast = std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1");
+    let n = arg_n.unwrap_or(if fast { 2048 } else { 16384 });
+    let init = init_particles(n, 42);
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
+
+    println!("Figure 3 reproduction: n-body, n={n}, single thread\n");
+
+    // ---------------- update step (compute-bound) ----------------
+    {
+        let mut s = manual::AosSim::new(&init);
+        b.bench("update AoS    manual scalar", n as u64, || {
+            s.update_scalar();
+            black_box(&s.ps);
+        });
+    }
+    {
+        let mut v = views::make_aos_view(&init);
+        b.bench("update AoS    LLAMA  scalar", n as u64, || {
+            views::update_scalar(&mut v);
+        });
+    }
+    {
+        let mut s = manual::AosSim::new(&init);
+        b.bench("update AoS    manual SIMD8", n as u64, || {
+            s.update_simd::<8>();
+            black_box(&s.ps);
+        });
+    }
+    {
+        let mut v = views::make_aos_view(&init);
+        b.bench("update AoS    LLAMA  SIMD8", n as u64, || {
+            views::update_simd::<8, _, _>(&mut v);
+        });
+    }
+    {
+        let mut s = manual::SoaSim::new(&init);
+        b.bench("update SoA-MB manual scalar", n as u64, || {
+            s.update_scalar();
+            black_box(&s.px);
+        });
+    }
+    {
+        let mut v = views::make_soa_view(&init);
+        b.bench("update SoA-MB LLAMA  scalar", n as u64, || {
+            views::update_scalar(&mut v);
+        });
+    }
+    {
+        let mut s = manual::SoaSim::new(&init);
+        b.bench("update SoA-MB manual SIMD8", n as u64, || {
+            s.update_simd::<8>();
+            black_box(&s.px);
+        });
+    }
+    {
+        let mut v = views::make_soa_view(&init);
+        b.bench("update SoA-MB LLAMA  SIMD8", n as u64, || {
+            views::update_simd::<8, _, _>(&mut v);
+        });
+    }
+    {
+        let mut s = manual::AosoaSim::<8>::new(&init);
+        b.bench("update AoSoA8 manual scalar", n as u64, || {
+            s.update_scalar();
+            black_box(&s.blocks);
+        });
+    }
+    {
+        let mut v = views::make_aosoa_view(&init);
+        b.bench("update AoSoA8 LLAMA  scalar", n as u64, || {
+            views::update_scalar(&mut v);
+        });
+    }
+    {
+        let mut s = manual::AosoaSim::<8>::new(&init);
+        b.bench("update AoSoA8 manual SIMD8", n as u64, || {
+            s.update_simd();
+            black_box(&s.blocks);
+        });
+    }
+    {
+        let mut v = views::make_aosoa_view(&init);
+        b.bench("update AoSoA8 LLAMA  SIMD8", n as u64, || {
+            views::update_simd::<8, _, _>(&mut v);
+        });
+    }
+
+    println!(
+        "{}",
+        b.render_table("update step (runtime per particle)", Some("update AoS    manual scalar"))
+    );
+
+    // ---------------- move step (memory-bound) ----------------
+    // More reps per sample: a single move pass is microseconds.
+    let move_reps = if fast { 50u64 } else { 200 };
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
+    macro_rules! bench_move {
+        ($name:expr, $init:expr, $body:expr) => {{
+            let mut s = $init;
+            b.bench($name, n as u64 * move_reps, || {
+                for _ in 0..move_reps {
+                    #[allow(clippy::redundant_closure_call)]
+                    ($body)(&mut s);
+                }
+                black_box(&s);
+            });
+        }};
+    }
+    bench_move!("move AoS    manual scalar", manual::AosSim::new(&init), |s: &mut manual::AosSim| s.move_scalar());
+    bench_move!("move AoS    LLAMA  scalar", views::make_aos_view(&init), |v: &mut _| views::move_scalar(v));
+    bench_move!("move AoS    manual SIMD8", manual::AosSim::new(&init), |s: &mut manual::AosSim| s.move_simd::<8>());
+    bench_move!("move AoS    LLAMA  SIMD8", views::make_aos_view(&init), |v: &mut _| views::move_simd::<8, _, _>(v));
+    bench_move!("move SoA-MB manual scalar", manual::SoaSim::new(&init), |s: &mut manual::SoaSim| s.move_scalar());
+    bench_move!("move SoA-MB LLAMA  scalar", views::make_soa_view(&init), |v: &mut _| views::move_scalar(v));
+    bench_move!("move SoA-MB manual SIMD8", manual::SoaSim::new(&init), |s: &mut manual::SoaSim| s.move_simd::<8>());
+    bench_move!("move SoA-MB LLAMA  SIMD8", views::make_soa_view(&init), |v: &mut _| views::move_simd::<8, _, _>(v));
+    bench_move!("move AoSoA8 manual scalar", manual::AosoaSim::<8>::new(&init), |s: &mut manual::AosoaSim<8>| s.move_scalar());
+    bench_move!("move AoSoA8 LLAMA  scalar", views::make_aosoa_view(&init), |v: &mut _| views::move_scalar(v));
+    bench_move!("move AoSoA8 manual SIMD8", manual::AosoaSim::<8>::new(&init), |s: &mut manual::AosoaSim<8>| s.move_simd());
+    bench_move!("move AoSoA8 LLAMA  SIMD8", views::make_aosoa_view(&init), |v: &mut _| views::move_simd::<8, _, _>(v));
+
+    println!(
+        "{}",
+        b.render_table("move step (runtime per particle)", Some("move AoS    manual scalar"))
+    );
+}

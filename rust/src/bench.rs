@@ -1,0 +1,186 @@
+//! Micro-benchmark harness (criterion replacement, offline image has no
+//! criterion crate).
+//!
+//! Methodology: warmup runs, then `samples` timed runs; report
+//! median and median-absolute-deviation. Benches are `harness = false`
+//! binaries under `rust/benches/` using [`Bencher`] and printing aligned
+//! tables that mirror the paper's figures (see EXPERIMENTS.md).
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline(always)]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Label (e.g. "update AoS LLAMA SIMD").
+    pub name: String,
+    /// Median wall time per iteration.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    /// Number of samples.
+    pub samples: usize,
+    /// Work items per iteration (for per-item rates), 0 if unset.
+    pub items: u64,
+}
+
+impl Measurement {
+    /// Nanoseconds per work item (`median / items`).
+    pub fn ns_per_item(&self) -> f64 {
+        if self.items == 0 {
+            return self.median.as_nanos() as f64;
+        }
+        self.median.as_nanos() as f64 / self.items as f64
+    }
+}
+
+/// Benchmark runner with fixed warmup/sample counts.
+pub struct Bencher {
+    warmup: usize,
+    samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new(3, 10)
+    }
+}
+
+impl Bencher {
+    /// Runner with `warmup` discarded runs and `samples` timed runs.
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bencher { warmup, samples, results: Vec::new() }
+    }
+
+    /// Honor `LLAMA_BENCH_FAST=1` (CI smoke mode: fewer samples).
+    pub fn from_env() -> Self {
+        if std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher::new(1, 3)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f`, which performs `items` units of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, items: u64, mut f: F) -> &Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<Duration> = (0..self.samples)
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed()
+            })
+            .collect();
+        times.sort();
+        let median = times[times.len() / 2];
+        let mut devs: Vec<Duration> =
+            times.iter().map(|t| if *t > median { *t - median } else { median - *t }).collect();
+        devs.sort();
+        let mad = devs[devs.len() / 2];
+        self.results.push(Measurement {
+            name: name.to_string(),
+            median,
+            mad,
+            samples: self.samples,
+            items,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// All measurements so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Render an aligned results table; `baseline` (if given) adds a
+    /// relative-speed column against the named measurement.
+    pub fn render_table(&self, title: &str, baseline: Option<&str>) -> String {
+        let base = baseline
+            .and_then(|b| self.results.iter().find(|m| m.name == b))
+            .map(|m| m.median.as_nanos() as f64);
+        let w = self.results.iter().map(|m| m.name.len()).max().unwrap_or(4).max(4);
+        let mut out = format!("== {title} ==\n");
+        out.push_str(&format!(
+            "{:w$}  {:>12}  {:>10}  {:>12}{}\n",
+            "name",
+            "median",
+            "mad",
+            "ns/item",
+            if base.is_some() { "  rel" } else { "" },
+            w = w
+        ));
+        for m in &self.results {
+            let rel = base
+                .map(|b| format!("  {:>5.2}x", b / m.median.as_nanos() as f64))
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "{:w$}  {:>12}  {:>10}  {:>12.2}{}\n",
+                m.name,
+                format_duration(m.median),
+                format_duration(m.mad),
+                m.ns_per_item(),
+                rel,
+                w = w
+            ));
+        }
+        out
+    }
+}
+
+/// Human-readable duration (ns/µs/ms/s).
+pub fn format_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(1, 5);
+        let mut acc = 0u64;
+        let m = b.bench("spin", 1000, || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(m.median.as_nanos() > 0);
+        assert_eq!(m.items, 1000);
+        let table = b.render_table("test", None);
+        assert!(table.contains("spin"));
+    }
+
+    #[test]
+    fn relative_column() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("fast", 1, || std::thread::sleep(Duration::from_micros(50)));
+        b.bench("slow", 1, || std::thread::sleep(Duration::from_micros(200)));
+        let t = b.render_table("t", Some("slow"));
+        assert!(t.contains("rel"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(format_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(format_duration(Duration::from_micros(1500)), "1.50ms");
+        assert!(format_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+}

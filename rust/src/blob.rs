@@ -1,0 +1,312 @@
+//! Blob storage and allocators.
+//!
+//! A mapping describes the data space as a set of *blobs* (byte buffers)
+//! plus a rule locating each scalar in them. Where those bytes live is the
+//! blob allocator's choice: heap vectors ([`HeapAlloc`]), cache-line/SIMD
+//! aligned heap buffers ([`AlignedAlloc`]), or inline arrays
+//! ([`ArrayStorage`] via [`array_view`]) — the last one making the whole
+//! view a trivial value type when the extents are compile-time (§2: views
+//! placeable in GPU shared memory; here: `memcpy`-able, stack-residing,
+//! reinterpretable).
+
+use crate::mapping::{Mapping, MemoryAccess};
+use crate::record::RecordDim;
+use crate::view::View;
+
+/// Byte storage for the blobs of a view.
+///
+/// # Safety-relevant contract
+/// `blob(i)` / `blob_mut(i)` must return stable slices of the size the
+/// mapping requested at allocation for all `i < blob_count()`.
+pub trait BlobStorage {
+    /// Number of blobs held.
+    fn blob_count(&self) -> usize;
+    /// Read access to blob `i`.
+    fn blob(&self, i: usize) -> &[u8];
+    /// Write access to blob `i`.
+    fn blob_mut(&mut self, i: usize) -> &mut [u8];
+
+    /// Total bytes across all blobs (reporting).
+    fn total_bytes(&self) -> usize {
+        (0..self.blob_count()).map(|i| self.blob(i).len()).sum()
+    }
+}
+
+/// Allocates blob storage for a mapping's blob sizes.
+pub trait BlobAlloc {
+    /// The storage this allocator produces.
+    type Storage: BlobStorage;
+    /// Allocate zero-initialized blobs of the given sizes.
+    fn alloc(&self, sizes: &[usize]) -> Self::Storage;
+}
+
+// ---------------------------------------------------------------------------
+// Heap storage
+// ---------------------------------------------------------------------------
+
+/// Plain heap storage: one `Vec<u8>` per blob.
+#[derive(Clone, Debug, Default)]
+pub struct HeapStorage {
+    blobs: Vec<Vec<u8>>,
+}
+
+impl BlobStorage for HeapStorage {
+    #[inline]
+    fn blob_count(&self) -> usize {
+        self.blobs.len()
+    }
+    #[inline(always)]
+    fn blob(&self, i: usize) -> &[u8] {
+        &self.blobs[i]
+    }
+    #[inline(always)]
+    fn blob_mut(&mut self, i: usize) -> &mut [u8] {
+        &mut self.blobs[i]
+    }
+}
+
+/// Allocator producing [`HeapStorage`] (LLAMA's `bloballoc::Vector`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HeapAlloc;
+
+impl BlobAlloc for HeapAlloc {
+    type Storage = HeapStorage;
+    fn alloc(&self, sizes: &[usize]) -> HeapStorage {
+        HeapStorage { blobs: sizes.iter().map(|&s| vec![0u8; s]).collect() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aligned heap storage
+// ---------------------------------------------------------------------------
+
+/// A heap buffer with a guaranteed start alignment.
+#[derive(Debug)]
+pub struct AlignedBuf {
+    ptr: *mut u8,
+    len: usize,
+    align: usize,
+}
+
+// SAFETY: AlignedBuf owns its allocation exclusively.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    /// Allocate `len` zeroed bytes aligned to `align` (a power of two).
+    pub fn zeroed(len: usize, align: usize) -> Self {
+        assert!(align.is_power_of_two());
+        if len == 0 {
+            return AlignedBuf { ptr: std::ptr::null_mut(), len: 0, align };
+        }
+        let layout = std::alloc::Layout::from_size_align(len, align).expect("bad layout");
+        // SAFETY: len > 0, layout valid.
+        let ptr = unsafe { std::alloc::alloc_zeroed(layout) };
+        assert!(!ptr.is_null(), "allocation failure of {len} bytes");
+        AlignedBuf { ptr, len, align }
+    }
+
+    /// The buffer contents.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr valid for len bytes, exclusive ownership.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// The buffer contents, mutably.
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        if self.len == 0 {
+            return &mut [];
+        }
+        // SAFETY: ptr valid for len bytes, exclusive ownership.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if !self.ptr.is_null() {
+            let layout = std::alloc::Layout::from_size_align(self.len, self.align).unwrap();
+            // SAFETY: allocated with this exact layout.
+            unsafe { std::alloc::dealloc(self.ptr, layout) };
+        }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        let mut new = AlignedBuf::zeroed(self.len, self.align);
+        new.as_mut_slice().copy_from_slice(self.as_slice());
+        new
+    }
+}
+
+/// Aligned heap storage: one [`AlignedBuf`] per blob.
+#[derive(Clone, Debug)]
+pub struct AlignedStorage {
+    blobs: Vec<AlignedBuf>,
+}
+
+impl BlobStorage for AlignedStorage {
+    #[inline]
+    fn blob_count(&self) -> usize {
+        self.blobs.len()
+    }
+    #[inline(always)]
+    fn blob(&self, i: usize) -> &[u8] {
+        self.blobs[i].as_slice()
+    }
+    #[inline(always)]
+    fn blob_mut(&mut self, i: usize) -> &mut [u8] {
+        self.blobs[i].as_mut_slice()
+    }
+}
+
+/// Allocator producing blob buffers aligned to `ALIGN` bytes (default 64:
+/// cache line; use 4096 for page alignment). LLAMA's
+/// `bloballoc::AlignedAllocator`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlignedAlloc<const ALIGN: usize = 64>;
+
+impl<const ALIGN: usize> BlobAlloc for AlignedAlloc<ALIGN> {
+    type Storage = AlignedStorage;
+    fn alloc(&self, sizes: &[usize]) -> AlignedStorage {
+        AlignedStorage { blobs: sizes.iter().map(|&s| AlignedBuf::zeroed(s, ALIGN)).collect() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Inline array storage (the trivially-copyable view of §2)
+// ---------------------------------------------------------------------------
+
+/// Inline storage: `BLOBS` byte arrays of `SIZE` bytes each, held by value.
+///
+/// With fully static extents and a stateless mapping, a
+/// `View<_, ArrayStorage<..>>` is a plain value containing only the mapped
+/// bytes — the paper's "trivial value type ... storage-wise equivalent to
+/// the mapped data" that can be memcpy-ed or placed in shared memory.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrayStorage<const SIZE: usize, const BLOBS: usize> {
+    blobs: [[u8; SIZE]; BLOBS],
+}
+
+impl<const SIZE: usize, const BLOBS: usize> Default for ArrayStorage<SIZE, BLOBS> {
+    fn default() -> Self {
+        ArrayStorage { blobs: [[0; SIZE]; BLOBS] }
+    }
+}
+
+impl<const SIZE: usize, const BLOBS: usize> BlobStorage for ArrayStorage<SIZE, BLOBS> {
+    #[inline(always)]
+    fn blob_count(&self) -> usize {
+        BLOBS
+    }
+    #[inline(always)]
+    fn blob(&self, i: usize) -> &[u8] {
+        &self.blobs[i]
+    }
+    #[inline(always)]
+    fn blob_mut(&mut self, i: usize) -> &mut [u8] {
+        &mut self.blobs[i]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// View construction helpers
+// ---------------------------------------------------------------------------
+
+/// Allocate a [`View`] for `mapping` using `alloc`.
+///
+/// ```
+/// use llama::prelude::*;
+/// llama::record! { pub struct P, mod p { x: f32, y: f32 } }
+/// let view = alloc_view(SoA::<P, _>::new((Dyn(16u32),)), &HeapAlloc);
+/// assert_eq!(view.storage().total_bytes(), 16 * 8);
+/// ```
+pub fn alloc_view<R, M, A>(mapping: M, alloc: &A) -> View<R, M, A::Storage>
+where
+    R: RecordDim,
+    M: Mapping<R> + MemoryAccess<R>,
+    A: BlobAlloc,
+{
+    let sizes: Vec<usize> = (0..M::BLOB_COUNT).map(|i| mapping.blob_size(i)).collect();
+    let storage = alloc.alloc(&sizes);
+    View::from_parts(mapping, storage)
+}
+
+/// Build a view over inline array storage (compile-time sizes).
+///
+/// `SIZE` must be at least the largest blob size of the mapping and `BLOBS`
+/// must equal the mapping's blob count — both checked at construction.
+/// For a fully-static mapping this produces the §2 "trivial value type"
+/// view; see `rust/tests/integration.rs::zero_overhead_view`.
+pub fn array_view<R, M, const SIZE: usize, const BLOBS: usize>(
+    mapping: M,
+) -> View<R, M, ArrayStorage<SIZE, BLOBS>>
+where
+    R: RecordDim,
+    M: Mapping<R> + MemoryAccess<R>,
+{
+    assert_eq!(M::BLOB_COUNT, BLOBS, "BLOBS must equal the mapping blob count");
+    for i in 0..M::BLOB_COUNT {
+        assert!(
+            mapping.blob_size(i) <= SIZE,
+            "blob {i} needs {} bytes, ArrayStorage provides {SIZE}",
+            mapping.blob_size(i)
+        );
+    }
+    View::from_parts(mapping, ArrayStorage::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_alloc_zeroed() {
+        let s = HeapAlloc.alloc(&[16, 32]);
+        assert_eq!(s.blob_count(), 2);
+        assert_eq!(s.blob(0).len(), 16);
+        assert_eq!(s.blob(1).len(), 32);
+        assert!(s.blob(1).iter().all(|&b| b == 0));
+        assert_eq!(s.total_bytes(), 48);
+    }
+
+    #[test]
+    fn aligned_alloc_alignment() {
+        let s = AlignedAlloc::<64>.alloc(&[100, 7]);
+        for i in 0..2 {
+            assert_eq!(s.blob(i).as_ptr() as usize % 64, 0);
+        }
+        let s = AlignedAlloc::<4096>.alloc(&[10]);
+        assert_eq!(s.blob(0).as_ptr() as usize % 4096, 0);
+    }
+
+    #[test]
+    fn aligned_buf_clone_and_write() {
+        let mut s = AlignedAlloc::<64>.alloc(&[8]);
+        s.blob_mut(0)[3] = 0xab;
+        let s2 = s.clone();
+        assert_eq!(s2.blob(0)[3], 0xab);
+    }
+
+    #[test]
+    fn array_storage_is_value_type() {
+        let mut s = ArrayStorage::<64, 2>::default();
+        s.blob_mut(1)[0] = 9;
+        let copy = s; // Copy!
+        assert_eq!(copy.blob(1)[0], 9);
+        assert_eq!(std::mem::size_of::<ArrayStorage<64, 2>>(), 128);
+    }
+
+    #[test]
+    fn zero_len_blobs() {
+        let s = AlignedAlloc::<64>.alloc(&[0, 4]);
+        assert_eq!(s.blob(0).len(), 0);
+        assert_eq!(s.blob(1).len(), 4);
+    }
+}

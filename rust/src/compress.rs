@@ -1,0 +1,170 @@
+//! Compression substrate for the Bytesplit evaluation (experiment E6).
+//!
+//! The paper motivates [`crate::mapping::bytesplit`] with compression:
+//! regrouping bytes by significance colocates zero bytes and improves
+//! ratios (cf. Apache Parquet's BYTE_STREAM_SPLIT). This module provides
+//! the compressors the benchmark sweeps: run-length encoding (the
+//! best-case proxy for "streams of zeros"), DEFLATE (flate2) and zstd.
+
+use anyhow::Result;
+
+/// Available compression backends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Byte-level run-length encoding (escape-free, worst case 2x).
+    Rle,
+    /// DEFLATE via flate2 (level 6).
+    Deflate,
+    /// Zstandard (level 3).
+    Zstd,
+}
+
+impl Codec {
+    /// All codecs, for sweeps.
+    pub const ALL: [Codec; 3] = [Codec::Rle, Codec::Deflate, Codec::Zstd];
+
+    /// Short name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Rle => "rle",
+            Codec::Deflate => "deflate",
+            Codec::Zstd => "zstd",
+        }
+    }
+
+    /// Compress `data`.
+    pub fn compress(self, data: &[u8]) -> Result<Vec<u8>> {
+        match self {
+            Codec::Rle => Ok(rle_encode(data)),
+            Codec::Deflate => {
+                use flate2::write::ZlibEncoder;
+                use flate2::Compression;
+                use std::io::Write;
+                let mut enc = ZlibEncoder::new(Vec::new(), Compression::new(6));
+                enc.write_all(data)?;
+                Ok(enc.finish()?)
+            }
+            Codec::Zstd => Ok(zstd::bulk::compress(data, 3)?),
+        }
+    }
+
+    /// Decompress `data` (RLE needs no size hint; zstd gets one).
+    pub fn decompress(self, data: &[u8], size_hint: usize) -> Result<Vec<u8>> {
+        match self {
+            Codec::Rle => Ok(rle_decode(data)),
+            Codec::Deflate => {
+                use flate2::read::ZlibDecoder;
+                use std::io::Read;
+                let mut out = Vec::with_capacity(size_hint);
+                ZlibDecoder::new(data).read_to_end(&mut out)?;
+                Ok(out)
+            }
+            Codec::Zstd => Ok(zstd::bulk::decompress(data, size_hint.max(1))?),
+        }
+    }
+}
+
+/// Run-length encode: `(count-1, byte)` pairs, runs capped at 256.
+pub fn rle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 4 + 16);
+    let mut i = 0;
+    while i < data.len() {
+        let b = data[i];
+        let mut run = 1usize;
+        while run < 256 && i + run < data.len() && data[i + run] == b {
+            run += 1;
+        }
+        out.push((run - 1) as u8);
+        out.push(b);
+        i += run;
+    }
+    out
+}
+
+/// Decode [`rle_encode`] output.
+pub fn rle_decode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    for pair in data.chunks_exact(2) {
+        let run = pair[0] as usize + 1;
+        out.extend(std::iter::repeat(pair[1]).take(run));
+    }
+    out
+}
+
+/// Result row of a compression measurement.
+#[derive(Clone, Debug)]
+pub struct CompressionStat {
+    /// Codec used.
+    pub codec: Codec,
+    /// Input bytes.
+    pub raw: usize,
+    /// Output bytes.
+    pub compressed: usize,
+}
+
+impl CompressionStat {
+    /// raw/compressed (higher is better).
+    pub fn ratio(&self) -> f64 {
+        self.raw as f64 / self.compressed as f64
+    }
+}
+
+/// Compress `blobs` concatenated per codec and report sizes.
+pub fn measure_blobs(blobs: &[&[u8]], codec: Codec) -> Result<CompressionStat> {
+    let mut compressed = 0usize;
+    let mut raw = 0usize;
+    for b in blobs {
+        raw += b.len();
+        compressed += codec.compress(b)?.len();
+    }
+    Ok(CompressionStat { codec, raw, compressed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rle_roundtrip() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![1],
+            vec![0; 1000],
+            vec![1, 2, 3, 4, 5],
+            (0..=255u8).cycle().take(700).collect(),
+            vec![7; 300], // run > 256
+        ];
+        for c in cases {
+            assert_eq!(rle_decode(&rle_encode(&c)), c);
+        }
+    }
+
+    #[test]
+    fn codecs_roundtrip() {
+        let data: Vec<u8> = (0..4096u32).flat_map(|i| ((i * 7) as u16).to_le_bytes()).collect();
+        for codec in Codec::ALL {
+            let c = codec.compress(&data).unwrap();
+            let d = codec.decompress(&c, data.len()).unwrap();
+            assert_eq!(d, data, "{}", codec.name());
+        }
+    }
+
+    #[test]
+    fn zeros_compress_better_than_noise() {
+        let zeros = vec![0u8; 8192];
+        let noise: Vec<u8> = (0..8192u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect();
+        for codec in Codec::ALL {
+            let cz = codec.compress(&zeros).unwrap().len();
+            let cn = codec.compress(&noise).unwrap().len();
+            assert!(cz < cn / 4, "{}: zeros {} vs noise {}", codec.name(), cz, cn);
+        }
+    }
+
+    #[test]
+    fn measure_ratio() {
+        let blob = vec![0u8; 1024];
+        let stat = measure_blobs(&[&blob], Codec::Rle).unwrap();
+        assert_eq!(stat.raw, 1024);
+        assert!(stat.ratio() > 50.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Job specifications and results for the layout lab.
+
+use std::time::Duration;
+
+/// Memory layout under test (the Figure-3 axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Array of structs.
+    Aos,
+    /// Struct of arrays, multi-blob.
+    SoaMb,
+    /// Array of struct-of-arrays, 8 lanes.
+    Aosoa,
+    /// SoA with bf16 storage (Changetype; PJRT backend only).
+    Bf16,
+}
+
+impl Layout {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Layout> {
+        match s {
+            "aos" => Some(Layout::Aos),
+            "soa" | "soa-mb" => Some(Layout::SoaMb),
+            "aosoa" => Some(Layout::Aosoa),
+            "bf16" => Some(Layout::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::Aos => "AoS",
+            Layout::SoaMb => "SoA MB",
+            Layout::Aosoa => "AoSoA",
+            Layout::Bf16 => "SoA bf16",
+        }
+    }
+
+    /// PJRT artifact name for this layout.
+    pub fn artifact(self) -> &'static str {
+        match self {
+            Layout::Aos => "nbody_aos",
+            Layout::SoaMb => "nbody_soa",
+            Layout::Aosoa => "nbody_aosoa",
+            Layout::Bf16 => "nbody_bf16",
+        }
+    }
+}
+
+/// Execution backend (the three-layer stack's entry points).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Rust LLAMA views, scalar loop.
+    NativeScalar,
+    /// Rust LLAMA views, SIMD-8 loop.
+    NativeSimd,
+    /// AOT JAX/Pallas artifact through PJRT.
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "scalar" | "native-scalar" => Some(Backend::NativeScalar),
+            "simd" | "native-simd" => Some(Backend::NativeSimd),
+            "pjrt" => Some(Backend::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::NativeScalar => "native/scalar",
+            Backend::NativeSimd => "native/simd8",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// A simulation job: run `steps` n-body steps over `n` particles.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Unique id assigned at submission.
+    pub id: u64,
+    /// Memory layout.
+    pub layout: Layout,
+    /// Execution backend.
+    pub backend: Backend,
+    /// Particle count (PJRT jobs must match the artifact's baked n).
+    pub n: usize,
+    /// Number of simulation steps.
+    pub steps: usize,
+    /// Initial-conditions seed.
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// Jobs with equal keys may share a dispatch batch (same executable /
+    /// same native code path).
+    pub fn batch_key(&self) -> (Layout, Backend, usize) {
+        (self.layout, self.backend, self.n)
+    }
+}
+
+/// Outcome of one job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Job id.
+    pub id: u64,
+    /// Worker thread index that executed it.
+    pub worker: usize,
+    /// Batch the dispatcher placed it in.
+    pub batch_id: u64,
+    /// Wall time spent executing.
+    pub exec_time: Duration,
+    /// Time from submit to dispatch.
+    pub queue_time: Duration,
+    /// Relative energy drift |E1-E0|/|E0| over the run.
+    pub energy_drift: f64,
+    /// Steps per second achieved.
+    pub steps_per_sec: f64,
+    /// Error message if the job failed.
+    pub error: Option<String>,
+}

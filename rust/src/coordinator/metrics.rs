@@ -1,0 +1,95 @@
+//! Coordinator metrics registry: queue/exec timings, batch stats.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregated coordinator metrics (all counters monotonically increase).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    jobs_submitted: AtomicU64,
+    jobs_completed: AtomicU64,
+    jobs_failed: AtomicU64,
+    batches_dispatched: AtomicU64,
+    queue_ns_total: AtomicU64,
+    exec_ns_total: AtomicU64,
+    batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl Metrics {
+    /// Record a submission.
+    pub fn on_submit(&self) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a dispatched batch of `size` jobs.
+    pub fn on_batch(&self, size: usize) {
+        self.batches_dispatched.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(size);
+    }
+
+    /// Record a completed job.
+    pub fn on_complete(&self, queue: Duration, exec: Duration, failed: bool) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        if failed {
+            self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.queue_ns_total.fetch_add(queue.as_nanos() as u64, Ordering::Relaxed);
+        self.exec_ns_total.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// (submitted, completed, failed).
+    pub fn job_counts(&self) -> (u64, u64, u64) {
+        (
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Number of batches dispatched.
+    pub fn batches(&self) -> u64 {
+        self.batches_dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Mean batch size.
+    pub fn mean_batch_size(&self) -> f64 {
+        let sizes = self.batch_sizes.lock().unwrap();
+        if sizes.is_empty() {
+            return 0.0;
+        }
+        sizes.iter().sum::<usize>() as f64 / sizes.len() as f64
+    }
+
+    /// Largest batch dispatched.
+    pub fn max_batch_size(&self) -> usize {
+        self.batch_sizes.lock().unwrap().iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean queue wait across completed jobs.
+    pub fn mean_queue_time(&self) -> Duration {
+        let done = self.jobs_completed.load(Ordering::Relaxed).max(1);
+        Duration::from_nanos(self.queue_ns_total.load(Ordering::Relaxed) / done)
+    }
+
+    /// Mean execution time across completed jobs.
+    pub fn mean_exec_time(&self) -> Duration {
+        let done = self.jobs_completed.load(Ordering::Relaxed).max(1);
+        Duration::from_nanos(self.exec_ns_total.load(Ordering::Relaxed) / done)
+    }
+
+    /// Render a summary block.
+    pub fn render(&self) -> String {
+        let (s, c, f) = self.job_counts();
+        format!(
+            "jobs: {s} submitted, {c} completed, {f} failed\n\
+             batches: {} (mean size {:.2}, max {})\n\
+             mean queue {:?}, mean exec {:?}\n",
+            self.batches(),
+            self.mean_batch_size(),
+            self.max_batch_size(),
+            self.mean_queue_time(),
+            self.mean_exec_time(),
+        )
+    }
+}

@@ -1,0 +1,440 @@
+//! L3 coordinator: the layout-lab job service.
+//!
+//! The paper's system is a library, so the coordinator is the *lab* around
+//! it: it accepts simulation jobs (layout × backend × size × steps),
+//! batches compatible jobs (same executable / code path) for dispatch,
+//! routes them across a worker pool, executes either through the native
+//! LLAMA views (L3) or the AOT Pallas artifacts via PJRT (L1/L2), and
+//! aggregates metrics. Python never appears on this path.
+//!
+//! ```text
+//! submit() ─► queue ─► dispatcher (batches by batch_key, FIFO)
+//!                          │
+//!              ┌───────────┼───────────┐
+//!           worker 0    worker 1    worker W   (std threads)
+//!              │            │           │
+//!         native views   native     PJRT Engine (shared, compiled once)
+//! ```
+//!
+//! Invariants (checked by `rust/tests/properties.rs`):
+//! - every submitted job completes exactly once (success or error);
+//! - batches never exceed `max_batch` and never mix batch keys;
+//! - jobs with the same batch key dispatch in FIFO order.
+
+pub mod job;
+pub mod metrics;
+
+pub use job::{Backend, JobResult, JobSpec, Layout};
+pub use metrics::Metrics;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::nbody::{init_particles, total_energy, views, ParticleData};
+use crate::runtime::{PjrtService, TensorF32};
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct Config {
+    /// Worker thread count.
+    pub workers: usize,
+    /// Max jobs per dispatch batch.
+    pub max_batch: usize,
+    /// PJRT service handle (required for [`Backend::Pjrt`] jobs).
+    pub engine: Option<PjrtService>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { workers: 2, max_batch: 8, engine: None }
+    }
+}
+
+struct Queued {
+    spec: JobSpec,
+    submitted_at: Instant,
+}
+
+/// The layout-lab coordinator. See module docs.
+pub struct Coordinator {
+    submit_tx: Option<mpsc::Sender<Queued>>,
+    results_rx: mpsc::Receiver<JobResult>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    submitted: usize,
+}
+
+impl Coordinator {
+    /// Start the worker pool and dispatcher.
+    pub fn start(config: Config) -> Self {
+        let metrics = Arc::new(Metrics::default());
+        let (submit_tx, submit_rx) = mpsc::channel::<Queued>();
+        let (batch_tx, batch_rx) = mpsc::channel::<(u64, Vec<Queued>)>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let (results_tx, results_rx) = mpsc::channel::<JobResult>();
+
+        // Dispatcher: drain the queue, group runs of equal batch_key (FIFO,
+        // up to max_batch), hand batches to workers.
+        let max_batch = config.max_batch.max(1);
+        let dmetrics = metrics.clone();
+        let dispatcher = std::thread::spawn(move || {
+            let mut batch_id = 0u64;
+            let mut pending: Option<Queued> = None;
+            loop {
+                // Block for the first job of the next batch.
+                let first = match pending.take() {
+                    Some(q) => q,
+                    None => match submit_rx.recv() {
+                        Ok(q) => q,
+                        Err(_) => break, // channel closed: drain done
+                    },
+                };
+                let key = first.spec.batch_key();
+                let mut batch = vec![first];
+                // Greedily take more of the same key without blocking.
+                while batch.len() < max_batch {
+                    match submit_rx.try_recv() {
+                        Ok(q) if q.spec.batch_key() == key => batch.push(q),
+                        Ok(q) => {
+                            pending = Some(q);
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                dmetrics.on_batch(batch.len());
+                if batch_tx.send((batch_id, batch)).is_err() {
+                    break;
+                }
+                batch_id += 1;
+            }
+        });
+
+        // Workers.
+        let mut workers = Vec::new();
+        for widx in 0..config.workers.max(1) {
+            let rx = batch_rx.clone();
+            let results = results_tx.clone();
+            let engine = config.engine.clone();
+            let wmetrics = metrics.clone();
+            workers.push(std::thread::spawn(move || loop {
+                let next = { rx.lock().unwrap().recv() };
+                let (batch_id, batch) = match next {
+                    Ok(b) => b,
+                    Err(_) => break,
+                };
+                for q in batch {
+                    let queue_time = q.submitted_at.elapsed();
+                    let t0 = Instant::now();
+                    let outcome = run_job(&q.spec, engine.as_ref());
+                    let exec_time = t0.elapsed();
+                    let (drift, error) = match outcome {
+                        Ok(d) => (d, None),
+                        Err(e) => (f64::NAN, Some(format!("{e:#}"))),
+                    };
+                    wmetrics.on_complete(queue_time, exec_time, error.is_some());
+                    let _ = results.send(JobResult {
+                        id: q.spec.id,
+                        worker: widx,
+                        batch_id,
+                        exec_time,
+                        queue_time,
+                        energy_drift: drift,
+                        steps_per_sec: q.spec.steps as f64 / exec_time.as_secs_f64().max(1e-12),
+                        error,
+                    });
+                }
+            }));
+        }
+        drop(results_tx);
+
+        Coordinator {
+            submit_tx: Some(submit_tx),
+            results_rx,
+            dispatcher: Some(dispatcher),
+            workers,
+            metrics,
+            next_id: AtomicU64::new(0),
+            submitted: 0,
+        }
+    }
+
+    /// Submit a job; returns its assigned id.
+    pub fn submit(&mut self, mut spec: JobSpec) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        spec.id = id;
+        self.metrics.on_submit();
+        self.submitted += 1;
+        self.submit_tx
+            .as_ref()
+            .expect("coordinator already shut down")
+            .send(Queued { spec, submitted_at: Instant::now() })
+            .expect("dispatcher alive");
+        id
+    }
+
+    /// The metrics registry.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Close the queue, wait for all submitted jobs, return their results
+    /// sorted by id.
+    pub fn finish(mut self) -> Vec<JobResult> {
+        drop(self.submit_tx.take()); // close queue -> dispatcher drains
+        let mut results = Vec::with_capacity(self.submitted);
+        for _ in 0..self.submitted {
+            match self.results_rx.recv() {
+                Ok(r) => results.push(r),
+                Err(_) => break,
+            }
+        }
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        results.sort_by_key(|r| r.id);
+        results
+    }
+}
+
+/// Execute one job, returning the relative energy drift.
+fn run_job(spec: &JobSpec, engine: Option<&PjrtService>) -> anyhow::Result<f64> {
+    let init = init_particles(spec.n, spec.seed);
+    let e0 = total_energy(&init);
+    let finals: Vec<ParticleData> = match spec.backend {
+        Backend::Pjrt => run_pjrt(spec, engine, &init)?,
+        Backend::NativeScalar | Backend::NativeSimd => run_native(spec, &init),
+    };
+    let e1 = total_energy(&finals);
+    Ok(((e1 - e0) / e0).abs())
+}
+
+fn run_native(spec: &JobSpec, init: &[ParticleData]) -> Vec<ParticleData> {
+    let simd = spec.backend == Backend::NativeSimd;
+    match spec.layout {
+        Layout::Aos => {
+            let mut v = views::make_aos_view(init);
+            for _ in 0..spec.steps {
+                if simd {
+                    views::update_simd::<8, _, _>(&mut v);
+                    views::move_simd::<8, _, _>(&mut v);
+                } else {
+                    views::update_scalar(&mut v);
+                    views::move_scalar(&mut v);
+                }
+            }
+            views::snapshot_view(&v)
+        }
+        Layout::SoaMb | Layout::Bf16 => {
+            // Native bf16 falls back to f32 SoA (bf16 is a PJRT artifact).
+            let mut v = views::make_soa_view(init);
+            for _ in 0..spec.steps {
+                if simd {
+                    views::update_simd::<8, _, _>(&mut v);
+                    views::move_simd::<8, _, _>(&mut v);
+                } else {
+                    views::update_scalar(&mut v);
+                    views::move_scalar(&mut v);
+                }
+            }
+            views::snapshot_view(&v)
+        }
+        Layout::Aosoa => {
+            let mut v = views::make_aosoa_view(init);
+            for _ in 0..spec.steps {
+                if simd {
+                    views::update_simd::<8, _, _>(&mut v);
+                    views::move_simd::<8, _, _>(&mut v);
+                } else {
+                    views::update_scalar(&mut v);
+                    views::move_scalar(&mut v);
+                }
+            }
+            views::snapshot_view(&v)
+        }
+    }
+}
+
+fn run_pjrt(
+    spec: &JobSpec,
+    engine: Option<&PjrtService>,
+    init: &[ParticleData],
+) -> anyhow::Result<Vec<ParticleData>> {
+    let engine = engine.ok_or_else(|| anyhow::anyhow!("no PJRT engine configured"))?;
+    let artifact = spec.layout.artifact();
+    engine.load(artifact)?;
+
+    match spec.layout {
+        Layout::SoaMb | Layout::Bf16 => {
+            let sim = crate::nbody::manual::SoaSim::new(init);
+            let mut state: Vec<TensorF32> =
+                [&sim.px, &sim.py, &sim.pz, &sim.vx, &sim.vy, &sim.vz, &sim.mass]
+                    .into_iter()
+                    .map(|v| TensorF32::vec(v.clone()))
+                    .collect();
+            for _ in 0..spec.steps {
+                let out = engine.execute_f32(artifact, &state)?;
+                let mass = state[6].clone();
+                state = out;
+                state.push(mass);
+            }
+            Ok((0..spec.n)
+                .map(|i| ParticleData {
+                    pos: crate::nbody::PVec {
+                        x: state[0].data[i],
+                        y: state[1].data[i],
+                        z: state[2].data[i],
+                    },
+                    vel: crate::nbody::PVec {
+                        x: state[3].data[i],
+                        y: state[4].data[i],
+                        z: state[5].data[i],
+                    },
+                    mass: state[6].data[i],
+                })
+                .collect())
+        }
+        Layout::Aos => {
+            let mut data = Vec::with_capacity(spec.n * 7);
+            for p in init {
+                data.extend_from_slice(&[
+                    p.pos.x, p.pos.y, p.pos.z, p.vel.x, p.vel.y, p.vel.z, p.mass,
+                ]);
+            }
+            let mut state = TensorF32::new(data, vec![spec.n, 7]);
+            for _ in 0..spec.steps {
+                state = engine.execute_f32(artifact, &[state])?.remove(0);
+            }
+            Ok((0..spec.n)
+                .map(|i| ParticleData {
+                    pos: crate::nbody::PVec {
+                        x: state.data[i * 7],
+                        y: state.data[i * 7 + 1],
+                        z: state.data[i * 7 + 2],
+                    },
+                    vel: crate::nbody::PVec {
+                        x: state.data[i * 7 + 3],
+                        y: state.data[i * 7 + 4],
+                        z: state.data[i * 7 + 5],
+                    },
+                    mass: state.data[i * 7 + 6],
+                })
+                .collect())
+        }
+        Layout::Aosoa => {
+            const L: usize = 8;
+            let nb = spec.n / L;
+            let mut data = vec![0.0f32; spec.n * 7];
+            for (i, p) in init.iter().enumerate() {
+                let (b, k) = (i / L, i % L);
+                let fields = [p.pos.x, p.pos.y, p.pos.z, p.vel.x, p.vel.y, p.vel.z, p.mass];
+                for (f, v) in fields.iter().enumerate() {
+                    data[b * 7 * L + f * L + k] = *v;
+                }
+            }
+            let mut state = TensorF32::new(data, vec![nb, 7, L]);
+            for _ in 0..spec.steps {
+                state = engine.execute_f32(artifact, &[state])?.remove(0);
+            }
+            Ok((0..spec.n)
+                .map(|i| {
+                    let (b, k) = (i / L, i % L);
+                    let g = |f: usize| state.data[b * 7 * L + f * L + k];
+                    ParticleData {
+                        pos: crate::nbody::PVec { x: g(0), y: g(1), z: g(2) },
+                        vel: crate::nbody::PVec { x: g(3), y: g(4), z: g(5) },
+                        mass: g(6),
+                    }
+                })
+                .collect())
+        }
+    }
+}
+
+/// Render job results as an aligned table.
+pub fn render_results(specs: &[JobSpec], results: &[JobResult]) -> String {
+    let mut out = format!(
+        "{:>4}  {:>9}  {:>14}  {:>6}  {:>6}  {:>12}  {:>10}  {}\n",
+        "id", "layout", "backend", "worker", "batch", "exec", "steps/s", "drift"
+    );
+    for r in results {
+        let spec = specs.iter().find(|s| s.id == r.id);
+        out.push_str(&format!(
+            "{:>4}  {:>9}  {:>14}  {:>6}  {:>6}  {:>12}  {:>10.1}  {}\n",
+            r.id,
+            spec.map(|s| s.layout.name()).unwrap_or("?"),
+            spec.map(|s| s.backend.name()).unwrap_or("?"),
+            r.worker,
+            r.batch_id,
+            format!("{:.2?}", r.exec_time),
+            r.steps_per_sec,
+            if let Some(e) = &r.error { e.clone() } else { format!("{:.1e}", r.energy_drift) },
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(layout: Layout, backend: Backend, n: usize, steps: usize) -> JobSpec {
+        JobSpec { id: 0, layout, backend, n, steps, seed: 1 }
+    }
+
+    #[test]
+    fn native_jobs_complete() {
+        let mut c = Coordinator::start(Config { workers: 2, max_batch: 4, engine: None });
+        for layout in [Layout::Aos, Layout::SoaMb, Layout::Aosoa] {
+            c.submit(spec(layout, Backend::NativeScalar, 64, 2));
+            c.submit(spec(layout, Backend::NativeSimd, 64, 2));
+        }
+        let results = c.finish();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.energy_drift < 1e-2);
+            assert!(r.steps_per_sec > 0.0);
+        }
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pjrt_jobs_error_without_engine() {
+        let mut c = Coordinator::start(Config { workers: 1, max_batch: 2, engine: None });
+        c.submit(spec(Layout::SoaMb, Backend::Pjrt, 64, 1));
+        let results = c.finish();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].error.as_deref().unwrap_or("").contains("no PJRT engine"));
+    }
+
+    #[test]
+    fn batching_respects_limits_and_completes() {
+        let mut c = Coordinator::start(Config { workers: 1, max_batch: 8, engine: None });
+        for _ in 0..6 {
+            c.submit(spec(Layout::SoaMb, Backend::NativeScalar, 64, 1));
+        }
+        assert_eq!(c.metrics().job_counts().0, 6);
+        let results = c.finish();
+        assert_eq!(results.len(), 6);
+        let m_max = results.iter().map(|r| r.batch_id).max().unwrap();
+        assert!(m_max < 6); // batched into <= 6 batches
+    }
+
+    #[test]
+    fn layout_and_backend_parsing() {
+        assert_eq!(Layout::parse("aos"), Some(Layout::Aos));
+        assert_eq!(Layout::parse("soa"), Some(Layout::SoaMb));
+        assert_eq!(Layout::parse("nope"), None);
+        assert_eq!(Backend::parse("simd"), Some(Backend::NativeSimd));
+        assert_eq!(Backend::parse("pjrt"), Some(Backend::Pjrt));
+    }
+}

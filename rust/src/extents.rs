@@ -1,0 +1,373 @@
+//! Array extents: the array dimensions of the data space (paper §2).
+//!
+//! The 2023 paper adds two things over original LLAMA:
+//!
+//! 1. **A user-chosen index type.** All indexing arithmetic runs in a
+//!    configurable integral type `I` ([`IndexType`]) instead of a hardwired
+//!    `usize`/`std::size_t` — GPUs (and, on TPU, scalar-core address
+//!    arithmetic) pay extra for 64-bit integer math. Benchmarked in E8
+//!    (`benches/extents.rs`).
+//!
+//! 2. **Mixed compile-time/runtime extents.** Each dimension is either
+//!    [`Fix`]`<I, E>` (a zero-sized type carrying the extent in the type) or
+//!    [`Dyn`]`<I>` (stores the extent). Extents are tuples of these, so a
+//!    fully static extent tuple is itself zero-sized: combined with inline
+//!    blob storage ([`crate::blob::ArrayStorage`]) the view becomes a
+//!    trivial value type, storage-wise identical to the mapped data —
+//!    `memcpy`-able and placeable in GPU shared memory / TPU VMEM. Verified
+//!    by `size_of` tests below. *Only runtime extents are stored*, exactly
+//!    as in the paper.
+//!
+//! The paper's examples translate as:
+//!
+//! ```
+//! use llama::extents::{Dyn, Fix, Extents};
+//! // auto ae1 = llama::ArrayExtentsDynamic<int, 2>{size1, size2};
+//! let ae1 = (Dyn(100i32), Dyn(200i32));
+//! // auto ae2 = llama::ArrayExtents<std::size_t, 3, llama::dyn, 4, 4>{size};
+//! let ae2 = (Fix::<usize, 3>::new(), Dyn(7usize), Fix::<usize, 4>::new(), Fix::<usize, 4>::new());
+//! // auto ae3 = llama::ArrayExtents<short, 32, 4, 4>{};
+//! let ae3 = (Fix::<i16, 32>::new(), Fix::<i16, 4>::new(), Fix::<i16, 4>::new());
+//! assert_eq!(ae1.count(), 100 * 200);
+//! assert_eq!(ae2.count(), 3 * 7 * 4 * 4);
+//! assert_eq!(std::mem::size_of_val(&ae3), 0); // fully static => stateless
+//! ```
+
+use std::fmt::Debug;
+
+/// An integral type usable for index arithmetic (paper §2: "LLAMA now
+/// allows to specify the data type which should be used in all indexing
+/// computations").
+pub trait IndexType: Copy + Default + PartialEq + Eq + PartialOrd + Ord + Debug + Send + Sync + 'static {
+    /// Human-readable name for reports.
+    const NAME: &'static str;
+    /// Widen to `usize` (always lossless for valid indices).
+    fn to_usize(self) -> usize;
+    /// Narrow from `usize`; debug-asserts the value fits.
+    fn from_usize(v: usize) -> Self;
+    /// Multiply in the index domain (the point of §2: this is the width
+    /// the hardware executes).
+    fn mul(self, rhs: Self) -> Self;
+    /// Add in the index domain.
+    fn add(self, rhs: Self) -> Self;
+}
+
+macro_rules! impl_index_type {
+    ($($t:ty),*) => {$(
+        impl IndexType for $t {
+            const NAME: &'static str = stringify!($t);
+            #[inline(always)]
+            fn to_usize(self) -> usize { self as usize }
+            #[inline(always)]
+            fn from_usize(v: usize) -> Self {
+                debug_assert!(v <= <$t>::MAX as usize, "index {v} overflows {}", stringify!($t));
+                v as $t
+            }
+            #[inline(always)]
+            fn mul(self, rhs: Self) -> Self { self.wrapping_mul(rhs) }
+            #[inline(always)]
+            fn add(self, rhs: Self) -> Self { self.wrapping_add(rhs) }
+        }
+    )*};
+}
+
+impl_index_type!(u8, u16, u32, u64, usize, i16, i32, i64);
+
+/// One array dimension: either a compile-time extent ([`Fix`]) or a
+/// runtime extent ([`Dyn`]).
+pub trait Extent: Copy + Debug + Send + Sync + 'static {
+    /// The index arithmetic type.
+    type Index: IndexType;
+    /// The compile-time extent, or [`DYN`] if decided at runtime.
+    const STATIC: usize;
+    /// The extent value.
+    fn get(self) -> usize;
+}
+
+/// Marker for a runtime extent in `STATIC` position.
+pub const DYN: usize = usize::MAX;
+
+/// A compile-time array extent: zero-sized, the value lives in the type.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fix<I: IndexType, const E: usize>(std::marker::PhantomData<I>);
+
+impl<I: IndexType, const E: usize> Fix<I, E> {
+    /// Construct (zero-sized).
+    pub const fn new() -> Self {
+        Fix(std::marker::PhantomData)
+    }
+}
+
+impl<I: IndexType, const E: usize> Extent for Fix<I, E> {
+    type Index = I;
+    const STATIC: usize = E;
+    #[inline(always)]
+    fn get(self) -> usize {
+        E
+    }
+}
+
+/// A runtime array extent: stores one value of the index type.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Dyn<I: IndexType>(pub I);
+
+impl<I: IndexType> Extent for Dyn<I> {
+    type Index = I;
+    const STATIC: usize = DYN;
+    #[inline(always)]
+    fn get(self) -> usize {
+        self.0.to_usize()
+    }
+}
+
+/// A full set of array extents: a tuple of per-dimension [`Extent`]s
+/// (rank 1–4) sharing one index type.
+pub trait Extents: Copy + Debug + Send + Sync + 'static {
+    /// The shared index arithmetic type.
+    type Index: IndexType;
+    /// Number of array dimensions.
+    const RANK: usize;
+    /// Per-dimension compile-time extents ([`DYN`] where runtime).
+    const STATIC_EXTENTS: &'static [usize];
+    /// Extent of dimension `dim`.
+    fn extent(&self, dim: usize) -> usize;
+
+    /// Total number of records spanned.
+    #[inline]
+    fn count(&self) -> usize {
+        let mut c = 1;
+        for d in 0..Self::RANK {
+            c *= self.extent(d);
+        }
+        c
+    }
+
+    /// Whether every dimension is compile-time (the zero-storage case).
+    fn fully_static() -> bool {
+        Self::STATIC_EXTENTS.iter().all(|&e| e != DYN)
+    }
+}
+
+macro_rules! impl_extents_tuple {
+    ($rank:literal; $($T:ident . $idx:tt),+) => {
+        impl<I: IndexType, $($T: Extent<Index = I>),+> Extents for ($($T,)+) {
+            type Index = I;
+            const RANK: usize = $rank;
+            const STATIC_EXTENTS: &'static [usize] = &[$($T::STATIC),+];
+            #[inline(always)]
+            fn extent(&self, dim: usize) -> usize {
+                let dims = [$(self.$idx.get()),+];
+                dims[dim]
+            }
+        }
+    };
+}
+
+impl_extents_tuple!(1; A.0);
+impl_extents_tuple!(2; A.0, B.1);
+impl_extents_tuple!(3; A.0, B.1, C.2);
+impl_extents_tuple!(4; A.0, B.1, C.2, D.3);
+
+/// Shorthand: rank-1 dynamic extents over `I`.
+pub type Dyn1<I> = (Dyn<I>,);
+/// Shorthand: rank-2 dynamic extents over `I`.
+pub type Dyn2<I> = (Dyn<I>, Dyn<I>);
+/// Shorthand: rank-3 dynamic extents over `I`.
+pub type Dyn3<I> = (Dyn<I>, Dyn<I>, Dyn<I>);
+
+/// Rank-1 dynamic extents with the default (`usize`) index type.
+pub fn dyn1(n: usize) -> Dyn1<usize> {
+    (Dyn(n),)
+}
+
+/// Rank-2 dynamic extents with the default (`usize`) index type.
+pub fn dyn2(n0: usize, n1: usize) -> Dyn2<usize> {
+    (Dyn(n0), Dyn(n1))
+}
+
+// ---------------------------------------------------------------------------
+// Linearizers
+// ---------------------------------------------------------------------------
+
+/// Maps a multidimensional array index to a flat record index.
+///
+/// LLAMA's `LinearizeArrayIndexRight`/`Left`/`Morton`: mappings are
+/// parameterized on the linearizer, so the traversal order of the array
+/// dimensions is itself part of the memory layout.
+///
+/// The arithmetic runs in `E::Index` (§2): with `u32` extents the generated
+/// code uses 32-bit multiplies.
+pub trait Linearizer: Copy + Default + Send + Sync + 'static {
+    /// Name for reports.
+    const NAME: &'static str;
+    /// Whether incrementing the *last* array index increments the linear
+    /// index by one — enables contiguous (vector-move) SIMD fast paths in
+    /// SoA/AoSoA mappings.
+    const LAST_DIM_CONTIGUOUS: bool;
+    /// Flatten `idx` (length `E::RANK`) under extents `e`.
+    fn linearize<E: Extents>(e: &E, idx: &[usize]) -> usize;
+}
+
+/// Row-major / C order: the rightmost index is fastest (LLAMA's
+/// `LinearizeArrayIndexRight`, the default).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RowMajor;
+
+impl Linearizer for RowMajor {
+    const NAME: &'static str = "RowMajor";
+    const LAST_DIM_CONTIGUOUS: bool = true;
+    #[inline(always)]
+    fn linearize<E: Extents>(e: &E, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), E::RANK);
+        let mut lin = E::Index::from_usize(0);
+        for d in 0..E::RANK {
+            debug_assert!(idx[d] < e.extent(d), "index {} out of bounds {}", idx[d], e.extent(d));
+            lin = lin
+                .mul(E::Index::from_usize(e.extent(d)))
+                .add(E::Index::from_usize(idx[d]));
+        }
+        lin.to_usize()
+    }
+}
+
+/// Column-major / Fortran order: the leftmost index is fastest (LLAMA's
+/// `LinearizeArrayIndexLeft`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ColMajor;
+
+impl Linearizer for ColMajor {
+    const NAME: &'static str = "ColMajor";
+    const LAST_DIM_CONTIGUOUS: bool = false;
+    #[inline(always)]
+    fn linearize<E: Extents>(e: &E, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), E::RANK);
+        let mut lin = E::Index::from_usize(0);
+        for d in (0..E::RANK).rev() {
+            debug_assert!(idx[d] < e.extent(d));
+            lin = lin
+                .mul(E::Index::from_usize(e.extent(d)))
+                .add(E::Index::from_usize(idx[d]));
+        }
+        lin.to_usize()
+    }
+}
+
+/// Morton / Z-order curve: interleaves the bits of the (up to 2D) index,
+/// improving locality for stencil-like access (LLAMA's
+/// `LinearizeArrayIndexMorton`). Falls back to row-major beyond rank 2.
+/// Requires power-of-two extents for a bijective mapping; callers should
+/// size views accordingly (debug-asserted).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Morton;
+
+#[inline(always)]
+fn spread_bits(mut v: usize) -> usize {
+    // Insert a zero bit between each of the low 32 bits of v.
+    let mut out = 0usize;
+    let mut bit = 0;
+    while v != 0 {
+        out |= (v & 1) << (2 * bit);
+        v >>= 1;
+        bit += 1;
+    }
+    out
+}
+
+impl Linearizer for Morton {
+    const NAME: &'static str = "Morton";
+    const LAST_DIM_CONTIGUOUS: bool = false;
+    #[inline(always)]
+    fn linearize<E: Extents>(e: &E, idx: &[usize]) -> usize {
+        match E::RANK {
+            1 => idx[0],
+            2 => {
+                debug_assert!(e.extent(0).is_power_of_two() && e.extent(1).is_power_of_two());
+                debug_assert!(idx[0] < e.extent(0) && idx[1] < e.extent(1));
+                (spread_bits(idx[0]) << 1) | spread_bits(idx[1])
+            }
+            _ => RowMajor::linearize(e, idx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_extents_are_zero_sized() {
+        type E3 = (Fix<u16, 32>, Fix<u16, 4>, Fix<u16, 4>);
+        assert_eq!(std::mem::size_of::<E3>(), 0);
+        assert!(E3::fully_static());
+        let e = (Fix::<u16, 32>::new(), Fix::<u16, 4>::new(), Fix::<u16, 4>::new());
+        assert_eq!(e.count(), 512);
+    }
+
+    #[test]
+    fn mixed_extents_store_only_runtime_parts() {
+        // paper ae2: <size_t, 3, dyn, 4, 4> stores exactly one size_t
+        type E = (Fix<usize, 3>, Dyn<usize>, Fix<usize, 4>, Fix<usize, 4>);
+        assert_eq!(std::mem::size_of::<E>(), std::mem::size_of::<usize>());
+        let e: E = (Fix::new(), Dyn(7), Fix::new(), Fix::new());
+        assert_eq!(e.extent(0), 3);
+        assert_eq!(e.extent(1), 7);
+        assert_eq!(e.count(), 3 * 7 * 4 * 4);
+        assert_eq!(E::STATIC_EXTENTS, &[3, DYN, 4, 4]);
+    }
+
+    #[test]
+    fn dynamic_extents_with_narrow_index() {
+        let e = (Dyn(100u16), Dyn(200u16));
+        assert_eq!(std::mem::size_of_val(&e), 4); // two u16
+        assert_eq!(e.count(), 20000);
+    }
+
+    #[test]
+    fn row_major_linearize() {
+        let e = (Dyn(4usize), Dyn(5usize));
+        assert_eq!(RowMajor::linearize(&e, &[0, 0]), 0);
+        assert_eq!(RowMajor::linearize(&e, &[0, 1]), 1);
+        assert_eq!(RowMajor::linearize(&e, &[1, 0]), 5);
+        assert_eq!(RowMajor::linearize(&e, &[3, 4]), 19);
+    }
+
+    #[test]
+    fn col_major_linearize() {
+        let e = (Dyn(4usize), Dyn(5usize));
+        assert_eq!(ColMajor::linearize(&e, &[0, 0]), 0);
+        assert_eq!(ColMajor::linearize(&e, &[1, 0]), 1);
+        assert_eq!(ColMajor::linearize(&e, &[0, 1]), 4);
+        assert_eq!(ColMajor::linearize(&e, &[3, 4]), 19);
+    }
+
+    #[test]
+    fn morton_linearize() {
+        let e = (Dyn(4usize), Dyn(4usize));
+        // Z-order for 2x2 blocks: (0,0)=0 (0,1)=1 (1,0)=2 (1,1)=3
+        assert_eq!(Morton::linearize(&e, &[0, 0]), 0);
+        assert_eq!(Morton::linearize(&e, &[0, 1]), 1);
+        assert_eq!(Morton::linearize(&e, &[1, 0]), 2);
+        assert_eq!(Morton::linearize(&e, &[1, 1]), 3);
+        assert_eq!(Morton::linearize(&e, &[2, 2]), 12);
+        // bijective over the whole extent
+        let mut seen = vec![false; 16];
+        for i in 0..4 {
+            for j in 0..4 {
+                let l = Morton::linearize(&e, &[i, j]);
+                assert!(!seen[l]);
+                seen[l] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn index_arithmetic_in_narrow_type() {
+        // u16 arithmetic wraps at 65536 — documents that the index type is
+        // genuinely used for computation (the paper's 32-bit-on-GPU point).
+        let e = (Dyn(300u16), Dyn(300u16));
+        // 299*300+299 = 89999 > u16::MAX would wrap; extents this large with
+        // u16 are a user error, mirroring C++ narrowing semantics.
+        assert_eq!(e.count(), 90000); // count() itself runs in usize
+    }
+}

@@ -1,0 +1,79 @@
+//! # llama-rs — Low-Level Abstraction of Memory Access, in Rust
+//!
+//! Reproduction of *Updates on the Low-Level Abstraction of Memory Access*
+//! (Gruber, 2023) — the LLAMA C++ library — as a Rust library with a
+//! JAX/Pallas AOT compute path executed through PJRT.
+//!
+//! LLAMA separates the *algorithmic view* of data (multidimensional arrays
+//! of nested, structured records) from its *mapping* to memory. Programs
+//! interact with a [`view::View`] spanning a record dimension
+//! ([`record::RecordDim`]) and array dimensions ([`extents`]); the view's
+//! [`mapping`] decides where each scalar lives (AoS, SoA, AoSoA, bit-packed,
+//! byte-split, type-changed, instrumented, ...) and can be exchanged without
+//! touching the algorithm.
+//!
+//! ```
+//! use llama::prelude::*;
+//!
+//! llama::record! {
+//!     /// A 3D particle: nested position/velocity records plus a mass.
+//!     pub struct Particle, mod particle {
+//!         pos: { x: f64, y: f64, z: f64 },
+//!         vel: { x: f64, y: f64, z: f64 },
+//!         mass: f32,
+//!     }
+//! }
+//!
+//! // One array dimension with a runtime extent, mapped struct-of-arrays.
+//! let extents = (Dyn(128u32),);
+//! let mapping = SoA::<Particle, _>::new(extents);
+//! let mut view = alloc_view(mapping, &HeapAlloc);
+//!
+//! view.set(&[3], particle::mass, 1.5f32);
+//! let m: f32 = view.get(&[3], particle::mass);
+//! assert_eq!(m, 1.5);
+//! ```
+//!
+//! The crate layers (paper section → module):
+//! - §2 compile-time array extents → [`extents`]
+//! - §3 new memory mappings → [`mapping`]
+//! - §4 access instrumentation → [`mapping::field_access_count`], [`mapping::heatmap`]
+//! - §5 explicit SIMD → [`simd`]
+//! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
+//! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
+
+pub mod bench;
+pub mod blob;
+pub mod compress;
+pub mod coordinator;
+pub mod copy;
+pub mod extents;
+pub mod mapping;
+pub mod nbody;
+pub mod record;
+pub mod runtime;
+pub mod simd;
+pub mod testing;
+pub mod view;
+
+/// Convenience re-exports covering the common 90% of the API.
+pub mod prelude {
+    pub use crate::blob::{alloc_view, AlignedAlloc, ArrayStorage, BlobAlloc, BlobStorage, HeapAlloc};
+    pub use crate::extents::{ColMajor, Dyn, Extent, Extents, Fix, Linearizer, Morton, RowMajor};
+    pub use crate::mapping::aos::{AoS, FieldOrder, Packed};
+    pub use crate::mapping::aosoa::AoSoA;
+    pub use crate::mapping::bitpack_float::BitpackFloatSoA;
+    pub use crate::mapping::bitpack_int::{BitpackIntSoA, BitpackIntSoADyn};
+    pub use crate::mapping::bytesplit::Bytesplit;
+    pub use crate::mapping::changetype::ChangeType;
+    pub use crate::mapping::field_access_count::FieldAccessCount;
+    pub use crate::mapping::heatmap::Heatmap;
+    pub use crate::mapping::null::NullMapping;
+    pub use crate::mapping::one::One;
+    pub use crate::mapping::soa::{MultiBlob, SingleBlob, SoA};
+    pub use crate::mapping::split::Split;
+    pub use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+    pub use crate::record::{Bf16, Field, RecordDim, Scalar, ScalarType, Selection, F16};
+    pub use crate::simd::{Simd, SimdElem};
+    pub use crate::view::{RecordRef, RecordRefMut, View};
+}

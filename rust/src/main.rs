@@ -1,0 +1,293 @@
+//! `llama-lab` — CLI for the LLAMA reproduction's layout lab.
+//!
+//! Subcommands:
+//! - `run`      run n-body jobs through the coordinator (native or PJRT)
+//! - `serve`    read job lines from stdin, execute, print results
+//! - `heatmap`  §4 instrumentation demo: ASCII heatmap + CSV of access patterns
+//! - `trace`    §4 FieldAccessCount demo: per-field access table
+//! - `compress` §3 Bytesplit demo: compression-ratio table
+//! - `artifacts-check` compile every AOT artifact and report
+//!
+//! Argument parsing is hand-rolled (offline image carries no clap).
+
+use llama::coordinator::{render_results, Backend, Config, Coordinator, JobSpec, Layout};
+use llama::runtime::{default_artifacts_dir, Engine, PjrtService, NBODY_ARTIFACTS};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let code = match cmd {
+        "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
+        "heatmap" => cmd_heatmap(rest),
+        "trace" => cmd_trace(rest),
+        "compress" => cmd_compress(rest),
+        "artifacts-check" => cmd_artifacts_check(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "llama-lab — LLAMA (Low-Level Abstraction of Memory Access) layout lab
+
+USAGE: llama-lab <command> [options]
+
+COMMANDS:
+  run      --layout aos|soa|aosoa|bf16 --backend scalar|simd|pjrt
+           [--n 1024] [--steps 10] [--seed 1] [--workers 2] [--repeat 1]
+  serve    read jobs from stdin, one per line:
+           <layout> <backend> <n> <steps> [seed]
+  heatmap  [--n 256] [--granularity 64] [--csv out.csv]
+  trace    [--n 256] [--steps 2]
+  compress [--n 65536]
+  artifacts-check
+"
+    );
+}
+
+fn opt(rest: &[String], name: &str) -> Option<String> {
+    rest.iter().position(|a| a == name).and_then(|i| rest.get(i + 1).cloned())
+}
+
+fn opt_usize(rest: &[String], name: &str, default: usize) -> usize {
+    opt(rest, name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn engine_if_needed(backends: &[Backend]) -> Option<PjrtService> {
+    if backends.contains(&Backend::Pjrt) {
+        match PjrtService::spawn(default_artifacts_dir()) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("warning: PJRT engine unavailable: {e:#}");
+                None
+            }
+        }
+    } else {
+        None
+    }
+}
+
+fn cmd_run(rest: &[String]) -> i32 {
+    let layout = opt(rest, "--layout").and_then(|s| Layout::parse(&s)).unwrap_or(Layout::SoaMb);
+    let backend =
+        opt(rest, "--backend").and_then(|s| Backend::parse(&s)).unwrap_or(Backend::NativeSimd);
+    let n = opt_usize(rest, "--n", 1024);
+    let steps = opt_usize(rest, "--steps", 10);
+    let seed = opt_usize(rest, "--seed", 1) as u64;
+    let workers = opt_usize(rest, "--workers", 2);
+    let repeat = opt_usize(rest, "--repeat", 1);
+
+    let engine = engine_if_needed(&[backend]);
+    let mut coord = Coordinator::start(Config { workers, max_batch: 8, engine });
+    let mut specs = Vec::new();
+    for _ in 0..repeat {
+        let mut s = JobSpec { id: 0, layout, backend, n, steps, seed };
+        s.id = coord.submit(s.clone());
+        specs.push(s);
+    }
+    let results = coord.finish();
+    print!("{}", render_results(&specs, &results));
+    i32::from(results.iter().any(|r| r.error.is_some()))
+}
+
+fn cmd_serve(rest: &[String]) -> i32 {
+    let workers = opt_usize(rest, "--workers", 2);
+    use std::io::BufRead;
+    let stdin = std::io::stdin();
+    let mut specs = Vec::new();
+    let mut parsed = Vec::new();
+    for line in stdin.lock().lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.is_empty() || parts[0].starts_with('#') {
+            continue;
+        }
+        if parts.len() < 4 {
+            eprintln!("bad job line (want: <layout> <backend> <n> <steps> [seed]): {line}");
+            continue;
+        }
+        let (Some(layout), Some(backend)) = (Layout::parse(parts[0]), Backend::parse(parts[1]))
+        else {
+            eprintln!("bad layout/backend in: {line}");
+            continue;
+        };
+        let n: usize = parts[2].parse().unwrap_or(1024);
+        let steps: usize = parts[3].parse().unwrap_or(1);
+        let seed: u64 = parts.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
+        parsed.push(JobSpec { id: 0, layout, backend, n, steps, seed });
+    }
+    let backends: Vec<Backend> = parsed.iter().map(|s| s.backend).collect();
+    let engine = engine_if_needed(&backends);
+    let mut coord = Coordinator::start(Config { workers, max_batch: 8, engine });
+    for mut s in parsed {
+        s.id = coord.submit(s.clone());
+        specs.push(s);
+    }
+    let metrics_snapshot;
+    let results = {
+        metrics_snapshot = coord.metrics().render();
+        let _ = &metrics_snapshot;
+        coord.finish()
+    };
+    print!("{}", render_results(&specs, &results));
+    0
+}
+
+fn cmd_heatmap(rest: &[String]) -> i32 {
+    use llama::blob::{alloc_view, HeapAlloc};
+    use llama::mapping::heatmap::Heatmap;
+    use llama::nbody::{init_particles, views, Particle};
+
+    let n = opt_usize(rest, "--n", 256);
+    let gran = opt_usize(rest, "--granularity", 64);
+    let init = init_particles(n, 1);
+
+    macro_rules! with_gran {
+        ($g:literal) => {{
+            let hm = Heatmap::<Particle, _, $g>::new(views::SoaMbMap::new((
+                llama::extents::Dyn(n as u32),
+            ),));
+            let mut view = alloc_view(hm, &HeapAlloc);
+            views::fill_view(&mut view, &init);
+            views::update_scalar(&mut view);
+            views::move_scalar(&mut view);
+            println!(
+                "heatmap after 1 n-body step, n={n}, granularity={} B, counter memory {} B:",
+                $g,
+                view.mapping().counter_bytes()
+            );
+            println!("{}", view.mapping().render_ascii(72));
+            if let Some(csv_path) = opt(rest, "--csv") {
+                std::fs::write(&csv_path, view.mapping().to_csv()).expect("write csv");
+                println!("wrote {csv_path}");
+            }
+        }};
+    }
+    match gran {
+        1 => with_gran!(1),
+        8 => with_gran!(8),
+        64 => with_gran!(64),
+        _ => {
+            eprintln!("supported granularities: 1, 8, 64");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_trace(rest: &[String]) -> i32 {
+    use llama::blob::{alloc_view, HeapAlloc};
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::nbody::{init_particles, views, Particle};
+
+    let n = opt_usize(rest, "--n", 256);
+    let steps = opt_usize(rest, "--steps", 2);
+    let fac: FieldAccessCount<Particle, _> =
+        FieldAccessCount::new(views::SoaMbMap::new((llama::extents::Dyn(n as u32),)));
+    let mut view = alloc_view(fac, &HeapAlloc);
+    views::fill_view(&mut view, &init_particles(n, 1));
+    view.mapping().reset(); // don't count the fill
+    for _ in 0..steps {
+        views::update_scalar(&mut view);
+        views::move_scalar(&mut view);
+    }
+    println!("field access counts after {steps} n-body steps, n={n}:");
+    print!("{}", view.mapping().render_table());
+    0
+}
+
+fn cmd_compress(rest: &[String]) -> i32 {
+    use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+    use llama::compress::{measure_blobs, Codec};
+    use llama::mapping::bytesplit::Bytesplit;
+    use llama::mapping::soa::SoA;
+    use llama::testing::Rng;
+
+    llama::record! {
+        struct Event, mod ev {
+            adc: u32,
+            time: u64,
+            energy: f32,
+        }
+    }
+
+    let n = opt_usize(rest, "--n", 65536);
+    let mut rng = Rng::new(3);
+
+    // Small-valued detector-like data: low bytes vary, high bytes zero.
+    let mut soa = alloc_view(SoA::<Event, _>::new((llama::extents::Dyn(n as u32),)), &HeapAlloc);
+    let mut bs =
+        alloc_view(Bytesplit::<Event, _>::new((llama::extents::Dyn(n as u32),)), &HeapAlloc);
+    for i in 0..n {
+        let adc = rng.range_u64(0, 4095) as u32;
+        let t = (i as u64) * 25 + rng.range_u64(0, 31);
+        let e = (adc as f32) * 0.05;
+        soa.set(&[i], ev::adc, adc);
+        soa.set(&[i], ev::time, t);
+        soa.set(&[i], ev::energy, e);
+        bs.set(&[i], ev::adc, adc);
+        bs.set(&[i], ev::time, t);
+        bs.set(&[i], ev::energy, e);
+    }
+
+    println!("compression of {n} HEP-like events (adc 12-bit, monotonic time, f32 energy):");
+    println!("{:>8} {:>12} {:>14} {:>8}", "codec", "layout", "bytes", "ratio");
+    for codec in Codec::ALL {
+        let soa_blobs: Vec<&[u8]> =
+            (0..soa.storage().blob_count()).map(|b| soa.storage().blob(b)).collect();
+        let bs_blobs: Vec<&[u8]> =
+            (0..bs.storage().blob_count()).map(|b| bs.storage().blob(b)).collect();
+        for (label, blobs) in [("SoA", &soa_blobs), ("Bytesplit", &bs_blobs)] {
+            let stat = measure_blobs(blobs, codec).expect("compress");
+            println!(
+                "{:>8} {:>12} {:>14} {:>8.2}",
+                codec.name(),
+                label,
+                stat.compressed,
+                stat.ratio()
+            );
+        }
+    }
+    0
+}
+
+fn cmd_artifacts_check(_rest: &[String]) -> i32 {
+    let engine = match Engine::cpu(default_artifacts_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("PJRT client failed: {e:#}");
+            return 1;
+        }
+    };
+    println!("PJRT platform: {}", engine.platform());
+    let mut failures = 0;
+    for name in NBODY_ARTIFACTS {
+        if !engine.artifact_available(name) {
+            println!("  {name:<20} MISSING (run `make artifacts`)");
+            failures += 1;
+            continue;
+        }
+        match engine.load(name) {
+            Ok(()) => println!("  {name:<20} OK"),
+            Err(e) => {
+                println!("  {name:<20} FAILED: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    i32::from(failures > 0)
+}

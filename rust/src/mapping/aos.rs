@@ -1,0 +1,387 @@
+//! Array-of-Structs mapping.
+//!
+//! One blob, records stored consecutively. The in-record field layout is a
+//! policy ([`FieldOrder`]): packed declaration order, naturally aligned
+//! declaration order (what a C compiler does to the equivalent struct), or
+//! padding-minimizing order (fields sorted by descending alignment) —
+//! LLAMA's `mapping::AoS` with its `fieldAlignment`/`PermuteFields`
+//! parameters.
+
+use std::marker::PhantomData;
+
+use crate::extents::{Extents, Linearizer, RowMajor};
+use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::record::{Field, RecordDim, Scalar};
+use crate::simd::SimdElem;
+
+/// Const-dispatch discriminant for [`FieldOrder`] policies, letting the
+/// offset math run in `const` contexts (trait methods cannot be `const`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FieldOrderKind {
+    /// Declaration order, no padding.
+    Packed,
+    /// Declaration order, natural alignment.
+    Aligned,
+    /// Descending-alignment order, no padding.
+    MinPad,
+}
+
+/// In-record field placement policy for [`AoS`].
+pub trait FieldOrder: Copy + Default + Send + Sync + 'static {
+    /// Name for fingerprints/reports.
+    const NAME: &'static str;
+    /// Const discriminant (drives the compile-time offset LUTs).
+    const KIND: FieldOrderKind;
+    /// Size of one record under this policy (over the masked fields).
+    fn record_size(fields: &[Field], mask: FieldMask) -> usize {
+        record_size_of(Self::KIND, fields, mask.0)
+    }
+    /// Offset of `field` within one record under this policy.
+    fn field_offset(fields: &[Field], field: usize, mask: FieldMask) -> usize {
+        offsets_of(Self::KIND, fields, mask.0)[field]
+    }
+}
+
+/// Whether field `a` is placed before field `b` under MinPad order
+/// (descending alignment, stable by declaration index).
+const fn minpad_precedes(fields: &[Field], a: usize, b: usize) -> bool {
+    let (aa, ab) = (fields[a].align(), fields[b].align());
+    aa > ab || (aa == ab && a < b)
+}
+
+/// Record size under `kind` over the fields selected by `mask`
+/// (const-evaluable; see [`FieldOrderKind`]).
+pub const fn record_size_of(kind: FieldOrderKind, fields: &[Field], mask: u64) -> usize {
+    let m = FieldMask(mask);
+    match kind {
+        FieldOrderKind::Packed | FieldOrderKind::MinPad => {
+            let mut s = 0;
+            let mut i = 0;
+            while i < fields.len() {
+                if m.contains(i) {
+                    s += fields[i].size();
+                }
+                i += 1;
+            }
+            s
+        }
+        FieldOrderKind::Aligned => {
+            let mut off = 0;
+            let mut max_a = 1;
+            let mut i = 0;
+            while i < fields.len() {
+                if m.contains(i) {
+                    let a = fields[i].align();
+                    off = (off + a - 1) / a * a + fields[i].size();
+                    if a > max_a {
+                        max_a = a;
+                    }
+                }
+                i += 1;
+            }
+            (off + max_a - 1) / max_a * max_a
+        }
+    }
+}
+
+/// In-record field offsets under `kind` as a fixed LUT (const-evaluable;
+/// entries for masked-out or absent fields are 0).
+pub const fn offsets_of(
+    kind: FieldOrderKind,
+    fields: &[Field],
+    mask: u64,
+) -> [usize; crate::record::MAX_FIELDS] {
+    let m = FieldMask(mask);
+    let mut lut = [0usize; crate::record::MAX_FIELDS];
+    match kind {
+        FieldOrderKind::Packed => {
+            let mut off = 0;
+            let mut i = 0;
+            while i < fields.len() {
+                if m.contains(i) {
+                    lut[i] = off;
+                    off += fields[i].size();
+                }
+                i += 1;
+            }
+        }
+        FieldOrderKind::Aligned => {
+            let mut off = 0;
+            let mut i = 0;
+            while i < fields.len() {
+                if m.contains(i) {
+                    let a = fields[i].align();
+                    off = (off + a - 1) / a * a;
+                    lut[i] = off;
+                    off += fields[i].size();
+                }
+                i += 1;
+            }
+        }
+        FieldOrderKind::MinPad => {
+            let mut f = 0;
+            while f < fields.len() {
+                if m.contains(f) {
+                    let mut off = 0;
+                    let mut i = 0;
+                    while i < fields.len() {
+                        if i != f && m.contains(i) && minpad_precedes(fields, i, f) {
+                            off += fields[i].size();
+                        }
+                        i += 1;
+                    }
+                    lut[f] = off;
+                }
+                f += 1;
+            }
+        }
+    }
+    lut
+}
+
+/// Packed, declaration order: no padding, fields may be unaligned.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Packed;
+
+impl FieldOrder for Packed {
+    const NAME: &'static str = "Packed";
+    const KIND: FieldOrderKind = FieldOrderKind::Packed;
+}
+
+/// Naturally aligned, declaration order: each field aligned to its scalar
+/// alignment, record size rounded to max alignment — the layout of the
+/// equivalent flattened `#[repr(C)]` struct.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Aligned;
+
+impl FieldOrder for Aligned {
+    const NAME: &'static str = "Aligned";
+    const KIND: FieldOrderKind = FieldOrderKind::Aligned;
+}
+
+/// Padding-minimizing order: fields sorted by descending alignment (stable
+/// by declaration index). With natural scalar sizes this eliminates all
+/// padding while keeping every field aligned — LLAMA's
+/// `PermuteFieldsMinimizePadding`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MinPad;
+
+impl FieldOrder for MinPad {
+    const NAME: &'static str = "MinPad";
+    const KIND: FieldOrderKind = FieldOrderKind::MinPad;
+}
+
+/// Array-of-Structs: records consecutive in one blob.
+///
+/// ```
+/// use llama::prelude::*;
+/// llama::record! { pub struct P, mod p { x: f64, m: f32 } }
+/// let aos = AoS::<P, _>::new((Dyn(8u32),));
+/// let mut v = alloc_view(aos, &HeapAlloc);
+/// v.set(&[2], p::m, 5.0f32);
+/// assert_eq!(v.get::<f32>(&[2], p::m), 5.0);
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AoS<R, E, FO = Aligned, L = RowMajor, const MASK: u64 = { u64::MAX }> {
+    extents: E,
+    _pd: PhantomData<(R, FO, L)>,
+}
+
+impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64>
+    AoS<R, E, FO, L, MASK>
+{
+    /// Mapping over `extents`.
+    pub fn new(extents: E) -> Self {
+        AoS { extents, _pd: PhantomData }
+    }
+
+    /// The field mask as a value.
+    pub const fn mask() -> FieldMask {
+        FieldMask(MASK)
+    }
+
+    /// Bytes of one record (computed once per monomorphization — §Perf:
+    /// keeps the offset math out of the access hot path).
+    pub const RECORD_SIZE: usize = record_size_of(FO::KIND, R::FIELDS, MASK);
+
+    /// In-record field offsets (constant LUT).
+    pub const OFFSETS: [usize; crate::record::MAX_FIELDS] =
+        offsets_of(FO::KIND, R::FIELDS, MASK);
+
+    /// Bytes of one record under the field-order policy.
+    #[inline(always)]
+    pub fn record_size() -> usize {
+        Self::RECORD_SIZE
+    }
+}
+
+impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64> Mapping<R>
+    for AoS<R, E, FO, L, MASK>
+{
+    type Extents = E;
+    const BLOB_COUNT: usize = 1;
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, _i: usize) -> usize {
+        self.extents.count() * Self::RECORD_SIZE
+    }
+
+    fn fingerprint(&self) -> String {
+        format!(
+            "AoS<{},{},{},mask={MASK:x}>@{:?}",
+            R::NAME,
+            FO::NAME,
+            L::NAME,
+            (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
+        )
+    }
+}
+
+impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64> PhysicalMapping<R>
+    for AoS<R, E, FO, L, MASK>
+{
+    #[inline(always)]
+    fn blob_nr_and_offset(&self, idx: &[usize], field: usize) -> (usize, usize) {
+        let lin = L::linearize(&self.extents, idx);
+        (0, lin * Self::RECORD_SIZE + Self::OFFSETS[field])
+    }
+}
+
+impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64> MemoryAccess<R>
+    for AoS<R, E, FO, L, MASK>
+{
+    #[inline(always)]
+    fn load<T: Scalar, S: crate::blob::BlobStorage>(
+        &self,
+        storage: &S,
+        idx: &[usize],
+        field: usize,
+    ) -> T {
+        crate::mapping::physical_load::<R, _, T, S>(self, storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: crate::blob::BlobStorage>(
+        &self,
+        storage: &mut S,
+        idx: &[usize],
+        field: usize,
+        v: T,
+    ) {
+        crate::mapping::physical_store::<R, _, T, S>(self, storage, idx, field, v)
+    }
+}
+
+// AoS keeps the default (scalar-walk) SIMD access: strided element loads.
+// The paper notes LLAMA's scalar loads beat manual `gather` for AoS on the
+// tested CPU — the same structure applies here.
+impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64> SimdAccess<R>
+    for AoS<R, E, FO, L, MASK>
+{
+}
+
+// Allow `SimdElem` bound to appear in doc/blanket positions without warnings.
+#[allow(unused)]
+fn _simd_elem_used<T: SimdElem>() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+
+    crate::record! {
+        pub struct P, mod p {
+            pos: { x: f64, y: f64, z: f64 },
+            mass: f32,
+            flag: bool,
+        }
+    }
+
+    #[test]
+    fn aligned_layout_matches_c_struct() {
+        // f64 x3 (24) + f32 (4) + bool (1) -> pad to 8 => 32... wait:
+        // offsets: x=0 y=8 z=16 (24), mass=24 (28), flag=28, size pad to 8 => 32
+        assert_eq!(AoS::<P, (Dyn<u32>,)>::record_size(), 32);
+        let m = AoS::<P, _>::new((Dyn(4u32),));
+        assert_eq!(m.blob_size(0), 4 * 32);
+        assert_eq!(m.blob_nr_and_offset(&[1], p::pos::z), (0, 32 + 16));
+        assert_eq!(m.blob_nr_and_offset(&[2], p::mass), (0, 64 + 24));
+        assert_eq!(m.blob_nr_and_offset(&[2], p::flag), (0, 64 + 28));
+    }
+
+    #[test]
+    fn packed_layout() {
+        assert_eq!(AoS::<P, (Dyn<u32>,), Packed>::record_size(), 29);
+        let m = AoS::<P, (Dyn<u32>,), Packed>::new((Dyn(4u32),));
+        assert_eq!(m.blob_nr_and_offset(&[1], p::pos::x), (0, 29));
+        assert_eq!(m.blob_nr_and_offset(&[0], p::flag), (0, 28));
+    }
+
+    #[test]
+    fn minpad_layout() {
+        // desc align: x,y,z (8) then mass (4) then flag (1) — same as decl
+        // here, so offsets match packed; size has no padding.
+        assert_eq!(AoS::<P, (Dyn<u32>,), MinPad>::record_size(), 29);
+        let m = AoS::<P, (Dyn<u32>,), MinPad>::new((Dyn(2u32),));
+        assert_eq!(m.blob_nr_and_offset(&[0], p::mass), (0, 24));
+    }
+
+    crate::record! {
+        pub struct Shuffled, mod sh {
+            a: u8,
+            b: f64,
+            c: u16,
+            d: f32,
+        }
+    }
+
+    #[test]
+    fn minpad_reorders() {
+        // aligned decl order: a=0, b=8(pad 7), c=16, d=20, size=24
+        assert_eq!(AoS::<Shuffled, (Dyn<u32>,), Aligned>::record_size(), 24);
+        // minpad order: b(8) d(4) c(2) a(1) => size 15, offsets b=0 d=8 c=12 a=14
+        assert_eq!(AoS::<Shuffled, (Dyn<u32>,), MinPad>::record_size(), 15);
+        let m = AoS::<Shuffled, (Dyn<u32>,), MinPad>::new((Dyn(2u32),));
+        assert_eq!(m.blob_nr_and_offset(&[0], sh::b), (0, 0));
+        assert_eq!(m.blob_nr_and_offset(&[0], sh::d), (0, 8));
+        assert_eq!(m.blob_nr_and_offset(&[0], sh::c), (0, 12));
+        assert_eq!(m.blob_nr_and_offset(&[0], sh::a), (0, 14));
+    }
+
+    #[test]
+    fn masked_aos() {
+        // only pos.* mapped (fields 0..3): mask 0b00111
+        const M: u64 = 0b00111;
+        let m = AoS::<P, (Dyn<u32>,), Aligned, RowMajor, M>::new((Dyn(4u32),));
+        assert_eq!(AoS::<P, (Dyn<u32>,), Aligned, RowMajor, M>::record_size(), 24);
+        assert_eq!(m.blob_size(0), 96);
+        assert_eq!(m.blob_nr_and_offset(&[1], p::pos::y), (0, 32));
+    }
+
+    #[test]
+    fn roundtrip_through_view() {
+        let mut v = alloc_view(AoS::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
+        v.set(&[3], p::pos::y, -2.5f64);
+        v.set(&[3], p::mass, 7.5f32);
+        v.set(&[3], p::flag, true);
+        assert_eq!(v.get::<f64>(&[3], p::pos::y), -2.5);
+        assert_eq!(v.get::<f32>(&[3], p::mass), 7.5);
+        assert!(v.get::<bool>(&[3], p::flag));
+        // neighbours untouched
+        assert_eq!(v.get::<f64>(&[2], p::pos::y), 0.0);
+        assert_eq!(v.get::<f64>(&[4], p::pos::y), 0.0);
+    }
+
+    #[test]
+    fn stateless_when_static_extents() {
+        use crate::extents::Fix;
+        type M = AoS<P, (Fix<u32, 16>,)>;
+        assert_eq!(std::mem::size_of::<M>(), 0);
+    }
+}

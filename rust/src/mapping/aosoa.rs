@@ -1,0 +1,215 @@
+//! Array-of-Struct-of-Arrays mapping.
+//!
+//! Records are grouped into blocks of `LANES`; within a block each field's
+//! `LANES` values are contiguous. The layout SIMD hardware wants: a vector
+//! load of one field touches one cache line, while successive fields of the
+//! same record stay close — LLAMA's `mapping::AoSoA<Lanes>`, the third
+//! layout of the paper's Figure 3 (with its known single-loop overhead,
+//! reproduced by E1).
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+use crate::extents::{Extents, Linearizer, RowMajor};
+use crate::mapping::soa::{default_load_simd, default_store_simd};
+use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::record::{RecordDim, Scalar};
+use crate::simd::{Simd, SimdElem};
+
+/// Array-of-Struct-of-Arrays with `LANES` records per block.
+///
+/// ```
+/// use llama::prelude::*;
+/// llama::record! { pub struct P, mod p { x: f32, y: f32 } }
+/// let mut v = alloc_view(AoSoA::<P, _, 8>::new((Dyn(32u32),)), &HeapAlloc);
+/// v.set(&[9], p::y, 3.0f32);
+/// assert_eq!(v.get::<f32>(&[9], p::y), 3.0);
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AoSoA<R, E, const LANES: usize, L = RowMajor, const MASK: u64 = { u64::MAX }> {
+    extents: E,
+    _pd: PhantomData<(R, L)>,
+}
+
+impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u64>
+    AoSoA<R, E, LANES, L, MASK>
+{
+    /// Mapping over `extents`.
+    pub fn new(extents: E) -> Self {
+        assert!(LANES > 0 && LANES.is_power_of_two(), "LANES must be a power of two");
+        AoSoA { extents, _pd: PhantomData }
+    }
+
+    /// Packed record size over the masked fields (constant — §Perf).
+    pub const RECORD_SIZE: usize =
+        crate::mapping::aos::record_size_of(crate::mapping::aos::FieldOrderKind::Packed, R::FIELDS, MASK);
+
+    /// Packed in-record offsets over the masked fields (constant LUT).
+    pub const OFFSETS: [usize; crate::record::MAX_FIELDS] =
+        crate::mapping::aos::offsets_of(crate::mapping::aos::FieldOrderKind::Packed, R::FIELDS, MASK);
+
+    /// Per-field scalar sizes (constant LUT).
+    pub const SIZES: [usize; crate::record::MAX_FIELDS] = crate::record::size_lut(R::FIELDS);
+
+    /// Packed record size over the masked fields.
+    #[inline(always)]
+    fn record_size() -> usize {
+        Self::RECORD_SIZE
+    }
+
+    /// Number of blocks needed for the extents.
+    #[inline(always)]
+    fn blocks(&self) -> usize {
+        self.extents.count().div_ceil(LANES)
+    }
+}
+
+impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u64> Mapping<R>
+    for AoSoA<R, E, LANES, L, MASK>
+{
+    type Extents = E;
+    const BLOB_COUNT: usize = 1;
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, _i: usize) -> usize {
+        self.blocks() * LANES * Self::record_size()
+    }
+
+    fn fingerprint(&self) -> String {
+        format!(
+            "AoSoA<{},{LANES},{},mask={MASK:x}>@{:?}",
+            R::NAME,
+            L::NAME,
+            (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
+        )
+    }
+}
+
+impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u64>
+    PhysicalMapping<R> for AoSoA<R, E, LANES, L, MASK>
+{
+    #[inline(always)]
+    fn blob_nr_and_offset(&self, idx: &[usize], field: usize) -> (usize, usize) {
+        debug_assert!(FieldMask(MASK).contains(field));
+        let lin = L::linearize(&self.extents, idx);
+        let block = lin / LANES;
+        let lane = lin % LANES;
+        let off = block * LANES * Self::RECORD_SIZE
+            + Self::OFFSETS[field] * LANES
+            + lane * Self::SIZES[field];
+        (0, off)
+    }
+}
+
+impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u64> MemoryAccess<R>
+    for AoSoA<R, E, LANES, L, MASK>
+{
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        crate::mapping::physical_load::<R, _, T, S>(self, storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        crate::mapping::physical_store::<R, _, T, S>(self, storage, idx, field, v)
+    }
+}
+
+impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u64> SimdAccess<R>
+    for AoSoA<R, E, LANES, L, MASK>
+{
+    #[inline(always)]
+    fn load_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &S,
+        idx: &[usize],
+        field: usize,
+    ) -> Simd<T, N> {
+        if L::LAST_DIM_CONTIGUOUS && N <= LANES {
+            let lin = L::linearize(&self.extents, idx);
+            // Contiguous only when the N lanes stay inside one block.
+            if lin % LANES + N <= LANES {
+                let (b, off) = self.blob_nr_and_offset(idx, field);
+                return Simd::from_le_bytes(&storage.blob(b)[off..off + N * T::SIZE]);
+            }
+        }
+        default_load_simd(self, storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &mut S,
+        idx: &[usize],
+        field: usize,
+        v: Simd<T, N>,
+    ) {
+        if L::LAST_DIM_CONTIGUOUS && N <= LANES {
+            let lin = L::linearize(&self.extents, idx);
+            if lin % LANES + N <= LANES {
+                let (b, off) = self.blob_nr_and_offset(idx, field);
+                v.write_le_bytes(&mut storage.blob_mut(b)[off..off + N * T::SIZE]);
+                return;
+            }
+        }
+        default_store_simd(self, storage, idx, field, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+
+    crate::record! {
+        pub struct P, mod p {
+            x: f32,
+            y: f32,
+            m: f64,
+        }
+    }
+
+    #[test]
+    fn layout() {
+        // record_size = 4+4+8 = 16; LANES=4 => block = 64 bytes
+        let m = AoSoA::<P, _, 4>::new((Dyn(10u32),));
+        assert_eq!(m.blob_size(0), 3 * 4 * 16); // ceil(10/4)=3 blocks
+        // record 5 = block 1, lane 1
+        assert_eq!(m.blob_nr_and_offset(&[5], p::x), (0, 64 + 0 * 4 + 1 * 4));
+        assert_eq!(m.blob_nr_and_offset(&[5], p::y), (0, 64 + 4 * 4 + 1 * 4));
+        assert_eq!(m.blob_nr_and_offset(&[5], p::m), (0, 64 + 8 * 4 + 1 * 8));
+    }
+
+    #[test]
+    fn roundtrip_all_lanes() {
+        let mut v = alloc_view(AoSoA::<P, _, 8>::new((Dyn(20u32),)), &HeapAlloc);
+        for i in 0..20 {
+            v.set(&[i], p::x, i as f32);
+            v.set(&[i], p::m, -(i as f64));
+        }
+        for i in 0..20 {
+            assert_eq!(v.get::<f32>(&[i], p::x), i as f32);
+            assert_eq!(v.get::<f64>(&[i], p::m), -(i as f64));
+        }
+    }
+
+    #[test]
+    fn simd_within_block_is_contiguous() {
+        let mut v = alloc_view(AoSoA::<P, _, 8>::new((Dyn(16u32),)), &HeapAlloc);
+        for i in 0..16 {
+            v.set(&[i], p::y, (10 + i) as f32);
+        }
+        let s: Simd<f32, 8> = v.load_simd(&[8], p::y);
+        assert_eq!(s.0[0], 18.0);
+        assert_eq!(s.0[7], 25.0);
+        // Crossing a block boundary still works (fallback path).
+        let s: Simd<f32, 4> = v.load_simd(&[6], p::y);
+        assert_eq!(s.0, [16.0, 17.0, 18.0, 19.0]);
+    }
+}

@@ -1,0 +1,369 @@
+//! `BitpackFloatSoA`: floats stored with arbitrary exponent/mantissa bits (§3).
+//!
+//! The user chooses the exponent and mantissa bit counts per value;
+//! values are repacked on store and unpacked on load, bit-packed SoA like
+//! [`crate::mapping::bitpack_int`]. ISO/IEC 60559 (IEEE 754) semantics are
+//! preserved as best as possible (paper footnote 5):
+//!
+//! - NaNs and INFs are handled correctly,
+//! - overflow during packing maps to INF,
+//! - NaN cannot be represented at zero mantissa bits (so `MAN >= 1` when
+//!   NaN round-tripping matters),
+//! - at least one exponent bit is required to distinguish ordinary values
+//!   from INF (asserted at construction),
+//! - subnormals are packed/unpacked exactly, with round-to-nearest-even.
+//!
+//! The same pack/unpack primitives implement [`crate::record::F16`]
+//! (e=5, m=10) and power the Pallas `bitpack` kernel oracle
+//! (`python/compile/kernels/ref.py`), keeping L1 and L3 bit-identical.
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+use crate::extents::{Extents, Linearizer, RowMajor};
+use crate::mapping::bitpack_int::{packed_blob_size, read_bits, write_bits};
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::{RecordDim, Scalar};
+
+/// Round-to-nearest-even of `sig` dropping the low `drop` bits.
+#[inline]
+fn rtne(sig: u64, drop: u32) -> u64 {
+    if drop == 0 {
+        return sig;
+    }
+    if drop > 63 {
+        return 0;
+    }
+    let base = sig >> drop;
+    let rem = sig & ((1u64 << drop) - 1);
+    let half = 1u64 << (drop - 1);
+    if rem > half || (rem == half && base & 1 == 1) {
+        base + 1
+    } else {
+        base
+    }
+}
+
+/// Pack an `f64` into a custom float format: 1 sign bit, `exp_bits`
+/// exponent bits (biased), `man_bits` mantissa bits. Returns the packed
+/// value in the low `1 + exp_bits + man_bits` bits.
+pub fn pack_float_bits(v: f64, exp_bits: u32, man_bits: u32) -> u64 {
+    assert!(exp_bits >= 1 && exp_bits <= 11, "exp_bits must be 1..=11");
+    assert!(man_bits <= 52, "man_bits must be <= 52");
+    let total = 1 + exp_bits + man_bits;
+    debug_assert!(total <= 64);
+
+    let bits = v.to_bits();
+    let sign = bits >> 63;
+    let exp_f64 = ((bits >> 52) & 0x7ff) as i64;
+    let man_f64 = bits & ((1u64 << 52) - 1);
+
+    let max_exp_t: u64 = (1u64 << exp_bits) - 1;
+    let bias_t: i64 = (1i64 << (exp_bits - 1)) - 1;
+    let sign_shifted = sign << (total - 1);
+
+    // Specials.
+    if exp_f64 == 0x7ff {
+        if man_f64 == 0 {
+            // INF: exponent all ones, mantissa zero.
+            return sign_shifted | (max_exp_t << man_bits);
+        }
+        // NaN: exponent all ones, mantissa nonzero (needs man_bits >= 1;
+        // at zero mantissa bits NaN degenerates to INF, per the paper).
+        let payload = if man_bits == 0 { 0 } else { 1 };
+        return sign_shifted | (max_exp_t << man_bits) | payload;
+    }
+
+    // Zero (and f64 values so small they have no set bits at all).
+    if exp_f64 == 0 && man_f64 == 0 {
+        return sign_shifted;
+    }
+
+    // Normalize to (unbiased exponent, 53-bit significand with implicit bit).
+    let (unbiased, sig53) = if exp_f64 == 0 {
+        // f64 subnormal: value = man * 2^-1074. Normalize.
+        let lz = man_f64.leading_zeros() as i64 - 11; // bits above position 52
+        let sig = man_f64 << (lz + 1);
+        (-1022 - (lz + 1), (sig | (1u64 << 52)) & ((1u64 << 53) - 1))
+    } else {
+        (exp_f64 - 1023, (1u64 << 52) | man_f64)
+    };
+
+    // Target exponent; subnormalize if below the normal range.
+    let mut et = unbiased + bias_t;
+    let mut drop = 52 - man_bits as i64;
+    if et <= 0 {
+        drop += 1 - et;
+        et = 0;
+    }
+    if drop > 53 {
+        // All bits shifted out: underflow to signed zero.
+        return sign_shifted;
+    }
+    let mut rounded = rtne(sig53, drop as u32);
+
+    // Rounding may carry: normal -> next exponent; subnormal -> normal.
+    let width = man_bits + 1; // significand width incl. implicit bit
+    if et > 0 {
+        if rounded >> (width - 1) >= 2 {
+            rounded >>= 1;
+            et += 1;
+        }
+    } else if rounded >> man_bits >= 1 {
+        // Subnormal rounded up into the normal range (implicit bit now
+        // carried by the exponent field).
+        return sign_shifted | (1u64 << man_bits) | (rounded & ((1u64 << man_bits) - 1));
+    }
+
+    if (et as u64) >= max_exp_t {
+        // Overflow -> INF (paper footnote 5).
+        return sign_shifted | (max_exp_t << man_bits);
+    }
+
+    let mt = rounded & ((1u64 << man_bits) - 1);
+    sign_shifted | ((et as u64) << man_bits) | mt
+}
+
+/// Unpack a custom-format float (see [`pack_float_bits`]) to `f64`
+/// (exact: every representable custom value fits in f64 for
+/// `exp_bits <= 11`, `man_bits <= 52`).
+pub fn unpack_float_bits(packed: u64, exp_bits: u32, man_bits: u32) -> f64 {
+    let total = 1 + exp_bits + man_bits;
+    let sign = (packed >> (total - 1)) & 1;
+    let et = (packed >> man_bits) & ((1u64 << exp_bits) - 1);
+    let mt = packed & ((1u64 << man_bits) - 1);
+
+    let max_exp_t: u64 = (1u64 << exp_bits) - 1;
+    let bias_t: i64 = (1i64 << (exp_bits - 1)) - 1;
+
+    let mag = if et == max_exp_t {
+        if mt == 0 {
+            f64::INFINITY
+        } else {
+            f64::NAN
+        }
+    } else if et == 0 {
+        // Subnormal: mt * 2^(1 - bias - man_bits)
+        (mt as f64) * (2f64).powi((1 - bias_t - man_bits as i64) as i32)
+    } else {
+        let frac = 1.0 + (mt as f64) / (1u64 << man_bits) as f64;
+        frac * (2f64).powi((et as i64 - bias_t) as i32)
+    };
+    if sign == 1 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Bit-packed SoA float mapping with `EXP` exponent and `MAN` mantissa
+/// bits per value (plus one sign bit).
+///
+/// ```
+/// use llama::prelude::*;
+/// llama::record! { pub struct V, mod v { e: f64 } }
+/// // 16-bit custom floats: 1+8+7 = bfloat16-shaped storage for f64 fields.
+/// let mut view = alloc_view(BitpackFloatSoA::<V, _, 8, 7>::new((Dyn(32u32),)), &HeapAlloc);
+/// view.set(&[0], v::e, 1.5f64);
+/// assert_eq!(view.get::<f64>(&[0], v::e), 1.5);
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BitpackFloatSoA<R, E, const EXP: u32, const MAN: u32, L = RowMajor> {
+    extents: E,
+    _pd: PhantomData<(R, L)>,
+}
+
+impl<R: RecordDim, E: Extents, const EXP: u32, const MAN: u32, L: Linearizer>
+    BitpackFloatSoA<R, E, EXP, MAN, L>
+{
+    /// Total bits per stored value.
+    pub const VALUE_BITS: u32 = 1 + EXP + MAN;
+
+    /// Mapping over `extents`. Panics if a field is not floating-point or
+    /// the bit counts are out of range.
+    pub fn new(extents: E) -> Self {
+        assert!(EXP >= 1, "at least one exponent bit is needed (paper footnote 5)");
+        assert!(EXP <= 11 && MAN <= 52);
+        for f in R::FIELDS {
+            assert!(
+                f.ty.is_float(),
+                "BitpackFloatSoA requires float fields; {} is {:?}",
+                f.path.join("."),
+                f.ty
+            );
+        }
+        BitpackFloatSoA { extents, _pd: PhantomData }
+    }
+}
+
+impl<R: RecordDim, E: Extents, const EXP: u32, const MAN: u32, L: Linearizer> Mapping<R>
+    for BitpackFloatSoA<R, E, EXP, MAN, L>
+{
+    type Extents = E;
+    const BLOB_COUNT: usize = R::FIELDS.len();
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, _i: usize) -> usize {
+        packed_blob_size(self.extents.count(), Self::VALUE_BITS)
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("BitpackFloatSoA<{},e{EXP}m{MAN},{}>", R::NAME, L::NAME)
+    }
+}
+
+impl<R: RecordDim, E: Extents, const EXP: u32, const MAN: u32, L: Linearizer> MemoryAccess<R>
+    for BitpackFloatSoA<R, E, EXP, MAN, L>
+{
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        let lin = L::linearize(&self.extents, idx);
+        let bits = Self::VALUE_BITS;
+        let raw = read_bits(storage.blob(field), lin * bits as usize, bits);
+        T::from_f64(unpack_float_bits(raw, EXP, MAN))
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        let lin = L::linearize(&self.extents, idx);
+        let bits = Self::VALUE_BITS;
+        let raw = pack_float_bits(v.as_f64(), EXP, MAN);
+        write_bits(storage.blob_mut(field), lin * bits as usize, bits, raw);
+    }
+}
+
+impl<R: RecordDim, E: Extents, const EXP: u32, const MAN: u32, L: Linearizer> SimdAccess<R>
+    for BitpackFloatSoA<R, E, EXP, MAN, L>
+{
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+
+    #[test]
+    fn pack_unpack_f32_exact() {
+        // e=8, m=23 is exactly binary32: round-trips every f32.
+        for v in [0.0f32, -0.0, 1.0, -1.5, 3.14159, 1e30, 1e-30, f32::MIN_POSITIVE] {
+            let p = pack_float_bits(v as f64, 8, 23);
+            let u = unpack_float_bits(p, 8, 23) as f32;
+            assert_eq!(u.to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn f32_subnormals_exact() {
+        let sub = f32::from_bits(0x0000_0001); // smallest subnormal
+        let p = pack_float_bits(sub as f64, 8, 23);
+        assert_eq!(unpack_float_bits(p, 8, 23) as f32, sub);
+        let sub2 = f32::from_bits(0x007f_ffff); // largest subnormal
+        let p2 = pack_float_bits(sub2 as f64, 8, 23);
+        assert_eq!(unpack_float_bits(p2, 8, 23) as f32, sub2);
+    }
+
+    #[test]
+    fn specials() {
+        // INF round-trips.
+        let p = pack_float_bits(f64::INFINITY, 5, 10);
+        assert_eq!(unpack_float_bits(p, 5, 10), f64::INFINITY);
+        let p = pack_float_bits(f64::NEG_INFINITY, 5, 10);
+        assert_eq!(unpack_float_bits(p, 5, 10), f64::NEG_INFINITY);
+        // NaN round-trips when man_bits >= 1.
+        let p = pack_float_bits(f64::NAN, 5, 10);
+        assert!(unpack_float_bits(p, 5, 10).is_nan());
+        // NaN at zero mantissa bits degenerates to INF (paper footnote 5).
+        let p = pack_float_bits(f64::NAN, 5, 0);
+        assert!(unpack_float_bits(p, 5, 0).is_infinite());
+        // Overflow packs to INF.
+        let p = pack_float_bits(1e300, 5, 10);
+        assert_eq!(unpack_float_bits(p, 5, 10), f64::INFINITY);
+        // Underflow packs to (signed) zero.
+        let p = pack_float_bits(-1e-300, 5, 10);
+        let u = unpack_float_bits(p, 5, 10);
+        assert_eq!(u, 0.0);
+        assert!(u.is_sign_negative());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // With m=2, significands are x.00 x.01 x.10 x.11: 1.125 is halfway
+        // between 1.00 and 1.25 -> rounds to even (1.00).
+        let p = pack_float_bits(1.125, 8, 2);
+        assert_eq!(unpack_float_bits(p, 8, 2), 1.0);
+        // 1.375 halfway between 1.25 and 1.5 -> rounds to even (1.5).
+        let p = pack_float_bits(1.375, 8, 2);
+        assert_eq!(unpack_float_bits(p, 8, 2), 1.5);
+    }
+
+    #[test]
+    fn carry_into_exponent() {
+        // 1.9999... with m=2 rounds up to 2.0 (mantissa carry).
+        let p = pack_float_bits(1.99, 8, 2);
+        assert_eq!(unpack_float_bits(p, 8, 2), 2.0);
+        // Largest normal rounds up -> INF.
+        // e=5,m=2: max normal = 1.75 * 2^15; 1.99*2^15 rounds to 2*2^15 -> INF
+        let p = pack_float_bits(1.99 * 32768.0, 5, 2);
+        assert_eq!(unpack_float_bits(p, 5, 2), f64::INFINITY);
+    }
+
+    #[test]
+    fn half_precision_reference_values() {
+        // Known binary16 encodings (e=5, m=10).
+        assert_eq!(pack_float_bits(1.0, 5, 10), 0x3C00);
+        assert_eq!(pack_float_bits(-2.0, 5, 10), 0xC000);
+        assert_eq!(pack_float_bits(65504.0, 5, 10), 0x7BFF); // max half
+        assert_eq!(pack_float_bits(6.103515625e-5, 5, 10), 0x0400); // min normal
+        assert_eq!(pack_float_bits(5.960464477539063e-8, 5, 10), 0x0001); // min subnormal
+        assert_eq!(unpack_float_bits(0x3555, 5, 10), 0.333251953125); // ~1/3
+    }
+
+    crate::record! {
+        pub struct Vec2, mod vec2 {
+            x: f64,
+            y: f32,
+        }
+    }
+
+    #[test]
+    fn view_roundtrip_mixed_precision() {
+        let mut v =
+            alloc_view(BitpackFloatSoA::<Vec2, _, 8, 23>::new((Dyn(64u32),)), &HeapAlloc);
+        for i in 0..64usize {
+            v.set(&[i], vec2::x, i as f64 * 0.25);
+            v.set(&[i], vec2::y, -(i as f32) * 0.5);
+        }
+        for i in 0..64usize {
+            // f64 through e8m23 loses precision to f32 granularity — exact
+            // here because quarters are representable.
+            assert_eq!(v.get::<f64>(&[i], vec2::x), i as f64 * 0.25);
+            assert_eq!(v.get::<f32>(&[i], vec2::y), -(i as f32) * 0.5);
+        }
+    }
+
+    #[test]
+    fn storage_is_bit_exactly_sized() {
+        let m = BitpackFloatSoA::<Vec2, _, 5, 10>::new((Dyn(100u32),));
+        // 16 bits * 100 = 200 bytes payload + 8 slack
+        assert_eq!(m.blob_size(0), 208);
+    }
+
+    #[test]
+    fn exhaustive_e4m3_roundtrip() {
+        // Every finite e4m3 value must round-trip pack(unpack(x)) == x.
+        for raw in 0u64..256 {
+            let v = unpack_float_bits(raw, 4, 3);
+            if v.is_nan() {
+                continue;
+            }
+            let repacked = pack_float_bits(v, 4, 3);
+            assert_eq!(repacked, raw, "raw={raw:#x} v={v}");
+        }
+    }
+}

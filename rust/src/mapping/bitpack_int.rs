@@ -1,0 +1,382 @@
+//! `BitpackIntSoA`: integers stored with an arbitrary bit count (§3).
+//!
+//! HEP detectors produce values whose precision matches the hardware
+//! (e.g. a 12-bit ADC), not a C++ fundamental type. Storing a 12-bit value
+//! in a `u16` wastes 25% of the bits; bit-packing stores exactly `BITS`
+//! bits per value, packed back-to-back per field (then organized SoA),
+//! at the cost of shift/mask work on every access. The compile-time
+//! [`BitpackIntSoA`] keeps the mapping stateless; [`BitpackIntSoADyn`]
+//! chooses the bit count at runtime (the paper allows both).
+//!
+//! Signed values are stored as `BITS`-bit two's complement and
+//! sign-extended on load. Values outside the representable range wrap
+//! (truncation to the low `BITS` bits), matching C++ narrowing.
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+use crate::extents::{Extents, Linearizer, RowMajor};
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::{RecordDim, Scalar};
+
+// ---------------------------------------------------------------------------
+// Bit-level storage helpers (shared with bitpack_float)
+// ---------------------------------------------------------------------------
+
+/// Read `nbits` (1..=64) starting at absolute bit offset `bit` from a
+/// little-endian byte buffer.
+#[inline(always)]
+pub fn read_bits(blob: &[u8], bit: usize, nbits: u32) -> u64 {
+    debug_assert!(nbits >= 1 && nbits <= 64);
+    let byte = bit / 8;
+    let shift = (bit % 8) as u32;
+    // Read up to 16 bytes to cover any 64-bit span crossing a byte boundary.
+    let mut lo = [0u8; 8];
+    let avail = blob.len() - byte;
+    let n = avail.min(8);
+    lo[..n].copy_from_slice(&blob[byte..byte + n]);
+    let lo = u64::from_le_bytes(lo);
+    let mut v = lo >> shift;
+    if shift != 0 && byte + 8 < blob.len() {
+        let hi = blob[byte + 8] as u64;
+        v |= hi << (64 - shift);
+    }
+    if nbits == 64 {
+        v
+    } else {
+        v & ((1u64 << nbits) - 1)
+    }
+}
+
+/// Write the low `nbits` of `value` at absolute bit offset `bit` into a
+/// little-endian byte buffer (read-modify-write on the covered bytes).
+#[inline(always)]
+pub fn write_bits(blob: &mut [u8], bit: usize, nbits: u32, value: u64) {
+    debug_assert!(nbits >= 1 && nbits <= 64);
+    let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+    let value = value & mask;
+    let byte = bit / 8;
+    let shift = (bit % 8) as u32;
+
+    let mut lo = [0u8; 8];
+    let avail = blob.len() - byte;
+    let n = avail.min(8);
+    lo[..n].copy_from_slice(&blob[byte..byte + n]);
+    let mut lo64 = u64::from_le_bytes(lo);
+    lo64 = (lo64 & !(mask << shift)) | (value << shift);
+    let lo = lo64.to_le_bytes();
+    blob[byte..byte + n].copy_from_slice(&lo[..n]);
+
+    // Spill into a ninth byte when shift pushes bits past 64.
+    if shift != 0 && shift + nbits > 64 {
+        let spill_bits = shift + nbits - 64;
+        let spill_mask = ((1u16 << spill_bits) - 1) as u8;
+        let spill_val = (value >> (64 - shift)) as u8;
+        let b = &mut blob[byte + 8];
+        *b = (*b & !spill_mask) | (spill_val & spill_mask);
+    }
+}
+
+/// Sign-extend the low `nbits` of `v` to i128.
+#[inline(always)]
+pub fn sign_extend(v: u64, nbits: u32) -> i128 {
+    if nbits >= 64 {
+        return v as i64 as i128;
+    }
+    let sign_bit = 1u64 << (nbits - 1);
+    if v & sign_bit != 0 {
+        (v as i128) - (1i128 << nbits)
+    } else {
+        v as i128
+    }
+}
+
+/// Bytes needed to bitpack `count` values of `bits` each, padded so any
+/// access can read/write full 8-byte words plus a spill byte.
+#[inline]
+pub fn packed_blob_size(count: usize, bits: u32) -> usize {
+    let payload = (count * bits as usize).div_ceil(8);
+    // +8 slack: read_bits/write_bits touch up to 9 bytes from the value's
+    // first byte.
+    payload + 8
+}
+
+// ---------------------------------------------------------------------------
+// Compile-time bit count
+// ---------------------------------------------------------------------------
+
+/// Bit-packed SoA with a compile-time per-value bit count.
+///
+/// All fields must be integral (checked at construction). Each field packs
+/// into its own blob, `BITS` bits per value.
+///
+/// ```
+/// use llama::prelude::*;
+/// llama::record! { pub struct Hit, mod hit { adc: u16, ch: i32 } }
+/// // 12-bit packing: 16 values fit in 24 payload bytes per field.
+/// let mut v = alloc_view(BitpackIntSoA::<Hit, _, 12>::new((Dyn(16u32),)), &HeapAlloc);
+/// v.set(&[3], hit::adc, 4095u16);
+/// v.set(&[4], hit::ch, -17i32);
+/// assert_eq!(v.get::<u16>(&[3], hit::adc), 4095);
+/// assert_eq!(v.get::<i32>(&[4], hit::ch), -17);
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BitpackIntSoA<R, E, const BITS: u32, L = RowMajor> {
+    extents: E,
+    _pd: PhantomData<(R, L)>,
+}
+
+impl<R: RecordDim, E: Extents, const BITS: u32, L: Linearizer> BitpackIntSoA<R, E, BITS, L> {
+    /// Mapping over `extents`. Panics if a field is non-integral or `BITS`
+    /// is 0 or > 64.
+    pub fn new(extents: E) -> Self {
+        assert!(BITS >= 1 && BITS <= 64, "BITS must be in 1..=64");
+        for f in R::FIELDS {
+            assert!(
+                f.ty.is_integral(),
+                "BitpackIntSoA requires integral fields; {} is {:?}",
+                f.path.join("."),
+                f.ty
+            );
+        }
+        BitpackIntSoA { extents, _pd: PhantomData }
+    }
+}
+
+impl<R: RecordDim, E: Extents, const BITS: u32, L: Linearizer> Mapping<R>
+    for BitpackIntSoA<R, E, BITS, L>
+{
+    type Extents = E;
+    const BLOB_COUNT: usize = R::FIELDS.len();
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, _i: usize) -> usize {
+        packed_blob_size(self.extents.count(), BITS)
+    }
+
+    fn fingerprint(&self) -> String {
+        format!(
+            "BitpackIntSoA<{},{BITS},{}>@{:?}",
+            R::NAME,
+            L::NAME,
+            (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
+        )
+    }
+}
+
+impl<R: RecordDim, E: Extents, const BITS: u32, L: Linearizer> MemoryAccess<R>
+    for BitpackIntSoA<R, E, BITS, L>
+{
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        let lin = L::linearize(&self.extents, idx);
+        let raw = read_bits(storage.blob(field), lin * BITS as usize, BITS);
+        if T::TYPE.is_signed_integral() {
+            T::from_i128(sign_extend(raw, BITS))
+        } else {
+            T::from_i128(raw as i128)
+        }
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        let lin = L::linearize(&self.extents, idx);
+        // Two's-complement truncation to BITS bits.
+        let raw = v.as_i128() as u64;
+        write_bits(storage.blob_mut(field), lin * BITS as usize, BITS, raw);
+    }
+}
+
+impl<R: RecordDim, E: Extents, const BITS: u32, L: Linearizer> SimdAccess<R>
+    for BitpackIntSoA<R, E, BITS, L>
+{
+}
+
+// ---------------------------------------------------------------------------
+// Runtime bit count
+// ---------------------------------------------------------------------------
+
+/// Bit-packed SoA with a runtime per-value bit count (one count for all
+/// fields, as in the paper's runtime variant).
+#[derive(Clone, Copy, Debug)]
+pub struct BitpackIntSoADyn<R, E, L = RowMajor> {
+    extents: E,
+    bits: u32,
+    _pd: PhantomData<(R, L)>,
+}
+
+impl<R: RecordDim, E: Extents, L: Linearizer> BitpackIntSoADyn<R, E, L> {
+    /// Mapping over `extents` storing `bits` bits per value.
+    pub fn new(extents: E, bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 64);
+        for f in R::FIELDS {
+            assert!(f.ty.is_integral());
+        }
+        BitpackIntSoADyn { extents, bits, _pd: PhantomData }
+    }
+
+    /// The configured bit count.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+}
+
+impl<R: RecordDim, E: Extents, L: Linearizer> Mapping<R> for BitpackIntSoADyn<R, E, L> {
+    type Extents = E;
+    const BLOB_COUNT: usize = R::FIELDS.len();
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, _i: usize) -> usize {
+        packed_blob_size(self.extents.count(), self.bits)
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("BitpackIntSoADyn<{},{},{}>", R::NAME, self.bits, L::NAME)
+    }
+}
+
+impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for BitpackIntSoADyn<R, E, L> {
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        let lin = L::linearize(&self.extents, idx);
+        let raw = read_bits(storage.blob(field), lin * self.bits as usize, self.bits);
+        if T::TYPE.is_signed_integral() {
+            T::from_i128(sign_extend(raw, self.bits))
+        } else {
+            T::from_i128(raw as i128)
+        }
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        let lin = L::linearize(&self.extents, idx);
+        write_bits(storage.blob_mut(field), lin * self.bits as usize, self.bits, v.as_i128() as u64);
+    }
+}
+
+impl<R: RecordDim, E: Extents, L: Linearizer> SimdAccess<R> for BitpackIntSoADyn<R, E, L> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+
+    #[test]
+    fn bit_helpers_roundtrip() {
+        let mut buf = vec![0u8; 64];
+        // Write overlapping-free 13-bit values everywhere.
+        for i in 0..30 {
+            write_bits(&mut buf, i * 13, 13, (i * 97 % 8192) as u64);
+        }
+        for i in 0..30 {
+            assert_eq!(read_bits(&buf, i * 13, 13), (i * 97 % 8192) as u64, "value {i}");
+        }
+    }
+
+    #[test]
+    fn bit_helpers_word_boundary() {
+        let mut buf = vec![0u8; 32];
+        write_bits(&mut buf, 60, 17, 0x1ABCD);
+        assert_eq!(read_bits(&buf, 60, 17), 0x1ABCD);
+        write_bits(&mut buf, 59, 64, u64::MAX - 5);
+        assert_eq!(read_bits(&buf, 59, 64), u64::MAX - 5);
+        // neighbours preserved
+        write_bits(&mut buf, 0, 8, 0xAA);
+        assert_eq!(read_bits(&buf, 0, 8), 0xAA);
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sign_extend(0b111, 3), -1);
+        assert_eq!(sign_extend(0b011, 3), 3);
+        assert_eq!(sign_extend(0b100, 3), -4);
+        assert_eq!(sign_extend(0xFFF, 12), -1);
+        assert_eq!(sign_extend(u64::MAX, 64), -1);
+    }
+
+    crate::record! {
+        pub struct Hit, mod hit {
+            adc: u16,
+            channel: i32,
+            time: u64,
+        }
+    }
+
+    #[test]
+    fn roundtrip_unsigned_and_signed() {
+        let mut v = alloc_view(BitpackIntSoA::<Hit, _, 12>::new((Dyn(100u32),)), &HeapAlloc);
+        for i in 0..100usize {
+            v.set(&[i], hit::adc, (i * 41 % 4096) as u16);
+            v.set(&[i], hit::channel, (i as i32) - 50);
+            v.set(&[i], hit::time, (i * 7) as u64);
+        }
+        for i in 0..100usize {
+            assert_eq!(v.get::<u16>(&[i], hit::adc), (i * 41 % 4096) as u16);
+            assert_eq!(v.get::<i32>(&[i], hit::channel), (i as i32) - 50);
+            assert_eq!(v.get::<u64>(&[i], hit::time), (i * 7) as u64);
+        }
+    }
+
+    #[test]
+    fn storage_savings() {
+        // 100 x 12 bits = 150 payload bytes vs 200 for u16.
+        let m = BitpackIntSoA::<Hit, _, 12>::new((Dyn(100u32),));
+        assert_eq!(m.blob_size(0), 150 + 8);
+        let v = alloc_view(m, &HeapAlloc);
+        assert!(v.storage().total_bytes() < 100 * (2 + 4 + 8));
+    }
+
+    #[test]
+    fn truncation_wraps() {
+        let mut v = alloc_view(BitpackIntSoA::<Hit, _, 8>::new((Dyn(4u32),)), &HeapAlloc);
+        v.set(&[0], hit::adc, 0x1FFu16); // 9 bits -> low 8 kept
+        assert_eq!(v.get::<u16>(&[0], hit::adc), 0xFF);
+        v.set(&[1], hit::channel, -1i32); // 0xFF -> sign-extends back to -1
+        assert_eq!(v.get::<i32>(&[1], hit::channel), -1);
+        v.set(&[2], hit::channel, 127i32);
+        assert_eq!(v.get::<i32>(&[2], hit::channel), 127);
+        v.set(&[3], hit::channel, 128i32); // wraps to -128 in 8-bit
+        assert_eq!(v.get::<i32>(&[3], hit::channel), -128);
+    }
+
+    #[test]
+    fn dyn_variant_matches_const() {
+        let mut a = alloc_view(BitpackIntSoA::<Hit, _, 17>::new((Dyn(64u32),)), &HeapAlloc);
+        let mut b = alloc_view(BitpackIntSoADyn::<Hit, _>::new((Dyn(64u32),), 17), &HeapAlloc);
+        for i in 0..64usize {
+            let val = (i * 1003) as u64 % (1 << 17);
+            a.set(&[i], hit::time, val);
+            b.set(&[i], hit::time, val);
+        }
+        for i in 0..64usize {
+            assert_eq!(a.get::<u64>(&[i], hit::time), b.get::<u64>(&[i], hit::time));
+        }
+        assert_eq!(a.storage().total_bytes(), b.storage().total_bytes());
+    }
+
+    #[test]
+    fn adjacent_values_do_not_clobber() {
+        let mut v = alloc_view(BitpackIntSoA::<Hit, _, 7>::new((Dyn(16u32),)), &HeapAlloc);
+        for i in 0..16usize {
+            v.set(&[i], hit::adc, (i as u16 * 9) % 128);
+        }
+        // Overwrite the middle, check neighbours.
+        v.set(&[7], hit::adc, 127u16);
+        v.set(&[8], hit::adc, 0u16);
+        assert_eq!(v.get::<u16>(&[6], hit::adc), (6 * 9) % 128);
+        assert_eq!(v.get::<u16>(&[7], hit::adc), 127);
+        assert_eq!(v.get::<u16>(&[8], hit::adc), 0);
+        assert_eq!(v.get::<u16>(&[9], hit::adc), (9 * 9) % 128);
+    }
+}

@@ -1,0 +1,155 @@
+//! `Bytesplit`: split each value into bytes and regroup by byte order (§3).
+//!
+//! "Many compression algorithms are more efficient when compressing a
+//! stream of zeros. If the values in an integer array are small, the
+//! higher-order bytes may often be just zero. Splitting the values into
+//! their bytes and regrouping those by their order can effectively
+//! colocate many zero-bytes and thus lead to higher compression ratios"
+//! — the BYTE_STREAM_SPLIT idea from Apache Parquet, generalized to
+//! records.
+//!
+//! Layout: one blob per field; inside a field's blob, byte-plane-major —
+//! plane `b` (the `b`-th byte of every value, little-endian) occupies
+//! `count` consecutive bytes starting at `b * count`. C++ LLAMA forwards
+//! the byte record to an arbitrary inner mapping; this implementation
+//! fixes the inner layout to SoA-of-byte-planes (the case that matters
+//! for compression — see DESIGN.md *Substitutions*). The experiment E6
+//! (`benches/bytesplit.rs`) feeds these blobs to RLE/deflate/zstd.
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+use crate::extents::{Extents, Linearizer, RowMajor};
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::{RecordDim, Scalar};
+
+/// Byte-plane SoA mapping (BYTE_STREAM_SPLIT per field).
+///
+/// ```
+/// use llama::prelude::*;
+/// llama::record! { pub struct T, mod t { v: u32 } }
+/// let mut view = alloc_view(Bytesplit::<T, _>::new((Dyn(4u32),)), &HeapAlloc);
+/// view.set(&[0], t::v, 0x01020304u32);
+/// assert_eq!(view.get::<u32>(&[0], t::v), 0x01020304);
+/// // plane 0 holds the low bytes of all 4 values first:
+/// assert_eq!(view.storage().blob(0)[0], 0x04);
+/// assert_eq!(view.storage().blob(0)[4], 0x03); // plane 1 starts at count=4
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Bytesplit<R, E, L = RowMajor> {
+    extents: E,
+    _pd: PhantomData<(R, L)>,
+}
+
+impl<R: RecordDim, E: Extents, L: Linearizer> Bytesplit<R, E, L> {
+    /// Mapping over `extents`.
+    pub fn new(extents: E) -> Self {
+        Bytesplit { extents, _pd: PhantomData }
+    }
+}
+
+impl<R: RecordDim, E: Extents, L: Linearizer> Mapping<R> for Bytesplit<R, E, L> {
+    type Extents = E;
+    const BLOB_COUNT: usize = R::FIELDS.len();
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, i: usize) -> usize {
+        self.extents.count() * R::FIELDS[i].size()
+    }
+
+    fn fingerprint(&self) -> String {
+        format!(
+            "Bytesplit<{},{}>@{:?}",
+            R::NAME,
+            L::NAME,
+            (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
+        )
+    }
+}
+
+impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for Bytesplit<R, E, L> {
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        debug_assert!(R::FIELDS[field].ty.same(T::TYPE));
+        let lin = L::linearize(&self.extents, idx);
+        let n = self.extents.count();
+        let blob = storage.blob(field);
+        let mut bytes = [0u8; 16];
+        for b in 0..T::SIZE {
+            bytes[b] = blob[b * n + lin];
+        }
+        T::read_le(&bytes[..T::SIZE])
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        debug_assert!(R::FIELDS[field].ty.same(T::TYPE));
+        let lin = L::linearize(&self.extents, idx);
+        let n = self.extents.count();
+        let blob = storage.blob_mut(field);
+        let mut bytes = [0u8; 16];
+        v.write_le(&mut bytes[..T::SIZE]);
+        for b in 0..T::SIZE {
+            blob[b * n + lin] = bytes[b];
+        }
+    }
+}
+
+impl<R: RecordDim, E: Extents, L: Linearizer> SimdAccess<R> for Bytesplit<R, E, L> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+
+    crate::record! {
+        pub struct Rec, mod rec {
+            small: u32,
+            wide: u64,
+            flt: f32,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut v = alloc_view(Bytesplit::<Rec, _>::new((Dyn(64u32),)), &HeapAlloc);
+        for i in 0..64usize {
+            v.set(&[i], rec::small, (i * 3) as u32);
+            v.set(&[i], rec::wide, u64::MAX - i as u64);
+            v.set(&[i], rec::flt, i as f32 / 7.0);
+        }
+        for i in 0..64usize {
+            assert_eq!(v.get::<u32>(&[i], rec::small), (i * 3) as u32);
+            assert_eq!(v.get::<u64>(&[i], rec::wide), u64::MAX - i as u64);
+            assert_eq!(v.get::<f32>(&[i], rec::flt), i as f32 / 7.0);
+        }
+    }
+
+    #[test]
+    fn zero_planes_are_colocated() {
+        // Small values => upper 3 byte planes of `small` are all zeros.
+        let mut v = alloc_view(Bytesplit::<Rec, _>::new((Dyn(256u32),)), &HeapAlloc);
+        for i in 0..256usize {
+            v.set(&[i], rec::small, (i % 100) as u32); // < 256: one byte
+        }
+        let blob = v.storage().blob(rec::small);
+        assert_eq!(blob.len(), 1024);
+        // planes 1..3 (bytes 256..1024) must be entirely zero
+        assert!(blob[256..].iter().all(|&b| b == 0));
+        // plane 0 holds the values
+        assert_eq!(blob[5], 5);
+    }
+
+    #[test]
+    fn total_size_equals_packed() {
+        let m = Bytesplit::<Rec, _>::new((Dyn(10u32),));
+        let total: usize = (0..3).map(|i| m.blob_size(i)).sum();
+        assert_eq!(total, 10 * (4 + 8 + 4));
+    }
+}

@@ -1,0 +1,209 @@
+//! `Changetype`: store fields as a different scalar type (§3).
+//!
+//! Bit-packing pays shift/mask work on every access; when the desired
+//! storage precision matches a hardware type (f32, f16, bf16, i16, ...),
+//! a plain type conversion is cheaper because "the hardware may have
+//! appropriate conversion instructions". `ChangeType` converts values
+//! between the *algorithm* record dimension `R` and a *storage* record
+//! dimension `RS`, then forwards to an arbitrary inner mapping over `RS` —
+//! e.g. doubles stored as floats, or as the C++23 extended floating-point
+//! types (here: [`crate::record::F16`], [`crate::record::Bf16`]).
+//! Inspired by the Ginkgo accessor (paper ref. [9]).
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::{Bf16, RecordDim, Scalar, ScalarType, F16};
+
+/// Convert scalar `a` to type `B`: integral↔integral via `i128` (exact),
+/// anything involving floats via `f64`.
+#[inline(always)]
+pub fn convert_scalar<A: Scalar, B: Scalar>(a: A) -> B {
+    if A::TYPE.is_integral() && B::TYPE.is_integral() {
+        B::from_i128(a.as_i128())
+    } else {
+        B::from_f64(a.as_f64())
+    }
+}
+
+/// Store `R`'s fields with the scalar types of `RS`, mapped by `M`.
+///
+/// `R` and `RS` must have the same field count (checked at construction);
+/// field `i` of `R` is stored as field `i` of `RS`.
+///
+/// ```
+/// use llama::prelude::*;
+/// llama::record! { pub struct P,  mod p  { x: f64, y: f64 } }
+/// llama::record! { pub struct Ps, mod ps { x: f32, y: f32 } }
+/// let inner = SoA::<Ps, _>::new((Dyn(16u32),));
+/// let mut v = alloc_view(ChangeType::<P, Ps, _>::new(inner), &HeapAlloc);
+/// v.set(&[2], p::x, 0.5f64);                    // algorithm type: f64
+/// assert_eq!(v.get::<f64>(&[2], p::x), 0.5);    // stored as f32
+/// assert_eq!(v.storage().total_bytes(), 16 * 8); // half of the f64 SoA
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChangeType<R, RS, M> {
+    inner: M,
+    _pd: PhantomData<(R, RS)>,
+}
+
+impl<R: RecordDim, RS: RecordDim, M: MemoryAccess<RS>> ChangeType<R, RS, M> {
+    /// Wrap `inner` (a mapping over the storage record dimension `RS`).
+    pub fn new(inner: M) -> Self {
+        assert_eq!(
+            R::FIELDS.len(),
+            RS::FIELDS.len(),
+            "ChangeType: algorithm and storage records must have the same field count"
+        );
+        ChangeType { inner, _pd: PhantomData }
+    }
+
+    /// The inner (storage) mapping.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<R: RecordDim, RS: RecordDim, M: MemoryAccess<RS>> Mapping<R> for ChangeType<R, RS, M> {
+    type Extents = M::Extents;
+    const BLOB_COUNT: usize = M::BLOB_COUNT;
+
+    #[inline(always)]
+    fn extents(&self) -> &Self::Extents {
+        self.inner.extents()
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, i: usize) -> usize {
+        self.inner.blob_size(i)
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("ChangeType<{}->{}|{}>", R::NAME, RS::NAME, self.inner.fingerprint())
+    }
+}
+
+/// Dispatch a typed inner load on the storage scalar type and convert to `T`.
+macro_rules! dispatch_load {
+    ($self:ident, $storage:ident, $idx:ident, $field:ident; $($tag:ident => $ty:ty),* $(,)?) => {
+        match RS::FIELDS[$field].ty {
+            $(ScalarType::$tag => {
+                let stored: $ty = $self.inner.load($storage, $idx, $field);
+                convert_scalar(stored)
+            })*
+        }
+    };
+}
+
+/// Convert `v` to the storage scalar type and dispatch a typed inner store.
+macro_rules! dispatch_store {
+    ($self:ident, $storage:ident, $idx:ident, $field:ident, $v:ident; $($tag:ident => $ty:ty),* $(,)?) => {
+        match RS::FIELDS[$field].ty {
+            $(ScalarType::$tag => {
+                let stored: $ty = convert_scalar($v);
+                $self.inner.store($storage, $idx, $field, stored)
+            })*
+        }
+    };
+}
+
+impl<R: RecordDim, RS: RecordDim, M: MemoryAccess<RS>> MemoryAccess<R> for ChangeType<R, RS, M> {
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        debug_assert!(R::FIELDS[field].ty.same(T::TYPE));
+        dispatch_load!(self, storage, idx, field;
+            F32 => f32, F64 => f64,
+            I8 => i8, I16 => i16, I32 => i32, I64 => i64,
+            U8 => u8, U16 => u16, U32 => u32, U64 => u64,
+            Bool => bool, F16 => F16, Bf16 => Bf16,
+        )
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        debug_assert!(R::FIELDS[field].ty.same(T::TYPE));
+        dispatch_store!(self, storage, idx, field, v;
+            F32 => f32, F64 => f64,
+            I8 => i8, I16 => i16, I32 => i32, I64 => i64,
+            U8 => u8, U16 => u16, U32 => u32, U64 => u64,
+            Bool => bool, F16 => F16, Bf16 => Bf16,
+        )
+    }
+}
+
+impl<R: RecordDim, RS: RecordDim, M: MemoryAccess<RS>> SimdAccess<R> for ChangeType<R, RS, M> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+    use crate::mapping::aos::AoS;
+    use crate::mapping::soa::SoA;
+
+    crate::record! {
+        pub struct P, mod p {
+            pos: { x: f64, y: f64 },
+            count: i64,
+        }
+    }
+
+    crate::record! {
+        pub struct Pf32, mod _pf32 {
+            pos: { x: f32, y: f32 },
+            count: i32,
+        }
+    }
+
+    crate::record! {
+        pub struct Pbf16, mod _pbf16 {
+            pos: { x: Bf16, y: Bf16 },
+            count: i16,
+        }
+    }
+
+    #[test]
+    fn f64_stored_as_f32() {
+        let inner = SoA::<Pf32, _>::new((Dyn(8u32),));
+        let mut v = alloc_view(ChangeType::<P, Pf32, _>::new(inner), &HeapAlloc);
+        v.set(&[1], p::pos::x, 2.5f64);
+        v.set(&[1], p::count, -9i64);
+        assert_eq!(v.get::<f64>(&[1], p::pos::x), 2.5);
+        assert_eq!(v.get::<i64>(&[1], p::count), -9);
+        // storage is f32-sized
+        assert_eq!(v.storage().total_bytes(), 8 * (4 + 4 + 4));
+    }
+
+    #[test]
+    fn f64_stored_as_bf16() {
+        let inner = AoS::<Pbf16, _>::new((Dyn(8u32),));
+        let mut v = alloc_view(ChangeType::<P, Pbf16, _>::new(inner), &HeapAlloc);
+        v.set(&[0], p::pos::y, 1.0f64);
+        assert_eq!(v.get::<f64>(&[0], p::pos::y), 1.0); // exact in bf16
+        v.set(&[0], p::pos::x, 3.14159f64);
+        let loaded = v.get::<f64>(&[0], p::pos::x);
+        assert!((loaded - 3.14159).abs() < 0.02, "bf16 precision: {loaded}");
+        // storage is 2+2+2 bytes per record
+        assert_eq!(v.storage().total_bytes(), 8 * 6);
+    }
+
+    #[test]
+    fn precision_loss_is_bounded() {
+        let inner = SoA::<Pf32, _>::new((Dyn(4u32),));
+        let mut v = alloc_view(ChangeType::<P, Pf32, _>::new(inner), &HeapAlloc);
+        let x = 1.0 + 1e-12; // not representable in f32
+        v.set(&[0], p::pos::x, x);
+        let back = v.get::<f64>(&[0], p::pos::x);
+        assert_eq!(back, 1.0); // rounded to f32
+    }
+
+    #[test]
+    fn integral_conversion_is_exact_in_range() {
+        let inner = SoA::<Pf32, _>::new((Dyn(4u32),));
+        let mut v = alloc_view(ChangeType::<P, Pf32, _>::new(inner), &HeapAlloc);
+        v.set(&[2], p::count, i64::from(i32::MAX));
+        assert_eq!(v.get::<i64>(&[2], p::count), i64::from(i32::MAX));
+    }
+}

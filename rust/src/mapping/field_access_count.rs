@@ -1,0 +1,246 @@
+//! `FieldAccessCount` (né `Trace`): count accesses per record field (§4).
+//!
+//! "The lightweight Trace counts the accumulated number of accesses per
+//! record field ... Counting memory accesses is performed as side effect
+//! of data access and costs one atomic increment to a dedicated memory
+//! location per regular access." Extra memory is 2 counters per field
+//! (reads and writes) — negligible. The measured cost (the paper reports
+//! ~3× for a CUDA particle simulation) is reproduced by experiment E4
+//! (`benches/instrumentation.rs`).
+//!
+//! The mapping forwards all layout logic to an arbitrary inner mapping and
+//! can therefore instrument any of them, physical or computed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::blob::BlobStorage;
+
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::{RecordDim, Scalar};
+use crate::simd::{Simd, SimdElem};
+
+/// Per-field access counters for one instrumented view.
+///
+/// Shared (`Arc`) between mapping clones, so cloning a view keeps counting
+/// into the same tallies — matching C++ LLAMA where the counters live with
+/// the mapping instance.
+#[derive(Debug, Default)]
+pub struct AccessCounters {
+    /// reads[f], writes[f] per flattened field index.
+    reads: Vec<AtomicU64>,
+    writes: Vec<AtomicU64>,
+}
+
+/// One row of the access report.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FieldAccessRow {
+    /// Dotted field path.
+    pub field: String,
+    /// Number of loads.
+    pub reads: u64,
+    /// Number of stores.
+    pub writes: u64,
+}
+
+/// Count loads/stores per field while forwarding to `M`.
+#[derive(Clone, Debug)]
+pub struct FieldAccessCount<R, M> {
+    inner: M,
+    counters: Arc<AccessCounters>,
+    _pd: std::marker::PhantomData<R>,
+}
+
+impl<R: RecordDim, M: MemoryAccess<R>> FieldAccessCount<R, M> {
+    /// Instrument `inner`.
+    pub fn new(inner: M) -> Self {
+        let n = R::FIELDS.len();
+        FieldAccessCount {
+            inner,
+            counters: Arc::new(AccessCounters {
+                reads: (0..n).map(|_| AtomicU64::new(0)).collect(),
+                writes: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            }),
+            _pd: std::marker::PhantomData,
+        }
+    }
+
+    /// The inner mapping.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// Total (reads, writes) for `field`.
+    pub fn field_counts(&self, field: usize) -> (u64, u64) {
+        (
+            self.counters.reads[field].load(Ordering::Relaxed),
+            self.counters.writes[field].load(Ordering::Relaxed),
+        )
+    }
+
+    /// Reset all counters to zero.
+    pub fn reset(&self) {
+        for c in self.counters.reads.iter().chain(self.counters.writes.iter()) {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot the per-field report.
+    pub fn report(&self) -> Vec<FieldAccessRow> {
+        R::FIELDS
+            .iter()
+            .enumerate()
+            .map(|(f, fld)| FieldAccessRow {
+                field: fld.dotted(),
+                reads: self.counters.reads[f].load(Ordering::Relaxed),
+                writes: self.counters.writes[f].load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Render the report as an aligned text table (the tool output of §4).
+    pub fn render_table(&self) -> String {
+        let rows = self.report();
+        let w = rows.iter().map(|r| r.field.len()).max().unwrap_or(5).max(5);
+        let mut out = format!("{:w$}  {:>12}  {:>12}\n", "field", "reads", "writes", w = w);
+        for r in &rows {
+            out.push_str(&format!("{:w$}  {:>12}  {:>12}\n", r.field, r.reads, r.writes, w = w));
+        }
+        let (tr, tw): (u64, u64) = rows.iter().fold((0, 0), |a, r| (a.0 + r.reads, a.1 + r.writes));
+        out.push_str(&format!("{:w$}  {:>12}  {:>12}\n", "TOTAL", tr, tw, w = w));
+        out
+    }
+}
+
+impl<R: RecordDim, M: MemoryAccess<R>> Mapping<R> for FieldAccessCount<R, M> {
+    type Extents = M::Extents;
+    const BLOB_COUNT: usize = M::BLOB_COUNT;
+
+    #[inline(always)]
+    fn extents(&self) -> &Self::Extents {
+        self.inner.extents()
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, i: usize) -> usize {
+        self.inner.blob_size(i)
+    }
+
+    fn fingerprint(&self) -> String {
+        // Instrumentation is layout-transparent: same bytes as the inner
+        // mapping (copy fast paths remain valid).
+        self.inner.fingerprint()
+    }
+}
+
+impl<R: RecordDim, M: MemoryAccess<R>> MemoryAccess<R> for FieldAccessCount<R, M> {
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        // §4: one atomic increment per access.
+        self.counters.reads[field].fetch_add(1, Ordering::Relaxed);
+        self.inner.load(storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        self.counters.writes[field].fetch_add(1, Ordering::Relaxed);
+        self.inner.store(storage, idx, field, v)
+    }
+}
+
+impl<R: RecordDim, M: SimdAccess<R>> SimdAccess<R> for FieldAccessCount<R, M> {
+    #[inline(always)]
+    fn load_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &S,
+        idx: &[usize],
+        field: usize,
+    ) -> Simd<T, N> {
+        // A SIMD load touches N elements of the field.
+        self.counters.reads[field].fetch_add(N as u64, Ordering::Relaxed);
+        self.inner.load_simd(storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &mut S,
+        idx: &[usize],
+        field: usize,
+        v: Simd<T, N>,
+    ) {
+        self.counters.writes[field].fetch_add(N as u64, Ordering::Relaxed);
+        self.inner.store_simd(storage, idx, field, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+    use crate::mapping::soa::SoA;
+
+    crate::record! {
+        pub struct P, mod p {
+            x: f64,
+            m: f32,
+        }
+    }
+
+    #[test]
+    fn counts_reads_and_writes() {
+        let fac = FieldAccessCount::new(SoA::<P, _>::new((Dyn(16u32),)));
+        let mut v = alloc_view(fac, &HeapAlloc);
+        for i in 0..16usize {
+            v.set(&[i], p::x, i as f64);
+        }
+        let mut acc = 0.0;
+        for i in 0..16usize {
+            acc += v.get::<f64>(&[i], p::x);
+        }
+        v.set(&[0], p::m, acc as f32);
+        let rep = v.mapping().report();
+        assert_eq!(rep[p::x].reads, 16);
+        assert_eq!(rep[p::x].writes, 16);
+        assert_eq!(rep[p::m].reads, 0);
+        assert_eq!(rep[p::m].writes, 1);
+        assert_eq!(rep[p::x].field, "x");
+    }
+
+    #[test]
+    fn simd_accesses_count_lanes() {
+        let fac = FieldAccessCount::new(SoA::<P, _>::new((Dyn(16u32),)));
+        let mut v = alloc_view(fac, &HeapAlloc);
+        let s: crate::simd::Simd<f64, 4> = v.load_simd(&[0], p::x);
+        v.store_simd(&[4], p::x, s);
+        let (r, w) = v.mapping().field_counts(p::x);
+        assert_eq!((r, w), (4, 4));
+    }
+
+    #[test]
+    fn reset_and_render() {
+        let fac = FieldAccessCount::new(SoA::<P, _>::new((Dyn(4u32),)));
+        let mut v = alloc_view(fac, &HeapAlloc);
+        v.set(&[1], p::x, 1.0f64);
+        v.mapping().reset();
+        assert_eq!(v.mapping().field_counts(p::x), (0, 0));
+        let table = v.mapping().render_table();
+        assert!(table.contains("field"));
+        assert!(table.contains("TOTAL"));
+    }
+
+    #[test]
+    fn values_flow_through_unchanged() {
+        let plain = SoA::<P, _>::new((Dyn(8u32),));
+        let mut a = alloc_view(plain, &HeapAlloc);
+        let mut b = alloc_view(FieldAccessCount::new(SoA::<P, _>::new((Dyn(8u32),))), &HeapAlloc);
+        for i in 0..8usize {
+            a.set(&[i], p::x, (i * i) as f64);
+            b.set(&[i], p::x, (i * i) as f64);
+        }
+        for i in 0..8usize {
+            assert_eq!(a.get::<f64>(&[i], p::x), b.get::<f64>(&[i], p::x));
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! `Heatmap`: count accesses to storage bytes at configurable granularity (§4).
+//!
+//! "The heavyweight Heatmap counts accesses to storage bytes at a
+//! configurable granularity such as bytes or cache lines ... the Heatmap
+//! at highest granularity requires an extra counter per byte of memory.
+//! For a 64-bit (8 bytes) counter this results in an 8x memory overhead."
+//! — reproduced as experiment E5 (`benches/instrumentation.rs` memory
+//! table) and the `llama-lab heatmap` CLI/`examples/heatmap_viz.rs`
+//! renderers.
+//!
+//! Requires a [`PhysicalMapping`] inner (byte addresses must exist to be
+//! counted). `GRANULARITY` is in bytes: 1 = per byte, 64 = per cache line.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::blob::BlobStorage;
+
+use crate::mapping::{Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::record::{RecordDim, Scalar};
+
+/// Count accesses per `GRANULARITY`-byte granule of every blob, forwarding
+/// to the inner physical mapping `M`.
+#[derive(Clone, Debug)]
+pub struct Heatmap<R, M, const GRANULARITY: usize = 1> {
+    inner: M,
+    /// counters[blob][granule]
+    counters: Arc<Vec<Vec<AtomicU64>>>,
+    _pd: std::marker::PhantomData<R>,
+}
+
+impl<R: RecordDim, M: PhysicalMapping<R> + MemoryAccess<R>, const GRANULARITY: usize>
+    Heatmap<R, M, GRANULARITY>
+{
+    /// Instrument `inner`.
+    pub fn new(inner: M) -> Self {
+        assert!(GRANULARITY > 0);
+        let counters = (0..M::BLOB_COUNT)
+            .map(|b| {
+                let granules = inner.blob_size(b).div_ceil(GRANULARITY);
+                (0..granules).map(|_| AtomicU64::new(0)).collect()
+            })
+            .collect();
+        Heatmap { inner, counters: Arc::new(counters), _pd: std::marker::PhantomData }
+    }
+
+    /// The inner mapping.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// Bytes of counter memory (the §4 memory-overhead number: 8×payload
+    /// at `GRANULARITY = 1`).
+    pub fn counter_bytes(&self) -> usize {
+        self.counters.iter().map(|b| b.len() * 8).sum()
+    }
+
+    /// Snapshot of the per-granule counts for `blob`.
+    pub fn blob_counts(&self, blob: usize) -> Vec<u64> {
+        self.counters[blob].iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Reset all counters.
+    pub fn reset(&self) {
+        for b in self.counters.iter() {
+            for c in b {
+                c.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn record_access(&self, blob: usize, off: usize, len: usize) {
+        let first = off / GRANULARITY;
+        let last = (off + len - 1) / GRANULARITY;
+        for g in first..=last {
+            self.counters[blob][g].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Render an ASCII heatmap: one line per blob, one cell per bucket
+    /// (granules are merged into at most `width` buckets), shaded by
+    /// access count relative to the blob maximum.
+    pub fn render_ascii(&self, width: usize) -> String {
+        const SHADES: &[u8] = b" .:-=+*#%@";
+        let mut out = String::new();
+        for (bi, blob) in self.counters.iter().enumerate() {
+            let counts: Vec<u64> = blob.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+            let buckets = width.min(counts.len()).max(1);
+            let per = counts.len().div_ceil(buckets);
+            let sums: Vec<u64> =
+                counts.chunks(per).map(|c| c.iter().sum::<u64>() / c.len() as u64).collect();
+            let max = *sums.iter().max().unwrap_or(&0);
+            out.push_str(&format!("blob {bi:2} [{:>8} B] |", counts.len() * GRANULARITY));
+            for s in &sums {
+                let shade = if max == 0 {
+                    0
+                } else {
+                    ((s * (SHADES.len() as u64 - 1)) / max) as usize
+                };
+                out.push(SHADES[shade] as char);
+            }
+            out.push_str("|\n");
+        }
+        out
+    }
+
+    /// Dump counts as CSV (`blob,granule_offset,count`), the paper's
+    /// workflow for plotting heatmaps of access patterns.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("blob,offset,count\n");
+        for (bi, blob) in self.counters.iter().enumerate() {
+            for (g, c) in blob.iter().enumerate() {
+                let v = c.load(Ordering::Relaxed);
+                if v != 0 {
+                    out.push_str(&format!("{bi},{},{v}\n", g * GRANULARITY));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<R: RecordDim, M: PhysicalMapping<R> + MemoryAccess<R>, const GRANULARITY: usize> Mapping<R>
+    for Heatmap<R, M, GRANULARITY>
+{
+    type Extents = M::Extents;
+    const BLOB_COUNT: usize = M::BLOB_COUNT;
+
+    #[inline(always)]
+    fn extents(&self) -> &Self::Extents {
+        self.inner.extents()
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, i: usize) -> usize {
+        self.inner.blob_size(i)
+    }
+
+    fn fingerprint(&self) -> String {
+        self.inner.fingerprint()
+    }
+}
+
+impl<R: RecordDim, M: PhysicalMapping<R> + MemoryAccess<R>, const GRANULARITY: usize>
+    MemoryAccess<R> for Heatmap<R, M, GRANULARITY>
+{
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        let (blob, off) = self.inner.blob_nr_and_offset(idx, field);
+        self.record_access(blob, off, T::SIZE);
+        self.inner.load(storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        let (blob, off) = self.inner.blob_nr_and_offset(idx, field);
+        self.record_access(blob, off, T::SIZE);
+        self.inner.store(storage, idx, field, v)
+    }
+}
+
+impl<R: RecordDim, M: PhysicalMapping<R> + MemoryAccess<R> + SimdAccess<R>, const G: usize>
+    SimdAccess<R> for Heatmap<R, M, G>
+{
+    // Inherit the scalar-walk defaults: every lane's bytes are counted via
+    // the scalar load/store above. (Vectorizing instrumented access would
+    // undercount granule hits.)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+    use crate::mapping::aos::AoS;
+    use crate::mapping::soa::SoA;
+
+    crate::record! {
+        pub struct P, mod p {
+            x: f64,
+            m: f32,
+        }
+    }
+
+    #[test]
+    fn byte_granularity_counts_value_bytes() {
+        let hm = Heatmap::<P, _, 1>::new(SoA::<P, _>::new((Dyn(4u32),)));
+        let mut v = alloc_view(hm, &HeapAlloc);
+        v.set(&[0], p::x, 1.0f64);
+        let _ = v.get::<f64>(&[0], p::x);
+        let counts = v.mapping().blob_counts(0);
+        // bytes 0..8 touched twice (one store + one load)
+        assert_eq!(&counts[..8], &[2; 8]);
+        assert!(counts[8..].iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn cacheline_granularity() {
+        let hm = Heatmap::<P, _, 64>::new(SoA::<P, _>::new((Dyn(64u32),)));
+        let mut v = alloc_view(hm, &HeapAlloc);
+        // Touch records 0..8 (bytes 0..64 of blob 0) => granule 0 only.
+        for i in 0..8usize {
+            v.set(&[i], p::x, 0.0f64);
+        }
+        let counts = v.mapping().blob_counts(0);
+        assert_eq!(counts[0], 8);
+        assert!(counts[1..].iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn memory_overhead_is_8x_at_byte_granularity() {
+        // §4: 64-bit counter per byte = 8x memory overhead.
+        let inner = AoS::<P, _>::new((Dyn(128u32),));
+        let payload: usize = inner.blob_size(0);
+        let hm = Heatmap::<P, _, 1>::new(inner);
+        assert_eq!(hm.counter_bytes(), payload * 8);
+        // At cache-line granularity the overhead collapses to 1/8.
+        let inner = AoS::<P, _>::new((Dyn(128u32),));
+        let hm64 = Heatmap::<P, _, 64>::new(inner);
+        assert_eq!(hm64.counter_bytes(), payload.div_ceil(64) * 8);
+    }
+
+    #[test]
+    fn accesses_spanning_granules_count_both() {
+        // AoS Packed: f64 at offset 8 within 12-byte records lands across
+        // 8-byte granules.
+        let hm = Heatmap::<P, _, 8>::new(AoS::<P, _, crate::mapping::aos::Packed>::new((
+            Dyn(4u32),
+        ),));
+        let mut v = alloc_view(hm, &HeapAlloc);
+        v.set(&[1], p::x, 1.0f64); // record 1 starts at byte 12: spans granules 1 and 2
+        let counts = v.mapping().blob_counts(0);
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[2], 1);
+    }
+
+    #[test]
+    fn renderers() {
+        let hm = Heatmap::<P, _, 1>::new(SoA::<P, _>::new((Dyn(8u32),)));
+        let mut v = alloc_view(hm, &HeapAlloc);
+        v.set(&[0], p::x, 1.0f64);
+        let ascii = v.mapping().render_ascii(16);
+        assert!(ascii.contains("blob  0"));
+        let csv = v.mapping().to_csv();
+        assert!(csv.starts_with("blob,offset,count\n"));
+        assert!(csv.contains("0,0,1"));
+    }
+}

@@ -1,0 +1,318 @@
+//! Memory mappings: the exchangeable rule locating every scalar in blobs.
+//!
+//! A mapping consumes the record dimension ([`crate::record::RecordDim`])
+//! and array extents ([`crate::extents::Extents`]) and decides (a) how many
+//! byte blobs the view needs and how big they are, and (b) where each
+//! `(array index, field)` pair lives — either as a *physical* byte location
+//! ([`PhysicalMapping`]) or as a *computed* value materialized on access
+//! (bit-packed, type-changed, byte-split, discarded, counted...), the
+//! paper's "support for computations during memory access".
+//!
+//! | Paper mapping (§3/§4) | Module |
+//! |---|---|
+//! | AoS (packed/aligned, field (re)order) | [`aos`] |
+//! | SoA (single-blob / multi-blob) | [`soa`] |
+//! | AoSoA (inner lane count) | [`aosoa`] |
+//! | One (single record, for caches) | [`one`] |
+//! | BitpackIntSoA | [`bitpack_int`] |
+//! | BitpackFloatSoA | [`bitpack_float`] |
+//! | Changetype | [`changetype`] |
+//! | Bytesplit | [`bytesplit`] |
+//! | Null | [`null`] |
+//! | Split | [`split`] |
+//! | Trace / FieldAccessCount | [`field_access_count`] |
+//! | Heatmap | [`heatmap`] |
+
+pub mod aos;
+pub mod aosoa;
+pub mod bitpack_float;
+pub mod bitpack_int;
+pub mod bytesplit;
+pub mod changetype;
+pub mod field_access_count;
+pub mod heatmap;
+pub mod null;
+pub mod one;
+pub mod soa;
+pub mod split;
+
+use crate::blob::BlobStorage;
+use crate::extents::Extents;
+use crate::record::{RecordDim, Scalar};
+use crate::simd::{Simd, SimdElem};
+
+/// A subset of the record dimension's fields as a bitmask (field `i` ⇔ bit
+/// `i`). Lets [`split::Split`] and cache views map only part of a record
+/// (§3 Null: "a view acting as a cache ... that only works on a subset of
+/// the record dimension").
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct FieldMask(pub u64);
+
+impl FieldMask {
+    /// All fields selected.
+    pub const ALL: FieldMask = FieldMask(u64::MAX);
+
+    /// Mask with exactly the fields of `sel` set.
+    pub const fn from_selection(sel: crate::record::Selection) -> Self {
+        let mut m = 0u64;
+        let mut i = sel.start;
+        while i < sel.start + sel.len {
+            m |= 1 << i;
+            i += 1;
+        }
+        FieldMask(m)
+    }
+
+    /// Whether field `f` is in the mask.
+    #[inline(always)]
+    pub const fn contains(self, f: usize) -> bool {
+        f < 64 && (self.0 >> f) & 1 == 1
+    }
+
+    /// Complement within the first `n` fields.
+    pub const fn complement(self, n: usize) -> Self {
+        let all = if n >= 64 { u64::MAX } else { (1u64 << n) - 1 };
+        FieldMask(!self.0 & all)
+    }
+
+    /// Number of selected fields among the first `n`.
+    pub const fn count(self, n: usize) -> usize {
+        let all = if n >= 64 { u64::MAX } else { (1u64 << n) - 1 };
+        (self.0 & all).count_ones() as usize
+    }
+}
+
+impl Default for FieldMask {
+    fn default() -> Self {
+        FieldMask::ALL
+    }
+}
+
+/// Core mapping interface: blob inventory + extents.
+pub trait Mapping<R: RecordDim>: Clone + Send + Sync {
+    /// The array-extents type (carries rank, static extents, index type).
+    type Extents: Extents;
+    /// Number of blobs this mapping distributes data over.
+    const BLOB_COUNT: usize;
+
+    /// The array extents of the view.
+    fn extents(&self) -> &Self::Extents;
+    /// Required byte size of blob `i < Self::BLOB_COUNT`.
+    fn blob_size(&self, i: usize) -> usize;
+
+    /// A string identifying layout-relevant parameters; two views whose
+    /// mappings have equal fingerprints are bytewise-identical layouts
+    /// (used by [`crate::copy`] for the blob-memcpy fast path).
+    fn fingerprint(&self) -> String;
+}
+
+/// A mapping whose every field location is a plain byte address
+/// `(blob number, byte offset)` — AoS, SoA, AoSoA, One.
+///
+/// Instrumentation ([`heatmap::Heatmap`]) and the blanket load/store
+/// helpers build on this.
+pub trait PhysicalMapping<R: RecordDim>: Mapping<R> {
+    /// Locate `(idx, field)`; `idx.len() == RANK`.
+    fn blob_nr_and_offset(&self, idx: &[usize], field: usize) -> (usize, usize);
+}
+
+/// Uniform scalar access through a mapping: the trait `View` talks to.
+///
+/// Physical mappings implement this via [`impl_memory_access_via_physical!`];
+/// computed mappings implement it directly (pack/unpack, convert, count...).
+pub trait MemoryAccess<R: RecordDim>: Mapping<R> {
+    /// Load the scalar at `(idx, field)` as `T`.
+    ///
+    /// `T` must match the field's scalar type for physical mappings
+    /// (debug-asserted); computed mappings define their own conversion.
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T;
+
+    /// Store the scalar at `(idx, field)`.
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T);
+}
+
+/// Vector access through a mapping (§5): load/store `N` consecutive records'
+/// worth of one field, vectorized where the layout allows.
+///
+/// The default implementations walk the SIMD axis (the last array dimension)
+/// with scalar accesses — correct for every mapping. Contiguous layouts
+/// (SoA, AoSoA within a lane block) override with slice copies that compile
+/// to vector moves; AoS deliberately keeps the scalar walk, mirroring the
+/// paper's observation that scalar loads beat `gather` on the tested CPU.
+pub trait SimdAccess<R: RecordDim>: MemoryAccess<R> {
+    /// Load `N` lanes of `field` starting at `idx` along the last dimension.
+    #[inline]
+    fn load_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &S,
+        idx: &[usize],
+        field: usize,
+    ) -> Simd<T, N> {
+        let mut out = Simd::<T, N>::default();
+        if idx.len() == 1 {
+            // Rank-1 fast path (§Perf).
+            for k in 0..N {
+                out.0[k] = self.load(storage, &[idx[0] + k], field);
+            }
+            return out;
+        }
+        let mut idx_k = [0usize; crate::view::MAX_RANK];
+        idx_k[..idx.len()].copy_from_slice(idx);
+        let last = idx.len() - 1;
+        for k in 0..N {
+            idx_k[last] = idx[last] + k;
+            out.0[k] = self.load(storage, &idx_k[..idx.len()], field);
+        }
+        out
+    }
+
+    /// Store `N` lanes of `field` starting at `idx` along the last dimension.
+    #[inline]
+    fn store_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &mut S,
+        idx: &[usize],
+        field: usize,
+        v: Simd<T, N>,
+    ) {
+        if idx.len() == 1 {
+            for k in 0..N {
+                self.store(storage, &[idx[0] + k], field, v.0[k]);
+            }
+            return;
+        }
+        let mut idx_k = [0usize; crate::view::MAX_RANK];
+        idx_k[..idx.len()].copy_from_slice(idx);
+        let last = idx.len() - 1;
+        for k in 0..N {
+            idx_k[last] = idx[last] + k;
+            self.store(storage, &idx_k[..idx.len()], field, v.0[k]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Physical load/store helpers
+// ---------------------------------------------------------------------------
+
+/// Load a `T` from `blob` at byte offset `off` (little-endian; compiles to
+/// one unaligned move for the arithmetic scalars).
+///
+/// §Perf: the arithmetic scalars use a raw unaligned read after one bounds
+/// check — the `read_le`/`try_into` chain left LLVM with panic paths in
+/// the n-body hot loop. `bool` keeps the byte-compare path (reading an
+/// arbitrary byte as `bool` would be UB).
+#[inline(always)]
+pub fn load_scalar<T: Scalar>(blob: &[u8], off: usize) -> T {
+    if T::TYPE.same(crate::record::ScalarType::Bool) {
+        return T::read_le(&blob[off..off + T::SIZE]);
+    }
+    assert!(off + T::SIZE <= blob.len(), "scalar load out of bounds");
+    // SAFETY: bounds just checked; T is a plain-old-data scalar (non-bool
+    // branch) for which any bit pattern is valid; unaligned read is allowed
+    // by read_unaligned.
+    unsafe { (blob.as_ptr().add(off) as *const T).read_unaligned() }
+}
+
+/// Store a `T` into `blob` at byte offset `off`.
+#[inline(always)]
+pub fn store_scalar<T: Scalar>(blob: &mut [u8], off: usize, v: T) {
+    if T::TYPE.same(crate::record::ScalarType::Bool) {
+        v.write_le(&mut blob[off..off + T::SIZE]);
+        return;
+    }
+    assert!(off + T::SIZE <= blob.len(), "scalar store out of bounds");
+    // SAFETY: bounds just checked; see load_scalar.
+    unsafe { (blob.as_mut_ptr().add(off) as *mut T).write_unaligned(v) }
+}
+
+/// Typed load through a [`PhysicalMapping`].
+#[inline(always)]
+pub fn physical_load<R, M, T, S>(m: &M, storage: &S, idx: &[usize], field: usize) -> T
+where
+    R: RecordDim,
+    M: PhysicalMapping<R>,
+    T: Scalar,
+    S: BlobStorage,
+{
+    debug_assert!(
+        R::FIELDS[field].ty.same(T::TYPE),
+        "field {} of {} is {:?}, accessed as {:?}",
+        field,
+        R::NAME,
+        R::FIELDS[field].ty,
+        T::TYPE
+    );
+    let (blob, off) = m.blob_nr_and_offset(idx, field);
+    load_scalar(storage.blob(blob), off)
+}
+
+/// Typed store through a [`PhysicalMapping`].
+#[inline(always)]
+pub fn physical_store<R, M, T, S>(m: &M, storage: &mut S, idx: &[usize], field: usize, v: T)
+where
+    R: RecordDim,
+    M: PhysicalMapping<R>,
+    T: Scalar,
+    S: BlobStorage,
+{
+    debug_assert!(R::FIELDS[field].ty.same(T::TYPE));
+    let (blob, off) = m.blob_nr_and_offset(idx, field);
+    store_scalar(storage.blob_mut(blob), off, v)
+}
+
+/// Implement [`MemoryAccess`] for a [`PhysicalMapping`] by plain byte access.
+/// (A blanket impl would forbid computed mappings from implementing
+/// [`MemoryAccess`] themselves under coherence rules.)
+#[macro_export]
+macro_rules! impl_memory_access_via_physical {
+    ($ty:ident < R $(, $gen:ident $(: $bound:path)?)* >) => {
+        impl<R: $crate::record::RecordDim $(, $gen $(: $bound)?)*>
+            $crate::mapping::MemoryAccess<R> for $ty<R $(, $gen)*>
+        where
+            Self: $crate::mapping::PhysicalMapping<R>,
+        {
+            #[inline(always)]
+            fn load<T: $crate::record::Scalar, S: $crate::blob::BlobStorage>(
+                &self,
+                storage: &S,
+                idx: &[usize],
+                field: usize,
+            ) -> T {
+                $crate::mapping::physical_load::<R, _, T, S>(self, storage, idx, field)
+            }
+
+            #[inline(always)]
+            fn store<T: $crate::record::Scalar, S: $crate::blob::BlobStorage>(
+                &self,
+                storage: &mut S,
+                idx: &[usize],
+                field: usize,
+                v: T,
+            ) {
+                $crate::mapping::physical_store::<R, _, T, S>(self, storage, idx, field, v)
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::record::Selection;
+
+    #[test]
+    fn field_mask_ops() {
+        let m = FieldMask::from_selection(Selection::new(2, 3));
+        assert!(!m.contains(1));
+        assert!(m.contains(2));
+        assert!(m.contains(4));
+        assert!(!m.contains(5));
+        assert_eq!(m.count(7), 3);
+        let c = m.complement(7);
+        assert!(c.contains(0) && c.contains(1) && c.contains(5) && c.contains(6));
+        assert!(!c.contains(3));
+        assert_eq!(c.count(7), 4);
+        assert_eq!(FieldMask::ALL.count(7), 7);
+    }
+}

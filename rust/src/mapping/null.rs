@@ -1,0 +1,85 @@
+//! The `Null` mapping: writes are discarded, reads return default values.
+//!
+//! Paper §3: "The Null mapping discards any values written to it and
+//! returns a default constructed value when reading from it. It is intended
+//! to be used together with the Split mapping, to select which part of the
+//! record dimension to not map to physical storage" — e.g. shared-memory
+//! cache views that only need a field subset, or nulling a field out to
+//! measure its access cost during profiling.
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+use crate::extents::Extents;
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::{RecordDim, Scalar};
+
+/// Discards stores; loads yield `T::default()`. Occupies zero storage.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullMapping<R, E> {
+    extents: E,
+    _pd: PhantomData<R>,
+}
+
+impl<R: RecordDim, E: Extents> NullMapping<R, E> {
+    /// Mapping over `extents`.
+    pub fn new(extents: E) -> Self {
+        NullMapping { extents, _pd: PhantomData }
+    }
+}
+
+impl<R: RecordDim, E: Extents> Mapping<R> for NullMapping<R, E> {
+    type Extents = E;
+    const BLOB_COUNT: usize = 0;
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, _i: usize) -> usize {
+        0
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("Null<{}>", R::NAME)
+    }
+}
+
+impl<R: RecordDim, E: Extents> MemoryAccess<R> for NullMapping<R, E> {
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, _storage: &S, _idx: &[usize], _field: usize) -> T {
+        T::default()
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(
+        &self,
+        _storage: &mut S,
+        _idx: &[usize],
+        _field: usize,
+        _v: T,
+    ) {
+    }
+}
+
+impl<R: RecordDim, E: Extents> SimdAccess<R> for NullMapping<R, E> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+
+    crate::record! { pub struct P, mod p { a: f32, b: u32 } }
+
+    #[test]
+    fn discards_and_defaults() {
+        let mut v = alloc_view(NullMapping::<P, _>::new((Dyn(4u32),)), &HeapAlloc);
+        assert_eq!(v.storage().total_bytes(), 0);
+        v.set(&[1], p::a, 9.0f32);
+        assert_eq!(v.get::<f32>(&[1], p::a), 0.0);
+        assert_eq!(v.get::<u32>(&[3], p::b), 0);
+    }
+}

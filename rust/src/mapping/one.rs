@@ -1,0 +1,87 @@
+//! The `One` mapping: every array index maps to the same single record.
+//!
+//! LLAMA's `mapping::One` — useful for broadcasting a shared record across
+//! a data-parallel algorithm, and as the record side of scalar/SIMD
+//! symmetry (Table 1: `SimdN<T, 1>` of a record is `One<T>`).
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+use crate::extents::Extents;
+use crate::mapping::{Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::record::{packed_offset, RecordDim, Scalar};
+
+/// Maps all array indices onto one shared record (packed in one blob).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct One<R, E> {
+    extents: E,
+    _pd: PhantomData<R>,
+}
+
+impl<R: RecordDim, E: Extents> One<R, E> {
+    /// Mapping over `extents` (the extents only define the index space,
+    /// not the storage — storage is always exactly one record).
+    pub fn new(extents: E) -> Self {
+        One { extents, _pd: PhantomData }
+    }
+}
+
+impl<R: RecordDim, E: Extents> Mapping<R> for One<R, E> {
+    type Extents = E;
+    const BLOB_COUNT: usize = 1;
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, _i: usize) -> usize {
+        R::PACKED_SIZE
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("One<{}>", R::NAME)
+    }
+}
+
+impl<R: RecordDim, E: Extents> PhysicalMapping<R> for One<R, E> {
+    #[inline(always)]
+    fn blob_nr_and_offset(&self, _idx: &[usize], field: usize) -> (usize, usize) {
+        (0, packed_offset(R::FIELDS, field))
+    }
+}
+
+impl<R: RecordDim, E: Extents> MemoryAccess<R> for One<R, E> {
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        crate::mapping::physical_load::<R, _, T, S>(self, storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        crate::mapping::physical_store::<R, _, T, S>(self, storage, idx, field, v)
+    }
+}
+
+impl<R: RecordDim, E: Extents> SimdAccess<R> for One<R, E> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+
+    crate::record! { pub struct P, mod p { a: f32, b: i64 } }
+
+    #[test]
+    fn all_indices_share_one_record() {
+        let mut v = alloc_view(One::<P, _>::new((Dyn(100u32),)), &HeapAlloc);
+        assert_eq!(v.storage().total_bytes(), 12);
+        v.set(&[13], p::a, 3.5f32);
+        assert_eq!(v.get::<f32>(&[99], p::a), 3.5);
+        assert_eq!(v.get::<f32>(&[0], p::a), 3.5);
+        v.set(&[0], p::b, -7i64);
+        assert_eq!(v.get::<i64>(&[42], p::b), -7);
+    }
+}

@@ -1,0 +1,342 @@
+//! Struct-of-Arrays mapping.
+//!
+//! Each field's values are stored contiguously. Two blob policies:
+//! [`MultiBlob`] gives every field its own blob (the paper's "SoA MB",
+//! used in Figure 3 — each field in a separate allocation), [`SingleBlob`]
+//! packs all field arrays consecutively into one blob.
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+use crate::extents::{Extents, Linearizer, RowMajor};
+use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::record::{RecordDim, Scalar};
+use crate::simd::{Simd, SimdElem};
+
+/// Blob policy for [`SoA`]: how field arrays are distributed over blobs.
+pub trait BlobPolicy: Copy + Default + Send + Sync + 'static {
+    /// Name for fingerprints/reports.
+    const NAME: &'static str;
+    /// `true` → one blob per field; `false` → one blob for all.
+    const MULTI: bool;
+}
+
+/// One blob per field ("SoA MB" in the paper's Figure 3).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MultiBlob;
+
+impl BlobPolicy for MultiBlob {
+    const NAME: &'static str = "MultiBlob";
+    const MULTI: bool = true;
+}
+
+/// All field arrays consecutive in a single blob ("SoA SB").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SingleBlob;
+
+impl BlobPolicy for SingleBlob {
+    const NAME: &'static str = "SingleBlob";
+    const MULTI: bool = false;
+}
+
+/// Struct-of-Arrays mapping.
+///
+/// ```
+/// use llama::prelude::*;
+/// llama::record! { pub struct P, mod p { x: f64, m: f32 } }
+/// let mut v = alloc_view(SoA::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
+/// v.set(&[5], p::x, 1.0f64);
+/// assert_eq!(v.get::<f64>(&[5], p::x), 1.0);
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SoA<R, E, B = MultiBlob, L = RowMajor, const MASK: u64 = { u64::MAX }> {
+    extents: E,
+    _pd: PhantomData<(R, B, L)>,
+}
+
+impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> SoA<R, E, B, L, MASK> {
+    /// Mapping over `extents`.
+    pub fn new(extents: E) -> Self {
+        SoA { extents, _pd: PhantomData }
+    }
+
+    /// The field mask as a value.
+    pub const fn mask() -> FieldMask {
+        FieldMask(MASK)
+    }
+
+    /// Blob index per field under [`MultiBlob`] (rank among masked fields;
+    /// constant LUT — §Perf: no per-access scan of the field metadata).
+    pub const FIELD_BLOB: [usize; crate::record::MAX_FIELDS] = {
+        let mut lut = [0usize; crate::record::MAX_FIELDS];
+        let mut b = 0;
+        let mut i = 0;
+        while i < R::FIELDS.len() {
+            if FieldMask(MASK).contains(i) {
+                lut[i] = b;
+                b += 1;
+            }
+            i += 1;
+        }
+        lut
+    };
+
+    /// Sum of masked field sizes strictly before each field (constant LUT;
+    /// multiplied by the record count for [`SingleBlob`] region starts).
+    pub const PRE_SIZES: [usize; crate::record::MAX_FIELDS] = {
+        let mut lut = [0usize; crate::record::MAX_FIELDS];
+        let mut acc = 0;
+        let mut i = 0;
+        while i < R::FIELDS.len() {
+            lut[i] = acc;
+            if FieldMask(MASK).contains(i) {
+                acc += R::FIELDS[i].size();
+            }
+            i += 1;
+        }
+        lut
+    };
+
+    /// Per-field scalar sizes (constant LUT).
+    pub const SIZES: [usize; crate::record::MAX_FIELDS] = crate::record::size_lut(R::FIELDS);
+}
+
+impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> Mapping<R>
+    for SoA<R, E, B, L, MASK>
+{
+    type Extents = E;
+    const BLOB_COUNT: usize = if B::MULTI { FieldMask(MASK).count(R::FIELDS.len()) } else { 1 };
+
+    #[inline(always)]
+    fn extents(&self) -> &E {
+        &self.extents
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, i: usize) -> usize {
+        let n = self.extents.count();
+        if B::MULTI {
+            // i-th masked field
+            let mut rank = 0;
+            for (f, fld) in R::FIELDS.iter().enumerate() {
+                if FieldMask(MASK).contains(f) {
+                    if rank == i {
+                        return n * fld.size();
+                    }
+                    rank += 1;
+                }
+            }
+            panic!("blob index {i} out of range");
+        } else {
+            let mut total = 0;
+            for (f, fld) in R::FIELDS.iter().enumerate() {
+                if FieldMask(MASK).contains(f) {
+                    total += n * fld.size();
+                }
+            }
+            total
+        }
+    }
+
+    fn fingerprint(&self) -> String {
+        format!(
+            "SoA<{},{},{},mask={MASK:x}>@{:?}",
+            R::NAME,
+            B::NAME,
+            L::NAME,
+            (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
+        )
+    }
+}
+
+impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> PhysicalMapping<R>
+    for SoA<R, E, B, L, MASK>
+{
+    #[inline(always)]
+    fn blob_nr_and_offset(&self, idx: &[usize], field: usize) -> (usize, usize) {
+        debug_assert!(FieldMask(MASK).contains(field), "field {field} not mapped (masked out)");
+        let lin = L::linearize(&self.extents, idx);
+        let elem = lin * Self::SIZES[field];
+        if B::MULTI {
+            (Self::FIELD_BLOB[field], elem)
+        } else {
+            (0, self.extents.count() * Self::PRE_SIZES[field] + elem)
+        }
+    }
+}
+
+impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> MemoryAccess<R>
+    for SoA<R, E, B, L, MASK>
+{
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        crate::mapping::physical_load::<R, _, T, S>(self, storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        crate::mapping::physical_store::<R, _, T, S>(self, storage, idx, field, v)
+    }
+}
+
+impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> SimdAccess<R>
+    for SoA<R, E, B, L, MASK>
+{
+    #[inline(always)]
+    fn load_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &S,
+        idx: &[usize],
+        field: usize,
+    ) -> Simd<T, N> {
+        if L::LAST_DIM_CONTIGUOUS {
+            // N consecutive records of one field are N consecutive T's.
+            let (b, off) = self.blob_nr_and_offset(idx, field);
+            return Simd::from_le_bytes(&storage.blob(b)[off..off + N * T::SIZE]);
+        }
+        // Fallback: per-lane scalar loads.
+        default_load_simd(self, storage, idx, field)
+    }
+
+    #[inline(always)]
+    fn store_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &mut S,
+        idx: &[usize],
+        field: usize,
+        v: Simd<T, N>,
+    ) {
+        if L::LAST_DIM_CONTIGUOUS {
+            let (b, off) = self.blob_nr_and_offset(idx, field);
+            v.write_le_bytes(&mut storage.blob_mut(b)[off..off + N * T::SIZE]);
+            return;
+        }
+        default_store_simd(self, storage, idx, field, v)
+    }
+}
+
+/// The trait-default per-lane SIMD load, callable from specialized impls'
+/// fallback branches.
+#[inline]
+pub(crate) fn default_load_simd<R, M, T, S, const N: usize>(
+    m: &M,
+    storage: &S,
+    idx: &[usize],
+    field: usize,
+) -> Simd<T, N>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    T: Scalar + SimdElem,
+    S: BlobStorage,
+{
+    let mut out = Simd::<T, N>::default();
+    if idx.len() == 1 {
+        // Rank-1 fast path (§Perf): no index-buffer shuffling per lane.
+        for k in 0..N {
+            out.0[k] = m.load(storage, &[idx[0] + k], field);
+        }
+        return out;
+    }
+    let mut idx_k = [0usize; crate::view::MAX_RANK];
+    idx_k[..idx.len()].copy_from_slice(idx);
+    let last = idx.len() - 1;
+    for k in 0..N {
+        idx_k[last] = idx[last] + k;
+        out.0[k] = m.load(storage, &idx_k[..idx.len()], field);
+    }
+    out
+}
+
+/// The trait-default per-lane SIMD store (see [`default_load_simd`]).
+#[inline]
+pub(crate) fn default_store_simd<R, M, T, S, const N: usize>(
+    m: &M,
+    storage: &mut S,
+    idx: &[usize],
+    field: usize,
+    v: Simd<T, N>,
+) where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    T: Scalar + SimdElem,
+    S: BlobStorage,
+{
+    if idx.len() == 1 {
+        for k in 0..N {
+            m.store(storage, &[idx[0] + k], field, v.0[k]);
+        }
+        return;
+    }
+    let mut idx_k = [0usize; crate::view::MAX_RANK];
+    idx_k[..idx.len()].copy_from_slice(idx);
+    let last = idx.len() - 1;
+    for k in 0..N {
+        idx_k[last] = idx[last] + k;
+        m.store(storage, &idx_k[..idx.len()], field, v.0[k]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+
+    crate::record! {
+        pub struct P, mod p {
+            pos: { x: f64, y: f64, z: f64 },
+            mass: f32,
+        }
+    }
+
+    #[test]
+    fn multiblob_layout() {
+        let m = SoA::<P, _>::new((Dyn(10u32),));
+        assert_eq!(<SoA<P, (Dyn<u32>,)> as Mapping<P>>::BLOB_COUNT, 4);
+        assert_eq!(m.blob_size(0), 80); // pos.x: 10 f64
+        assert_eq!(m.blob_size(3), 40); // mass: 10 f32
+        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::y), (1, 56));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::mass), (3, 28));
+    }
+
+    #[test]
+    fn singleblob_layout() {
+        let m = SoA::<P, _, SingleBlob>::new((Dyn(10u32),));
+        assert_eq!(<SoA<P, (Dyn<u32>,), SingleBlob> as Mapping<P>>::BLOB_COUNT, 1);
+        assert_eq!(m.blob_size(0), 10 * (24 + 4));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::x), (0, 56));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::y), (0, 80 + 56));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::mass), (0, 240 + 28));
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(4u32), Dyn(5u32))), &HeapAlloc);
+        v.set(&[2, 3], p::pos::z, 9.25f64);
+        assert_eq!(v.get::<f64>(&[2, 3], p::pos::z), 9.25);
+        assert_eq!(v.get::<f64>(&[3, 2], p::pos::z), 0.0);
+    }
+
+    #[test]
+    fn simd_fast_path_roundtrip() {
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(16u32),)), &HeapAlloc);
+        for i in 0..16 {
+            v.set(&[i], p::pos::x, i as f64);
+        }
+        let s: Simd<f64, 4> = v.load_simd(&[4], p::pos::x);
+        assert_eq!(s.0, [4.0, 5.0, 6.0, 7.0]);
+        v.store_simd(&[8], p::pos::x, Simd([100.0f64, 101.0, 102.0, 103.0]));
+        assert_eq!(v.get::<f64>(&[9], p::pos::x), 101.0);
+        assert_eq!(v.get::<f64>(&[12], p::pos::x), 12.0);
+    }
+
+    #[test]
+    fn masked_soa_multiblob() {
+        const M: u64 = 0b1000; // only mass
+        let m = SoA::<P, (Dyn<u32>,), MultiBlob, RowMajor, M>::new((Dyn(10u32),));
+        assert_eq!(<SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, M> as Mapping<P>>::BLOB_COUNT, 1);
+        assert_eq!(m.blob_size(0), 40);
+        assert_eq!(m.blob_nr_and_offset(&[3], p::mass), (0, 12));
+    }
+}

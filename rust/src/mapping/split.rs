@@ -1,0 +1,238 @@
+//! The `Split` mapping: partitions the record dimension between two inner
+//! mappings.
+//!
+//! A field [`Selection`] goes to the first mapping, the complement to the
+//! second. Both inner mappings must be constructed over the same extents
+//! with matching field masks (use [`crate::mapping::FieldMask`] const
+//! parameters on AoS/SoA/AoSoA, or a mask-oblivious mapping like
+//! [`crate::mapping::null::NullMapping`]). Classic §3 use: hot fields →
+//! SoA, cold fields → AoS; or cached subset → real storage, rest → Null.
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::{RecordDim, Scalar, Selection};
+use crate::simd::{Simd, SimdElem};
+
+/// Routes fields in `selection` to `M1`, the rest to `M2`. `M1`'s blobs
+/// come first in the view's storage.
+#[derive(Clone, Copy, Debug)]
+pub struct Split<R, M1, M2> {
+    first: M1,
+    second: M2,
+    selection: Selection,
+    _pd: PhantomData<R>,
+}
+
+impl<R, M1, M2> Split<R, M1, M2>
+where
+    R: RecordDim,
+    M1: MemoryAccess<R>,
+    M2: MemoryAccess<R>,
+{
+    /// Split `selection` into `first`, complement into `second`.
+    ///
+    /// The inner mappings see the full record dimension but must only be
+    /// asked about their own fields; construct them with matching masks.
+    pub fn new(first: M1, second: M2, selection: Selection) -> Self {
+        Split { first, second, selection, _pd: PhantomData }
+    }
+
+    /// The selection routed to the first mapping.
+    pub fn selection(&self) -> Selection {
+        self.selection
+    }
+
+    /// Access the first inner mapping.
+    pub fn first(&self) -> &M1 {
+        &self.first
+    }
+
+    /// Access the second inner mapping.
+    pub fn second(&self) -> &M2 {
+        &self.second
+    }
+}
+
+/// Adapter presenting a suffix of a [`BlobStorage`] as its own storage, so
+/// the second inner mapping sees blob indices starting at zero.
+struct OffsetStorage<'s, S>(&'s S, usize);
+
+impl<'s, S: BlobStorage> BlobStorage for OffsetStorage<'s, S> {
+    fn blob_count(&self) -> usize {
+        self.0.blob_count() - self.1
+    }
+    #[inline(always)]
+    fn blob(&self, i: usize) -> &[u8] {
+        self.0.blob(i + self.1)
+    }
+    fn blob_mut(&mut self, _i: usize) -> &mut [u8] {
+        unreachable!("OffsetStorage is read-only")
+    }
+}
+
+/// Mutable variant of [`OffsetStorage`].
+struct OffsetStorageMut<'s, S>(&'s mut S, usize);
+
+impl<'s, S: BlobStorage> BlobStorage for OffsetStorageMut<'s, S> {
+    fn blob_count(&self) -> usize {
+        self.0.blob_count() - self.1
+    }
+    #[inline(always)]
+    fn blob(&self, i: usize) -> &[u8] {
+        self.0.blob(i + self.1)
+    }
+    #[inline(always)]
+    fn blob_mut(&mut self, i: usize) -> &mut [u8] {
+        self.0.blob_mut(i + self.1)
+    }
+}
+
+impl<R, M1, M2> Mapping<R> for Split<R, M1, M2>
+where
+    R: RecordDim,
+    M1: MemoryAccess<R>,
+    M2: MemoryAccess<R, Extents = M1::Extents>,
+{
+    type Extents = M1::Extents;
+    const BLOB_COUNT: usize = M1::BLOB_COUNT + M2::BLOB_COUNT;
+
+    #[inline(always)]
+    fn extents(&self) -> &Self::Extents {
+        self.first.extents()
+    }
+
+    #[inline(always)]
+    fn blob_size(&self, i: usize) -> usize {
+        if i < M1::BLOB_COUNT {
+            self.first.blob_size(i)
+        } else {
+            self.second.blob_size(i - M1::BLOB_COUNT)
+        }
+    }
+
+    fn fingerprint(&self) -> String {
+        format!(
+            "Split<{}..+{}|{}|{}>",
+            self.selection.start,
+            self.selection.len,
+            self.first.fingerprint(),
+            self.second.fingerprint()
+        )
+    }
+}
+
+impl<R, M1, M2> MemoryAccess<R> for Split<R, M1, M2>
+where
+    R: RecordDim,
+    M1: MemoryAccess<R>,
+    M2: MemoryAccess<R, Extents = M1::Extents>,
+{
+    #[inline(always)]
+    fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
+        if self.selection.contains(field) {
+            self.first.load(storage, idx, field)
+        } else {
+            self.second.load(&OffsetStorage(storage, M1::BLOB_COUNT), idx, field)
+        }
+    }
+
+    #[inline(always)]
+    fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
+        if self.selection.contains(field) {
+            self.first.store(storage, idx, field, v)
+        } else {
+            self.second.store(&mut OffsetStorageMut(storage, M1::BLOB_COUNT), idx, field, v)
+        }
+    }
+}
+
+impl<R, M1, M2> SimdAccess<R> for Split<R, M1, M2>
+where
+    R: RecordDim,
+    M1: SimdAccess<R>,
+    M2: SimdAccess<R, Extents = M1::Extents>,
+{
+    #[inline(always)]
+    fn load_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &S,
+        idx: &[usize],
+        field: usize,
+    ) -> Simd<T, N> {
+        if self.selection.contains(field) {
+            self.first.load_simd(storage, idx, field)
+        } else {
+            self.second.load_simd(&OffsetStorage(storage, M1::BLOB_COUNT), idx, field)
+        }
+    }
+
+    #[inline(always)]
+    fn store_simd<T: Scalar + SimdElem, S: BlobStorage, const N: usize>(
+        &self,
+        storage: &mut S,
+        idx: &[usize],
+        field: usize,
+        v: Simd<T, N>,
+    ) {
+        if self.selection.contains(field) {
+            self.first.store_simd(storage, idx, field, v)
+        } else {
+            self.second.store_simd(&mut OffsetStorageMut(storage, M1::BLOB_COUNT), idx, field, v)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+    use crate::mapping::null::NullMapping;
+    use crate::mapping::soa::{MultiBlob, SoA};
+    use crate::extents::RowMajor;
+
+    crate::record! {
+        pub struct P, mod p {
+            pos: { x: f64, y: f64, z: f64 },
+            vel: { x: f64, y: f64, z: f64 },
+            mass: f32,
+        }
+    }
+
+    #[test]
+    fn soa_plus_null_cache_view() {
+        // Map only pos.* physically; vel/mass discarded (§3 Null use case).
+        const POS: u64 = 0b0000111;
+        type M1 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, POS>;
+        let e = (Dyn(8u32),);
+        let split = Split::new(M1::new(e), NullMapping::<P, _>::new(e), p::pos);
+        let mut v = alloc_view(split, &HeapAlloc);
+        assert_eq!(v.storage().blob_count(), 3);
+        assert_eq!(v.storage().total_bytes(), 3 * 8 * 8);
+        v.set(&[2], p::pos::y, 4.0f64);
+        v.set(&[2], p::mass, 2.0f32); // discarded
+        assert_eq!(v.get::<f64>(&[2], p::pos::y), 4.0);
+        assert_eq!(v.get::<f32>(&[2], p::mass), 0.0);
+    }
+
+    #[test]
+    fn soa_plus_soa_partition() {
+        const HOT: u64 = 0b0000111; // pos -> first
+        const COLD: u64 = 0b1111000; // vel+mass -> second
+        type M1 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, HOT>;
+        type M2 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, COLD>;
+        let e = (Dyn(4u32),);
+        let split = Split::new(M1::new(e), M2::new(e), p::pos);
+        let mut v = alloc_view(split, &HeapAlloc);
+        assert_eq!(v.storage().blob_count(), 7);
+        v.set(&[1], p::pos::x, 1.0f64);
+        v.set(&[1], p::vel::z, -1.0f64);
+        v.set(&[1], p::mass, 0.5f32);
+        assert_eq!(v.get::<f64>(&[1], p::pos::x), 1.0);
+        assert_eq!(v.get::<f64>(&[1], p::vel::z), -1.0);
+        assert_eq!(v.get::<f32>(&[1], p::mass), 0.5);
+    }
+}

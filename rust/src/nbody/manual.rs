@@ -1,0 +1,522 @@
+//! Manually written n-body versions — the baselines of Figure 3.
+//!
+//! Each layout (`AoS`, `SoA` multi-blob, `AoSoA`) is hand-coded against
+//! its concrete data structure, scalar and SIMD, exactly as a programmer
+//! without LLAMA would write them. The SIMD AoS *move* uses per-lane
+//! scalar loads rather than gathers — the paper found the compiler
+//! produces better code that way on the tested CPU, and made the same
+//! replacement for the final figure.
+
+use super::{pp_interaction, ParticleData, EPS2, TIMESTEP};
+use crate::simd::Simd;
+
+// ---------------------------------------------------------------------------
+// AoS
+// ---------------------------------------------------------------------------
+
+/// Array-of-structs particle store.
+#[derive(Clone, Debug)]
+pub struct AosSim {
+    /// The particles.
+    pub ps: Vec<ParticleData>,
+}
+
+impl AosSim {
+    /// Build from shared initial conditions.
+    pub fn new(init: &[ParticleData]) -> Self {
+        AosSim { ps: init.to_vec() }
+    }
+
+    /// Extract particles for validation.
+    pub fn snapshot(&self) -> Vec<ParticleData> {
+        self.ps.clone()
+    }
+
+    /// Scalar all-pairs update.
+    pub fn update_scalar(&mut self) {
+        let n = self.ps.len();
+        for i in 0..n {
+            let pi = self.ps[i];
+            let mut acc = (0.0f32, 0.0f32, 0.0f32);
+            for j in 0..n {
+                let pj = &self.ps[j];
+                pp_interaction(
+                    pi.pos.x, pi.pos.y, pi.pos.z, pj.pos.x, pj.pos.y, pj.pos.z, pj.mass, &mut acc,
+                );
+            }
+            self.ps[i].vel.x += acc.0;
+            self.ps[i].vel.y += acc.1;
+            self.ps[i].vel.z += acc.2;
+        }
+    }
+
+    /// Scalar move.
+    pub fn move_scalar(&mut self) {
+        for p in &mut self.ps {
+            p.pos.x += p.vel.x * TIMESTEP;
+            p.pos.y += p.vel.y * TIMESTEP;
+            p.pos.z += p.vel.z * TIMESTEP;
+        }
+    }
+
+    /// SIMD update: `LANES` particles per outer iteration, per-lane scalar
+    /// loads from the interleaved layout (the "multiple scalar loads"
+    /// variant the paper settled on instead of gathers).
+    pub fn update_simd<const LANES: usize>(&mut self) {
+        let n = self.ps.len();
+        assert_eq!(n % LANES, 0);
+        for i in (0..n).step_by(LANES) {
+            let mut pix = Simd::<f32, LANES>::default();
+            let mut piy = Simd::<f32, LANES>::default();
+            let mut piz = Simd::<f32, LANES>::default();
+            for k in 0..LANES {
+                pix.0[k] = self.ps[i + k].pos.x;
+                piy.0[k] = self.ps[i + k].pos.y;
+                piz.0[k] = self.ps[i + k].pos.z;
+            }
+            let mut ax = Simd::<f32, LANES>::default();
+            let mut ay = Simd::<f32, LANES>::default();
+            let mut az = Simd::<f32, LANES>::default();
+            for j in 0..n {
+                let pj = &self.ps[j];
+                simd_interaction(
+                    pix,
+                    piy,
+                    piz,
+                    Simd::splat(pj.pos.x),
+                    Simd::splat(pj.pos.y),
+                    Simd::splat(pj.pos.z),
+                    Simd::splat(pj.mass),
+                    &mut ax,
+                    &mut ay,
+                    &mut az,
+                );
+            }
+            for k in 0..LANES {
+                self.ps[i + k].vel.x += ax.0[k];
+                self.ps[i + k].vel.y += ay.0[k];
+                self.ps[i + k].vel.z += az.0[k];
+            }
+        }
+    }
+
+    /// SIMD move with per-lane scalar loads/stores.
+    pub fn move_simd<const LANES: usize>(&mut self) {
+        let n = self.ps.len();
+        assert_eq!(n % LANES, 0);
+        let dt = Simd::<f32, LANES>::splat(TIMESTEP);
+        for i in (0..n).step_by(LANES) {
+            let mut px = Simd::<f32, LANES>::default();
+            let mut py = Simd::<f32, LANES>::default();
+            let mut pz = Simd::<f32, LANES>::default();
+            let mut vx = Simd::<f32, LANES>::default();
+            let mut vy = Simd::<f32, LANES>::default();
+            let mut vz = Simd::<f32, LANES>::default();
+            for k in 0..LANES {
+                let p = &self.ps[i + k];
+                px.0[k] = p.pos.x;
+                py.0[k] = p.pos.y;
+                pz.0[k] = p.pos.z;
+                vx.0[k] = p.vel.x;
+                vy.0[k] = p.vel.y;
+                vz.0[k] = p.vel.z;
+            }
+            px += vx * dt;
+            py += vy * dt;
+            pz += vz * dt;
+            for k in 0..LANES {
+                let p = &mut self.ps[i + k];
+                p.pos.x = px.0[k];
+                p.pos.y = py.0[k];
+                p.pos.z = pz.0[k];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SoA (multi-blob: one Vec per field)
+// ---------------------------------------------------------------------------
+
+/// Struct-of-arrays particle store, one allocation per field ("SoA MB").
+#[derive(Clone, Debug)]
+pub struct SoaSim {
+    /// Position components.
+    pub px: Vec<f32>,
+    /// Position y.
+    pub py: Vec<f32>,
+    /// Position z.
+    pub pz: Vec<f32>,
+    /// Velocity x.
+    pub vx: Vec<f32>,
+    /// Velocity y.
+    pub vy: Vec<f32>,
+    /// Velocity z.
+    pub vz: Vec<f32>,
+    /// Masses.
+    pub mass: Vec<f32>,
+}
+
+impl SoaSim {
+    /// Build from shared initial conditions.
+    pub fn new(init: &[ParticleData]) -> Self {
+        SoaSim {
+            px: init.iter().map(|p| p.pos.x).collect(),
+            py: init.iter().map(|p| p.pos.y).collect(),
+            pz: init.iter().map(|p| p.pos.z).collect(),
+            vx: init.iter().map(|p| p.vel.x).collect(),
+            vy: init.iter().map(|p| p.vel.y).collect(),
+            vz: init.iter().map(|p| p.vel.z).collect(),
+            mass: init.iter().map(|p| p.mass).collect(),
+        }
+    }
+
+    /// Extract particles for validation.
+    pub fn snapshot(&self) -> Vec<ParticleData> {
+        (0..self.px.len())
+            .map(|i| ParticleData {
+                pos: super::PVec { x: self.px[i], y: self.py[i], z: self.pz[i] },
+                vel: super::PVec { x: self.vx[i], y: self.vy[i], z: self.vz[i] },
+                mass: self.mass[i],
+            })
+            .collect()
+    }
+
+    /// Scalar all-pairs update.
+    pub fn update_scalar(&mut self) {
+        let n = self.px.len();
+        for i in 0..n {
+            let (pix, piy, piz) = (self.px[i], self.py[i], self.pz[i]);
+            let mut acc = (0.0f32, 0.0f32, 0.0f32);
+            for j in 0..n {
+                pp_interaction(
+                    pix, piy, piz, self.px[j], self.py[j], self.pz[j], self.mass[j], &mut acc,
+                );
+            }
+            self.vx[i] += acc.0;
+            self.vy[i] += acc.1;
+            self.vz[i] += acc.2;
+        }
+    }
+
+    /// Scalar move.
+    pub fn move_scalar(&mut self) {
+        let n = self.px.len();
+        for i in 0..n {
+            self.px[i] += self.vx[i] * TIMESTEP;
+            self.py[i] += self.vy[i] * TIMESTEP;
+            self.pz[i] += self.vz[i] * TIMESTEP;
+        }
+    }
+
+    /// SIMD update with contiguous vector loads.
+    pub fn update_simd<const LANES: usize>(&mut self) {
+        let n = self.px.len();
+        assert_eq!(n % LANES, 0);
+        for i in (0..n).step_by(LANES) {
+            let pix = Simd::<f32, LANES>::from_slice(&self.px[i..]);
+            let piy = Simd::<f32, LANES>::from_slice(&self.py[i..]);
+            let piz = Simd::<f32, LANES>::from_slice(&self.pz[i..]);
+            let mut ax = Simd::<f32, LANES>::default();
+            let mut ay = Simd::<f32, LANES>::default();
+            let mut az = Simd::<f32, LANES>::default();
+            for j in 0..n {
+                simd_interaction(
+                    pix,
+                    piy,
+                    piz,
+                    Simd::splat(self.px[j]),
+                    Simd::splat(self.py[j]),
+                    Simd::splat(self.pz[j]),
+                    Simd::splat(self.mass[j]),
+                    &mut ax,
+                    &mut ay,
+                    &mut az,
+                );
+            }
+            let vx = Simd::<f32, LANES>::from_slice(&self.vx[i..]) + ax;
+            let vy = Simd::<f32, LANES>::from_slice(&self.vy[i..]) + ay;
+            let vz = Simd::<f32, LANES>::from_slice(&self.vz[i..]) + az;
+            vx.write_to_slice(&mut self.vx[i..]);
+            vy.write_to_slice(&mut self.vy[i..]);
+            vz.write_to_slice(&mut self.vz[i..]);
+        }
+    }
+
+    /// SIMD move with contiguous vector loads/stores.
+    pub fn move_simd<const LANES: usize>(&mut self) {
+        let n = self.px.len();
+        assert_eq!(n % LANES, 0);
+        let dt = Simd::<f32, LANES>::splat(TIMESTEP);
+        for i in (0..n).step_by(LANES) {
+            let px = Simd::<f32, LANES>::from_slice(&self.px[i..])
+                + Simd::<f32, LANES>::from_slice(&self.vx[i..]) * dt;
+            let py = Simd::<f32, LANES>::from_slice(&self.py[i..])
+                + Simd::<f32, LANES>::from_slice(&self.vy[i..]) * dt;
+            let pz = Simd::<f32, LANES>::from_slice(&self.pz[i..])
+                + Simd::<f32, LANES>::from_slice(&self.vz[i..]) * dt;
+            px.write_to_slice(&mut self.px[i..]);
+            py.write_to_slice(&mut self.py[i..]);
+            pz.write_to_slice(&mut self.pz[i..]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AoSoA
+// ---------------------------------------------------------------------------
+
+/// One AoSoA block: `L` values of each field.
+#[derive(Clone, Copy, Debug)]
+pub struct AosoaBlock<const L: usize> {
+    /// pos.x lanes.
+    pub px: [f32; L],
+    /// pos.y lanes.
+    pub py: [f32; L],
+    /// pos.z lanes.
+    pub pz: [f32; L],
+    /// vel.x lanes.
+    pub vx: [f32; L],
+    /// vel.y lanes.
+    pub vy: [f32; L],
+    /// vel.z lanes.
+    pub vz: [f32; L],
+    /// mass lanes.
+    pub mass: [f32; L],
+}
+
+impl<const L: usize> Default for AosoaBlock<L> {
+    fn default() -> Self {
+        AosoaBlock {
+            px: [0.0; L],
+            py: [0.0; L],
+            pz: [0.0; L],
+            vx: [0.0; L],
+            vy: [0.0; L],
+            vz: [0.0; L],
+            mass: [0.0; L],
+        }
+    }
+}
+
+/// Array-of-struct-of-arrays particle store with `L`-wide blocks.
+#[derive(Clone, Debug)]
+pub struct AosoaSim<const L: usize> {
+    /// The blocks.
+    pub blocks: Vec<AosoaBlock<L>>,
+}
+
+impl<const L: usize> AosoaSim<L> {
+    /// Build from shared initial conditions (`n % L == 0`).
+    pub fn new(init: &[ParticleData]) -> Self {
+        assert_eq!(init.len() % L, 0);
+        let mut blocks = vec![AosoaBlock::default(); init.len() / L];
+        for (i, p) in init.iter().enumerate() {
+            let b = &mut blocks[i / L];
+            let k = i % L;
+            b.px[k] = p.pos.x;
+            b.py[k] = p.pos.y;
+            b.pz[k] = p.pos.z;
+            b.vx[k] = p.vel.x;
+            b.vy[k] = p.vel.y;
+            b.vz[k] = p.vel.z;
+            b.mass[k] = p.mass;
+        }
+        AosoaSim { blocks }
+    }
+
+    /// Extract particles for validation.
+    pub fn snapshot(&self) -> Vec<ParticleData> {
+        let mut out = Vec::with_capacity(self.blocks.len() * L);
+        for b in &self.blocks {
+            for k in 0..L {
+                out.push(ParticleData {
+                    pos: super::PVec { x: b.px[k], y: b.py[k], z: b.pz[k] },
+                    vel: super::PVec { x: b.vx[k], y: b.vy[k], z: b.vz[k] },
+                    mass: b.mass[k],
+                });
+            }
+        }
+        out
+    }
+
+    /// Scalar update using the two nested loops that match the block
+    /// structure (the optimization footnote 13 says a single flat loop
+    /// cannot get).
+    pub fn update_scalar(&mut self) {
+        let nb = self.blocks.len();
+        for bi in 0..nb {
+            for k in 0..L {
+                let (pix, piy, piz) =
+                    (self.blocks[bi].px[k], self.blocks[bi].py[k], self.blocks[bi].pz[k]);
+                let mut acc = (0.0f32, 0.0f32, 0.0f32);
+                for bj in 0..nb {
+                    let b = &self.blocks[bj];
+                    for l in 0..L {
+                        pp_interaction(pix, piy, piz, b.px[l], b.py[l], b.pz[l], b.mass[l], &mut acc);
+                    }
+                }
+                let b = &mut self.blocks[bi];
+                b.vx[k] += acc.0;
+                b.vy[k] += acc.1;
+                b.vz[k] += acc.2;
+            }
+        }
+    }
+
+    /// Scalar move.
+    pub fn move_scalar(&mut self) {
+        for b in &mut self.blocks {
+            for k in 0..L {
+                b.px[k] += b.vx[k] * TIMESTEP;
+                b.py[k] += b.vy[k] * TIMESTEP;
+                b.pz[k] += b.vz[k] * TIMESTEP;
+            }
+        }
+    }
+
+    /// SIMD update: whole blocks are native vectors.
+    pub fn update_simd(&mut self) {
+        let nb = self.blocks.len();
+        for bi in 0..nb {
+            let pix = Simd::<f32, L>(self.blocks[bi].px);
+            let piy = Simd::<f32, L>(self.blocks[bi].py);
+            let piz = Simd::<f32, L>(self.blocks[bi].pz);
+            let mut ax = Simd::<f32, L>::default();
+            let mut ay = Simd::<f32, L>::default();
+            let mut az = Simd::<f32, L>::default();
+            for bj in 0..nb {
+                let b = &self.blocks[bj];
+                for l in 0..L {
+                    simd_interaction(
+                        pix,
+                        piy,
+                        piz,
+                        Simd::splat(b.px[l]),
+                        Simd::splat(b.py[l]),
+                        Simd::splat(b.pz[l]),
+                        Simd::splat(b.mass[l]),
+                        &mut ax,
+                        &mut ay,
+                        &mut az,
+                    );
+                }
+            }
+            let b = &mut self.blocks[bi];
+            b.vx = (Simd::<f32, L>(b.vx) + ax).0;
+            b.vy = (Simd::<f32, L>(b.vy) + ay).0;
+            b.vz = (Simd::<f32, L>(b.vz) + az).0;
+        }
+    }
+
+    /// SIMD move: whole blocks are native vectors.
+    pub fn move_simd(&mut self) {
+        let dt = Simd::<f32, L>::splat(TIMESTEP);
+        for b in &mut self.blocks {
+            b.px = (Simd::<f32, L>(b.px) + Simd::<f32, L>(b.vx) * dt).0;
+            b.py = (Simd::<f32, L>(b.py) + Simd::<f32, L>(b.vy) * dt).0;
+            b.pz = (Simd::<f32, L>(b.pz) + Simd::<f32, L>(b.vz) * dt).0;
+        }
+    }
+}
+
+/// Vectorized `pPInteraction`: `LANES` i-particles against one broadcast
+/// j-particle.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn simd_interaction<const LANES: usize>(
+    pix: Simd<f32, LANES>,
+    piy: Simd<f32, LANES>,
+    piz: Simd<f32, LANES>,
+    pjx: Simd<f32, LANES>,
+    pjy: Simd<f32, LANES>,
+    pjz: Simd<f32, LANES>,
+    pjmass: Simd<f32, LANES>,
+    ax: &mut Simd<f32, LANES>,
+    ay: &mut Simd<f32, LANES>,
+    az: &mut Simd<f32, LANES>,
+) {
+    let dx = pjx - pix;
+    let dy = pjy - piy;
+    let dz = pjz - piz;
+    let dist_sqr = Simd::splat(EPS2) + dx * dx + dy * dy + dz * dz;
+    let dist_sixth = dist_sqr * dist_sqr * dist_sqr;
+    let inv_dist_cube = Simd::splat(1.0f32) / dist_sixth.sqrt();
+    let sts = pjmass * inv_dist_cube * Simd::splat(TIMESTEP);
+    *ax += dx * sts;
+    *ay += dy * sts;
+    *az += dz * sts;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{init_particles, max_pos_delta, total_energy};
+    use super::*;
+
+    const N: usize = 64;
+    const STEPS: usize = 4;
+
+    fn reference() -> Vec<ParticleData> {
+        let mut sim = AosSim::new(&init_particles(N, 7));
+        for _ in 0..STEPS {
+            sim.update_scalar();
+            sim.move_scalar();
+        }
+        sim.snapshot()
+    }
+
+    #[test]
+    fn soa_scalar_matches_aos_scalar() {
+        let mut sim = SoaSim::new(&init_particles(N, 7));
+        for _ in 0..STEPS {
+            sim.update_scalar();
+            sim.move_scalar();
+        }
+        assert_eq!(max_pos_delta(&reference(), &sim.snapshot()), 0.0);
+    }
+
+    #[test]
+    fn aosoa_scalar_matches() {
+        let mut sim = AosoaSim::<8>::new(&init_particles(N, 7));
+        for _ in 0..STEPS {
+            sim.update_scalar();
+            sim.move_scalar();
+        }
+        assert_eq!(max_pos_delta(&reference(), &sim.snapshot()), 0.0);
+    }
+
+    #[test]
+    fn simd_variants_match_within_tolerance() {
+        // SIMD summation order differs; allow small drift.
+        let r = reference();
+        let mut aos = AosSim::new(&init_particles(N, 7));
+        let mut soa = SoaSim::new(&init_particles(N, 7));
+        let mut aosoa = AosoaSim::<8>::new(&init_particles(N, 7));
+        for _ in 0..STEPS {
+            aos.update_simd::<8>();
+            aos.move_simd::<8>();
+            soa.update_simd::<8>();
+            soa.move_simd::<8>();
+            aosoa.update_simd();
+            aosoa.move_simd();
+        }
+        assert!(max_pos_delta(&r, &aos.snapshot()) < 1e-4);
+        assert!(max_pos_delta(&r, &soa.snapshot()) < 1e-4);
+        assert!(max_pos_delta(&r, &aosoa.snapshot()) < 1e-4);
+        // SIMD variants agree with each other exactly or near-exactly.
+        assert!(max_pos_delta(&aos.snapshot(), &soa.snapshot()) < 1e-6);
+    }
+
+    #[test]
+    fn energy_drift_is_small() {
+        let init = init_particles(N, 7);
+        let e0 = total_energy(&init);
+        let mut sim = AosSim::new(&init);
+        for _ in 0..STEPS {
+            sim.update_scalar();
+            sim.move_scalar();
+        }
+        let e1 = total_energy(&sim.snapshot());
+        assert!((e1 - e0).abs() / e0.abs() < 1e-3, "energy drift {e0} -> {e1}");
+    }
+}

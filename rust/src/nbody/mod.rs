@@ -1,0 +1,167 @@
+//! The paper's evaluation workload: single-threaded n-body (Figure 3).
+//!
+//! Two kernels over `N` particles:
+//!
+//! - **update** (compute-bound): all-pairs gravity, `vel += acc * dt`;
+//! - **move** (memory-bound): `pos += vel * dt`.
+//!
+//! Figure 3 benchmarks `{AoS, SoA multi-blob, AoSoA} × {manually written,
+//! LLAMA} × {scalar, SIMD}` on one CPU core. [`manual`] holds the
+//! hand-written layouts, [`views`] the LLAMA-view versions (the Figure 2
+//! routine), and `benches/fig3_nbody.rs` regenerates the figure
+//! (experiment E1). The zero-overhead claim is the LLAMA columns matching
+//! the manual columns.
+
+pub mod manual;
+pub mod views;
+
+use crate::testing::Rng;
+
+/// Integration time step (value from the LLAMA reference n-body example).
+pub const TIMESTEP: f32 = 0.0001;
+/// Softening factor ε² avoiding the r→0 singularity.
+pub const EPS2: f32 = 0.01;
+
+crate::record! {
+    /// The n-body particle record of the paper: nested position/velocity
+    /// plus mass, all `f32` (the precision of the reference example).
+    pub struct Particle, mod particle {
+        pos: { x: f32, y: f32, z: f32 },
+        vel: { x: f32, y: f32, z: f32 },
+        mass: f32,
+    }
+}
+
+/// 3-vector of `f32` (manual versions and init/validation).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PVec {
+    /// x component.
+    pub x: f32,
+    /// y component.
+    pub y: f32,
+    /// z component.
+    pub z: f32,
+}
+
+/// A particle as plain data.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ParticleData {
+    /// Position.
+    pub pos: PVec,
+    /// Velocity.
+    pub vel: PVec,
+    /// Mass.
+    pub mass: f32,
+}
+
+/// Deterministic initial conditions (same for every layout/variant so
+/// results are comparable bit-for-bit modulo summation order).
+pub fn init_particles(n: usize, seed: u64) -> Vec<ParticleData> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| ParticleData {
+            pos: PVec {
+                x: rng.f64_range(-1.0, 1.0) as f32,
+                y: rng.f64_range(-1.0, 1.0) as f32,
+                z: rng.f64_range(-1.0, 1.0) as f32,
+            },
+            vel: PVec {
+                x: rng.f64_range(-0.01, 0.01) as f32,
+                y: rng.f64_range(-0.01, 0.01) as f32,
+                z: rng.f64_range(-0.01, 0.01) as f32,
+            },
+            mass: rng.f64_range(0.1, 1.0) as f32,
+        })
+        .collect()
+}
+
+/// The scalar particle-particle interaction (`pPInteraction` of Figure 2):
+/// accumulate the acceleration of `pi` due to `pj` into `acc`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn pp_interaction(
+    pix: f32,
+    piy: f32,
+    piz: f32,
+    pjx: f32,
+    pjy: f32,
+    pjz: f32,
+    pjmass: f32,
+    acc: &mut (f32, f32, f32),
+) {
+    let dx = pjx - pix;
+    let dy = pjy - piy;
+    let dz = pjz - piz;
+    let dist_sqr = EPS2 + dx * dx + dy * dy + dz * dz;
+    let dist_sixth = dist_sqr * dist_sqr * dist_sqr;
+    let inv_dist_cube = 1.0 / dist_sixth.sqrt();
+    let sts = pjmass * inv_dist_cube * TIMESTEP;
+    acc.0 += dx * sts;
+    acc.1 += dy * sts;
+    acc.2 += dz * sts;
+}
+
+/// Total kinetic + potential energy — the conserved quantity used to
+/// validate that every layout/variant integrates the same system.
+pub fn total_energy(ps: &[ParticleData]) -> f64 {
+    let mut e = 0.0f64;
+    for (i, a) in ps.iter().enumerate() {
+        let v2 = a.vel.x as f64 * a.vel.x as f64
+            + a.vel.y as f64 * a.vel.y as f64
+            + a.vel.z as f64 * a.vel.z as f64;
+        e += 0.5 * a.mass as f64 * v2;
+        for b in &ps[i + 1..] {
+            let dx = a.pos.x as f64 - b.pos.x as f64;
+            let dy = a.pos.y as f64 - b.pos.y as f64;
+            let dz = a.pos.z as f64 - b.pos.z as f64;
+            let r = (dx * dx + dy * dy + dz * dz + EPS2 as f64).sqrt();
+            e -= a.mass as f64 * b.mass as f64 / r;
+        }
+    }
+    e
+}
+
+/// Max |Δ| between two particle sets' positions (variant cross-validation).
+pub fn max_pos_delta(a: &[ParticleData], b: &[ParticleData]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(p, q)| {
+            (p.pos.x - q.pos.x)
+                .abs()
+                .max((p.pos.y - q.pos.y).abs())
+                .max((p.pos.z - q.pos.z).abs())
+        })
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = init_particles(64, 42);
+        let b = init_particles(64, 42);
+        assert_eq!(a, b);
+        let c = init_particles(64, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn interaction_is_attractive_along_separation() {
+        let mut acc = (0.0, 0.0, 0.0);
+        pp_interaction(0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 2.0, &mut acc);
+        assert!(acc.0 > 0.0); // pulled toward +x
+        assert_eq!(acc.1, 0.0);
+        assert_eq!(acc.2, 0.0);
+    }
+
+    #[test]
+    fn energy_is_finite_and_negative_for_bound_cluster() {
+        let ps = init_particles(32, 1);
+        let e = total_energy(&ps);
+        assert!(e.is_finite());
+        // dense unit cluster: potential dominates
+        assert!(e < 0.0);
+    }
+}

@@ -1,0 +1,296 @@
+//! LLAMA-view n-body — the layout-generic versions of Figure 3.
+//!
+//! One scalar routine and one SIMD routine (the Figure 2 code), written
+//! once against [`crate::view::View`] and instantiated for AoS, SoA
+//! multi-blob, and AoSoA. Exchanging the memory layout touches *only* the
+//! mapping type — the algorithm below never changes; matching the manual
+//! versions' runtime is the paper's zero-overhead claim (experiment E1).
+
+use super::{particle, pp_interaction, Particle, ParticleData, EPS2, TIMESTEP};
+use crate::blob::{alloc_view, AlignedAlloc, AlignedStorage};
+use crate::mapping::{MemoryAccess, SimdAccess};
+use crate::nbody::manual::simd_interaction;
+use crate::simd::Simd;
+use crate::view::View;
+
+/// Fill a view from shared initial conditions.
+pub fn fill_view<M, S>(view: &mut View<Particle, M, S>, init: &[ParticleData])
+where
+    M: MemoryAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    for (i, p) in init.iter().enumerate() {
+        view.set(&[i], particle::pos::x, p.pos.x);
+        view.set(&[i], particle::pos::y, p.pos.y);
+        view.set(&[i], particle::pos::z, p.pos.z);
+        view.set(&[i], particle::vel::x, p.vel.x);
+        view.set(&[i], particle::vel::y, p.vel.y);
+        view.set(&[i], particle::vel::z, p.vel.z);
+        view.set(&[i], particle::mass, p.mass);
+    }
+}
+
+/// Read a view back into plain particle data (validation).
+pub fn snapshot_view<M, S>(view: &View<Particle, M, S>) -> Vec<ParticleData>
+where
+    M: MemoryAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    (0..view.count())
+        .map(|i| ParticleData {
+            pos: super::PVec {
+                x: view.get(&[i], particle::pos::x),
+                y: view.get(&[i], particle::pos::y),
+                z: view.get(&[i], particle::pos::z),
+            },
+            vel: super::PVec {
+                x: view.get(&[i], particle::vel::x),
+                y: view.get(&[i], particle::vel::y),
+                z: view.get(&[i], particle::vel::z),
+            },
+            mass: view.get(&[i], particle::mass),
+        })
+        .collect()
+}
+
+/// Layout-generic scalar update (the original LLAMA paper's routine).
+pub fn update_scalar<M, S>(view: &mut View<Particle, M, S>)
+where
+    M: MemoryAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    let n = view.count();
+    for i in 0..n {
+        let pix: f32 = view.get(&[i], particle::pos::x);
+        let piy: f32 = view.get(&[i], particle::pos::y);
+        let piz: f32 = view.get(&[i], particle::pos::z);
+        let mut acc = (0.0f32, 0.0f32, 0.0f32);
+        for j in 0..n {
+            pp_interaction(
+                pix,
+                piy,
+                piz,
+                view.get(&[j], particle::pos::x),
+                view.get(&[j], particle::pos::y),
+                view.get(&[j], particle::pos::z),
+                view.get(&[j], particle::mass),
+                &mut acc,
+            );
+        }
+        let vx: f32 = view.get(&[i], particle::vel::x);
+        let vy: f32 = view.get(&[i], particle::vel::y);
+        let vz: f32 = view.get(&[i], particle::vel::z);
+        view.set(&[i], particle::vel::x, vx + acc.0);
+        view.set(&[i], particle::vel::y, vy + acc.1);
+        view.set(&[i], particle::vel::z, vz + acc.2);
+    }
+}
+
+/// Layout-generic scalar move.
+pub fn move_scalar<M, S>(view: &mut View<Particle, M, S>)
+where
+    M: MemoryAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    let n = view.count();
+    for i in 0..n {
+        let px: f32 = view.get(&[i], particle::pos::x);
+        let py: f32 = view.get(&[i], particle::pos::y);
+        let pz: f32 = view.get(&[i], particle::pos::z);
+        let vx: f32 = view.get(&[i], particle::vel::x);
+        let vy: f32 = view.get(&[i], particle::vel::y);
+        let vz: f32 = view.get(&[i], particle::vel::z);
+        view.set(&[i], particle::pos::x, px + vx * TIMESTEP);
+        view.set(&[i], particle::pos::y, py + vy * TIMESTEP);
+        view.set(&[i], particle::pos::z, pz + vz * TIMESTEP);
+    }
+}
+
+/// Layout-generic SIMD update — the Figure 2 routine: load `N` particles
+/// as SIMD records via `loadSimd`, interact with all `n` scalar particles,
+/// store the velocity sub-record via `storeSimd`.
+pub fn update_simd<const N: usize, M, S>(view: &mut View<Particle, M, S>)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    let n = view.count();
+    assert_eq!(n % N, 0);
+    for i in (0..n).step_by(N) {
+        // llama::loadSimd(particleView(i), simdParticles)
+        let pix: Simd<f32, N> = view.load_simd(&[i], particle::pos::x);
+        let piy: Simd<f32, N> = view.load_simd(&[i], particle::pos::y);
+        let piz: Simd<f32, N> = view.load_simd(&[i], particle::pos::z);
+        let mut ax = Simd::<f32, N>::default();
+        let mut ay = Simd::<f32, N>::default();
+        let mut az = Simd::<f32, N>::default();
+        for j in 0..n {
+            simd_interaction(
+                pix,
+                piy,
+                piz,
+                Simd::splat(view.get(&[j], particle::pos::x)),
+                Simd::splat(view.get(&[j], particle::pos::y)),
+                Simd::splat(view.get(&[j], particle::pos::z)),
+                Simd::splat(view.get(&[j], particle::mass)),
+                &mut ax,
+                &mut ay,
+                &mut az,
+            );
+        }
+        // llama::storeSimd(simdParticles(tag::Vel{}), particleView(i)(tag::Vel{}))
+        let vx: Simd<f32, N> = view.load_simd(&[i], particle::vel::x);
+        let vy: Simd<f32, N> = view.load_simd(&[i], particle::vel::y);
+        let vz: Simd<f32, N> = view.load_simd(&[i], particle::vel::z);
+        view.store_simd(&[i], particle::vel::x, vx + ax);
+        view.store_simd(&[i], particle::vel::y, vy + ay);
+        view.store_simd(&[i], particle::vel::z, vz + az);
+    }
+}
+
+/// Layout-generic SIMD move.
+pub fn move_simd<const N: usize, M, S>(view: &mut View<Particle, M, S>)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    let n = view.count();
+    assert_eq!(n % N, 0);
+    let dt = Simd::<f32, N>::splat(TIMESTEP);
+    for i in (0..n).step_by(N) {
+        let px: Simd<f32, N> = view.load_simd(&[i], particle::pos::x);
+        let py: Simd<f32, N> = view.load_simd(&[i], particle::pos::y);
+        let pz: Simd<f32, N> = view.load_simd(&[i], particle::pos::z);
+        let vx: Simd<f32, N> = view.load_simd(&[i], particle::vel::x);
+        let vy: Simd<f32, N> = view.load_simd(&[i], particle::vel::y);
+        let vz: Simd<f32, N> = view.load_simd(&[i], particle::vel::z);
+        view.store_simd(&[i], particle::pos::x, px + vx * dt);
+        view.store_simd(&[i], particle::pos::y, py + vy * dt);
+        view.store_simd(&[i], particle::pos::z, pz + vz * dt);
+    }
+}
+
+/// The rank-1 u32-indexed extents used by all Figure-3 views
+/// (§2: 32-bit index arithmetic).
+pub type Ext1 = (crate::extents::Dyn<u32>,);
+
+/// AoS mapping for the figure.
+pub type AosMap = crate::mapping::aos::AoS<Particle, Ext1>;
+/// SoA multi-blob mapping for the figure.
+pub type SoaMbMap = crate::mapping::soa::SoA<Particle, Ext1, crate::mapping::soa::MultiBlob>;
+/// AoSoA (8 lanes = AVX2 f32 width) mapping for the figure.
+pub type AosoaMap = crate::mapping::aosoa::AoSoA<Particle, Ext1, 8>;
+
+/// Allocate + fill an AoS view (cache-line aligned, like the manual Vec).
+pub fn make_aos_view(init: &[ParticleData]) -> View<Particle, AosMap, AlignedStorage> {
+    let mut v = alloc_view(AosMap::new((crate::extents::Dyn(init.len() as u32),)), &AlignedAlloc::<64>);
+    fill_view(&mut v, init);
+    v
+}
+
+/// Allocate + fill a SoA multi-blob view.
+pub fn make_soa_view(init: &[ParticleData]) -> View<Particle, SoaMbMap, AlignedStorage> {
+    let mut v =
+        alloc_view(SoaMbMap::new((crate::extents::Dyn(init.len() as u32),)), &AlignedAlloc::<64>);
+    fill_view(&mut v, init);
+    v
+}
+
+/// Allocate + fill an AoSoA-8 view.
+pub fn make_aosoa_view(init: &[ParticleData]) -> View<Particle, AosoaMap, AlignedStorage> {
+    let mut v =
+        alloc_view(AosoaMap::new((crate::extents::Dyn(init.len() as u32),)), &AlignedAlloc::<64>);
+    fill_view(&mut v, init);
+    v
+}
+
+// Re-export EPS2 for the kernel-side oracle tests.
+pub use super::EPS2 as SOFTENING;
+const _: () = assert!(EPS2 > 0.0);
+
+#[cfg(test)]
+mod tests {
+    use super::super::{init_particles, max_pos_delta};
+    use super::*;
+    use crate::nbody::manual::AosSim;
+
+    const N: usize = 64;
+    const STEPS: usize = 4;
+
+    fn reference() -> Vec<ParticleData> {
+        let mut sim = AosSim::new(&init_particles(N, 7));
+        for _ in 0..STEPS {
+            sim.update_scalar();
+            sim.move_scalar();
+        }
+        sim.snapshot()
+    }
+
+    #[test]
+    fn llama_scalar_matches_manual_exactly_all_layouts() {
+        let init = init_particles(N, 7);
+        let r = reference();
+
+        let mut aos = make_aos_view(&init);
+        let mut soa = make_soa_view(&init);
+        let mut aosoa = make_aosoa_view(&init);
+        for _ in 0..STEPS {
+            update_scalar(&mut aos);
+            move_scalar(&mut aos);
+            update_scalar(&mut soa);
+            move_scalar(&mut soa);
+            update_scalar(&mut aosoa);
+            move_scalar(&mut aosoa);
+        }
+        // Same summation order as the manual scalar loop => bit-identical.
+        assert_eq!(max_pos_delta(&r, &snapshot_view(&aos)), 0.0);
+        assert_eq!(max_pos_delta(&r, &snapshot_view(&soa)), 0.0);
+        assert_eq!(max_pos_delta(&r, &snapshot_view(&aosoa)), 0.0);
+    }
+
+    #[test]
+    fn llama_simd_matches_manual_simd() {
+        let init = init_particles(N, 7);
+        let mut manual = crate::nbody::manual::SoaSim::new(&init);
+        let mut view = make_soa_view(&init);
+        for _ in 0..STEPS {
+            manual.update_simd::<8>();
+            manual.move_simd::<8>();
+            update_simd::<8, _, _>(&mut view);
+            move_simd::<8, _, _>(&mut view);
+        }
+        // Identical operations order => bit-identical results.
+        assert_eq!(max_pos_delta(&manual.snapshot(), &snapshot_view(&view)), 0.0);
+    }
+
+    #[test]
+    fn llama_simd_all_layouts_agree() {
+        let init = init_particles(N, 7);
+        let mut aos = make_aos_view(&init);
+        let mut soa = make_soa_view(&init);
+        let mut aosoa = make_aosoa_view(&init);
+        for _ in 0..STEPS {
+            update_simd::<8, _, _>(&mut aos);
+            move_simd::<8, _, _>(&mut aos);
+            update_simd::<8, _, _>(&mut soa);
+            move_simd::<8, _, _>(&mut soa);
+            update_simd::<8, _, _>(&mut aosoa);
+            move_simd::<8, _, _>(&mut aosoa);
+        }
+        let s = snapshot_view(&soa);
+        assert_eq!(max_pos_delta(&snapshot_view(&aos), &s), 0.0);
+        assert_eq!(max_pos_delta(&snapshot_view(&aosoa), &s), 0.0);
+    }
+
+    #[test]
+    fn simd_vs_scalar_tolerance() {
+        let init = init_particles(N, 7);
+        let r = reference();
+        let mut soa = make_soa_view(&init);
+        for _ in 0..STEPS {
+            update_simd::<8, _, _>(&mut soa);
+            move_simd::<8, _, _>(&mut soa);
+        }
+        assert!(max_pos_delta(&r, &snapshot_view(&soa)) < 1e-4);
+    }
+}

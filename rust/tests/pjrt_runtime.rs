@@ -1,0 +1,187 @@
+//! Integration: load the AOT artifacts through PJRT and validate numerics
+//! against the native Rust n-body implementation (experiment E9).
+//!
+//! These tests skip (pass trivially with a note) when `make artifacts` has
+//! not run, so `cargo test` works on a fresh checkout.
+
+use llama::mapping::bitpack_int::{read_bits, write_bits};
+use llama::nbody::{init_particles, manual::SoaSim, ParticleData};
+use llama::runtime::{default_artifacts_dir, Engine, TensorF32};
+
+const N: usize = 1024; // must match `make artifacts` N
+
+fn engine_or_skip(names: &[&str]) -> Option<Engine> {
+    let engine = Engine::cpu(default_artifacts_dir()).expect("PJRT CPU client");
+    for name in names {
+        if !engine.artifact_available(name) {
+            eprintln!("skipping: artifact '{name}' missing (run `make artifacts`)");
+            return None;
+        }
+        engine.load(name).expect("artifact compiles");
+    }
+    Some(engine)
+}
+
+fn soa_inputs(ps: &[ParticleData]) -> Vec<TensorF32> {
+    let sim = SoaSim::new(ps);
+    [&sim.px, &sim.py, &sim.pz, &sim.vx, &sim.vy, &sim.vz, &sim.mass]
+        .into_iter()
+        .map(|v| TensorF32::vec(v.clone()))
+        .collect()
+}
+
+#[test]
+fn soa_artifact_matches_native_step() {
+    let Some(engine) = engine_or_skip(&["nbody_soa"]) else { return };
+    let init = init_particles(N, 99);
+
+    let out = engine.execute_f32("nbody_soa", &soa_inputs(&init)).expect("execute");
+    assert_eq!(out.len(), 6);
+    assert_eq!(out[0].dims, vec![N]);
+
+    let mut sim = SoaSim::new(&init);
+    sim.update_scalar();
+    sim.move_scalar();
+
+    let max_dx =
+        sim.px.iter().zip(&out[0].data).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_dx < 1e-5, "PJRT vs native px delta {max_dx}");
+    let max_dv =
+        sim.vx.iter().zip(&out[3].data).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_dv < 1e-5, "PJRT vs native vx delta {max_dv}");
+}
+
+#[test]
+fn aos_and_soa_artifacts_agree() {
+    let Some(engine) = engine_or_skip(&["nbody_soa", "nbody_aos"]) else { return };
+    let init = init_particles(N, 7);
+
+    let soa_out = engine.execute_f32("nbody_soa", &soa_inputs(&init)).unwrap();
+
+    let mut aos = Vec::with_capacity(N * 7);
+    for p in &init {
+        aos.extend_from_slice(&[p.pos.x, p.pos.y, p.pos.z, p.vel.x, p.vel.y, p.vel.z, p.mass]);
+    }
+    let aos_out = engine.execute_f32("nbody_aos", &[TensorF32::new(aos, vec![N, 7])]).unwrap();
+    assert_eq!(aos_out.len(), 1);
+    assert_eq!(aos_out[0].dims, vec![N, 7]);
+
+    let mut max_d = 0.0f32;
+    for i in 0..N {
+        for f in 0..6 {
+            max_d = max_d.max((aos_out[0].data[i * 7 + f] - soa_out[f].data[i]).abs());
+        }
+    }
+    assert!(max_d < 1e-5, "AoS vs SoA artifact delta {max_d}");
+}
+
+#[test]
+fn aosoa_artifact_agrees() {
+    let Some(engine) = engine_or_skip(&["nbody_soa", "nbody_aosoa"]) else { return };
+    let init = init_particles(N, 13);
+    const L: usize = 8;
+
+    let soa_out = engine.execute_f32("nbody_soa", &soa_inputs(&init)).unwrap();
+
+    let nb = N / L;
+    let mut blocks = vec![0.0f32; N * 7];
+    for (i, p) in init.iter().enumerate() {
+        let (b, k) = (i / L, i % L);
+        let fields = [p.pos.x, p.pos.y, p.pos.z, p.vel.x, p.vel.y, p.vel.z, p.mass];
+        for (f, v) in fields.iter().enumerate() {
+            blocks[b * 7 * L + f * L + k] = *v;
+        }
+    }
+    let out = engine.execute_f32("nbody_aosoa", &[TensorF32::new(blocks, vec![nb, 7, L])]).unwrap();
+
+    let mut max_d = 0.0f32;
+    for i in 0..N {
+        let (b, k) = (i / L, i % L);
+        for f in 0..6 {
+            max_d = max_d.max((out[0].data[b * 7 * L + f * L + k] - soa_out[f].data[i]).abs());
+        }
+    }
+    assert!(max_d < 1e-5, "AoSoA vs SoA artifact delta {max_d}");
+}
+
+#[test]
+fn bf16_artifact_is_coarser_but_close() {
+    let Some(engine) = engine_or_skip(&["nbody_soa", "nbody_bf16"]) else { return };
+    let init = init_particles(N, 21);
+    let exact = engine.execute_f32("nbody_soa", &soa_inputs(&init)).unwrap();
+    let coarse = engine.execute_f32("nbody_bf16", &soa_inputs(&init)).unwrap();
+
+    let mut max_d = 0.0f32;
+    for f in 0..6 {
+        for (a, b) in exact[f].data.iter().zip(&coarse[f].data) {
+            max_d = max_d.max((a - b).abs());
+        }
+    }
+    // bf16 has ~3 decimal digits: must differ from f32 but stay close.
+    assert!(max_d > 1e-7, "bf16 path should differ from f32");
+    assert!(max_d < 2e-2, "bf16 drift too large: {max_d}");
+}
+
+#[test]
+fn bitpack_artifact_increments_packed_values() {
+    let Some(engine) = engine_or_skip(&["bitpack_roundtrip"]) else { return };
+    const BITS: u32 = 12;
+    let n = N;
+    let vals: Vec<u32> = (0..n as u32).map(|i| (i * 37) % 4096).collect();
+    let nwords = n * BITS as usize / 32;
+
+    // Pack with the Rust bit helpers (shared convention with python ref).
+    let mut bytes = vec![0u8; nwords * 4 + 8];
+    for (i, &v) in vals.iter().enumerate() {
+        write_bits(&mut bytes, i * BITS as usize, BITS, v as u64);
+    }
+    let words: Vec<u32> =
+        bytes[..nwords * 4].chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+
+    let out = engine.execute_u32("bitpack_roundtrip", &[(words, vec![nwords])]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].1, vec![nwords]);
+
+    let mut out_bytes = vec![0u8; nwords * 4 + 8];
+    for (i, w) in out[0].0.iter().enumerate() {
+        out_bytes[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+    }
+    for (i, &v) in vals.iter().enumerate() {
+        let got = read_bits(&out_bytes, i * BITS as usize, BITS) as u32;
+        assert_eq!(got, (v + 1) % 4096, "value {i}");
+    }
+}
+
+#[test]
+fn multi_step_energy_drift_via_pjrt() {
+    let Some(engine) = engine_or_skip(&["nbody_soa"]) else { return };
+    let init = init_particles(N, 3);
+    let e0 = llama::nbody::total_energy(&init);
+
+    let mut state = soa_inputs(&init);
+    for _ in 0..10 {
+        let out = engine.execute_f32("nbody_soa", &state).unwrap();
+        let mass = state[6].clone();
+        state = out;
+        state.push(mass);
+    }
+
+    let final_ps: Vec<ParticleData> = (0..N)
+        .map(|i| ParticleData {
+            pos: llama::nbody::PVec {
+                x: state[0].data[i],
+                y: state[1].data[i],
+                z: state[2].data[i],
+            },
+            vel: llama::nbody::PVec {
+                x: state[3].data[i],
+                y: state[4].data[i],
+                z: state[5].data[i],
+            },
+            mass: state[6].data[i],
+        })
+        .collect();
+    let e1 = llama::nbody::total_energy(&final_ps);
+    let drift = ((e1 - e0) / e0).abs();
+    assert!(drift < 1e-2, "energy drift over 10 PJRT steps: {drift}");
+}

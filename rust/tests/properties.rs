@@ -1,0 +1,273 @@
+//! Property-based tests (mini-proptest in `llama::testing`): randomized
+//! invariants over mappings, bit packing, float repacking, copy, and the
+//! coordinator.
+
+use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+use llama::extents::Dyn;
+use llama::mapping::bitpack_float::{pack_float_bits, unpack_float_bits};
+use llama::mapping::bitpack_int::{read_bits, sign_extend, write_bits};
+use llama::mapping::MemoryAccess;
+use llama::testing::{forall, Rng};
+
+llama::record! {
+    pub struct R, mod r {
+        a: f64,
+        b: f32,
+        c: u32,
+        d: i16,
+    }
+}
+
+/// Write a deterministic pseudo-random pattern, read it back, for any
+/// mapping — the fundamental store/load inverse property.
+fn roundtrip_prop<M: MemoryAccess<R>>(m: M, n: usize, seed: u64) -> bool {
+    let mut v = alloc_view(m, &HeapAlloc);
+    let mut rng = Rng::new(seed);
+    let vals: Vec<(f64, f32, u32, i16)> = (0..n)
+        .map(|_| {
+            (
+                rng.f64_range(-1e6, 1e6),
+                rng.f64_range(-1e3, 1e3) as f32,
+                rng.next_u64() as u32,
+                rng.range_i64(-30000, 30000) as i16,
+            )
+        })
+        .collect();
+    for (i, &(a, b, c, d)) in vals.iter().enumerate() {
+        v.set(&[i], r::a, a);
+        v.set(&[i], r::b, b);
+        v.set(&[i], r::c, c);
+        v.set(&[i], r::d, d);
+    }
+    vals.iter().enumerate().all(|(i, &(a, b, c, d))| {
+        v.get::<f64>(&[i], r::a) == a
+            && v.get::<f32>(&[i], r::b) == b
+            && v.get::<u32>(&[i], r::c) == c
+            && v.get::<i16>(&[i], r::d) == d
+    })
+}
+
+#[test]
+fn prop_all_layouts_roundtrip_random_data() {
+    use llama::mapping::aos::{AoS, MinPad, Packed};
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::bytesplit::Bytesplit;
+    use llama::mapping::soa::{MultiBlob, SingleBlob, SoA};
+
+    forall("layout-roundtrip", 25, |g| (g.range(1, 200), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        roundtrip_prop(AoS::<R, _>::new(e), n, seed)
+            && roundtrip_prop(AoS::<R, _, Packed>::new(e), n, seed)
+            && roundtrip_prop(AoS::<R, _, MinPad>::new(e), n, seed)
+            && roundtrip_prop(SoA::<R, _, MultiBlob>::new(e), n, seed)
+            && roundtrip_prop(SoA::<R, _, SingleBlob>::new(e), n, seed)
+            && roundtrip_prop(AoSoA::<R, _, 8>::new(e), n, seed)
+            && roundtrip_prop(Bytesplit::<R, _>::new(e), n, seed)
+    });
+}
+
+#[test]
+fn prop_bit_read_write_inverse() {
+    // Writing any value at any bit offset then reading returns the masked
+    // value; neighbours are untouched.
+    forall(
+        "bits-inverse",
+        500,
+        |g| {
+            let nbits = g.range(1, 64) as u32;
+            let bit = g.range(0, 800);
+            let value = g.next_u64();
+            (nbits, bit, value)
+        },
+        |&(nbits, bit, value)| {
+            let mut buf = vec![0xA5u8; 128];
+            let before = buf.clone();
+            write_bits(&mut buf, bit, nbits, value);
+            let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+            if read_bits(&buf, bit, nbits) != value & mask {
+                return false;
+            }
+            // bits strictly before `bit` and after `bit+nbits` unchanged
+            for check_bit in bit.saturating_sub(17)..bit {
+                if read_bits(&buf, check_bit, 1) != read_bits(&before, check_bit, 1) {
+                    return false;
+                }
+            }
+            for check_bit in bit + nbits as usize..(bit + nbits as usize + 17).min(1000) {
+                if read_bits(&buf, check_bit, 1) != read_bits(&before, check_bit, 1) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_sign_extend_matches_arithmetic() {
+    forall(
+        "sign-extend",
+        300,
+        |g| {
+            let nbits = g.range(1, 63) as u32;
+            let v = g.next_u64() & ((1u64 << nbits) - 1);
+            (nbits, v)
+        },
+        |&(nbits, v)| {
+            let got = sign_extend(v, nbits);
+            // reference: shift into the top of i64 then arithmetic-shift back
+            let shift = 64 - nbits;
+            let want = (((v << shift) as i64) >> shift) as i128;
+            got == want
+        },
+    );
+}
+
+#[test]
+fn prop_float_pack_unpack_faithful() {
+    // For every (exp, man) config: unpack(pack(x)) is the nearest
+    // representable value — checked via the monotone bound |x - round(x)|
+    // <= ulp, plus exactness when x is already representable.
+    forall(
+        "float-repack",
+        400,
+        |g| {
+            let exp = g.range(2, 11) as u32;
+            let man = g.range(1, 52) as u32;
+            (exp, man, g.f64_edgy())
+        },
+        |&(exp, man, x)| {
+            let packed = pack_float_bits(x, exp, man);
+            let total = 1 + exp + man;
+            if packed >> total != 0 {
+                return false; // no stray bits above the format width
+            }
+            let y = unpack_float_bits(packed, exp, man);
+            if x.is_nan() {
+                return y.is_nan();
+            }
+            // Round-trip idempotence: repacking the unpacked value is exact.
+            let repacked = pack_float_bits(y, exp, man);
+            if y.is_infinite() {
+                // overflow-to-inf stays inf
+                return unpack_float_bits(repacked, exp, man) == y;
+            }
+            repacked == packed
+        },
+    );
+}
+
+#[test]
+fn prop_f32_exact_through_e8m23() {
+    forall("f32-exact", 300, |g| g.f64_edgy() as f32, |&x| {
+        let p = pack_float_bits(x as f64, 8, 23);
+        let y = unpack_float_bits(p, 8, 23) as f32;
+        if x.is_nan() {
+            y.is_nan()
+        } else {
+            x.to_bits() == y.to_bits()
+        }
+    });
+}
+
+#[test]
+fn prop_bitpack_int_view_roundtrips_masked() {
+    use llama::mapping::bitpack_int::BitpackIntSoADyn;
+    llama::record! { pub struct I, mod ifld { v: u64 } }
+    forall(
+        "bitpack-view",
+        40,
+        |g| {
+            let bits = g.range(1, 64) as u32;
+            let n = g.range(1, 120);
+            (bits, n, g.next_u64())
+        },
+        |&(bits, n, seed)| {
+            let m = BitpackIntSoADyn::<I, _>::new((Dyn(n as u32),), bits);
+            let mut v = alloc_view(m, &HeapAlloc);
+            let mut rng = Rng::new(seed);
+            let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+            let vals: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            for (i, &val) in vals.iter().enumerate() {
+                v.set(&[i], ifld::v, val);
+            }
+            vals.iter().enumerate().all(|(i, &val)| v.get::<u64>(&[i], ifld::v) == val & mask)
+        },
+    );
+}
+
+#[test]
+fn prop_copy_preserves_all_fields() {
+    use llama::copy::copy_view;
+    use llama::mapping::aos::AoS;
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::soa::SoA;
+
+    forall("copy-preserves", 20, |g| (g.range(1, 100), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        let mut a = alloc_view(AoS::<R, _>::new(e), &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            a.set(&[i], r::a, rng.f64_range(-1.0, 1.0));
+            a.set(&[i], r::c, rng.next_u64() as u32);
+        }
+        let mut b = alloc_view(SoA::<R, _>::new(e), &HeapAlloc);
+        let mut c = alloc_view(AoSoA::<R, _, 4>::new(e), &HeapAlloc);
+        copy_view(&a, &mut b);
+        copy_view(&b, &mut c);
+        (0..n).all(|i| {
+            a.get::<f64>(&[i], r::a) == c.get::<f64>(&[i], r::a)
+                && a.get::<u32>(&[i], r::c) == c.get::<u32>(&[i], r::c)
+        })
+    });
+}
+
+#[test]
+fn prop_coordinator_completes_every_job_exactly_once() {
+    use llama::coordinator::{Backend, Config, Coordinator, JobSpec, Layout};
+    forall(
+        "coordinator-complete",
+        6,
+        |g| {
+            let workers = g.range(1, 4);
+            let max_batch = g.range(1, 6);
+            let jobs = g.range(1, 12);
+            (workers, max_batch, jobs, g.next_u64())
+        },
+        |&(workers, max_batch, jobs, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut c = Coordinator::start(Config { workers, max_batch, engine: None });
+            for _ in 0..jobs {
+                let layout = [Layout::Aos, Layout::SoaMb, Layout::Aosoa][rng.range(0, 2)];
+                let backend =
+                    [Backend::NativeScalar, Backend::NativeSimd][rng.range(0, 1)];
+                c.submit(JobSpec { id: 0, layout, backend, n: 32, steps: 1, seed: 1 });
+            }
+            let results = c.finish();
+            // exactly once, ids 0..jobs, all succeeded
+            let mut ids: Vec<u64> = results.iter().map(|x| x.id).collect();
+            ids.sort_unstable();
+            ids == (0..jobs as u64).collect::<Vec<_>>()
+                && results.iter().all(|x| x.error.is_none())
+        },
+    );
+}
+
+#[test]
+fn prop_heatmap_total_counts_equal_accesses_times_bytes() {
+    use llama::mapping::heatmap::Heatmap;
+    use llama::mapping::soa::SoA;
+    llama::record! { pub struct Q, mod q { v: u32 } }
+    forall("heatmap-conservation", 30, |g| (g.range(1, 64), g.range(1, 50)), |&(n, accesses)| {
+        let hm = Heatmap::<Q, _, 1>::new(SoA::<Q, _>::new((Dyn(n as u32),)));
+        let mut v = alloc_view(hm, &HeapAlloc);
+        let mut rng = Rng::new(n as u64);
+        for _ in 0..accesses {
+            let i = rng.range(0, n - 1);
+            let _: u32 = v.get(&[i], q::v);
+        }
+        // byte-granularity: each u32 access increments exactly 4 counters
+        let total: u64 = v.mapping().blob_counts(0).iter().sum();
+        total == accesses as u64 * 4
+    });
+}
