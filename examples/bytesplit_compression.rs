@@ -58,7 +58,7 @@ fn main() {
         fill(&mut soa, value_bits);
         fill(&mut bs, value_bits);
 
-        for codec in [Codec::Deflate, Codec::Zstd] {
+        for codec in Codec::enabled() {
             for (label, blobs) in [
                 ("AoS", blobs_of(aos.storage())),
                 ("SoA", blobs_of(soa.storage())),

@@ -45,7 +45,7 @@ llama::record! {
 }
 
 fn main() {
-    let fast = std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1");
+    let fast = llama::bench::smoke();
     let n: usize = if fast { 1 << 13 } else { 1 << 16 };
     let mut rng = Rng::new(5);
     let ints: Vec<u32> = (0..n).map(|_| rng.range_u64(0, (1 << 12) - 1) as u32).collect();

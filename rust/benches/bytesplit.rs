@@ -47,7 +47,7 @@ fn blobs_of<S: BlobStorage>(s: &S) -> Vec<&[u8]> {
 }
 
 fn main() {
-    let fast = std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1");
+    let fast = llama::bench::smoke();
     let n: usize = if fast { 1 << 13 } else { 1 << 17 };
     println!("E6: Bytesplit compression, {n} events\n");
 
@@ -63,7 +63,7 @@ fn main() {
         fill(&mut aos, n, value_bits);
         fill(&mut soa, n, value_bits);
         fill(&mut bs, n, value_bits);
-        for codec in Codec::ALL {
+        for codec in Codec::enabled() {
             for (label, blobs) in [
                 ("AoS", blobs_of(aos.storage())),
                 ("SoA", blobs_of(soa.storage())),

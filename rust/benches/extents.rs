@@ -25,7 +25,7 @@ llama::record! {
 const SIDE: usize = 256; // 256x256 grid
 
 fn main() {
-    let fast = std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1");
+    let fast = llama::bench::smoke();
     let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 9) };
     let reps: usize = if fast { 2 } else { 8 };
     let items = (SIDE * SIDE * reps) as u64;

@@ -8,16 +8,20 @@
 //! (footnote 13). Absolute numbers differ from the paper's Ryzen 5950X;
 //! the *ordering and ratios* are what reproduce.
 //!
+//! The LLAMA rows run through the bulk-traversal engine
+//! (`view::transform_simd` / `view::for_each`): the acceptance bar is the
+//! "LLAMA" SoA rows matching the "manual" SoA rows.
+//!
 //! Run: `cargo bench --bench fig3_nbody [-- N]`  (default N=16384 like the
-//! paper's CPU plot; LLAMA_BENCH_FAST=1 shrinks to a smoke run)
+//! paper's CPU plot; LLAMA_BENCH_SMOKE=1 shrinks to a smoke run)
 
-use llama::bench::{black_box, Bencher};
+use llama::bench::{black_box, smoke, Bencher};
 use llama::nbody::{init_particles, manual, views};
 
 fn main() {
     let arg_n: Option<usize> =
         std::env::args().skip(1).find(|a| !a.starts_with('-')).and_then(|a| a.parse().ok());
-    let fast = std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1");
+    let fast = smoke();
     let n = arg_n.unwrap_or(if fast { 2048 } else { 16384 });
     let init = init_particles(n, 42);
     let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
@@ -125,18 +129,33 @@ fn main() {
             });
         }};
     }
-    bench_move!("move AoS    manual scalar", manual::AosSim::new(&init), |s: &mut manual::AosSim| s.move_scalar());
-    bench_move!("move AoS    LLAMA  scalar", views::make_aos_view(&init), |v: &mut _| views::move_scalar(v));
-    bench_move!("move AoS    manual SIMD8", manual::AosSim::new(&init), |s: &mut manual::AosSim| s.move_simd::<8>());
-    bench_move!("move AoS    LLAMA  SIMD8", views::make_aos_view(&init), |v: &mut _| views::move_simd::<8, _, _>(v));
-    bench_move!("move SoA-MB manual scalar", manual::SoaSim::new(&init), |s: &mut manual::SoaSim| s.move_scalar());
-    bench_move!("move SoA-MB LLAMA  scalar", views::make_soa_view(&init), |v: &mut _| views::move_scalar(v));
-    bench_move!("move SoA-MB manual SIMD8", manual::SoaSim::new(&init), |s: &mut manual::SoaSim| s.move_simd::<8>());
-    bench_move!("move SoA-MB LLAMA  SIMD8", views::make_soa_view(&init), |v: &mut _| views::move_simd::<8, _, _>(v));
-    bench_move!("move AoSoA8 manual scalar", manual::AosoaSim::<8>::new(&init), |s: &mut manual::AosoaSim<8>| s.move_scalar());
-    bench_move!("move AoSoA8 LLAMA  scalar", views::make_aosoa_view(&init), |v: &mut _| views::move_scalar(v));
-    bench_move!("move AoSoA8 manual SIMD8", manual::AosoaSim::<8>::new(&init), |s: &mut manual::AosoaSim<8>| s.move_simd());
-    bench_move!("move AoSoA8 LLAMA  SIMD8", views::make_aosoa_view(&init), |v: &mut _| views::move_simd::<8, _, _>(v));
+    type Aos = manual::AosSim;
+    type Soa = manual::SoaSim;
+    type Aosoa = manual::AosoaSim<8>;
+    bench_move!("move AoS    manual scalar", Aos::new(&init), |s: &mut Aos| s.move_scalar());
+    bench_move!("move AoS    LLAMA  scalar", views::make_aos_view(&init), |v: &mut _| {
+        views::move_scalar(v)
+    });
+    bench_move!("move AoS    manual SIMD8", Aos::new(&init), |s: &mut Aos| s.move_simd::<8>());
+    bench_move!("move AoS    LLAMA  SIMD8", views::make_aos_view(&init), |v: &mut _| {
+        views::move_simd::<8, _, _>(v)
+    });
+    bench_move!("move SoA-MB manual scalar", Soa::new(&init), |s: &mut Soa| s.move_scalar());
+    bench_move!("move SoA-MB LLAMA  scalar", views::make_soa_view(&init), |v: &mut _| {
+        views::move_scalar(v)
+    });
+    bench_move!("move SoA-MB manual SIMD8", Soa::new(&init), |s: &mut Soa| s.move_simd::<8>());
+    bench_move!("move SoA-MB LLAMA  SIMD8", views::make_soa_view(&init), |v: &mut _| {
+        views::move_simd::<8, _, _>(v)
+    });
+    bench_move!("move AoSoA8 manual scalar", Aosoa::new(&init), |s: &mut Aosoa| s.move_scalar());
+    bench_move!("move AoSoA8 LLAMA  scalar", views::make_aosoa_view(&init), |v: &mut _| {
+        views::move_scalar(v)
+    });
+    bench_move!("move AoSoA8 manual SIMD8", Aosoa::new(&init), |s: &mut Aosoa| s.move_simd());
+    bench_move!("move AoSoA8 LLAMA  SIMD8", views::make_aosoa_view(&init), |v: &mut _| {
+        views::move_simd::<8, _, _>(v)
+    });
 
     println!(
         "{}",

@@ -19,7 +19,7 @@ use llama::mapping::Mapping;
 use llama::nbody::{init_particles, views, Particle};
 
 fn main() {
-    let fast = std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1");
+    let fast = llama::bench::smoke();
     let n: usize = if fast { 512 } else { 2048 };
     let init = init_particles(n, 42);
     let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };

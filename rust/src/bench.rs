@@ -14,6 +14,15 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// CI smoke mode: `LLAMA_BENCH_SMOKE=1` (or the older `LLAMA_BENCH_FAST=1`)
+/// shrinks every bench to a tiny problem size and sample count, so bench
+/// bitrot fails the build in seconds instead of burning minutes on full
+/// runs. Every bench binary consults this.
+pub fn smoke() -> bool {
+    let on = |k| std::env::var(k).as_deref() == Ok("1");
+    on("LLAMA_BENCH_SMOKE") || on("LLAMA_BENCH_FAST")
+}
+
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
 pub struct Measurement {
@@ -58,9 +67,9 @@ impl Bencher {
         Bencher { warmup, samples, results: Vec::new() }
     }
 
-    /// Honor `LLAMA_BENCH_FAST=1` (CI smoke mode: fewer samples).
+    /// Honor smoke mode (see [`smoke`]): fewer samples for CI.
     pub fn from_env() -> Self {
-        if std::env::var("LLAMA_BENCH_FAST").as_deref() == Ok("1") {
+        if smoke() {
             Bencher::new(1, 3)
         } else {
             Bencher::default()

@@ -4,7 +4,12 @@
 //! regrouping bytes by significance colocates zero bytes and improves
 //! ratios (cf. Apache Parquet's BYTE_STREAM_SPLIT). This module provides
 //! the compressors the benchmark sweeps: run-length encoding (the
-//! best-case proxy for "streams of zeros"), DEFLATE (flate2) and zstd.
+//! best-case proxy for "streams of zeros", always available), plus
+//! DEFLATE and zstd behind the `deflate`/`zstd-codec` cargo features —
+//! the offline build image carries no crates.io registry, so the real
+//! `flate2`/`zstd` crates must be added by whoever enables the feature.
+//! Callers sweep [`Codec::enabled`] (or check [`Codec::available`]) so
+//! the default build degrades to the RLE column instead of erroring.
 
 use anyhow::Result;
 
@@ -13,15 +18,30 @@ use anyhow::Result;
 pub enum Codec {
     /// Byte-level run-length encoding (escape-free, worst case 2x).
     Rle,
-    /// DEFLATE via flate2 (level 6).
+    /// DEFLATE via flate2 (level 6); needs the `deflate` feature.
     Deflate,
-    /// Zstandard (level 3).
+    /// Zstandard (level 3); needs the `zstd-codec` feature.
     Zstd,
 }
 
 impl Codec {
-    /// All codecs, for sweeps.
+    /// All codecs, for sweeps (including ones this build can't run; see
+    /// [`Codec::available`] / [`Codec::enabled`]).
     pub const ALL: [Codec; 3] = [Codec::Rle, Codec::Deflate, Codec::Zstd];
+
+    /// Whether this build can run the codec.
+    pub fn available(self) -> bool {
+        match self {
+            Codec::Rle => true,
+            Codec::Deflate => cfg!(feature = "deflate"),
+            Codec::Zstd => cfg!(feature = "zstd-codec"),
+        }
+    }
+
+    /// The codecs this build can run.
+    pub fn enabled() -> impl Iterator<Item = Codec> {
+        Codec::ALL.into_iter().filter(|c| c.available())
+    }
 
     /// Short name for reports.
     pub fn name(self) -> &'static str {
@@ -36,15 +56,8 @@ impl Codec {
     pub fn compress(self, data: &[u8]) -> Result<Vec<u8>> {
         match self {
             Codec::Rle => Ok(rle_encode(data)),
-            Codec::Deflate => {
-                use flate2::write::ZlibEncoder;
-                use flate2::Compression;
-                use std::io::Write;
-                let mut enc = ZlibEncoder::new(Vec::new(), Compression::new(6));
-                enc.write_all(data)?;
-                Ok(enc.finish()?)
-            }
-            Codec::Zstd => Ok(zstd::bulk::compress(data, 3)?),
+            Codec::Deflate => deflate_compress(data),
+            Codec::Zstd => zstd_compress(data),
         }
     }
 
@@ -52,16 +65,59 @@ impl Codec {
     pub fn decompress(self, data: &[u8], size_hint: usize) -> Result<Vec<u8>> {
         match self {
             Codec::Rle => Ok(rle_decode(data)),
-            Codec::Deflate => {
-                use flate2::read::ZlibDecoder;
-                use std::io::Read;
-                let mut out = Vec::with_capacity(size_hint);
-                ZlibDecoder::new(data).read_to_end(&mut out)?;
-                Ok(out)
-            }
-            Codec::Zstd => Ok(zstd::bulk::decompress(data, size_hint.max(1))?),
+            Codec::Deflate => deflate_decompress(data, size_hint),
+            Codec::Zstd => zstd_decompress(data, size_hint),
         }
     }
+}
+
+#[cfg(feature = "deflate")]
+fn deflate_compress(data: &[u8]) -> Result<Vec<u8>> {
+    use flate2::write::ZlibEncoder;
+    use flate2::Compression;
+    use std::io::Write;
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::new(6));
+    enc.write_all(data)?;
+    Ok(enc.finish()?)
+}
+
+#[cfg(feature = "deflate")]
+fn deflate_decompress(data: &[u8], size_hint: usize) -> Result<Vec<u8>> {
+    use flate2::read::ZlibDecoder;
+    use std::io::Read;
+    let mut out = Vec::with_capacity(size_hint);
+    ZlibDecoder::new(data).read_to_end(&mut out)?;
+    Ok(out)
+}
+
+#[cfg(not(feature = "deflate"))]
+fn deflate_compress(_data: &[u8]) -> Result<Vec<u8>> {
+    Err(anyhow::anyhow!("DEFLATE codec requires the `deflate` feature (flate2 not vendored)"))
+}
+
+#[cfg(not(feature = "deflate"))]
+fn deflate_decompress(_data: &[u8], _size_hint: usize) -> Result<Vec<u8>> {
+    Err(anyhow::anyhow!("DEFLATE codec requires the `deflate` feature (flate2 not vendored)"))
+}
+
+#[cfg(feature = "zstd-codec")]
+fn zstd_compress(data: &[u8]) -> Result<Vec<u8>> {
+    Ok(zstd::bulk::compress(data, 3)?)
+}
+
+#[cfg(feature = "zstd-codec")]
+fn zstd_decompress(data: &[u8], size_hint: usize) -> Result<Vec<u8>> {
+    Ok(zstd::bulk::decompress(data, size_hint.max(1))?)
+}
+
+#[cfg(not(feature = "zstd-codec"))]
+fn zstd_compress(_data: &[u8]) -> Result<Vec<u8>> {
+    Err(anyhow::anyhow!("zstd codec requires the `zstd-codec` feature (zstd not vendored)"))
+}
+
+#[cfg(not(feature = "zstd-codec"))]
+fn zstd_decompress(_data: &[u8], _size_hint: usize) -> Result<Vec<u8>> {
+    Err(anyhow::anyhow!("zstd codec requires the `zstd-codec` feature (zstd not vendored)"))
 }
 
 /// Run-length encode: `(count-1, byte)` pairs, runs capped at 256.
@@ -142,7 +198,7 @@ mod tests {
     #[test]
     fn codecs_roundtrip() {
         let data: Vec<u8> = (0..4096u32).flat_map(|i| ((i * 7) as u16).to_le_bytes()).collect();
-        for codec in Codec::ALL {
+        for codec in Codec::enabled() {
             let c = codec.compress(&data).unwrap();
             let d = codec.decompress(&c, data.len()).unwrap();
             assert_eq!(d, data, "{}", codec.name());
@@ -150,10 +206,22 @@ mod tests {
     }
 
     #[test]
+    fn unavailable_codecs_error_instead_of_panicking() {
+        for codec in Codec::ALL {
+            if !codec.available() {
+                assert!(codec.compress(&[1, 2, 3]).is_err());
+                assert!(codec.decompress(&[1, 2, 3], 8).is_err());
+            }
+        }
+        assert!(Codec::Rle.available());
+        assert!(Codec::enabled().count() >= 1);
+    }
+
+    #[test]
     fn zeros_compress_better_than_noise() {
         let zeros = vec![0u8; 8192];
         let noise: Vec<u8> = (0..8192u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect();
-        for codec in Codec::ALL {
+        for codec in Codec::enabled() {
             let cz = codec.compress(&zeros).unwrap().len();
             let cn = codec.compress(&noise).unwrap().len();
             assert!(cz < cn / 4, "{}: zeros {} vs noise {}", codec.name(), cz, cn);

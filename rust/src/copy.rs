@@ -4,10 +4,13 @@
 //!
 //! 1. **Blob memcpy** — when both views' mappings have identical layout
 //!    fingerprints, every blob is bytewise identical: copy blobs directly.
-//! 2. **Specialized SoA↔AoSoA** — both layouts keep each field's values
-//!    at a regular stride, so fields copy as runs of contiguous lane
-//!    blocks instead of per-scalar loads (the layout-aware copy of the
-//!    original LLAMA paper).
+//! 2. **Field runs** — when both mappings expose byte-contiguous runs
+//!    through the bulk-traversal engine's
+//!    [`crate::mapping::Mapping::contiguous_run`] hook (SoA↔SoA with
+//!    different blob policies, SoA↔AoSoA, AoSoA↔AoSoA with different lane
+//!    counts), each field copies as `memcpy` runs clipped to the shorter
+//!    side's block length — the layout-aware copy of the original LLAMA
+//!    paper, generalized.
 //! 3. **Field-wise fallback** — per (record, field) scalar load/store
 //!    through both mappings; works for any mapping pair including
 //!    computed ones (and converts precision when types differ, via f64).
@@ -23,6 +26,8 @@ use crate::view::{load_as_f64, store_from_f64, View};
 pub enum CopyStrategy {
     /// Whole-blob memcpy.
     BlobMemcpy,
+    /// Per-field memcpy of contiguous runs (bulk-traversal engine).
+    FieldRuns,
     /// Per-field scalar loop.
     FieldWise,
 }
@@ -57,11 +62,48 @@ where
         return CopyStrategy::BlobMemcpy;
     }
 
-    // Strategy 3: generic field-wise copy over the linear index space.
-    // (The SoA<->AoSoA block specialization lives in copy_soa_aosoa below
-    // and is dispatched explicitly by callers that know their layouts.)
+    // Strategy 2: both layouts expose contiguous field runs -> memcpy runs.
+    if try_run_copy(src, dst) {
+        return CopyStrategy::FieldRuns;
+    }
+
+    // Strategy 3: generic field-wise copy over the index space.
     field_wise_copy(src, dst);
     CopyStrategy::FieldWise
+}
+
+/// Copy every field as byte runs where both mappings report contiguity
+/// ([`crate::mapping::Mapping::contiguous_run`]). Returns `false` — and
+/// leaves `dst` partially written, callers must then run the field-wise
+/// fallback — as soon as either side reports a gap.
+fn try_run_copy<R, MS, SS, MD, SD>(src: &View<R, MS, SS>, dst: &mut View<R, MD, SD>) -> bool
+where
+    R: RecordDim,
+    MS: MemoryAccess<R>,
+    SS: BlobStorage,
+    MD: MemoryAccess<R>,
+    SD: BlobStorage,
+{
+    let n = src.count();
+    for (f, field) in R::FIELDS.iter().enumerate() {
+        let size = field.size();
+        let mut lin = 0;
+        while lin < n {
+            let (Some(s), Some(d)) =
+                (src.mapping().contiguous_run(lin, f), dst.mapping().contiguous_run(lin, f))
+            else {
+                return false;
+            };
+            let len = s.len.min(d.len).min(n - lin);
+            let bytes = len * size;
+            let src_blob = src.storage().blob(s.blob);
+            let dst_blob = dst.storage_mut().blob_mut(d.blob);
+            dst_blob[d.offset..d.offset + bytes]
+                .copy_from_slice(&src_blob[s.offset..s.offset + bytes]);
+            lin += len;
+        }
+    }
+    true
 }
 
 /// Per-(record, field) copy through both mappings.
@@ -81,18 +123,8 @@ where
             let v = load_as_f64(src, &idx[..rank], f);
             store_from_f64(dst, &idx[..rank], f, v);
         }
-        // Odometer increment over the array dimensions.
-        let mut d = rank;
-        loop {
-            if d == 0 {
-                return;
-            }
-            d -= 1;
-            idx[d] += 1;
-            if idx[d] < e.extent(d) {
-                break;
-            }
-            idx[d] = 0;
+        if !crate::extents::advance_index(&e, &mut idx[..rank]) {
+            return;
         }
     }
 }
@@ -154,12 +186,30 @@ mod tests {
     }
 
     #[test]
-    fn soa_to_aosoa() {
+    fn soa_to_aosoa_uses_field_runs() {
         let mut a = alloc_view(SoA::<P, _, SingleBlob>::new((Dyn(20u32),)), &HeapAlloc);
         let mut b = alloc_view(AoSoA::<P, _, 8>::new((Dyn(20u32),)), &HeapAlloc);
         fill(&mut a, 20);
-        copy_view(&a, &mut b);
+        assert_eq!(copy_view(&a, &mut b), CopyStrategy::FieldRuns);
         check(&b, 20);
+    }
+
+    #[test]
+    fn run_copy_between_blob_policies_and_lane_counts() {
+        // SoA multi-blob -> SoA single-blob: one run per field.
+        let mut a = alloc_view(SoA::<P, _>::new((Dyn(33u32),)), &HeapAlloc);
+        let mut b = alloc_view(SoA::<P, _, SingleBlob>::new((Dyn(33u32),)), &HeapAlloc);
+        fill(&mut a, 33);
+        assert_eq!(copy_view(&a, &mut b), CopyStrategy::FieldRuns);
+        check(&b, 33);
+
+        // AoSoA4 -> AoSoA16: runs clip to the shorter block, including the
+        // ragged tail (33 % 4 == 1).
+        let mut c = alloc_view(AoSoA::<P, _, 4>::new((Dyn(33u32),)), &HeapAlloc);
+        let mut d = alloc_view(AoSoA::<P, _, 16>::new((Dyn(33u32),)), &HeapAlloc);
+        assert_eq!(copy_view(&b, &mut c), CopyStrategy::FieldRuns);
+        assert_eq!(copy_view(&c, &mut d), CopyStrategy::FieldRuns);
+        check(&d, 33);
     }
 
     #[test]

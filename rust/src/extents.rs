@@ -185,6 +185,27 @@ pub fn dyn2(n0: usize, n1: usize) -> Dyn2<usize> {
     (Dyn(n0), Dyn(n1))
 }
 
+/// Advance `idx` (length `E::RANK`) one step in row-major order over `e`.
+/// Returns `false` — with `idx` wrapped back to all zeros — once the
+/// index space is exhausted. The shared odometer of the bulk-traversal
+/// engine ([`crate::view::View::for_each`]) and [`crate::copy`].
+#[inline(always)]
+pub fn advance_index<E: Extents>(e: &E, idx: &mut [usize]) -> bool {
+    debug_assert_eq!(idx.len(), E::RANK);
+    let mut d = E::RANK;
+    loop {
+        if d == 0 {
+            return false;
+        }
+        d -= 1;
+        idx[d] += 1;
+        if idx[d] < e.extent(d) {
+            return true;
+        }
+        idx[d] = 0;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Linearizers
 // ---------------------------------------------------------------------------
@@ -320,6 +341,21 @@ mod tests {
         let e = (Dyn(100u16), Dyn(200u16));
         assert_eq!(std::mem::size_of_val(&e), 4); // two u16
         assert_eq!(e.count(), 20000);
+    }
+
+    #[test]
+    fn advance_index_walks_row_major_and_terminates() {
+        let e = (Dyn(2usize), Dyn(3usize));
+        let mut idx = [0usize; 2];
+        let mut seen = vec![idx];
+        while advance_index(&e, &mut idx) {
+            seen.push(idx);
+        }
+        assert_eq!(
+            seen,
+            vec![[0, 0], [0, 1], [0, 2], [1, 0], [1, 1], [1, 2]]
+        );
+        assert_eq!(idx, [0, 0]); // wrapped back after exhaustion
     }
 
     #[test]

@@ -32,15 +32,35 @@
 //! view.set(&[3], particle::mass, 1.5f32);
 //! let m: f32 = view.get(&[3], particle::mass);
 //! assert_eq!(m, 1.5);
+//!
+//! // Bulk traversal engine: visit every record scalar-wise...
+//! view.for_each(|r| {
+//!     let i = r.index()[0] as f32;
+//!     r.set(particle::mass, i);
+//! });
+//! assert_eq!(view.get::<f32>(&[7], particle::mass), 7.0);
+//!
+//! // ...or stream SIMD chunks; the mapping picks the fastest path
+//! // (SoA here: contiguous vector moves — swap in AoS/AoSoA and this
+//! // code does not change).
+//! view.transform_simd::<4>(|c| {
+//!     let m: Simd<f32, 4> = c.load(particle::mass);
+//!     c.store(particle::mass, m + m);
+//! });
+//! assert_eq!(view.get::<f32>(&[7], particle::mass), 14.0);
 //! ```
 //!
 //! The crate layers (paper section → module):
 //! - §2 compile-time array extents → [`extents`]
 //! - §3 new memory mappings → [`mapping`]
 //! - §4 access instrumentation → [`mapping::field_access_count`], [`mapping::heatmap`]
-//! - §5 explicit SIMD → [`simd`]
+//! - §5 explicit SIMD → [`simd`], and the layout-aware bulk-traversal
+//!   engine → [`view::View::for_each`], [`view::View::transform_simd`],
+//!   [`mapping::Mapping::contiguous_run`] (which also powers the
+//!   run-based [`copy`] strategy)
 //! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
 //! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
+//!   (PJRT behind the `pjrt` cargo feature)
 
 pub mod bench;
 pub mod blob;
@@ -72,7 +92,9 @@ pub mod prelude {
     pub use crate::mapping::one::One;
     pub use crate::mapping::soa::{MultiBlob, SingleBlob, SoA};
     pub use crate::mapping::split::Split;
-    pub use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+    pub use crate::mapping::{
+        FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess,
+    };
     pub use crate::record::{Bf16, Field, RecordDim, Scalar, ScalarType, Selection, F16};
     pub use crate::simd::{Simd, SimdElem};
     pub use crate::view::{RecordRef, RecordRefMut, View};

@@ -246,7 +246,7 @@ fn cmd_compress(rest: &[String]) -> i32 {
 
     println!("compression of {n} HEP-like events (adc 12-bit, monotonic time, f32 energy):");
     println!("{:>8} {:>12} {:>14} {:>8}", "codec", "layout", "bytes", "ratio");
-    for codec in Codec::ALL {
+    for codec in Codec::enabled() {
         let soa_blobs: Vec<&[u8]> =
             (0..soa.storage().blob_count()).map(|b| soa.storage().blob(b)).collect();
         let bs_blobs: Vec<&[u8]> =

@@ -12,7 +12,7 @@ use std::marker::PhantomData;
 use crate::blob::BlobStorage;
 use crate::extents::{Extents, Linearizer, RowMajor};
 use crate::mapping::soa::{default_load_simd, default_store_simd};
-use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::mapping::{FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
 use crate::record::{RecordDim, Scalar};
 use crate::simd::{Simd, SimdElem};
 
@@ -87,6 +87,26 @@ impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u6
             L::NAME,
             (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
         )
+    }
+
+    #[inline(always)]
+    fn contiguous_run(&self, lin: usize, field: usize) -> Option<FieldRun> {
+        // Within a block, one field's LANES values are adjacent: the run
+        // covers the remaining lanes of the current block (bulk engine
+        // steps block by block).
+        if !L::LAST_DIM_CONTIGUOUS || !FieldMask(MASK).contains(field) {
+            return None;
+        }
+        let n = self.extents.count();
+        if lin >= n {
+            return None;
+        }
+        let block = lin / LANES;
+        let lane = lin % LANES;
+        let offset = block * LANES * Self::RECORD_SIZE
+            + Self::OFFSETS[field] * LANES
+            + lane * Self::SIZES[field];
+        Some(FieldRun { blob: 0, offset, len: (LANES - lane).min(n - lin) })
     }
 }
 
@@ -180,10 +200,23 @@ mod tests {
         // record_size = 4+4+8 = 16; LANES=4 => block = 64 bytes
         let m = AoSoA::<P, _, 4>::new((Dyn(10u32),));
         assert_eq!(m.blob_size(0), 3 * 4 * 16); // ceil(10/4)=3 blocks
-        // record 5 = block 1, lane 1
-        assert_eq!(m.blob_nr_and_offset(&[5], p::x), (0, 64 + 0 * 4 + 1 * 4));
-        assert_eq!(m.blob_nr_and_offset(&[5], p::y), (0, 64 + 4 * 4 + 1 * 4));
-        assert_eq!(m.blob_nr_and_offset(&[5], p::m), (0, 64 + 8 * 4 + 1 * 8));
+        // record 5 = block 1, lane 1: field region + lane * scalar size
+        assert_eq!(m.blob_nr_and_offset(&[5], p::x), (0, 64 + 4));
+        assert_eq!(m.blob_nr_and_offset(&[5], p::y), (0, 64 + 16 + 4));
+        assert_eq!(m.blob_nr_and_offset(&[5], p::m), (0, 64 + 32 + 8));
+    }
+
+    #[test]
+    fn contiguous_runs_stop_at_block_edges() {
+        use crate::mapping::FieldRun;
+        let m = AoSoA::<P, _, 4>::new((Dyn(10u32),));
+        // lane 1 of block 1 (byte 64 + 16 + 4): 3 lanes left in the block.
+        assert_eq!(m.contiguous_run(5, p::y), Some(FieldRun { blob: 0, offset: 84, len: 3 }));
+        // block start: full block available.
+        assert_eq!(m.contiguous_run(4, p::x), Some(FieldRun { blob: 0, offset: 64, len: 4 }));
+        // tail block is clipped to the extent (records 8, 9 only).
+        assert_eq!(m.contiguous_run(8, p::x).unwrap().len, 2);
+        assert_eq!(m.contiguous_run(10, p::x), None);
     }
 
     #[test]

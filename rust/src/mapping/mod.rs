@@ -88,6 +88,20 @@ impl Default for FieldMask {
     }
 }
 
+/// A maximal run of one field's values stored as consecutive bytes,
+/// starting at a given linear record index — the currency of the bulk
+/// traversal engine ([`crate::view::View::transform_simd`]) and of the
+/// run-based copy strategy ([`crate::copy`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FieldRun {
+    /// Blob holding the run.
+    pub blob: usize,
+    /// Byte offset of the run's first value within the blob.
+    pub offset: usize,
+    /// Number of consecutive records covered (≥ 1).
+    pub len: usize,
+}
+
 /// Core mapping interface: blob inventory + extents.
 pub trait Mapping<R: RecordDim>: Clone + Send + Sync {
     /// The array-extents type (carries rank, static extents, index type).
@@ -104,6 +118,20 @@ pub trait Mapping<R: RecordDim>: Clone + Send + Sync {
     /// mappings have equal fingerprints are bytewise-identical layouts
     /// (used by [`crate::copy`] for the blob-memcpy fast path).
     fn fingerprint(&self) -> String;
+
+    /// Where (and for how many records) `field`'s values are stored as
+    /// consecutive bytes starting at *linear* record index `lin`, or
+    /// `None` if this mapping has no byte-contiguity for the field
+    /// (AoS interleaving, computed mappings, instrumented wrappers —
+    /// which must keep the scalar path so side effects still fire).
+    ///
+    /// Contiguous layouts override: SoA returns the remainder of the
+    /// field's array, AoSoA the remainder of the current lane block.
+    #[inline(always)]
+    fn contiguous_run(&self, lin: usize, field: usize) -> Option<FieldRun> {
+        let _ = (lin, field);
+        None
+    }
 }
 
 /// A mapping whose every field location is a plain byte address

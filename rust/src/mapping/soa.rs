@@ -9,7 +9,7 @@ use std::marker::PhantomData;
 
 use crate::blob::BlobStorage;
 use crate::extents::{Extents, Linearizer, RowMajor};
-use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::mapping::{FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
 use crate::record::{RecordDim, Scalar};
 use crate::simd::{Simd, SimdElem};
 
@@ -146,6 +146,26 @@ impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> Ma
             L::NAME,
             (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
         )
+    }
+
+    #[inline(always)]
+    fn contiguous_run(&self, lin: usize, field: usize) -> Option<FieldRun> {
+        // Each field's values sit at stride size(field) in linear order, so
+        // the run extends to the end of the array (bulk engine fast path).
+        if !L::LAST_DIM_CONTIGUOUS || !FieldMask(MASK).contains(field) {
+            return None;
+        }
+        let n = self.extents.count();
+        if lin >= n {
+            return None;
+        }
+        let elem = lin * Self::SIZES[field];
+        let (blob, offset) = if B::MULTI {
+            (Self::FIELD_BLOB[field], elem)
+        } else {
+            (0, n * Self::PRE_SIZES[field] + elem)
+        };
+        Some(FieldRun { blob, offset, len: n - lin })
     }
 }
 
@@ -329,6 +349,22 @@ mod tests {
         v.store_simd(&[8], p::pos::x, Simd([100.0f64, 101.0, 102.0, 103.0]));
         assert_eq!(v.get::<f64>(&[9], p::pos::x), 101.0);
         assert_eq!(v.get::<f64>(&[12], p::pos::x), 12.0);
+    }
+
+    #[test]
+    fn contiguous_runs_span_the_field_array() {
+        use crate::mapping::FieldRun;
+        let m = SoA::<P, _>::new((Dyn(10u32),));
+        // MultiBlob: run covers the rest of the field's own blob.
+        assert_eq!(m.contiguous_run(3, p::pos::y), Some(FieldRun { blob: 1, offset: 24, len: 7 }));
+        assert_eq!(m.contiguous_run(0, p::mass), Some(FieldRun { blob: 3, offset: 0, len: 10 }));
+        assert_eq!(m.contiguous_run(10, p::mass), None);
+        // SingleBlob: run starts at the field's region within blob 0.
+        let sb = SoA::<P, _, SingleBlob>::new((Dyn(10u32),));
+        assert_eq!(sb.contiguous_run(3, p::pos::y), Some(FieldRun { blob: 0, offset: 104, len: 7 }));
+        // ColMajor linearization breaks contiguity.
+        let cm = SoA::<P, (Dyn<u32>,), MultiBlob, crate::extents::ColMajor>::new((Dyn(10u32),));
+        assert_eq!(cm.contiguous_run(0, p::mass), None);
     }
 
     #[test]

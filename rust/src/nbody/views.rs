@@ -1,10 +1,13 @@
 //! LLAMA-view n-body — the layout-generic versions of Figure 3.
 //!
 //! One scalar routine and one SIMD routine (the Figure 2 code), written
-//! once against [`crate::view::View`] and instantiated for AoS, SoA
+//! once against the bulk-traversal engine
+//! ([`crate::view::View::transform_simd`]) and instantiated for AoS, SoA
 //! multi-blob, and AoSoA. Exchanging the memory layout touches *only* the
-//! mapping type — the algorithm below never changes; matching the manual
-//! versions' runtime is the paper's zero-overhead claim (experiment E1).
+//! mapping type — the algorithm below never changes; the engine picks the
+//! per-mapping access path (SoA: contiguous vector moves, AoSoA: in-block
+//! lane vectors, AoS: scalar walk). Matching the manual versions' runtime
+//! is the paper's zero-overhead claim (experiment E1).
 
 use super::{particle, pp_interaction, Particle, ParticleData, EPS2, TIMESTEP};
 use crate::blob::{alloc_view, AlignedAlloc, AlignedStorage};
@@ -53,121 +56,121 @@ where
         .collect()
 }
 
-/// Layout-generic scalar update (the original LLAMA paper's routine).
+/// Layout-generic scalar update (the original LLAMA paper's routine),
+/// expressed as a 1-lane bulk traversal — Table 1's `N == 1` case. The
+/// operation order is exactly the manual scalar loop's, so results stay
+/// bit-identical to `manual::AosSim::update_scalar`.
 pub fn update_scalar<M, S>(view: &mut View<Particle, M, S>)
 where
-    M: MemoryAccess<Particle>,
+    M: SimdAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    let n = view.count();
-    for i in 0..n {
-        let pix: f32 = view.get(&[i], particle::pos::x);
-        let piy: f32 = view.get(&[i], particle::pos::y);
-        let piz: f32 = view.get(&[i], particle::pos::z);
+    view.transform_simd::<1>(|c| {
+        let i = c.base();
+        let pix: f32 = c.get(i, particle::pos::x);
+        let piy: f32 = c.get(i, particle::pos::y);
+        let piz: f32 = c.get(i, particle::pos::z);
         let mut acc = (0.0f32, 0.0f32, 0.0f32);
-        for j in 0..n {
+        for j in 0..c.count() {
             pp_interaction(
                 pix,
                 piy,
                 piz,
-                view.get(&[j], particle::pos::x),
-                view.get(&[j], particle::pos::y),
-                view.get(&[j], particle::pos::z),
-                view.get(&[j], particle::mass),
+                c.get(j, particle::pos::x),
+                c.get(j, particle::pos::y),
+                c.get(j, particle::pos::z),
+                c.get(j, particle::mass),
                 &mut acc,
             );
         }
-        let vx: f32 = view.get(&[i], particle::vel::x);
-        let vy: f32 = view.get(&[i], particle::vel::y);
-        let vz: f32 = view.get(&[i], particle::vel::z);
-        view.set(&[i], particle::vel::x, vx + acc.0);
-        view.set(&[i], particle::vel::y, vy + acc.1);
-        view.set(&[i], particle::vel::z, vz + acc.2);
-    }
+        let vx: f32 = c.get(i, particle::vel::x);
+        let vy: f32 = c.get(i, particle::vel::y);
+        let vz: f32 = c.get(i, particle::vel::z);
+        c.set(i, particle::vel::x, vx + acc.0);
+        c.set(i, particle::vel::y, vy + acc.1);
+        c.set(i, particle::vel::z, vz + acc.2);
+    });
 }
 
-/// Layout-generic scalar move.
+/// Layout-generic scalar move: a plain record-wise bulk traversal
+/// ([`View::for_each`]).
 pub fn move_scalar<M, S>(view: &mut View<Particle, M, S>)
 where
     M: MemoryAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    let n = view.count();
-    for i in 0..n {
-        let px: f32 = view.get(&[i], particle::pos::x);
-        let py: f32 = view.get(&[i], particle::pos::y);
-        let pz: f32 = view.get(&[i], particle::pos::z);
-        let vx: f32 = view.get(&[i], particle::vel::x);
-        let vy: f32 = view.get(&[i], particle::vel::y);
-        let vz: f32 = view.get(&[i], particle::vel::z);
-        view.set(&[i], particle::pos::x, px + vx * TIMESTEP);
-        view.set(&[i], particle::pos::y, py + vy * TIMESTEP);
-        view.set(&[i], particle::pos::z, pz + vz * TIMESTEP);
-    }
+    view.for_each(|r| {
+        let px: f32 = r.get(particle::pos::x);
+        let py: f32 = r.get(particle::pos::y);
+        let pz: f32 = r.get(particle::pos::z);
+        let vx: f32 = r.get(particle::vel::x);
+        let vy: f32 = r.get(particle::vel::y);
+        let vz: f32 = r.get(particle::vel::z);
+        r.set(particle::pos::x, px + vx * TIMESTEP);
+        r.set(particle::pos::y, py + vy * TIMESTEP);
+        r.set(particle::pos::z, pz + vz * TIMESTEP);
+    });
 }
 
-/// Layout-generic SIMD update — the Figure 2 routine: load `N` particles
-/// as SIMD records via `loadSimd`, interact with all `n` scalar particles,
-/// store the velocity sub-record via `storeSimd`.
+/// Layout-generic SIMD update — the Figure 2 routine through the bulk
+/// engine: each chunk loads `N` particles as SIMD records (`loadSimd`
+/// via the mapping's fastest path), interacts with all `n` scalar
+/// particles, and stores the velocity sub-record back.
 pub fn update_simd<const N: usize, M, S>(view: &mut View<Particle, M, S>)
 where
     M: SimdAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    let n = view.count();
-    assert_eq!(n % N, 0);
-    for i in (0..n).step_by(N) {
+    view.transform_simd::<N>(|c| {
         // llama::loadSimd(particleView(i), simdParticles)
-        let pix: Simd<f32, N> = view.load_simd(&[i], particle::pos::x);
-        let piy: Simd<f32, N> = view.load_simd(&[i], particle::pos::y);
-        let piz: Simd<f32, N> = view.load_simd(&[i], particle::pos::z);
+        let pix: Simd<f32, N> = c.load(particle::pos::x);
+        let piy: Simd<f32, N> = c.load(particle::pos::y);
+        let piz: Simd<f32, N> = c.load(particle::pos::z);
         let mut ax = Simd::<f32, N>::default();
         let mut ay = Simd::<f32, N>::default();
         let mut az = Simd::<f32, N>::default();
-        for j in 0..n {
+        for j in 0..c.count() {
             simd_interaction(
                 pix,
                 piy,
                 piz,
-                Simd::splat(view.get(&[j], particle::pos::x)),
-                Simd::splat(view.get(&[j], particle::pos::y)),
-                Simd::splat(view.get(&[j], particle::pos::z)),
-                Simd::splat(view.get(&[j], particle::mass)),
+                Simd::splat(c.get(j, particle::pos::x)),
+                Simd::splat(c.get(j, particle::pos::y)),
+                Simd::splat(c.get(j, particle::pos::z)),
+                Simd::splat(c.get(j, particle::mass)),
                 &mut ax,
                 &mut ay,
                 &mut az,
             );
         }
         // llama::storeSimd(simdParticles(tag::Vel{}), particleView(i)(tag::Vel{}))
-        let vx: Simd<f32, N> = view.load_simd(&[i], particle::vel::x);
-        let vy: Simd<f32, N> = view.load_simd(&[i], particle::vel::y);
-        let vz: Simd<f32, N> = view.load_simd(&[i], particle::vel::z);
-        view.store_simd(&[i], particle::vel::x, vx + ax);
-        view.store_simd(&[i], particle::vel::y, vy + ay);
-        view.store_simd(&[i], particle::vel::z, vz + az);
-    }
+        let vx: Simd<f32, N> = c.load(particle::vel::x);
+        let vy: Simd<f32, N> = c.load(particle::vel::y);
+        let vz: Simd<f32, N> = c.load(particle::vel::z);
+        c.store(particle::vel::x, vx + ax);
+        c.store(particle::vel::y, vy + ay);
+        c.store(particle::vel::z, vz + az);
+    });
 }
 
-/// Layout-generic SIMD move.
+/// Layout-generic SIMD move through the bulk engine.
 pub fn move_simd<const N: usize, M, S>(view: &mut View<Particle, M, S>)
 where
     M: SimdAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    let n = view.count();
-    assert_eq!(n % N, 0);
     let dt = Simd::<f32, N>::splat(TIMESTEP);
-    for i in (0..n).step_by(N) {
-        let px: Simd<f32, N> = view.load_simd(&[i], particle::pos::x);
-        let py: Simd<f32, N> = view.load_simd(&[i], particle::pos::y);
-        let pz: Simd<f32, N> = view.load_simd(&[i], particle::pos::z);
-        let vx: Simd<f32, N> = view.load_simd(&[i], particle::vel::x);
-        let vy: Simd<f32, N> = view.load_simd(&[i], particle::vel::y);
-        let vz: Simd<f32, N> = view.load_simd(&[i], particle::vel::z);
-        view.store_simd(&[i], particle::pos::x, px + vx * dt);
-        view.store_simd(&[i], particle::pos::y, py + vy * dt);
-        view.store_simd(&[i], particle::pos::z, pz + vz * dt);
-    }
+    view.transform_simd::<N>(|c| {
+        let px: Simd<f32, N> = c.load(particle::pos::x);
+        let py: Simd<f32, N> = c.load(particle::pos::y);
+        let pz: Simd<f32, N> = c.load(particle::pos::z);
+        let vx: Simd<f32, N> = c.load(particle::vel::x);
+        let vy: Simd<f32, N> = c.load(particle::vel::y);
+        let vz: Simd<f32, N> = c.load(particle::vel::z);
+        c.store(particle::pos::x, px + vx * dt);
+        c.store(particle::pos::y, py + vy * dt);
+        c.store(particle::pos::z, pz + vz * dt);
+    });
 }
 
 /// The rank-1 u32-indexed extents used by all Figure-3 views

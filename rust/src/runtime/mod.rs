@@ -6,12 +6,15 @@
 //! [`Engine`] compiles each artifact once on the PJRT CPU client and
 //! caches the loaded executable; the L3 coordinator then executes
 //! simulation steps with zero Python on the request path.
+//!
+//! The PJRT path needs the external `xla` crate, which the offline build
+//! image cannot fetch; it is gated behind the **`pjrt`** cargo feature
+//! (enabling it requires adding the `xla` dependency yourself). Without
+//! the feature, [`Engine::cpu`] and [`PjrtService::spawn`] return an
+//! error and every caller degrades gracefully — the coordinator reports
+//! PJRT jobs as failed, tests skip, the CLI prints a warning.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
 
 /// Default artifacts directory (relative to the repo root).
 pub const ARTIFACTS_DIR: &str = "artifacts";
@@ -43,263 +46,6 @@ impl TensorF32 {
     }
 }
 
-/// PJRT execution engine with an executable cache.
-///
-/// Compilation happens once per artifact (at [`Engine::load`] or first
-/// use); execution is thread-safe through an internal mutex — PJRT CPU
-/// executions are short and the coordinator batches around this.
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
-    artifacts_dir: PathBuf,
-}
-
-impl Engine {
-    /// Engine on the PJRT CPU client, loading from `artifacts_dir`.
-    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, cache: Mutex::new(HashMap::new()), artifacts_dir: artifacts_dir.into() })
-    }
-
-    /// Platform name of the underlying client (e.g. "cpu", "Host").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Path of artifact `name`.
-    pub fn artifact_path(&self, name: &str) -> PathBuf {
-        self.artifacts_dir.join(format!("{name}.hlo.txt"))
-    }
-
-    /// Whether the artifact file exists (used by tests/CLI to skip
-    /// gracefully before `make artifacts` has run).
-    pub fn artifact_available(&self, name: &str) -> bool {
-        self.artifact_path(name).exists()
-    }
-
-    /// Compile and cache the artifact `name` from disk.
-    pub fn load(&self, name: &str) -> Result<()> {
-        let path = self.artifact_path(name);
-        self.load_path(name, &path)
-    }
-
-    /// Compile and cache an explicit HLO-text file under `name`.
-    pub fn load_path(&self, name: &str, path: &Path) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(name) {
-            return Ok(());
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-        cache.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Names currently cached.
-    pub fn loaded(&self) -> Vec<String> {
-        self.cache.lock().unwrap().keys().cloned().collect()
-    }
-
-    /// Execute cached executable `name` on f32 inputs, returning all f32
-    /// outputs (the artifacts are lowered with `return_tuple=True`).
-    pub fn execute_f32(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data).reshape(&dims).context("reshaping input")
-            })
-            .collect::<Result<_>>()?;
-        let parts = self.execute_literals(name, &literals)?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape()?;
-                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit.to_vec::<f32>()?;
-                Ok(TensorF32 { data, dims })
-            })
-            .collect()
-    }
-
-    /// Execute on u32 inputs (the bitpack artifacts), returning u32
-    /// outputs as `(data, dims)` pairs.
-    pub fn execute_u32(
-        &self,
-        name: &str,
-        inputs: &[(Vec<u32>, Vec<usize>)],
-    ) -> Result<Vec<(Vec<u32>, Vec<usize>)>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-                xla::Literal::vec1(data.as_slice()).reshape(&d).context("reshaping input")
-            })
-            .collect::<Result<_>>()?;
-        let parts = self.execute_literals(name, &literals)?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape()?;
-                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit.to_vec::<u32>()?;
-                Ok((data, dims))
-            })
-            .collect()
-    }
-
-    /// Shared execute path: run `name` on prepared literals, untuple.
-    fn execute_literals(&self, name: &str, literals: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let cache = self.cache.lock().unwrap();
-        let exe = cache.get(name).ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
-        let result = exe.execute::<xla::Literal>(literals).context("executing")?;
-        let out = result[0][0].to_literal_sync().context("fetching result")?;
-        out.to_tuple().context("untupling result")
-    }
-}
-
-impl std::fmt::Debug for Engine {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Engine")
-            .field("artifacts_dir", &self.artifacts_dir)
-            .field("loaded", &self.loaded())
-            .finish()
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Thread-safe PJRT service
-// ---------------------------------------------------------------------------
-
-/// Requests served by the PJRT executor thread.
-enum Request {
-    Load(String, mpsc::Sender<Result<()>>),
-    Available(String, mpsc::Sender<bool>),
-    Platform(mpsc::Sender<String>),
-    ExecF32(String, Vec<TensorF32>, mpsc::Sender<Result<Vec<TensorF32>>>),
-    ExecU32(
-        String,
-        Vec<(Vec<u32>, Vec<usize>)>,
-        mpsc::Sender<Result<Vec<(Vec<u32>, Vec<usize>)>>>,
-    ),
-}
-
-/// Thread-safe handle to a PJRT [`Engine`] running on a dedicated executor
-/// thread.
-///
-/// The `xla` crate's PJRT client is not `Send` (internal `Rc`s), so the
-/// engine lives on one thread and the coordinator's workers talk to it via
-/// channels — which is also where cross-job batching naturally serializes.
-/// Handles are cheaply cloneable.
-#[derive(Clone)]
-pub struct PjrtService {
-    tx: mpsc::Sender<Request>,
-}
-
-use std::sync::mpsc;
-
-impl PjrtService {
-    /// Spawn the executor thread with an engine over `artifacts_dir`.
-    pub fn spawn(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let dir = artifacts_dir.into();
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        std::thread::Builder::new()
-            .name("pjrt-executor".into())
-            .spawn(move || {
-                let engine = match Engine::cpu(dir) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Load(name, reply) => {
-                            let _ = reply.send(engine.load(&name));
-                        }
-                        Request::Available(name, reply) => {
-                            let _ = reply.send(engine.artifact_available(&name));
-                        }
-                        Request::Platform(reply) => {
-                            let _ = reply.send(engine.platform());
-                        }
-                        Request::ExecF32(name, inputs, reply) => {
-                            let _ = reply.send(engine.execute_f32(&name, &inputs));
-                        }
-                        Request::ExecU32(name, inputs, reply) => {
-                            let _ = reply.send(engine.execute_u32(&name, &inputs));
-                        }
-                    }
-                }
-            })
-            .context("spawning pjrt-executor")?;
-        ready_rx.recv().context("pjrt-executor died")??;
-        Ok(PjrtService { tx })
-    }
-
-    /// See [`Engine::load`].
-    pub fn load(&self, name: &str) -> Result<()> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Request::Load(name.to_string(), tx)).map_err(|_| anyhow!("executor gone"))?;
-        rx.recv().context("executor gone")?
-    }
-
-    /// See [`Engine::artifact_available`].
-    pub fn artifact_available(&self, name: &str) -> bool {
-        let (tx, rx) = mpsc::channel();
-        if self.tx.send(Request::Available(name.to_string(), tx)).is_err() {
-            return false;
-        }
-        rx.recv().unwrap_or(false)
-    }
-
-    /// See [`Engine::platform`].
-    pub fn platform(&self) -> String {
-        let (tx, rx) = mpsc::channel();
-        if self.tx.send(Request::Platform(tx)).is_err() {
-            return "unavailable".into();
-        }
-        rx.recv().unwrap_or_else(|_| "unavailable".into())
-    }
-
-    /// See [`Engine::execute_f32`].
-    pub fn execute_f32(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Request::ExecF32(name.to_string(), inputs.to_vec(), tx))
-            .map_err(|_| anyhow!("executor gone"))?;
-        rx.recv().context("executor gone")?
-    }
-
-    /// See [`Engine::execute_u32`].
-    pub fn execute_u32(
-        &self,
-        name: &str,
-        inputs: &[(Vec<u32>, Vec<usize>)],
-    ) -> Result<Vec<(Vec<u32>, Vec<usize>)>> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Request::ExecU32(name.to_string(), inputs.to_vec(), tx))
-            .map_err(|_| anyhow!("executor gone"))?;
-        rx.recv().context("executor gone")?
-    }
-}
-
-impl std::fmt::Debug for PjrtService {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PjrtService").finish()
-    }
-}
-
 /// Locate the repo's artifacts directory from the current/executable dir.
 pub fn default_artifacts_dir() -> PathBuf {
     // Prefer $LLAMA_ARTIFACTS, then ./artifacts relative to cwd, then the
@@ -312,4 +58,427 @@ pub fn default_artifacts_dir() -> PathBuf {
         return cwd;
     }
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR)
+}
+
+#[cfg(feature = "pjrt")]
+mod engine_impl {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{mpsc, Mutex};
+
+    use anyhow::{anyhow, Context, Result};
+
+    use super::TensorF32;
+
+    /// PJRT execution engine with an executable cache.
+    ///
+    /// Compilation happens once per artifact (at [`Engine::load`] or first
+    /// use); execution is thread-safe through an internal mutex — PJRT CPU
+    /// executions are short and the coordinator batches around this.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+        artifacts_dir: PathBuf,
+    }
+
+    impl Engine {
+        /// Engine on the PJRT CPU client, loading from `artifacts_dir`.
+        pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Engine {
+                client,
+                cache: Mutex::new(HashMap::new()),
+                artifacts_dir: artifacts_dir.into(),
+            })
+        }
+
+        /// Platform name of the underlying client (e.g. "cpu", "Host").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Path of artifact `name`.
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            self.artifacts_dir.join(format!("{name}.hlo.txt"))
+        }
+
+        /// Whether the artifact file exists (used by tests/CLI to skip
+        /// gracefully before `make artifacts` has run).
+        pub fn artifact_available(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        /// Compile and cache the artifact `name` from disk.
+        pub fn load(&self, name: &str) -> Result<()> {
+            let path = self.artifact_path(name);
+            self.load_path(name, &path)
+        }
+
+        /// Compile and cache an explicit HLO-text file under `name`.
+        pub fn load_path(&self, name: &str, path: &Path) -> Result<()> {
+            let mut cache = self.cache.lock().unwrap();
+            if cache.contains_key(name) {
+                return Ok(());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            cache.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Names currently cached.
+        pub fn loaded(&self) -> Vec<String> {
+            self.cache.lock().unwrap().keys().cloned().collect()
+        }
+
+        /// Execute cached executable `name` on f32 inputs, returning all f32
+        /// outputs (the artifacts are lowered with `return_tuple=True`).
+        pub fn execute_f32(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data).reshape(&dims).context("reshaping input")
+                })
+                .collect::<Result<_>>()?;
+            let parts = self.execute_literals(name, &literals)?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit.array_shape()?;
+                    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                    let data = lit.to_vec::<f32>()?;
+                    Ok(TensorF32 { data, dims })
+                })
+                .collect()
+        }
+
+        /// Execute on u32 inputs (the bitpack artifacts), returning u32
+        /// outputs as `(data, dims)` pairs.
+        pub fn execute_u32(
+            &self,
+            name: &str,
+            inputs: &[(Vec<u32>, Vec<usize>)],
+        ) -> Result<Vec<(Vec<u32>, Vec<usize>)>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    xla::Literal::vec1(data.as_slice()).reshape(&d).context("reshaping input")
+                })
+                .collect::<Result<_>>()?;
+            let parts = self.execute_literals(name, &literals)?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit.array_shape()?;
+                    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                    let data = lit.to_vec::<u32>()?;
+                    Ok((data, dims))
+                })
+                .collect()
+        }
+
+        /// Shared execute path: run `name` on prepared literals, untuple.
+        fn execute_literals(
+            &self,
+            name: &str,
+            literals: &[xla::Literal],
+        ) -> Result<Vec<xla::Literal>> {
+            let cache = self.cache.lock().unwrap();
+            let exe = cache.get(name).ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+            let result = exe.execute::<xla::Literal>(literals).context("executing")?;
+            let out = result[0][0].to_literal_sync().context("fetching result")?;
+            out.to_tuple().context("untupling result")
+        }
+    }
+
+    impl std::fmt::Debug for Engine {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Engine")
+                .field("artifacts_dir", &self.artifacts_dir)
+                .field("loaded", &self.loaded())
+                .finish()
+        }
+    }
+
+    /// Requests served by the PJRT executor thread.
+    enum Request {
+        Load(String, mpsc::Sender<Result<()>>),
+        Available(String, mpsc::Sender<bool>),
+        Platform(mpsc::Sender<String>),
+        ExecF32(String, Vec<TensorF32>, mpsc::Sender<Result<Vec<TensorF32>>>),
+        ExecU32(
+            String,
+            Vec<(Vec<u32>, Vec<usize>)>,
+            mpsc::Sender<Result<Vec<(Vec<u32>, Vec<usize>)>>>,
+        ),
+    }
+
+    /// Thread-safe handle to a PJRT [`Engine`] running on a dedicated
+    /// executor thread.
+    ///
+    /// The `xla` crate's PJRT client is not `Send` (internal `Rc`s), so the
+    /// engine lives on one thread and the coordinator's workers talk to it
+    /// via channels — which is also where cross-job batching naturally
+    /// serializes. Handles are cheaply cloneable.
+    #[derive(Clone)]
+    pub struct PjrtService {
+        tx: mpsc::Sender<Request>,
+    }
+
+    impl PjrtService {
+        /// Spawn the executor thread with an engine over `artifacts_dir`.
+        pub fn spawn(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let dir = artifacts_dir.into();
+            let (tx, rx) = mpsc::channel::<Request>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            std::thread::Builder::new()
+                .name("pjrt-executor".into())
+                .spawn(move || {
+                    let engine = match Engine::cpu(dir) {
+                        Ok(e) => {
+                            let _ = ready_tx.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    while let Ok(req) = rx.recv() {
+                        match req {
+                            Request::Load(name, reply) => {
+                                let _ = reply.send(engine.load(&name));
+                            }
+                            Request::Available(name, reply) => {
+                                let _ = reply.send(engine.artifact_available(&name));
+                            }
+                            Request::Platform(reply) => {
+                                let _ = reply.send(engine.platform());
+                            }
+                            Request::ExecF32(name, inputs, reply) => {
+                                let _ = reply.send(engine.execute_f32(&name, &inputs));
+                            }
+                            Request::ExecU32(name, inputs, reply) => {
+                                let _ = reply.send(engine.execute_u32(&name, &inputs));
+                            }
+                        }
+                    }
+                })
+                .context("spawning pjrt-executor")?;
+            ready_rx.recv().context("pjrt-executor died")??;
+            Ok(PjrtService { tx })
+        }
+
+        /// See [`Engine::load`].
+        pub fn load(&self, name: &str) -> Result<()> {
+            let (tx, rx) = mpsc::channel();
+            self.tx
+                .send(Request::Load(name.to_string(), tx))
+                .map_err(|_| anyhow!("executor gone"))?;
+            rx.recv().context("executor gone")?
+        }
+
+        /// See [`Engine::artifact_available`].
+        pub fn artifact_available(&self, name: &str) -> bool {
+            let (tx, rx) = mpsc::channel();
+            if self.tx.send(Request::Available(name.to_string(), tx)).is_err() {
+                return false;
+            }
+            rx.recv().unwrap_or(false)
+        }
+
+        /// See [`Engine::platform`].
+        pub fn platform(&self) -> String {
+            let (tx, rx) = mpsc::channel();
+            if self.tx.send(Request::Platform(tx)).is_err() {
+                return "unavailable".into();
+            }
+            rx.recv().unwrap_or_else(|_| "unavailable".into())
+        }
+
+        /// See [`Engine::execute_f32`].
+        pub fn execute_f32(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+            let (tx, rx) = mpsc::channel();
+            self.tx
+                .send(Request::ExecF32(name.to_string(), inputs.to_vec(), tx))
+                .map_err(|_| anyhow!("executor gone"))?;
+            rx.recv().context("executor gone")?
+        }
+
+        /// See [`Engine::execute_u32`].
+        pub fn execute_u32(
+            &self,
+            name: &str,
+            inputs: &[(Vec<u32>, Vec<usize>)],
+        ) -> Result<Vec<(Vec<u32>, Vec<usize>)>> {
+            let (tx, rx) = mpsc::channel();
+            self.tx
+                .send(Request::ExecU32(name.to_string(), inputs.to_vec(), tx))
+                .map_err(|_| anyhow!("executor gone"))?;
+            rx.recv().context("executor gone")?
+        }
+    }
+
+    impl std::fmt::Debug for PjrtService {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("PjrtService").finish()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod engine_impl {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{anyhow, Result};
+
+    use super::TensorF32;
+
+    const DISABLED: &str =
+        "PJRT runtime requires the `pjrt` feature (the `xla` crate is not vendored offline)";
+
+    /// Stub engine: the build carries no PJRT client. [`Engine::cpu`]
+    /// always errors; the type exists so callers compile unchanged.
+    #[derive(Debug)]
+    pub struct Engine {
+        artifacts_dir: PathBuf,
+    }
+
+    impl Engine {
+        /// Always fails: this build has no PJRT client.
+        pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let _ = artifacts_dir.into();
+            Err(anyhow!(DISABLED))
+        }
+
+        /// Platform name ("unavailable" in the stub).
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        /// Path of artifact `name`.
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            self.artifacts_dir.join(format!("{name}.hlo.txt"))
+        }
+
+        /// Whether the artifact file exists on disk.
+        pub fn artifact_available(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        /// Always fails in the stub.
+        pub fn load(&self, _name: &str) -> Result<()> {
+            Err(anyhow!(DISABLED))
+        }
+
+        /// Always fails in the stub.
+        pub fn load_path(&self, _name: &str, _path: &Path) -> Result<()> {
+            Err(anyhow!(DISABLED))
+        }
+
+        /// Names currently cached (always empty in the stub).
+        pub fn loaded(&self) -> Vec<String> {
+            Vec::new()
+        }
+
+        /// Always fails in the stub.
+        pub fn execute_f32(&self, _name: &str, _inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+            Err(anyhow!(DISABLED))
+        }
+
+        /// Always fails in the stub.
+        pub fn execute_u32(
+            &self,
+            _name: &str,
+            _inputs: &[(Vec<u32>, Vec<usize>)],
+        ) -> Result<Vec<(Vec<u32>, Vec<usize>)>> {
+            Err(anyhow!(DISABLED))
+        }
+    }
+
+    /// Stub service handle; [`PjrtService::spawn`] always errors.
+    #[derive(Clone, Debug)]
+    pub struct PjrtService {
+        _priv: (),
+    }
+
+    impl PjrtService {
+        /// Always fails: this build has no PJRT client.
+        pub fn spawn(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let _ = artifacts_dir.into();
+            Err(anyhow!(DISABLED))
+        }
+
+        /// Always fails in the stub.
+        pub fn load(&self, _name: &str) -> Result<()> {
+            Err(anyhow!(DISABLED))
+        }
+
+        /// Always `false` in the stub.
+        pub fn artifact_available(&self, _name: &str) -> bool {
+            false
+        }
+
+        /// Platform name ("unavailable" in the stub).
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        /// Always fails in the stub.
+        pub fn execute_f32(&self, _name: &str, _inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+            Err(anyhow!(DISABLED))
+        }
+
+        /// Always fails in the stub.
+        pub fn execute_u32(
+            &self,
+            _name: &str,
+            _inputs: &[(Vec<u32>, Vec<usize>)],
+        ) -> Result<Vec<(Vec<u32>, Vec<usize>)>> {
+            Err(anyhow!(DISABLED))
+        }
+    }
+}
+
+pub use engine_impl::{Engine, PjrtService};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_constructors_validate_shape() {
+        let t = TensorF32::vec(vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.dims, vec![3]);
+        let t = TensorF32::new(vec![0.0; 12], vec![3, 4]);
+        assert_eq!(t.dims, vec![3, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        let _ = TensorF32::new(vec![0.0; 5], vec![3, 4]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_fails_loudly_but_gracefully() {
+        assert!(Engine::cpu("artifacts").is_err());
+        let e = PjrtService::spawn("artifacts").unwrap_err();
+        assert!(format!("{e:#}").contains("pjrt"));
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // Don't mutate the process env (tests run in parallel); just check
+        // the fallback is a sensible path.
+        let d = default_artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
 }

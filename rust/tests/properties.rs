@@ -223,6 +223,93 @@ fn prop_copy_preserves_all_fields() {
 }
 
 #[test]
+fn prop_bulk_traversal_bit_identical_across_mappings() {
+    // The bulk-traversal engine (`View::transform_simd` / `View::for_each`)
+    // must produce bit-identical results whatever the mapping: SoA takes
+    // the contiguous vector path, AoSoA the in-block lane path, AoS and
+    // bitpack the scalar fallback. f32 values through BitpackFloatSoA
+    // e8m23 are stored exactly, so even the computed mapping must match
+    // bit for bit.
+    use llama::mapping::aos::AoS;
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::bitpack_float::BitpackFloatSoA;
+    use llama::mapping::soa::SoA;
+    use llama::mapping::SimdAccess;
+    use llama::simd::Simd;
+
+    llama::record! {
+        pub struct B, mod bf {
+            v: f32,
+            w: f32,
+        }
+    }
+
+    fn run<M: SimdAccess<B>>(m: M, n: usize, seed: u64) -> Vec<u32> {
+        let mut view = alloc_view(m, &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            view.set(&[i], bf::v, rng.f64_range(-1e3, 1e3) as f32);
+            view.set(&[i], bf::w, rng.f64_range(-1e3, 1e3) as f32);
+        }
+        // SIMD chunk transform (4 lanes), then a scalar for_each pass.
+        view.transform_simd::<4>(|c| {
+            let a: Simd<f32, 4> = c.load(bf::v);
+            let b: Simd<f32, 4> = c.load(bf::w);
+            c.store(bf::v, a * b + a);
+        });
+        view.for_each(|r| {
+            let w: f32 = r.get(bf::w);
+            r.set(bf::w, w + 1.0);
+        });
+        (0..n)
+            .flat_map(|i| {
+                [view.get::<f32>(&[i], bf::v).to_bits(), view.get::<f32>(&[i], bf::w).to_bits()]
+            })
+            .collect()
+    }
+
+    forall("bulk-identical", 12, |g| (g.range(1, 16) * 8, g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        let reference = run(SoA::<B, _>::new(e), n, seed);
+        reference == run(AoS::<B, _>::new(e), n, seed)
+            && reference == run(AoSoA::<B, _, 8>::new(e), n, seed)
+            && reference == run(BitpackFloatSoA::<B, _, 8, 23>::new(e), n, seed)
+    });
+}
+
+#[test]
+fn prop_run_copy_agrees_with_field_wise() {
+    // Strategy 2 (contiguous field runs) must produce exactly the bytes
+    // the scalar fallback would.
+    use llama::copy::{copy_view, CopyStrategy};
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::soa::{SingleBlob, SoA};
+
+    forall("run-copy", 15, |g| (g.range(1, 120), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        let mut src = alloc_view(SoA::<R, _>::new(e), &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            src.set(&[i], r::a, rng.f64_range(-1e6, 1e6));
+            src.set(&[i], r::b, rng.f64_range(-1e3, 1e3) as f32);
+            src.set(&[i], r::c, rng.next_u64() as u32);
+            src.set(&[i], r::d, rng.range_i64(-30000, 30000) as i16);
+        }
+        let mut via_runs = alloc_view(AoSoA::<R, _, 8>::new(e), &HeapAlloc);
+        let strategy = copy_view(&src, &mut via_runs);
+        let mut via_scalar = alloc_view(SoA::<R, _, SingleBlob>::new(e), &HeapAlloc);
+        llama::copy::field_wise_copy(&src, &mut via_scalar);
+        strategy == CopyStrategy::FieldRuns
+            && (0..n).all(|i| {
+                via_runs.get::<f64>(&[i], r::a) == via_scalar.get::<f64>(&[i], r::a)
+                    && via_runs.get::<f32>(&[i], r::b) == via_scalar.get::<f32>(&[i], r::b)
+                    && via_runs.get::<u32>(&[i], r::c) == via_scalar.get::<u32>(&[i], r::c)
+                    && via_runs.get::<i16>(&[i], r::d) == via_scalar.get::<i16>(&[i], r::d)
+            })
+    });
+}
+
+#[test]
 fn prop_coordinator_completes_every_job_exactly_once() {
     use llama::coordinator::{Backend, Config, Coordinator, JobSpec, Layout};
     forall(
