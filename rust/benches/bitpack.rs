@@ -105,6 +105,7 @@ fn main() {
     int_speed!("load bitpack 12b", 12);
     int_speed!("load bitpack 7b", 7);
     println!("{}", b.render_table("integer load cost", Some("load u32 SoA")));
+    let b_int = b;
 
     // -- floats --
     println!("-- floats (f64 algorithm type) --");
@@ -120,8 +121,14 @@ fn main() {
     float_row!("BitpackFloatSoA e8m23", BitpackFloatSoA::<Vals, _, 8, 23>::new(e));
     float_row!("BitpackFloatSoA e8m7", BitpackFloatSoA::<Vals, _, 8, 7>::new(e));
     float_row!("BitpackFloatSoA e5m10", BitpackFloatSoA::<Vals, _, 5, 10>::new(e));
-    float_row!("ChangeType f64->f32", ChangeType::<Vals, ValsF32, _>::new(SoA::<ValsF32, _>::new(e)));
-    float_row!("ChangeType f64->f16", ChangeType::<Vals, ValsF16, _>::new(SoA::<ValsF16, _>::new(e)));
+    float_row!(
+        "ChangeType f64->f32",
+        ChangeType::<Vals, ValsF32, _>::new(SoA::<ValsF32, _>::new(e))
+    );
+    float_row!(
+        "ChangeType f64->f16",
+        ChangeType::<Vals, ValsF16, _>::new(SoA::<ValsF16, _>::new(e))
+    );
     println!();
 
     let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 9) };
@@ -168,4 +175,7 @@ fn main() {
         "expected shape (paper §3): changetype-f32 ≈ plain load (hardware cvt);\n\
          bitpack pays shift/mask on every access; both save the same storage at 32 bits."
     );
+
+    llama::bench::emit_json("bitpack", &[("n", n.to_string())], &[("int", &b_int), ("float", &b)])
+        .expect("writing LLAMA_BENCH_JSON output");
 }

@@ -109,5 +109,9 @@ fn main() {
             black_box(acc);
         });
     }
-    println!("{}", b.render_table("Bytesplit access cost (scattered bytes)", Some("sum adc via SoA")));
+    let table = b.render_table("Bytesplit access cost (scattered bytes)", Some("sum adc via SoA"));
+    println!("{table}");
+
+    llama::bench::emit_json("bytesplit", &[("n", n.to_string())], &[("access", &b)])
+        .expect("writing LLAMA_BENCH_JSON output");
 }

@@ -96,10 +96,18 @@ fn main() {
         reps,
     );
 
-    println!("{}", b.render_table("index-type / static-extent stencil", Some("stencil u64 dynamic")));
+    let table = b.render_table("index-type / static-extent stencil", Some("stencil u64 dynamic"));
+    println!("{table}");
     println!(
         "paper context: 64-bit integer mul is slow on GPUs (absent on Hopper);\n\
          on this x86-64 CPU expect small deltas, with static extents enabling\n\
          constant-folded linearization (the shared-memory-view use case)."
     );
+
+    llama::bench::emit_json(
+        "extents",
+        &[("side", SIDE.to_string()), ("reps", reps.to_string())],
+        &[("stencil", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
 }

@@ -1,19 +1,25 @@
-//! Experiment E1 — Figure 3: single-threaded n-body runtime across
-//! {AoS, SoA multi-blob, AoSoA8} × {manually written, LLAMA} × {scalar,
-//! SIMD-8}, update and move steps separately.
+//! Experiment E1 — Figure 3: n-body runtime across {AoS, SoA multi-blob,
+//! AoSoA8} × {manually written, LLAMA} × {scalar, SIMD-8}, update and
+//! move steps separately, plus serial-vs-multithreaded LLAMA rows per
+//! layout through the sharded parallel engine.
 //!
 //! The paper's claim under test: LLAMA matches the manually written code
 //! (zero overhead), SoA/AoSoA SIMD are fastest for update, SoA wins move,
 //! and AoSoA has a known penalty in the single-loop LLAMA traversal
 //! (footnote 13). Absolute numbers differ from the paper's Ryzen 5950X;
-//! the *ordering and ratios* are what reproduce.
+//! the *ordering and ratios* are what reproduce. The `<T>T` rows fan the
+//! same kernel over `ViewShards` workers (bit-identical results); on the
+//! compute-bound update step the parallel SoA row should beat serial SoA
+//! on the full-size run.
 //!
 //! The LLAMA rows run through the bulk-traversal engine
 //! (`view::transform_simd` / `view::for_each`): the acceptance bar is the
 //! "LLAMA" SoA rows matching the "manual" SoA rows.
 //!
 //! Run: `cargo bench --bench fig3_nbody [-- N]`  (default N=16384 like the
-//! paper's CPU plot; LLAMA_BENCH_SMOKE=1 shrinks to a smoke run)
+//! paper's CPU plot; LLAMA_BENCH_SMOKE=1 shrinks to a smoke run;
+//! LLAMA_THREADS overrides the parallel rows' worker count, default 4;
+//! LLAMA_BENCH_JSON=<dir> writes BENCH_fig3.json)
 
 use llama::bench::{black_box, smoke, Bencher};
 use llama::nbody::{init_particles, manual, views};
@@ -23,10 +29,11 @@ fn main() {
         std::env::args().skip(1).find(|a| !a.starts_with('-')).and_then(|a| a.parse().ok());
     let fast = smoke();
     let n = arg_n.unwrap_or(if fast { 2048 } else { 16384 });
+    let par_threads = llama::shard::thread_count_or(4);
     let init = init_particles(n, 42);
     let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
 
-    println!("Figure 3 reproduction: n-body, n={n}, single thread\n");
+    println!("Figure 3 reproduction: n-body, n={n}, serial + {par_threads}-thread rows\n");
 
     // ---------------- update step (compute-bound) ----------------
     {
@@ -108,10 +115,32 @@ fn main() {
         });
     }
 
+    // Sharded parallel rows: the same SIMD-8 kernel fanned out over
+    // `par_threads` workers (bit-identical to the serial rows above).
+    {
+        let mut v = views::make_aos_view(&init);
+        b.bench(&format!("update AoS    LLAMA  SIMD8 {par_threads}T"), n as u64, || {
+            views::update_simd_par::<8, _, _>(&mut v, par_threads);
+        });
+    }
+    {
+        let mut v = views::make_soa_view(&init);
+        b.bench(&format!("update SoA-MB LLAMA  SIMD8 {par_threads}T"), n as u64, || {
+            views::update_simd_par::<8, _, _>(&mut v, par_threads);
+        });
+    }
+    {
+        let mut v = views::make_aosoa_view(&init);
+        b.bench(&format!("update AoSoA8 LLAMA  SIMD8 {par_threads}T"), n as u64, || {
+            views::update_simd_par::<8, _, _>(&mut v, par_threads);
+        });
+    }
+
     println!(
         "{}",
         b.render_table("update step (runtime per particle)", Some("update AoS    manual scalar"))
     );
+    let b_update = b;
 
     // ---------------- move step (memory-bound) ----------------
     // More reps per sample: a single move pass is microseconds.
@@ -157,8 +186,41 @@ fn main() {
         views::move_simd::<8, _, _>(v)
     });
 
+    // Parallel move rows: the memory-bound step rarely profits as much as
+    // update, which is itself a finding worth recording in the trajectory.
+    bench_move!(
+        &format!("move AoS    LLAMA  SIMD8 {par_threads}T"),
+        views::make_aos_view(&init),
+        |v: &mut _| views::move_simd_par::<8, _, _>(v, par_threads)
+    );
+    bench_move!(
+        &format!("move SoA-MB LLAMA  SIMD8 {par_threads}T"),
+        views::make_soa_view(&init),
+        |v: &mut _| views::move_simd_par::<8, _, _>(v, par_threads)
+    );
+    bench_move!(
+        &format!("move AoSoA8 LLAMA  SIMD8 {par_threads}T"),
+        views::make_aosoa_view(&init),
+        |v: &mut _| views::move_simd_par::<8, _, _>(v, par_threads)
+    );
+
     println!(
         "{}",
         b.render_table("move step (runtime per particle)", Some("move AoS    manual scalar"))
     );
+
+    // Machine-readable perf trajectory (uploaded as a CI artifact).
+    let written = llama::bench::emit_json(
+        "fig3",
+        &[
+            ("n", n.to_string()),
+            ("threads", par_threads.to_string()),
+            ("smoke", (fast as u8).to_string()),
+        ],
+        &[("update", &b_update), ("move", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
+    if let Some(path) = written {
+        println!("perf trajectory written to {}", path.display());
+    }
 }

@@ -99,4 +99,7 @@ fn main() {
         7,
         payload
     );
+
+    llama::bench::emit_json("instrumentation", &[("n", n.to_string())], &[("runtime", &b)])
+        .expect("writing LLAMA_BENCH_JSON output");
 }

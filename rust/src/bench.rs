@@ -5,7 +5,13 @@
 //! median and median-absolute-deviation. Benches are `harness = false`
 //! binaries under `rust/benches/` using [`Bencher`] and printing aligned
 //! tables that mirror the paper's figures (see EXPERIMENTS.md).
+//!
+//! Besides the human tables, every bench emits a machine-readable perf
+//! trajectory when `LLAMA_BENCH_JSON=<dir>` is set ([`emit_json`]): one
+//! `BENCH_<tag>.json` per bench binary, uploaded as a CI artifact so
+//! regressions are diffable across commits.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// Prevent the optimizer from discarding a computed value.
@@ -144,6 +150,93 @@ impl Bencher {
     }
 }
 
+/// Write the measurements of one bench binary as `BENCH_<tag>.json` under
+/// the directory named by `LLAMA_BENCH_JSON` (created if missing).
+///
+/// Returns `Ok(None)` when the variable is unset — the benches call this
+/// unconditionally and only CI (or a curious user) pays the I/O. `meta`
+/// carries run parameters (problem size, thread count); `groups` one
+/// entry per [`Bencher`] (e.g. the update and move tables of Figure 3).
+///
+/// Schema (`"schema": 1`):
+/// `{bench, schema, meta: {k: v}, groups: [{name, measurements: [{name,
+/// median_ns, mad_ns, samples, items, ns_per_item}]}]}`.
+pub fn emit_json(
+    tag: &str,
+    meta: &[(&str, String)],
+    groups: &[(&str, &Bencher)],
+) -> std::io::Result<Option<PathBuf>> {
+    let Some(dir) = std::env::var_os("LLAMA_BENCH_JSON") else {
+        return Ok(None);
+    };
+    emit_json_to(&PathBuf::from(dir), tag, meta, groups).map(Some)
+}
+
+/// The engine behind [`emit_json`]: write `BENCH_<tag>.json` into `dir`
+/// (created if missing), regardless of the environment.
+pub fn emit_json_to(
+    dir: &Path,
+    tag: &str,
+    meta: &[(&str, String)],
+    groups: &[(&str, &Bencher)],
+) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("BENCH_{tag}.json"));
+
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"bench\": {},\n", json_str(tag)));
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"meta\": {");
+    for (i, (k, v)) in meta.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("{}: {}", json_str(k), json_str(v)));
+    }
+    out.push_str("},\n");
+    out.push_str("  \"groups\": [\n");
+    for (gi, (name, bencher)) in groups.iter().enumerate() {
+        out.push_str(&format!("    {{\"name\": {}, \"measurements\": [\n", json_str(name)));
+        let ms = bencher.results();
+        for (mi, m) in ms.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"name\": {}, \"median_ns\": {}, \"mad_ns\": {}, \
+                 \"samples\": {}, \"items\": {}, \"ns_per_item\": {:.4}}}{}\n",
+                json_str(&m.name),
+                m.median.as_nanos(),
+                m.mad.as_nanos(),
+                m.samples,
+                m.items,
+                m.ns_per_item(),
+                if mi + 1 < ms.len() { "," } else { "" },
+            ));
+        }
+        out.push_str(&format!("    ]}}{}\n", if gi + 1 < groups.len() { "," } else { "" }));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+/// Minimal JSON string encoding (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Human-readable duration (ns/µs/ms/s).
 pub fn format_duration(d: Duration) -> String {
     let ns = d.as_nanos();
@@ -191,5 +284,41 @@ mod tests {
         assert_eq!(format_duration(Duration::from_nanos(500)), "500ns");
         assert_eq!(format_duration(Duration::from_micros(1500)), "1.50ms");
         assert!(format_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(super::json_str("plain"), "\"plain\"");
+        assert_eq!(super::json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(super::json_str("x\ny"), "\"x\\ny\"");
+    }
+
+    #[test]
+    fn emit_json_writes_all_measurements() {
+        // emit_json_to is exercised directly: mutating the process
+        // environment from a multithreaded test harness is not safe.
+        let dir = std::env::temp_dir().join(format!("llama-bench-json-{}", std::process::id()));
+        let mut b = Bencher::new(0, 3);
+        b.bench("fast op", 10, || {});
+        b.bench("slow \"op\"", 20, || std::thread::sleep(Duration::from_micros(5)));
+        let path = emit_json_to(&dir, "selftest", &[("n", "10".to_string())], &[("g1", &b)])
+            .expect("write");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+        assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_selftest.json");
+        assert!(text.contains("\"bench\": \"selftest\""));
+        assert!(text.contains("\"schema\": 1"));
+        assert!(text.contains("\"n\": \"10\""));
+        assert!(text.contains("\"fast op\""));
+        assert!(text.contains("\"slow \\\"op\\\"\""));
+        assert!(text.contains("\"items\": 20"));
+        // Balanced braces/brackets — a cheap well-formedness check given
+        // the offline image has no JSON parser crate.
+        let bal = |open: char, close: char| {
+            text.chars().filter(|&c| c == open).count()
+                == text.chars().filter(|&c| c == close).count()
+        };
+        assert!(bal('{', '}') && bal('[', ']'));
     }
 }

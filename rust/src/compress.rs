@@ -220,7 +220,8 @@ mod tests {
     #[test]
     fn zeros_compress_better_than_noise() {
         let zeros = vec![0u8; 8192];
-        let noise: Vec<u8> = (0..8192u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect();
+        let noise: Vec<u8> =
+            (0..8192u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect();
         for codec in Codec::enabled() {
             let cz = codec.compress(&zeros).unwrap().len();
             let cn = codec.compress(&noise).unwrap().len();

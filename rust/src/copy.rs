@@ -51,9 +51,11 @@ where
     assert_eq!(n, dst.count(), "copy_view: extents differ");
 
     // Strategy 1: identical layouts -> blob memcpy.
-    if src.mapping().fingerprint() == dst.mapping().fingerprint() && MS::BLOB_COUNT == MD::BLOB_COUNT
+    if src.mapping().fingerprint() == dst.mapping().fingerprint()
+        && MS::BLOB_COUNT == MD::BLOB_COUNT
     {
-        let blob_sizes: Vec<usize> = (0..MS::BLOB_COUNT).map(|b| src.mapping().blob_size(b)).collect();
+        let blob_sizes: Vec<usize> =
+            (0..MS::BLOB_COUNT).map(|b| src.mapping().blob_size(b)).collect();
         for (b, size) in blob_sizes.into_iter().enumerate() {
             let s = src.storage().blob(b);
             let d = dst.storage_mut().blob_mut(b);

@@ -38,7 +38,9 @@ use std::fmt::Debug;
 /// An integral type usable for index arithmetic (paper §2: "LLAMA now
 /// allows to specify the data type which should be used in all indexing
 /// computations").
-pub trait IndexType: Copy + Default + PartialEq + Eq + PartialOrd + Ord + Debug + Send + Sync + 'static {
+pub trait IndexType:
+    Copy + Default + PartialEq + Eq + PartialOrd + Ord + Debug + Send + Sync + 'static
+{
     /// Human-readable name for reports.
     const NAME: &'static str;
     /// Widen to `usize` (always lossless for valid indices).

@@ -48,6 +48,25 @@
 //!     c.store(particle::mass, m + m);
 //! });
 //! assert_eq!(view.get::<f32>(&[7], particle::mass), 14.0);
+//!
+//! // ...and fan either traversal out over threads (`LLAMA_THREADS`, or
+//! // all cores): the mapping's `shard_bounds` proof splits the view into
+//! // disjoint shards, falling back to the serial engine when it can't.
+//! view.par_for_each(|r| {
+//!     let m: f32 = r.get(particle::mass);
+//!     r.set(particle::mass, m + 1.0);
+//! });
+//! // The chunk variant is `unsafe`: `Chunk::get`/`set` can reach other
+//! // shards' records, so the kernel must not touch bytes another shard
+//! // stores (this one only uses its own chunk — see `shard`).
+//! // SAFETY: the kernel touches only its own chunk's records.
+//! unsafe {
+//!     view.par_transform_simd::<4, _>(|c| {
+//!         let m: Simd<f32, 4> = c.load(particle::mass);
+//!         c.store(particle::mass, m - Simd::splat(1.0));
+//!     });
+//! }
+//! assert_eq!(view.get::<f32>(&[7], particle::mass), 14.0);
 //! ```
 //!
 //! The crate layers (paper section → module):
@@ -57,7 +76,9 @@
 //! - §5 explicit SIMD → [`simd`], and the layout-aware bulk-traversal
 //!   engine → [`view::View::for_each`], [`view::View::transform_simd`],
 //!   [`mapping::Mapping::contiguous_run`] (which also powers the
-//!   run-based [`copy`] strategy)
+//!   run-based [`copy`] strategy), with the multithreaded sharded layer
+//!   → [`shard`] ([`mapping::Mapping::shard_bounds`],
+//!   `View::par_for_each`, `View::par_transform_simd`)
 //! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
 //! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
 //!   (PJRT behind the `pjrt` cargo feature)
@@ -72,13 +93,16 @@ pub mod mapping;
 pub mod nbody;
 pub mod record;
 pub mod runtime;
+pub mod shard;
 pub mod simd;
 pub mod testing;
 pub mod view;
 
 /// Convenience re-exports covering the common 90% of the API.
 pub mod prelude {
-    pub use crate::blob::{alloc_view, AlignedAlloc, ArrayStorage, BlobAlloc, BlobStorage, HeapAlloc};
+    pub use crate::blob::{
+        alloc_view, AlignedAlloc, ArrayStorage, BlobAlloc, BlobStorage, HeapAlloc,
+    };
     pub use crate::extents::{ColMajor, Dyn, Extent, Extents, Fix, Linearizer, Morton, RowMajor};
     pub use crate::mapping::aos::{AoS, FieldOrder, Packed};
     pub use crate::mapping::aosoa::AoSoA;
@@ -96,6 +120,7 @@ pub mod prelude {
         FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess,
     };
     pub use crate::record::{Bf16, Field, RecordDim, Scalar, ScalarType, Selection, F16};
+    pub use crate::shard::{thread_count, thread_count_or, ShardCursor, ViewShards};
     pub use crate::simd::{Simd, SimdElem};
-    pub use crate::view::{RecordRef, RecordRefMut, View};
+    pub use crate::view::{Chunk, RecordRef, RecordRefMut, View};
 }

@@ -240,6 +240,15 @@ impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64> M
             (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
         )
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // Every record owns the disjoint byte range
+        // `[lin * RECORD_SIZE, (lin + 1) * RECORD_SIZE)`, so any partition
+        // of the index space is byte-disjoint (under any linearizer: it is
+        // a bijection into the same per-record slots).
+        Some(lin)
+    }
 }
 
 impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64> PhysicalMapping<R>

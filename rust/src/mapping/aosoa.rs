@@ -11,6 +11,7 @@ use std::marker::PhantomData;
 
 use crate::blob::BlobStorage;
 use crate::extents::{Extents, Linearizer, RowMajor};
+use crate::mapping::aos::{offsets_of, record_size_of, FieldOrderKind};
 use crate::mapping::soa::{default_load_simd, default_store_simd};
 use crate::mapping::{FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
 use crate::record::{RecordDim, Scalar};
@@ -41,12 +42,11 @@ impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u6
     }
 
     /// Packed record size over the masked fields (constant — §Perf).
-    pub const RECORD_SIZE: usize =
-        crate::mapping::aos::record_size_of(crate::mapping::aos::FieldOrderKind::Packed, R::FIELDS, MASK);
+    pub const RECORD_SIZE: usize = record_size_of(FieldOrderKind::Packed, R::FIELDS, MASK);
 
     /// Packed in-record offsets over the masked fields (constant LUT).
     pub const OFFSETS: [usize; crate::record::MAX_FIELDS] =
-        crate::mapping::aos::offsets_of(crate::mapping::aos::FieldOrderKind::Packed, R::FIELDS, MASK);
+        offsets_of(FieldOrderKind::Packed, R::FIELDS, MASK);
 
     /// Per-field scalar sizes (constant LUT).
     pub const SIZES: [usize; crate::record::MAX_FIELDS] = crate::record::size_lut(R::FIELDS);
@@ -107,6 +107,13 @@ impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u6
             + Self::OFFSETS[field] * LANES
             + lane * Self::SIZES[field];
         Some(FieldRun { blob: 0, offset, len: (LANES - lane).min(n - lin) })
+    }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // Each record owns its disjoint lane slots inside its block, so
+        // splitting is safe even mid-block — no rounding to LANES needed.
+        Some(lin)
     }
 }
 

@@ -215,6 +215,16 @@ impl<R: RecordDim, E: Extents, const EXP: u32, const MAN: u32, L: Linearizer> Ma
     fn fingerprint(&self) -> String {
         format!("BitpackFloatSoA<{},e{EXP}m{MAN},{}>", R::NAME, L::NAME)
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // Same argument as `BitpackIntSoA`: byte-aligned splits of the
+        // packed stream are disjoint under the row-major linearizer.
+        if !L::LAST_DIM_CONTIGUOUS {
+            return None;
+        }
+        Some(crate::mapping::bitpack_int::byte_aligned_shard_bound(lin, Self::VALUE_BITS))
+    }
 }
 
 impl<R: RecordDim, E: Extents, const EXP: u32, const MAN: u32, L: Linearizer> MemoryAccess<R>

@@ -25,19 +25,24 @@ use crate::record::{RecordDim, Scalar};
 
 /// Read `nbits` (1..=64) starting at absolute bit offset `bit` from a
 /// little-endian byte buffer.
+///
+/// Touches exactly the bytes containing the value's bits (up to 9 when a
+/// shifted 64-bit value spills) — the parallel sharded traversal relies on
+/// this window staying inside a byte-aligned shard
+/// ([`crate::mapping::Mapping::shard_bounds`]).
 #[inline(always)]
 pub fn read_bits(blob: &[u8], bit: usize, nbits: u32) -> u64 {
     debug_assert!(nbits >= 1 && nbits <= 64);
     let byte = bit / 8;
     let shift = (bit % 8) as u32;
-    // Read up to 16 bytes to cover any 64-bit span crossing a byte boundary.
+    let covered = ((shift + nbits) as usize).div_ceil(8);
     let mut lo = [0u8; 8];
     let avail = blob.len() - byte;
-    let n = avail.min(8);
+    let n = avail.min(covered).min(8);
     lo[..n].copy_from_slice(&blob[byte..byte + n]);
     let lo = u64::from_le_bytes(lo);
     let mut v = lo >> shift;
-    if shift != 0 && byte + 8 < blob.len() {
+    if shift + nbits > 64 && byte + 8 < blob.len() {
         let hi = blob[byte + 8] as u64;
         v |= hi << (64 - shift);
     }
@@ -49,7 +54,9 @@ pub fn read_bits(blob: &[u8], bit: usize, nbits: u32) -> u64 {
 }
 
 /// Write the low `nbits` of `value` at absolute bit offset `bit` into a
-/// little-endian byte buffer (read-modify-write on the covered bytes).
+/// little-endian byte buffer (read-modify-write on exactly the bytes
+/// containing the value's bits — see [`read_bits`] for why the window is
+/// exact).
 #[inline(always)]
 pub fn write_bits(blob: &mut [u8], bit: usize, nbits: u32, value: u64) {
     debug_assert!(nbits >= 1 && nbits <= 64);
@@ -57,10 +64,11 @@ pub fn write_bits(blob: &mut [u8], bit: usize, nbits: u32, value: u64) {
     let value = value & mask;
     let byte = bit / 8;
     let shift = (bit % 8) as u32;
+    let covered = ((shift + nbits) as usize).div_ceil(8);
 
     let mut lo = [0u8; 8];
     let avail = blob.len() - byte;
-    let n = avail.min(8);
+    let n = avail.min(covered).min(8);
     lo[..n].copy_from_slice(&blob[byte..byte + n]);
     let mut lo64 = u64::from_le_bytes(lo);
     lo64 = (lo64 & !(mask << shift)) | (value << shift);
@@ -89,6 +97,22 @@ pub fn sign_extend(v: u64, nbits: u32) -> i128 {
     } else {
         v as i128
     }
+}
+
+/// Largest `b <= lin` such that a split at value index `b` falls on a byte
+/// boundary of the packed stream (`b * bits % 8 == 0`) — the shard-safety
+/// granularity of the bit-packed mappings
+/// ([`crate::mapping::Mapping::shard_bounds`]).
+#[inline]
+pub fn byte_aligned_shard_bound(lin: usize, bits: u32) -> usize {
+    // b * bits ≡ 0 (mod 8)  ⇔  b is a multiple of 8 / gcd(bits, 8).
+    let g = match bits % 8 {
+        0 => 1,
+        4 => 2,
+        2 | 6 => 4,
+        _ => 8,
+    };
+    lin - lin % g
 }
 
 /// Bytes needed to bitpack `count` values of `bits` each, padded so any
@@ -167,6 +191,19 @@ impl<R: RecordDim, E: Extents, const BITS: u32, L: Linearizer> Mapping<R>
             (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
         )
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // Adjacent values share bytes; a byte-aligned split point makes
+        // the two halves of the packed stream disjoint (the bit helpers
+        // touch exactly the bytes containing a value's bits). Only the
+        // row-major linearizer turns outermost-dimension shards into the
+        // contiguous stream halves this argument needs.
+        if !L::LAST_DIM_CONTIGUOUS {
+            return None;
+        }
+        Some(byte_aligned_shard_bound(lin, BITS))
+    }
 }
 
 impl<R: RecordDim, E: Extents, const BITS: u32, L: Linearizer> MemoryAccess<R>
@@ -243,6 +280,15 @@ impl<R: RecordDim, E: Extents, L: Linearizer> Mapping<R> for BitpackIntSoADyn<R,
     fn fingerprint(&self) -> String {
         format!("BitpackIntSoADyn<{},{},{}>", R::NAME, self.bits, L::NAME)
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // See `BitpackIntSoA::shard_bounds`.
+        if !L::LAST_DIM_CONTIGUOUS {
+            return None;
+        }
+        Some(byte_aligned_shard_bound(lin, self.bits))
+    }
 }
 
 impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for BitpackIntSoADyn<R, E, L> {
@@ -260,7 +306,8 @@ impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for BitpackIntSoAD
     #[inline(always)]
     fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
         let lin = L::linearize(&self.extents, idx);
-        write_bits(storage.blob_mut(field), lin * self.bits as usize, self.bits, v.as_i128() as u64);
+        let raw = v.as_i128() as u64;
+        write_bits(storage.blob_mut(field), lin * self.bits as usize, self.bits, raw);
     }
 }
 

@@ -70,6 +70,13 @@ impl<R: RecordDim, E: Extents, L: Linearizer> Mapping<R> for Bytesplit<R, E, L> 
             (0..E::RANK).map(|d| self.extents.extent(d)).collect::<Vec<_>>()
         )
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // Byte `b` of record `lin` lives at the unique offset `b * n + lin`
+        // of its field blob: records never share bytes, any split is safe.
+        Some(lin)
+    }
 }
 
 impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for Bytesplit<R, E, L> {

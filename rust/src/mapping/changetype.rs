@@ -83,6 +83,12 @@ impl<R: RecordDim, RS: RecordDim, M: MemoryAccess<RS>> Mapping<R> for ChangeType
     fn fingerprint(&self) -> String {
         format!("ChangeType<{}->{}|{}>", R::NAME, RS::NAME, self.inner.fingerprint())
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // Type conversion is stateless; safety is the inner layout's.
+        self.inner.shard_bounds(lin)
+    }
 }
 
 /// Dispatch a typed inner load on the storage scalar type and convert to `T`.

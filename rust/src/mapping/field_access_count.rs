@@ -131,6 +131,13 @@ impl<R: RecordDim, M: MemoryAccess<R>> Mapping<R> for FieldAccessCount<R, M> {
         // mapping (copy fast paths remain valid).
         self.inner.fingerprint()
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // The per-field counters are atomic (increments from concurrent
+        // shards commute), so safety is the inner layout's.
+        self.inner.shard_bounds(lin)
+    }
 }
 
 impl<R: RecordDim, M: MemoryAccess<R>> MemoryAccess<R> for FieldAccessCount<R, M> {

@@ -140,6 +140,14 @@ impl<R: RecordDim, M: PhysicalMapping<R> + MemoryAccess<R>, const GRANULARITY: u
     fn fingerprint(&self) -> String {
         self.inner.fingerprint()
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // The granule counters are atomic (shards may hit the same granule
+        // concurrently; increments commute), so safety is the inner
+        // layout's byte-disjointness.
+        self.inner.shard_bounds(lin)
+    }
 }
 
 impl<R: RecordDim, M: PhysicalMapping<R> + MemoryAccess<R>, const GRANULARITY: usize>

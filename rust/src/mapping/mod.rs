@@ -132,6 +132,45 @@ pub trait Mapping<R: RecordDim>: Clone + Send + Sync {
         let _ = (lin, field);
         None
     }
+
+    /// Largest record index `b <= lin` at which the row-major traversal
+    /// order may be split for concurrent access, or `None` if this mapping
+    /// cannot prove any split safe.
+    ///
+    /// This is the safety proof carried by the parallel sharded traversal
+    /// ([`crate::shard::ViewShards`]), analogous to how [`contiguous_run`]
+    /// carries the vectorization proof: `Some(b)` asserts that every
+    /// storage byte written through records with traversal position `< b`
+    /// is disjoint from every byte *touched* through records `>= b` (and
+    /// vice versa), and that any side-effect state shared across the split
+    /// (instrumentation counters) is thread-safe. `lin` is always an
+    /// outermost-dimension row boundary times the inner-row record count;
+    /// the splitter re-validates after rounding, so implementations may
+    /// return any safe `b <= lin` (with `shard_bounds(0) == Some(0)` for
+    /// every shardable mapping).
+    ///
+    /// The conservative default refuses; mappings override with their
+    /// proof: per-record byte disjointness lets the physical layouts and
+    /// `Bytesplit` accept any boundary, the bit-packed layouts round down
+    /// to a byte-aligned value boundary, wrappers delegate, and `One`
+    /// (all indices alias one record) keeps the default `None`.
+    ///
+    /// # Safety
+    ///
+    /// The method is `unsafe` because the *implementation* carries an
+    /// obligation (like `GlobalAlloc`): the parallel engine trusts a
+    /// `Some(b)` for memory safety, so an override that asserts
+    /// disjointness a layout does not have makes safe callers race.
+    /// Callers have no preconditions. Only override with a boundary you
+    /// can prove disjoint; when in doubt keep the default `None` (the
+    /// engine then traverses serially).
+    ///
+    /// [`contiguous_run`]: Mapping::contiguous_run
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        let _ = lin;
+        None
+    }
 }
 
 /// A mapping whose every field location is a plain byte address

@@ -45,6 +45,12 @@ impl<R: RecordDim, E: Extents> Mapping<R> for NullMapping<R, E> {
     fn fingerprint(&self) -> String {
         format!("Null<{}>", R::NAME)
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // No storage is touched at all: any split is trivially disjoint.
+        Some(lin)
+    }
 }
 
 impl<R: RecordDim, E: Extents> MemoryAccess<R> for NullMapping<R, E> {

@@ -43,6 +43,14 @@ impl<R: RecordDim, E: Extents> Mapping<R> for One<R, E> {
     fn fingerprint(&self) -> String {
         format!("One<{}>", R::NAME)
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, _lin: usize) -> Option<usize> {
+        // Every array index aliases the same record bytes: no split of the
+        // index space is byte-disjoint. The parallel engine falls back to
+        // the serial traversal.
+        None
+    }
 }
 
 impl<R: RecordDim, E: Extents> PhysicalMapping<R> for One<R, E> {

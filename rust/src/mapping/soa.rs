@@ -54,7 +54,9 @@ pub struct SoA<R, E, B = MultiBlob, L = RowMajor, const MASK: u64 = { u64::MAX }
     _pd: PhantomData<(R, B, L)>,
 }
 
-impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> SoA<R, E, B, L, MASK> {
+impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64>
+    SoA<R, E, B, L, MASK>
+{
     /// Mapping over `extents`.
     pub fn new(extents: E) -> Self {
         SoA { extents, _pd: PhantomData }
@@ -166,6 +168,14 @@ impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> Ma
             (0, n * Self::PRE_SIZES[field] + elem)
         };
         Some(FieldRun { blob, offset, len: n - lin })
+    }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // Field `f` of record `lin` owns the disjoint byte range
+        // `[lin * size(f), (lin + 1) * size(f))` of its field array, so any
+        // partition of the index space is byte-disjoint.
+        Some(lin)
     }
 }
 
@@ -361,7 +371,8 @@ mod tests {
         assert_eq!(m.contiguous_run(10, p::mass), None);
         // SingleBlob: run starts at the field's region within blob 0.
         let sb = SoA::<P, _, SingleBlob>::new((Dyn(10u32),));
-        assert_eq!(sb.contiguous_run(3, p::pos::y), Some(FieldRun { blob: 0, offset: 104, len: 7 }));
+        let run = sb.contiguous_run(3, p::pos::y);
+        assert_eq!(run, Some(FieldRun { blob: 0, offset: 104, len: 7 }));
         // ColMajor linearization breaks contiguity.
         let cm = SoA::<P, (Dyn<u32>,), MultiBlob, crate::extents::ColMajor>::new((Dyn(10u32),));
         assert_eq!(cm.contiguous_run(0, p::mass), None);

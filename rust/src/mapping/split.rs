@@ -122,6 +122,22 @@ where
             self.second.fingerprint()
         )
     }
+
+    #[inline(always)]
+    unsafe fn shard_bounds(&self, lin: usize) -> Option<usize> {
+        // Both halves live in disjoint blobs, so a boundary is safe when
+        // both inner mappings accept it: walk down to the first fixpoint
+        // (0 is accepted by every shardable mapping, so this terminates).
+        let mut b = lin;
+        loop {
+            let b1 = self.first.shard_bounds(b)?;
+            let b2 = self.second.shard_bounds(b1)?;
+            if b2 == b {
+                return Some(b);
+            }
+            b = b2;
+        }
+    }
 }
 
 impl<R, M1, M2> MemoryAccess<R> for Split<R, M1, M2>

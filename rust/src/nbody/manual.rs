@@ -353,7 +353,9 @@ impl<const L: usize> AosoaSim<L> {
                 for bj in 0..nb {
                     let b = &self.blocks[bj];
                     for l in 0..L {
-                        pp_interaction(pix, piy, piz, b.px[l], b.py[l], b.pz[l], b.mass[l], &mut acc);
+                        pp_interaction(
+                            pix, piy, piz, b.px[l], b.py[l], b.pz[l], b.mass[l], &mut acc,
+                        );
                     }
                 }
                 let b = &mut self.blocks[bi];

@@ -14,7 +14,7 @@ use crate::blob::{alloc_view, AlignedAlloc, AlignedStorage};
 use crate::mapping::{MemoryAccess, SimdAccess};
 use crate::nbody::manual::simd_interaction;
 use crate::simd::Simd;
-use crate::view::View;
+use crate::view::{Chunk, RecordRefMut, View};
 
 /// Fill a view from shared initial conditions.
 pub fn fill_view<M, S>(view: &mut View<Particle, M, S>, init: &[ParticleData])
@@ -56,6 +56,40 @@ where
         .collect()
 }
 
+/// One chunk of the scalar update (Table 1's `N == 1` case) — the shared
+/// kernel of [`update_scalar`] and [`update_scalar_par`]. Reads `pos` and
+/// `mass` of every particle, stores only the chunk's own `vel`.
+#[inline(always)]
+fn update_scalar_chunk<M, S>(c: &mut Chunk<'_, Particle, M, S, 1>)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    let i = c.base();
+    let pix: f32 = c.get(i, particle::pos::x);
+    let piy: f32 = c.get(i, particle::pos::y);
+    let piz: f32 = c.get(i, particle::pos::z);
+    let mut acc = (0.0f32, 0.0f32, 0.0f32);
+    for j in 0..c.count() {
+        pp_interaction(
+            pix,
+            piy,
+            piz,
+            c.get(j, particle::pos::x),
+            c.get(j, particle::pos::y),
+            c.get(j, particle::pos::z),
+            c.get(j, particle::mass),
+            &mut acc,
+        );
+    }
+    let vx: f32 = c.get(i, particle::vel::x);
+    let vy: f32 = c.get(i, particle::vel::y);
+    let vz: f32 = c.get(i, particle::vel::z);
+    c.set(i, particle::vel::x, vx + acc.0);
+    c.set(i, particle::vel::y, vy + acc.1);
+    c.set(i, particle::vel::z, vz + acc.2);
+}
+
 /// Layout-generic scalar update (the original LLAMA paper's routine),
 /// expressed as a 1-lane bulk traversal — Table 1's `N == 1` case. The
 /// operation order is exactly the manual scalar loop's, so results stay
@@ -65,31 +99,41 @@ where
     M: SimdAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    view.transform_simd::<1>(|c| {
-        let i = c.base();
-        let pix: f32 = c.get(i, particle::pos::x);
-        let piy: f32 = c.get(i, particle::pos::y);
-        let piz: f32 = c.get(i, particle::pos::z);
-        let mut acc = (0.0f32, 0.0f32, 0.0f32);
-        for j in 0..c.count() {
-            pp_interaction(
-                pix,
-                piy,
-                piz,
-                c.get(j, particle::pos::x),
-                c.get(j, particle::pos::y),
-                c.get(j, particle::pos::z),
-                c.get(j, particle::mass),
-                &mut acc,
-            );
-        }
-        let vx: f32 = c.get(i, particle::vel::x);
-        let vy: f32 = c.get(i, particle::vel::y);
-        let vz: f32 = c.get(i, particle::vel::z);
-        c.set(i, particle::vel::x, vx + acc.0);
-        c.set(i, particle::vel::y, vy + acc.1);
-        c.set(i, particle::vel::z, vz + acc.2);
-    });
+    view.transform_simd::<1>(|c| update_scalar_chunk(c));
+}
+
+/// [`update_scalar`] sharded over `threads` workers. Each particle's new
+/// velocity depends only on the pre-pass state (the pass stores `vel`,
+/// the cross-shard j-loop reads only `pos`/`mass`), so results are
+/// bit-identical to the serial engine at any thread count.
+pub fn update_scalar_par<M, S>(view: &mut View<Particle, M, S>, threads: usize)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    // SAFETY: the kernel stores only its own record's `vel`; its
+    // cross-shard reads touch only `pos` and `mass`, which no shard
+    // stores during this pass.
+    unsafe { view.par_transform_simd_with::<1, _>(threads, |c| update_scalar_chunk(c)) }
+}
+
+/// One record of the scalar move — the shared kernel of [`move_scalar`]
+/// and [`move_scalar_par`]. Touches only the record's own fields.
+#[inline(always)]
+fn move_record<M, S>(r: &mut RecordRefMut<'_, Particle, M, S>)
+where
+    M: MemoryAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    let px: f32 = r.get(particle::pos::x);
+    let py: f32 = r.get(particle::pos::y);
+    let pz: f32 = r.get(particle::pos::z);
+    let vx: f32 = r.get(particle::vel::x);
+    let vy: f32 = r.get(particle::vel::y);
+    let vz: f32 = r.get(particle::vel::z);
+    r.set(particle::pos::x, px + vx * TIMESTEP);
+    r.set(particle::pos::y, py + vy * TIMESTEP);
+    r.set(particle::pos::z, pz + vz * TIMESTEP);
 }
 
 /// Layout-generic scalar move: a plain record-wise bulk traversal
@@ -99,17 +143,55 @@ where
     M: MemoryAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    view.for_each(|r| {
-        let px: f32 = r.get(particle::pos::x);
-        let py: f32 = r.get(particle::pos::y);
-        let pz: f32 = r.get(particle::pos::z);
-        let vx: f32 = r.get(particle::vel::x);
-        let vy: f32 = r.get(particle::vel::y);
-        let vz: f32 = r.get(particle::vel::z);
-        r.set(particle::pos::x, px + vx * TIMESTEP);
-        r.set(particle::pos::y, py + vy * TIMESTEP);
-        r.set(particle::pos::z, pz + vz * TIMESTEP);
-    });
+    view.for_each(|r| move_record(r));
+}
+
+/// [`move_scalar`] sharded over `threads` workers (each record only
+/// touches itself: trivially race-free and bit-identical).
+pub fn move_scalar_par<M, S>(view: &mut View<Particle, M, S>, threads: usize)
+where
+    M: MemoryAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    view.par_for_each_with(threads, |r| move_record(r));
+}
+
+/// One chunk of the SIMD update — the shared kernel of [`update_simd`]
+/// and [`update_simd_par`].
+#[inline(always)]
+fn update_chunk<const N: usize, M, S>(c: &mut Chunk<'_, Particle, M, S, N>)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    // llama::loadSimd(particleView(i), simdParticles)
+    let pix: Simd<f32, N> = c.load(particle::pos::x);
+    let piy: Simd<f32, N> = c.load(particle::pos::y);
+    let piz: Simd<f32, N> = c.load(particle::pos::z);
+    let mut ax = Simd::<f32, N>::default();
+    let mut ay = Simd::<f32, N>::default();
+    let mut az = Simd::<f32, N>::default();
+    for j in 0..c.count() {
+        simd_interaction(
+            pix,
+            piy,
+            piz,
+            Simd::splat(c.get(j, particle::pos::x)),
+            Simd::splat(c.get(j, particle::pos::y)),
+            Simd::splat(c.get(j, particle::pos::z)),
+            Simd::splat(c.get(j, particle::mass)),
+            &mut ax,
+            &mut ay,
+            &mut az,
+        );
+    }
+    // llama::storeSimd(simdParticles(tag::Vel{}), particleView(i)(tag::Vel{}))
+    let vx: Simd<f32, N> = c.load(particle::vel::x);
+    let vy: Simd<f32, N> = c.load(particle::vel::y);
+    let vz: Simd<f32, N> = c.load(particle::vel::z);
+    c.store(particle::vel::x, vx + ax);
+    c.store(particle::vel::y, vy + ay);
+    c.store(particle::vel::z, vz + az);
 }
 
 /// Layout-generic SIMD update — the Figure 2 routine through the bulk
@@ -121,36 +203,43 @@ where
     M: SimdAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    view.transform_simd::<N>(|c| {
-        // llama::loadSimd(particleView(i), simdParticles)
-        let pix: Simd<f32, N> = c.load(particle::pos::x);
-        let piy: Simd<f32, N> = c.load(particle::pos::y);
-        let piz: Simd<f32, N> = c.load(particle::pos::z);
-        let mut ax = Simd::<f32, N>::default();
-        let mut ay = Simd::<f32, N>::default();
-        let mut az = Simd::<f32, N>::default();
-        for j in 0..c.count() {
-            simd_interaction(
-                pix,
-                piy,
-                piz,
-                Simd::splat(c.get(j, particle::pos::x)),
-                Simd::splat(c.get(j, particle::pos::y)),
-                Simd::splat(c.get(j, particle::pos::z)),
-                Simd::splat(c.get(j, particle::mass)),
-                &mut ax,
-                &mut ay,
-                &mut az,
-            );
-        }
-        // llama::storeSimd(simdParticles(tag::Vel{}), particleView(i)(tag::Vel{}))
-        let vx: Simd<f32, N> = c.load(particle::vel::x);
-        let vy: Simd<f32, N> = c.load(particle::vel::y);
-        let vz: Simd<f32, N> = c.load(particle::vel::z);
-        c.store(particle::vel::x, vx + ax);
-        c.store(particle::vel::y, vy + ay);
-        c.store(particle::vel::z, vz + az);
-    });
+    view.transform_simd::<N>(|c| update_chunk(c));
+}
+
+/// [`update_simd`] sharded over `threads` workers: SIMD lanes along the
+/// particle axis, threads across shards of it — the layout × parallelism
+/// matrix from one kernel. Bit-identical to the serial engine (stores
+/// touch only the chunk's `vel`; cross-shard reads touch only `pos` and
+/// `mass`, which the pass never writes).
+pub fn update_simd_par<const N: usize, M, S>(view: &mut View<Particle, M, S>, threads: usize)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    // SAFETY: the kernel stores only its own chunk's `vel` lanes; its
+    // cross-shard reads touch only `pos` and `mass`, which no shard
+    // stores during this pass.
+    unsafe { view.par_transform_simd_with::<N, _>(threads, |c| update_chunk(c)) }
+}
+
+/// One chunk of the SIMD move — the shared kernel of [`move_simd`] and
+/// [`move_simd_par`].
+#[inline(always)]
+fn move_chunk<const N: usize, M, S>(c: &mut Chunk<'_, Particle, M, S, N>)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    let dt = Simd::<f32, N>::splat(TIMESTEP);
+    let px: Simd<f32, N> = c.load(particle::pos::x);
+    let py: Simd<f32, N> = c.load(particle::pos::y);
+    let pz: Simd<f32, N> = c.load(particle::pos::z);
+    let vx: Simd<f32, N> = c.load(particle::vel::x);
+    let vy: Simd<f32, N> = c.load(particle::vel::y);
+    let vz: Simd<f32, N> = c.load(particle::vel::z);
+    c.store(particle::pos::x, px + vx * dt);
+    c.store(particle::pos::y, py + vy * dt);
+    c.store(particle::pos::z, pz + vz * dt);
 }
 
 /// Layout-generic SIMD move through the bulk engine.
@@ -159,18 +248,18 @@ where
     M: SimdAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    let dt = Simd::<f32, N>::splat(TIMESTEP);
-    view.transform_simd::<N>(|c| {
-        let px: Simd<f32, N> = c.load(particle::pos::x);
-        let py: Simd<f32, N> = c.load(particle::pos::y);
-        let pz: Simd<f32, N> = c.load(particle::pos::z);
-        let vx: Simd<f32, N> = c.load(particle::vel::x);
-        let vy: Simd<f32, N> = c.load(particle::vel::y);
-        let vz: Simd<f32, N> = c.load(particle::vel::z);
-        c.store(particle::pos::x, px + vx * dt);
-        c.store(particle::pos::y, py + vy * dt);
-        c.store(particle::pos::z, pz + vz * dt);
-    });
+    view.transform_simd::<N>(|c| move_chunk(c));
+}
+
+/// [`move_simd`] sharded over `threads` workers (chunks only touch their
+/// own records: trivially race-free and bit-identical).
+pub fn move_simd_par<const N: usize, M, S>(view: &mut View<Particle, M, S>, threads: usize)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    // SAFETY: the kernel loads and stores only its own chunk's records.
+    unsafe { view.par_transform_simd_with::<N, _>(threads, |c| move_chunk(c)) }
 }
 
 /// The rank-1 u32-indexed extents used by all Figure-3 views
@@ -186,7 +275,8 @@ pub type AosoaMap = crate::mapping::aosoa::AoSoA<Particle, Ext1, 8>;
 
 /// Allocate + fill an AoS view (cache-line aligned, like the manual Vec).
 pub fn make_aos_view(init: &[ParticleData]) -> View<Particle, AosMap, AlignedStorage> {
-    let mut v = alloc_view(AosMap::new((crate::extents::Dyn(init.len() as u32),)), &AlignedAlloc::<64>);
+    let mut v =
+        alloc_view(AosMap::new((crate::extents::Dyn(init.len() as u32),)), &AlignedAlloc::<64>);
     fill_view(&mut v, init);
     v
 }
@@ -295,5 +385,60 @@ mod tests {
             move_simd::<8, _, _>(&mut soa);
         }
         assert!(max_pos_delta(&r, &snapshot_view(&soa)) < 1e-4);
+    }
+
+    #[test]
+    fn parallel_simd_bit_identical_to_serial_all_layouts() {
+        // n deliberately not divisible by the lane count or any thread
+        // count: exercises the SIMD tail and ragged shard boundaries.
+        let n = 101;
+        let init = init_particles(n, 13);
+
+        macro_rules! check_layout {
+            ($make:ident) => {{
+                let mut serial = $make(&init);
+                for _ in 0..STEPS {
+                    update_simd::<8, _, _>(&mut serial);
+                    move_simd::<8, _, _>(&mut serial);
+                }
+                let reference = snapshot_view(&serial);
+                for threads in [1usize, 2, 3, 4] {
+                    let mut par = $make(&init);
+                    for _ in 0..STEPS {
+                        update_simd_par::<8, _, _>(&mut par, threads);
+                        move_simd_par::<8, _, _>(&mut par, threads);
+                    }
+                    assert_eq!(
+                        max_pos_delta(&reference, &snapshot_view(&par)),
+                        0.0,
+                        "{} threads",
+                        threads
+                    );
+                }
+            }};
+        }
+        check_layout!(make_aos_view);
+        check_layout!(make_soa_view);
+        check_layout!(make_aosoa_view);
+    }
+
+    #[test]
+    fn parallel_scalar_bit_identical_to_serial() {
+        let n = 67;
+        let init = init_particles(n, 5);
+        let mut serial = make_soa_view(&init);
+        for _ in 0..STEPS {
+            update_scalar(&mut serial);
+            move_scalar(&mut serial);
+        }
+        let reference = snapshot_view(&serial);
+        for threads in [2usize, 4, 7] {
+            let mut par = make_soa_view(&init);
+            for _ in 0..STEPS {
+                update_scalar_par(&mut par, threads);
+                move_scalar_par(&mut par, threads);
+            }
+            assert_eq!(max_pos_delta(&reference, &snapshot_view(&par)), 0.0);
+        }
     }
 }

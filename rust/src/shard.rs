@@ -1,0 +1,494 @@
+//! Multithreaded sharded traversal: the parallel layer of the bulk engine.
+//!
+//! # Parallel traversal
+//!
+//! [`ViewShards`] partitions a `&mut View` along the **outermost** array
+//! extent into disjoint [`ShardCursor`]s; [`View::par_for_each`] and
+//! [`View::par_transform_simd`] fan those cursors out over
+//! `std::thread::scope` workers. This drives the hardware the way the
+//! paper's evaluation does (and "LLAMA: The Low-Level Abstraction For
+//! Memory Access" benchmarks as the layout × parallelism matrix): vector
+//! units on the innermost dimension, cores across the outer one.
+//!
+//! The worker count comes from the `LLAMA_THREADS` environment variable
+//! (a positive integer), defaulting to `available_parallelism`
+//! ([`thread_count`]).
+//!
+//! ## Why this is safe — the `shard_bounds` proof
+//!
+//! Handing several threads mutable access to one view is only sound if
+//! their accesses touch disjoint storage bytes. That is a property of the
+//! *mapping*, not the view: AoS/SoA/AoSoA/Bytesplit give every record
+//! private byte slots (any partition works), the bit-packed mappings share
+//! bytes between adjacent values (boundaries must be byte-aligned in the
+//! packed stream), `One` aliases every index to the same record (no
+//! partition works), and the instrumented wrappers count through atomics
+//! (sharing counters is fine, the payload rule is the inner mapping's).
+//! Each mapping encodes this in [`Mapping::shard_bounds`] — the sharding
+//! analogue of `Mapping::contiguous_run` — and the splitter queries and
+//! re-validates every proposed boundary, falling back to the serial
+//! engine (`None` from [`ViewShards::split`]) when no safe multi-shard
+//! partition exists.
+//!
+//! Traversal order within a shard is exactly the serial engine's
+//! row-major order, and `par_transform_simd` additionally aligns rank-1
+//! shard boundaries to the lane count so every worker sees the same chunk
+//! pattern as the serial walk. A kernel whose per-record result depends
+//! only on the pre-pass state (the n-body update/move kernels) therefore
+//! produces **bit-identical** results at any thread count.
+//!
+//! ## Safety split: `par_for_each` is safe, `par_transform_simd` is not
+//!
+//! `par_for_each` hands the kernel a `RecordRefMut` that can only touch
+//! its own record — within a shard by construction — so no safe closure
+//! can express a cross-shard access and the entry point is a safe fn.
+//! `par_transform_simd` hands out a [`Chunk`], whose [`Chunk::get`] /
+//! [`Chunk::set`] reach *any* record of the view (the n-body j-loop
+//! depends on this); a closure could therefore race with another shard's
+//! stores. The parallel chunk entry points are `unsafe fn` with exactly
+//! that contract: bytes stored by one shard must not be concurrently
+//! read or written through another shard's whole-view accessors —
+//! restrict cross-shard access to fields the pass never stores (the
+//! n-body j-loop reads `pos`/`mass` while storing only `vel`).
+//!
+//! ## Aliasing-model caveat
+//!
+//! Internally every worker reconstitutes `&mut View` from one shared
+//! raw pointer. All *actual* loads and stores are byte-disjoint (that is
+//! the `shard_bounds` proof), so no two threads ever touch the same
+//! memory and the generated code contains no overlapping access that
+//! LLVM's `noalias` could act on. Formal aliasing checkers are stricter:
+//! Miri (Stacked/Tree Borrows) flags the overlapping exclusive
+//! reborrows themselves. Making the engine checker-clean needs a
+//! storage-level raw-access path instead of per-thread `&mut View`
+//! (ROADMAP open item).
+
+use std::marker::PhantomData;
+
+use crate::blob::BlobStorage;
+use crate::extents::Extents;
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::RecordDim;
+use crate::view::{Chunk, RecordRefMut, View};
+
+/// Worker threads for the parallel traversals: `LLAMA_THREADS` (a
+/// positive integer) if set and valid, otherwise
+/// `std::thread::available_parallelism()` (1 if that is unavailable).
+pub fn thread_count() -> usize {
+    thread_count_or(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Like [`thread_count`], but with an explicit fallback instead of
+/// `available_parallelism` when `LLAMA_THREADS` is unset or invalid
+/// (used by the benches, which default their parallel rows to 4).
+pub fn thread_count_or(default: usize) -> usize {
+    let env = std::env::var("LLAMA_THREADS").ok();
+    parse_thread_count(env.as_deref()).unwrap_or(default)
+}
+
+/// Parse an `LLAMA_THREADS` value: a positive integer, anything else is
+/// rejected (kept separate from the environment so it is testable
+/// without process-global `setenv`, which is not thread-safe).
+fn parse_thread_count(s: Option<&str>) -> Option<usize> {
+    s.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// A partition of a `&mut View` into disjoint shards along the outermost
+/// array extent, each accessible through a [`ShardCursor`].
+///
+/// Construction ([`split`](ViewShards::split)) carries the safety proof:
+/// every boundary is validated by the mapping's
+/// [`shard_bounds`](Mapping::shard_bounds) hook. `None` means "traverse
+/// serially" — the mapping refused (e.g. [`crate::mapping::one::One`]),
+/// the view is empty, or fewer than two shards fit.
+pub struct ViewShards<'v, R, M, S> {
+    view: *mut View<R, M, S>,
+    /// Outermost-dimension boundaries: shard `k` spans
+    /// `bounds[k]..bounds[k + 1]`; strictly increasing, first 0, last the
+    /// outer extent.
+    bounds: Vec<usize>,
+    _pd: PhantomData<&'v mut View<R, M, S>>,
+}
+
+impl<'v, R, M, S> ViewShards<'v, R, M, S>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    /// Split `view` into (at most) `shards` disjoint shards.
+    pub fn split(view: &'v mut View<R, M, S>, shards: usize) -> Option<Self> {
+        Self::split_aligned(view, shards, 1)
+    }
+
+    /// Like [`split`](ViewShards::split), but keep every boundary a
+    /// multiple of `align` outer rows (used by `par_transform_simd` on
+    /// rank-1 views to preserve the serial chunk pattern).
+    pub fn split_aligned(view: &'v mut View<R, M, S>, shards: usize, align: usize) -> Option<Self> {
+        let align = align.max(1);
+        let rank = <M::Extents as Extents>::RANK;
+        let e = *view.extents();
+        let outer = e.extent(0);
+        let mut inner = 1usize;
+        for d in 1..rank {
+            inner *= e.extent(d);
+        }
+        if shards <= 1 || outer == 0 || inner == 0 {
+            return None;
+        }
+        let want = shards.min(outer.div_ceil(align));
+        if want <= 1 {
+            return None;
+        }
+        let mut bounds = Vec::with_capacity(want + 1);
+        bounds.push(0usize);
+        for k in 1..want {
+            // Even split, rounded to the alignment, then clamped down to
+            // the nearest boundary the mapping proves safe (0 always is).
+            let mut o = (outer as u128 * k as u128 / want as u128) as usize / align * align;
+            let b = loop {
+                if o == 0 {
+                    break 0;
+                }
+                let lin = o * inner;
+                // SAFETY: `shard_bounds` has no caller preconditions; its
+                // `unsafe` marks the implementor's obligation, which the
+                // splitter consumes as the disjointness proof.
+                let safe = unsafe { view.mapping().shard_bounds(lin) }?;
+                if safe == lin {
+                    break o;
+                }
+                o = safe / inner / align * align;
+            };
+            if b > *bounds.last().unwrap() {
+                bounds.push(b);
+            }
+        }
+        bounds.push(outer);
+        if bounds.len() < 3 {
+            return None;
+        }
+        let view: *mut View<R, M, S> = view;
+        Some(ViewShards { view, bounds, _pd: PhantomData })
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// A split always produces at least two shards.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// The outermost-dimension shard boundaries (see [`ViewShards`]).
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Consume the splitter into one cursor per shard. The cursors access
+    /// disjoint bytes and may be moved to different threads.
+    pub fn cursors(self) -> Vec<ShardCursor<'v, R, M, S>> {
+        (0..self.len())
+            .map(|k| ShardCursor {
+                view: self.view,
+                begin: self.bounds[k],
+                end: self.bounds[k + 1],
+                _pd: PhantomData,
+            })
+            .collect()
+    }
+
+    /// Run `f` once per shard, each on its own scoped worker thread
+    /// (shard 0 on the calling thread). Returns when every shard is done.
+    pub fn dispatch<F>(self, f: F)
+    where
+        F: Fn(ShardCursor<'v, R, M, S>) + Sync,
+        S: Send + Sync,
+    {
+        let mut cursors = self.cursors();
+        let rest = cursors.split_off(1);
+        let first = cursors.pop();
+        std::thread::scope(|scope| {
+            for cur in rest {
+                let f = &f;
+                scope.spawn(move || f(cur));
+            }
+            if let Some(cur) = first {
+                f(cur);
+            }
+        });
+    }
+}
+
+/// Mutable access to the records of one shard: outermost array indices
+/// `[begin, end)` of a shared view. Created by [`ViewShards`]; sendable
+/// to a worker thread.
+pub struct ShardCursor<'v, R, M, S> {
+    view: *mut View<R, M, S>,
+    begin: usize,
+    end: usize,
+    _pd: PhantomData<&'v mut View<R, M, S>>,
+}
+
+// SAFETY: a cursor only touches storage bytes of its own shard (the
+// `Mapping::shard_bounds` proof established at split time), mapping and
+// extents are accessed read-only (`Mapping: Send + Sync`), and shared
+// instrumentation state is atomic. `S: Send + Sync` makes the underlying
+// byte buffers safe to access from another thread.
+unsafe impl<'v, R, M, S> Send for ShardCursor<'v, R, M, S>
+where
+    R: Send + Sync,
+    M: Send + Sync,
+    S: Send + Sync,
+{
+}
+
+impl<'v, R, M, S> ShardCursor<'v, R, M, S>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    /// The shard's `[begin, end)` range of the outermost array dimension.
+    pub fn outer_range(&self) -> (usize, usize) {
+        (self.begin, self.end)
+    }
+
+    /// Visit every record of the shard in row-major order — the shard's
+    /// slice of [`View::for_each`].
+    pub fn for_each(&mut self, mut f: impl FnMut(&mut RecordRefMut<'_, R, M, S>)) {
+        // SAFETY: cursors of one split never overlap, so this &mut View is
+        // only used to reach bytes no other thread touches (see the
+        // `unsafe impl Send` note and the module docs).
+        let view = unsafe { &mut *self.view };
+        crate::view::for_each_outer(view, self.begin, self.end, &mut f);
+    }
+
+    /// Chunk-walk the shard — the shard's slice of
+    /// [`View::transform_simd`], with identical chunking and tail
+    /// handling.
+    ///
+    /// # Safety
+    ///
+    /// [`Chunk::get`]/[`Chunk::set`] reach any record of the view. When
+    /// other cursors of the same split run concurrently, `f` must not
+    /// read or write bytes that another shard's traversal stores (see
+    /// the [module docs](crate::shard)); chunk-local `load`/`store` and
+    /// cross-shard reads of fields no shard writes are always fine.
+    pub unsafe fn transform_simd<const N: usize, F>(&mut self, mut f: F)
+    where
+        F: FnMut(&mut Chunk<'_, R, M, S, N>),
+        M: SimdAccess<R>,
+    {
+        assert!(N > 0, "lane count must be positive");
+        // SAFETY: as in `for_each`; cross-shard kernel accesses are the
+        // caller's obligation per this fn's contract.
+        let view = unsafe { &mut *self.view };
+        crate::view::walk_chunks(view, self.begin, self.end, &mut f);
+    }
+}
+
+impl<R, M, S> View<R, M, S>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage + Send + Sync,
+{
+    /// [`for_each`](View::for_each) fanned out over [`thread_count`]
+    /// workers. Falls back to the serial traversal when the mapping
+    /// cannot prove sharding safe (see [`crate::shard`]). Per-record
+    /// kernels observe the same pre-pass state as the serial engine, so
+    /// results are bit-identical.
+    pub fn par_for_each<F>(&mut self, f: F)
+    where
+        F: Fn(&mut RecordRefMut<'_, R, M, S>) + Sync,
+    {
+        self.par_for_each_with(thread_count(), f)
+    }
+
+    /// [`par_for_each`](View::par_for_each) with an explicit worker count.
+    pub fn par_for_each_with<F>(&mut self, threads: usize, f: F)
+    where
+        F: Fn(&mut RecordRefMut<'_, R, M, S>) + Sync,
+    {
+        if let Some(shards) = ViewShards::split(self, threads) {
+            shards.dispatch(|mut cur| cur.for_each(&f));
+            return;
+        }
+        self.for_each(f);
+    }
+}
+
+impl<R, M, S> View<R, M, S>
+where
+    R: RecordDim,
+    M: SimdAccess<R>,
+    S: BlobStorage + Send + Sync,
+{
+    /// [`transform_simd`](View::transform_simd) fanned out over
+    /// [`thread_count`] workers: SIMD along the innermost dimension,
+    /// threads across the outermost — the full layout × parallelism
+    /// matrix from one kernel. Falls back to the serial traversal when
+    /// the mapping cannot prove sharding safe. Rank-1 shard boundaries
+    /// are aligned to `N`, so the chunk pattern (including the tail)
+    /// matches the serial walk exactly.
+    ///
+    /// # Safety
+    ///
+    /// `f` runs concurrently on disjoint shards but [`Chunk::get`] /
+    /// [`Chunk::set`] reach any record of the view: the closure must not
+    /// read or write bytes that the pass stores in *another* shard's
+    /// chunks (see [`crate::shard`]). Kernels that only use the chunk's
+    /// own `load`/`store` plus cross-shard reads of fields the pass
+    /// never stores (the n-body pattern) satisfy this.
+    pub unsafe fn par_transform_simd<const N: usize, F>(&mut self, f: F)
+    where
+        F: Fn(&mut Chunk<'_, R, M, S, N>) + Sync,
+    {
+        // SAFETY: forwarded contract.
+        unsafe { self.par_transform_simd_with::<N, F>(thread_count(), f) }
+    }
+
+    /// [`par_transform_simd`](View::par_transform_simd) with an explicit
+    /// worker count.
+    ///
+    /// # Safety
+    ///
+    /// As for [`par_transform_simd`](View::par_transform_simd).
+    pub unsafe fn par_transform_simd_with<const N: usize, F>(&mut self, threads: usize, f: F)
+    where
+        F: Fn(&mut Chunk<'_, R, M, S, N>) + Sync,
+    {
+        assert!(N > 0, "lane count must be positive");
+        let align = if <M::Extents as Extents>::RANK == 1 { N } else { 1 };
+        if let Some(shards) = ViewShards::split_aligned(self, threads, align) {
+            // SAFETY: forwarded contract — the shards themselves are
+            // disjoint by the `shard_bounds` proof.
+            shards.dispatch(|mut cur| unsafe { cur.transform_simd::<N, _>(&f) });
+            return;
+        }
+        self.transform_simd::<N>(f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+    use crate::mapping::bitpack_int::BitpackIntSoA;
+    use crate::mapping::one::One;
+    use crate::mapping::soa::SoA;
+
+    crate::record! {
+        pub struct P, mod p {
+            x: f64,
+            q: i32,
+        }
+    }
+
+    crate::record! {
+        pub struct H, mod h {
+            adc: u32,
+        }
+    }
+
+    #[test]
+    fn split_partitions_evenly() {
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(10u32),)), &HeapAlloc);
+        let shards = ViewShards::split(&mut v, 4).unwrap();
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards.bounds(), &[0, 2, 5, 7, 10]);
+        let cursors = shards.cursors();
+        assert_eq!(cursors[0].outer_range(), (0, 2));
+        assert_eq!(cursors[3].outer_range(), (7, 10));
+    }
+
+    #[test]
+    fn split_clamps_shard_count_and_refuses_trivial_splits() {
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(3u32),)), &HeapAlloc);
+        assert_eq!(ViewShards::split(&mut v, 8).map(|s| s.len()), Some(3));
+        assert!(ViewShards::split(&mut v, 1).is_none());
+        let mut empty = alloc_view(SoA::<P, _>::new((Dyn(0u32),)), &HeapAlloc);
+        assert!(ViewShards::split(&mut empty, 4).is_none());
+    }
+
+    #[test]
+    fn split_respects_bitpack_byte_alignment() {
+        // 12-bit values: boundaries must be even (2 values = 3 bytes).
+        let mut v = alloc_view(BitpackIntSoA::<H, _, 12>::new((Dyn(10u32),)), &HeapAlloc);
+        let shards = ViewShards::split(&mut v, 4).unwrap();
+        assert_eq!(shards.bounds(), &[0, 2, 4, 6, 10]);
+        // 3-bit values: boundaries must be multiples of 8. n=24 shards at
+        // the byte-aligned points below the even split...
+        let mut v3 = alloc_view(BitpackIntSoA::<H, _, 3>::new((Dyn(24u32),)), &HeapAlloc);
+        let shards = ViewShards::split(&mut v3, 4).unwrap();
+        assert_eq!(shards.bounds(), &[0, 8, 16, 24]);
+        // ...while n=10 admits no aligned boundary at all: serial fallback.
+        let mut tiny = alloc_view(BitpackIntSoA::<H, _, 3>::new((Dyn(10u32),)), &HeapAlloc);
+        assert!(ViewShards::split(&mut tiny, 4).is_none());
+    }
+
+    #[test]
+    fn one_mapping_refuses_to_shard() {
+        let mut v = alloc_view(One::<P, _>::new((Dyn(64u32),)), &HeapAlloc);
+        assert!(ViewShards::split(&mut v, 4).is_none());
+        // ...but the parallel entry points still work via the fallback.
+        v.par_for_each_with(4, |r| r.set(p::q, 7i32));
+        assert_eq!(v.get::<i32>(&[63], p::q), 7);
+    }
+
+    #[test]
+    fn par_for_each_visits_every_record_once() {
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(103u32),)), &HeapAlloc);
+        v.par_for_each_with(4, |r| {
+            let i = r.index()[0];
+            r.set(p::q, i as i32 + 1);
+        });
+        for i in 0..103 {
+            assert_eq!(v.get::<i32>(&[i], p::q), i as i32 + 1);
+        }
+    }
+
+    #[test]
+    fn par_transform_simd_matches_serial() {
+        let mut serial = alloc_view(SoA::<P, _>::new((Dyn(103u32),)), &HeapAlloc);
+        let mut par = alloc_view(SoA::<P, _>::new((Dyn(103u32),)), &HeapAlloc);
+        for i in 0..103 {
+            serial.set(&[i], p::x, i as f64 * 0.25);
+            par.set(&[i], p::x, i as f64 * 0.25);
+        }
+        serial.transform_simd::<4>(|c| {
+            let x: crate::simd::Simd<f64, 4> = c.load(p::x);
+            c.store(p::x, x * x + x);
+        });
+        // SAFETY: the kernel touches only its own chunk's records.
+        unsafe {
+            par.par_transform_simd_with::<4, _>(3, |c| {
+                let x: crate::simd::Simd<f64, 4> = c.load(p::x);
+                c.store(p::x, x * x + x);
+            });
+        }
+        for i in 0..103 {
+            assert_eq!(
+                serial.get::<f64>(&[i], p::x).to_bits(),
+                par.get::<f64>(&[i], p::x).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn thread_count_parsing() {
+        // The env-value parser is tested directly — mutating the process
+        // environment from a multithreaded test harness is not safe.
+        assert_eq!(parse_thread_count(Some("3")), Some(3));
+        assert_eq!(parse_thread_count(Some(" 8 ")), Some(8));
+        assert_eq!(parse_thread_count(Some("0")), None);
+        assert_eq!(parse_thread_count(Some("not-a-number")), None);
+        assert_eq!(parse_thread_count(None), None);
+        assert!(thread_count() >= 1);
+        assert!(thread_count_or(4) >= 1);
+    }
+}

@@ -165,27 +165,80 @@ where
     /// access cost is whatever the mapping's `load`/`store` costs — for
     /// SoA that monomorphizes to contiguous slice iteration, for
     /// computed mappings to their pack/unpack logic.
+    ///
+    /// The multithreaded counterpart is
+    /// [`par_for_each`](crate::shard#parallel-traversal).
     pub fn for_each(&mut self, mut f: impl FnMut(&mut RecordRefMut<'_, R, M, S>)) {
-        let rank = <M::Extents as Extents>::RANK;
-        if rank == 1 {
-            // Linear fast path: no index odometer in the loop.
-            for i in 0..self.count() {
-                f(&mut self.at_mut(&[i]));
-            }
-            return;
+        let outer = self.extents().extent(0);
+        for_each_outer(self, 0, outer, &mut f);
+    }
+}
+
+/// Visit every record whose outermost array index lies in
+/// `[outer_begin, outer_end)`, in row-major order — the shared walker of
+/// the serial [`View::for_each`] (full range) and of each parallel shard
+/// ([`crate::shard::ShardCursor`], a sub-range).
+pub(crate) fn for_each_outer<R, M, S>(
+    view: &mut View<R, M, S>,
+    outer_begin: usize,
+    outer_end: usize,
+    f: &mut impl FnMut(&mut RecordRefMut<'_, R, M, S>),
+) where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    let rank = <M::Extents as Extents>::RANK;
+    if outer_begin >= outer_end {
+        return;
+    }
+    if rank == 1 {
+        // Linear fast path: no index odometer in the loop.
+        for i in outer_begin..outer_end {
+            f(&mut view.at_mut(&[i]));
         }
-        if self.count() == 0 {
+        return;
+    }
+    let e = *view.extents();
+    for d in 1..rank {
+        if e.extent(d) == 0 {
             return;
-        }
-        let e = *self.extents();
-        let mut idx = [0usize; MAX_RANK];
-        loop {
-            f(&mut self.at_mut(&idx[..rank]));
-            if !crate::extents::advance_index(&e, &mut idx[..rank]) {
-                return;
-            }
         }
     }
+    let mut idx = [0usize; MAX_RANK];
+    idx[0] = outer_begin;
+    loop {
+        f(&mut view.at_mut(&idx[..rank]));
+        if !advance_bounded(&e, &mut idx, rank, outer_end) {
+            return;
+        }
+    }
+}
+
+/// Advance the first `dims` dimensions of `idx` one step in row-major
+/// order, with dimension 0 bounded by `outer_end` instead of its extent.
+/// Returns `false` once `[.., outer_end)` is exhausted.
+#[inline(always)]
+fn advance_bounded<E: Extents>(
+    e: &E,
+    idx: &mut [usize; MAX_RANK],
+    dims: usize,
+    outer_end: usize,
+) -> bool {
+    let mut d = dims;
+    while d > 0 {
+        d -= 1;
+        idx[d] += 1;
+        let limit = if d == 0 { outer_end } else { e.extent(d) };
+        if idx[d] < limit {
+            return true;
+        }
+        if d == 0 {
+            return false;
+        }
+        idx[d] = 0;
+    }
+    false
 }
 
 impl<R, M, S> View<R, M, S>
@@ -194,9 +247,10 @@ where
     M: SimdAccess<R>,
     S: BlobStorage,
 {
-    /// Traverse the (rank-1) view in chunks of `N` consecutive records,
-    /// handing the closure a [`Chunk`] cursor whose `load`/`store` move
-    /// `N` lanes at once through the fastest path the mapping allows:
+    /// Traverse the view in chunks of up to `N` records consecutive along
+    /// the innermost array dimension, handing the closure a [`Chunk`]
+    /// cursor whose `load`/`store` move whole lane vectors through the
+    /// fastest path the mapping allows:
     ///
     /// - **SoA** lowers to contiguous slice moves over the field array,
     /// - **AoSoA** to in-block lane-vector moves (via [`SimdAccess`]),
@@ -205,39 +259,103 @@ where
     ///   mapping, and for AoS deliberately so (the paper found scalar
     ///   loads beat `gather` on the tested CPU).
     ///
+    /// Works at any rank: the outer dimensions are walked by a row-major
+    /// odometer while the innermost extent is vectorized — so the SoA /
+    /// AoSoA fast paths fire on multidimensional views too. When `N` does
+    /// not divide the innermost extent, the final chunk of each row is a
+    /// *tail* with [`Chunk::lanes`]` < N`: its `load`/`store` fall back to
+    /// a per-lane scalar walk (correct for every mapping) and the unused
+    /// lanes read as `T::default()` / are never written.
+    ///
     /// `N = 1` is the scalar traversal of Table 1 — identical operations
     /// to a hand-written scalar loop, so results are bit-identical.
     /// The chunk also exposes whole-view scalar access ([`Chunk::get`])
     /// for algorithms that combine streaming with random access (the
     /// n-body j-loop).
     ///
-    /// Panics unless the view is rank-1 and `N` divides the extent.
+    /// The multithreaded counterpart is
+    /// [`par_transform_simd`](crate::shard#parallel-traversal).
     pub fn transform_simd<const N: usize>(
         &mut self,
         mut f: impl FnMut(&mut Chunk<'_, R, M, S, N>),
     ) {
         assert!(N > 0, "lane count must be positive");
-        assert_eq!(
-            <M::Extents as Extents>::RANK,
-            1,
-            "transform_simd traverses the linear (rank-1) index space"
-        );
-        let n = self.count();
-        assert_eq!(n % N, 0, "extent {n} is not divisible by the lane count {N}");
-        let mut base = 0;
-        while base < n {
-            f(&mut Chunk { view: &mut *self, base });
-            base += N;
+        let outer = self.extents().extent(0);
+        walk_chunks(self, 0, outer, &mut f);
+    }
+}
+
+/// Chunk-walk the records whose outermost array index lies in
+/// `[outer_begin, outer_end)` — the shared walker of the serial
+/// [`View::transform_simd`] (full range) and of each parallel shard.
+///
+/// Rank-1 views vectorize the outermost (= only) dimension directly;
+/// higher ranks walk the outer dimensions with a row-major odometer and
+/// vectorize the innermost extent, emitting a tail chunk per row when `N`
+/// does not divide it.
+pub(crate) fn walk_chunks<R, M, S, const N: usize>(
+    view: &mut View<R, M, S>,
+    outer_begin: usize,
+    outer_end: usize,
+    f: &mut impl FnMut(&mut Chunk<'_, R, M, S, N>),
+) where
+    R: RecordDim,
+    M: SimdAccess<R>,
+    S: BlobStorage,
+{
+    let rank = <M::Extents as Extents>::RANK;
+    if outer_begin >= outer_end {
+        return;
+    }
+    if rank == 1 {
+        let mut b = outer_begin;
+        while b < outer_end {
+            let len = N.min(outer_end - b);
+            let mut idx = [0usize; MAX_RANK];
+            idx[0] = b;
+            f(&mut Chunk { view: &mut *view, idx, rank, len });
+            b += N;
+        }
+        return;
+    }
+    let e = *view.extents();
+    let last = rank - 1;
+    let inner = e.extent(last);
+    if inner == 0 {
+        return;
+    }
+    for d in 1..last {
+        if e.extent(d) == 0 {
+            return;
+        }
+    }
+    let mut idx = [0usize; MAX_RANK];
+    idx[0] = outer_begin;
+    loop {
+        let mut b = 0;
+        while b < inner {
+            let len = N.min(inner - b);
+            idx[last] = b;
+            f(&mut Chunk { view: &mut *view, idx, rank, len });
+            b += N;
+        }
+        idx[last] = 0;
+        if !advance_bounded(&e, &mut idx, last, outer_end) {
+            return;
         }
     }
 }
 
-/// Cursor over `N` consecutive records during a bulk traversal
-/// ([`View::transform_simd`]). `load`/`store` move whole lane vectors;
-/// `get`/`set` reach any record of the view scalar-wise.
+/// Cursor over up to `N` records consecutive along the innermost array
+/// dimension during a bulk traversal ([`View::transform_simd`]).
+/// `load`/`store` move whole lane vectors; `get`/`set` reach any record
+/// of a rank-1 view scalar-wise.
 pub struct Chunk<'v, R, M, S, const N: usize> {
     view: &'v mut View<R, M, S>,
-    base: usize,
+    idx: [usize; MAX_RANK],
+    rank: usize,
+    /// Active lanes: `N` except for the tail chunk of a row.
+    len: usize,
 }
 
 impl<'v, R, M, S, const N: usize> Chunk<'v, R, M, S, N>
@@ -246,10 +364,32 @@ where
     M: SimdAccess<R>,
     S: BlobStorage,
 {
-    /// Linear index of the chunk's first record.
+    /// Array index of the chunk's first record.
+    #[inline(always)]
+    pub fn index(&self) -> &[usize] {
+        &self.idx[..self.rank]
+    }
+
+    /// Row-major traversal position of the chunk's first record (for
+    /// rank-1 views: its linear index).
     #[inline(always)]
     pub fn base(&self) -> usize {
-        self.base
+        if self.rank == 1 {
+            return self.idx[0];
+        }
+        let e = self.view.extents();
+        let mut lin = 0usize;
+        for d in 0..self.rank {
+            lin = lin * e.extent(d) + self.idx[d];
+        }
+        lin
+    }
+
+    /// Active lanes of this chunk: `N`, except for the tail chunk of a
+    /// row when `N` does not divide the innermost extent.
+    #[inline(always)]
+    pub fn lanes(&self) -> usize {
+        self.len
     }
 
     /// Records in the whole view (for whole-view sweeps inside a chunk).
@@ -258,27 +398,51 @@ where
         self.view.count()
     }
 
-    /// Load the chunk's `N` lanes of `field`.
+    /// Load the chunk's lanes of `field`. Tail chunks
+    /// ([`lanes`](Chunk::lanes)` < N`) load lane-wise; their unused lanes
+    /// are `T::default()`.
     #[inline(always)]
     pub fn load<T: Scalar + SimdElem>(&self, field: usize) -> Simd<T, N> {
-        self.view.load_simd(&[self.base], field)
+        if self.len == N {
+            return self.view.load_simd(&self.idx[..self.rank], field);
+        }
+        let mut out = Simd::<T, N>::default();
+        let last = self.rank - 1;
+        let mut idx = self.idx;
+        for k in 0..self.len {
+            idx[last] = self.idx[last] + k;
+            out.0[k] = self.view.get(&idx[..self.rank], field);
+        }
+        out
     }
 
-    /// Store the chunk's `N` lanes of `field`.
+    /// Store the chunk's lanes of `field`. Tail chunks store lane-wise;
+    /// lanes past [`lanes`](Chunk::lanes) are never written.
     #[inline(always)]
     pub fn store<T: Scalar + SimdElem>(&mut self, field: usize, v: Simd<T, N>) {
-        self.view.store_simd(&[self.base], field, v)
+        if self.len == N {
+            self.view.store_simd(&self.idx[..self.rank], field, v);
+            return;
+        }
+        let last = self.rank - 1;
+        let mut idx = self.idx;
+        for k in 0..self.len {
+            idx[last] = self.idx[last] + k;
+            self.view.set(&idx[..self.rank], field, v.0[k]);
+        }
     }
 
-    /// Scalar load of `field` at any record `i` of the view.
+    /// Scalar load of `field` at any record `i` of a rank-1 view.
     #[inline(always)]
     pub fn get<T: Scalar>(&self, i: usize, field: usize) -> T {
+        debug_assert_eq!(self.rank, 1, "Chunk::get addresses records by rank-1 index");
         self.view.get(&[i], field)
     }
 
-    /// Scalar store of `field` at any record `i` of the view.
+    /// Scalar store of `field` at any record `i` of a rank-1 view.
     #[inline(always)]
     pub fn set<T: Scalar>(&mut self, i: usize, field: usize, v: T) {
+        debug_assert_eq!(self.rank, 1, "Chunk::set addresses records by rank-1 index");
         self.view.set(&[i], field, v)
     }
 }
@@ -534,10 +698,48 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "not divisible")]
-    fn transform_simd_rejects_ragged_extents() {
+    fn transform_simd_handles_ragged_extents_with_a_tail_chunk() {
         let mut v = alloc_view(SoA::<P, _>::new((Dyn(10u32),)), &HeapAlloc);
-        v.transform_simd::<4>(|_c| {});
+        for i in 0..10 {
+            v.set(&[i], p::pos::x, i as f64);
+        }
+        let mut seen = Vec::new();
+        v.transform_simd::<4>(|c| {
+            seen.push((c.base(), c.lanes()));
+            let x: crate::simd::Simd<f64, 4> = c.load(p::pos::x);
+            if c.lanes() < 4 {
+                // Inactive lanes load as default.
+                assert_eq!(x.0[2], 0.0);
+                assert_eq!(x.0[3], 0.0);
+            }
+            c.store(p::pos::x, x + crate::simd::Simd::splat(100.0));
+        });
+        assert_eq!(seen, vec![(0, 4), (4, 4), (8, 2)]);
+        for i in 0..10 {
+            assert_eq!(v.get::<f64>(&[i], p::pos::x), i as f64 + 100.0);
+        }
+    }
+
+    #[test]
+    fn transform_simd_rank2_vectorizes_the_innermost_extent() {
+        // 3 rows of 10: per row, chunks at inner 0, 4, 8 (tail of 2).
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(3u32), Dyn(10u32))), &HeapAlloc);
+        let mut chunks = Vec::new();
+        v.transform_simd::<4>(|c| {
+            chunks.push((c.index().to_vec(), c.lanes()));
+            let x: crate::simd::Simd<f64, 4> = c.load(p::pos::x);
+            c.store(p::pos::x, x + crate::simd::Simd::splat(1.0));
+        });
+        assert_eq!(chunks.len(), 9);
+        assert_eq!(chunks[0], (vec![0, 0], 4));
+        assert_eq!(chunks[2], (vec![0, 8], 2));
+        assert_eq!(chunks[8], (vec![2, 8], 2));
+        // Every record incremented exactly once.
+        for i in 0..3 {
+            for j in 0..10 {
+                assert_eq!(v.get::<f64>(&[i, j], p::pos::x), 1.0);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Edge cases of the bulk-traversal engine: empty extents, single-element
+//! views, SIMD tails (`count % N != 0`) on every mapping, and rank>1
+//! traversal — the pinned-down baseline under the serial engine that the
+//! parallel sharded layer is tested against in `properties.rs`.
+
+use llama::blob::{alloc_view, HeapAlloc, HeapStorage};
+use llama::extents::{Dyn, Extents};
+use llama::mapping::{Mapping, SimdAccess};
+use llama::simd::Simd;
+use llama::view::Chunk;
+
+llama::record! {
+    pub struct P, mod p {
+        x: f32,
+        y: f32,
+    }
+}
+
+#[test]
+fn empty_extents_traversals_do_nothing() {
+    use llama::mapping::soa::SoA;
+
+    let mut v = alloc_view(SoA::<P, _>::new((Dyn(0u32),)), &HeapAlloc);
+    let mut calls = 0;
+    v.for_each(|_r| calls += 1);
+    v.transform_simd::<4>(|_c| calls += 1);
+    v.par_for_each_with(4, |_r| {});
+    // SAFETY: the kernel touches nothing at all.
+    unsafe { v.par_transform_simd_with::<4, _>(4, |_c| {}) };
+    assert_eq!(calls, 0);
+
+    // Rank 2 with a zero outer / zero inner extent.
+    for e in [(Dyn(0u32), Dyn(4u32)), (Dyn(4u32), Dyn(0u32))] {
+        let mut v = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
+        let mut calls = 0;
+        v.for_each(|_r| calls += 1);
+        v.transform_simd::<4>(|_c| calls += 1);
+        assert_eq!(calls, 0, "extents {e:?}");
+    }
+}
+
+#[test]
+fn single_element_views_traverse_once() {
+    use llama::mapping::aos::AoS;
+
+    let mut v = alloc_view(AoS::<P, _>::new((Dyn(1u32),)), &HeapAlloc);
+    v.set(&[0], p::x, 2.0f32);
+    let mut visits = 0;
+    v.for_each(|r| {
+        visits += 1;
+        let x: f32 = r.get(p::x);
+        r.set(p::y, x + 1.0);
+    });
+    assert_eq!(visits, 1);
+    assert_eq!(v.get::<f32>(&[0], p::y), 3.0);
+
+    let mut chunks = Vec::new();
+    v.transform_simd::<8>(|c| {
+        chunks.push((c.base(), c.lanes()));
+        let x: Simd<f32, 8> = c.load(p::x);
+        assert_eq!(x.0[0], 2.0);
+        assert_eq!(x.0[1], 0.0); // inactive lane reads default
+        c.store(p::x, x + Simd::splat(1.0));
+    });
+    assert_eq!(chunks, vec![(0, 1)]);
+    assert_eq!(v.get::<f32>(&[0], p::x), 3.0);
+
+    // Parallel entry points fall back to serial for a 1-record view.
+    v.par_for_each_with(4, |r| r.set(p::y, 9.0f32));
+    assert_eq!(v.get::<f32>(&[0], p::y), 9.0);
+}
+
+/// Apply `x += 1` through `transform_simd::<4>` (tail of 3 at n=7) and
+/// through a scalar `for_each` on twin views; the results must agree for
+/// every mapping.
+fn tail_matches_scalar<M: SimdAccess<P> + Clone>(m: M) {
+    let n = m.extents().extent(0);
+    let mut simd = alloc_view(m.clone(), &HeapAlloc);
+    let mut scalar = alloc_view(m, &HeapAlloc);
+    for i in 0..n {
+        let val = (i as f32) * 0.75 - 1.0;
+        simd.set(&[i], p::x, val);
+        scalar.set(&[i], p::x, val);
+    }
+    let mut tail_chunks = 0;
+    simd.transform_simd::<4>(|c| {
+        if c.lanes() < 4 {
+            tail_chunks += 1;
+        }
+        let x: Simd<f32, 4> = c.load(p::x);
+        c.store(p::x, x + Simd::splat(1.0));
+    });
+    scalar.for_each(|r| {
+        let x: f32 = r.get(p::x);
+        r.set(p::x, x + 1.0);
+    });
+    assert_eq!(tail_chunks, if n % 4 == 0 { 0 } else { 1 });
+    for i in 0..n {
+        assert_eq!(
+            simd.get::<f32>(&[i], p::x).to_bits(),
+            scalar.get::<f32>(&[i], p::x).to_bits(),
+            "record {i}"
+        );
+    }
+}
+
+#[test]
+fn simd_tail_matches_scalar_on_every_mapping() {
+    use llama::mapping::aos::{AoS, MinPad, Packed};
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::bitpack_float::BitpackFloatSoA;
+    use llama::mapping::bytesplit::Bytesplit;
+    use llama::mapping::changetype::ChangeType;
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::mapping::heatmap::Heatmap;
+    use llama::mapping::null::NullMapping;
+    use llama::mapping::soa::{MultiBlob, SingleBlob, SoA};
+    use llama::mapping::split::Split;
+
+    for n in [1usize, 2, 3, 5, 7, 9, 16] {
+        let e = (Dyn(n as u32),);
+        tail_matches_scalar(AoS::<P, _>::new(e));
+        tail_matches_scalar(AoS::<P, _, Packed>::new(e));
+        tail_matches_scalar(AoS::<P, _, MinPad>::new(e));
+        tail_matches_scalar(SoA::<P, _, MultiBlob>::new(e));
+        tail_matches_scalar(SoA::<P, _, SingleBlob>::new(e));
+        tail_matches_scalar(AoSoA::<P, _, 8>::new(e));
+        tail_matches_scalar(Bytesplit::<P, _>::new(e));
+        tail_matches_scalar(BitpackFloatSoA::<P, _, 8, 23>::new(e));
+        tail_matches_scalar(ChangeType::<P, P, _>::new(SoA::<P, _>::new(e)));
+        tail_matches_scalar(Heatmap::<P, _, 8>::new(SoA::<P, _>::new(e)));
+        tail_matches_scalar(FieldAccessCount::new(AoS::<P, _>::new(e)));
+        tail_matches_scalar(NullMapping::<P, _>::new(e));
+        {
+            const FIRST: u64 = 0b01; // x
+            const REST: u64 = 0b10; // y
+            type M1 = SoA<P, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, FIRST>;
+            type M2 = SoA<P, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, REST>;
+            let sel = llama::record::Selection::new(0, 1);
+            tail_matches_scalar(Split::new(M1::new(e), M2::new(e), sel));
+        }
+    }
+    // `One` is deliberately absent: all indices alias one record, so a
+    // 4-lane chunk collapses its 4 read-modify-writes into one while the
+    // scalar loop applies 4 — the op-count difference is the mapping's
+    // semantics, not an engine bug.
+}
+
+#[test]
+fn bitpack_int_tail_matches_scalar() {
+    use llama::mapping::bitpack_int::BitpackIntSoADyn;
+
+    llama::record! { pub struct H, mod h { adc: u32 } }
+    for bits in [5u32, 12, 13, 24, 32] {
+        let n = 7usize;
+        let m = BitpackIntSoADyn::<H, _>::new((Dyn(n as u32),), bits);
+        let mut simd = alloc_view(m, &HeapAlloc);
+        let mut scalar = alloc_view(m, &HeapAlloc);
+        for i in 0..n {
+            simd.set(&[i], h::adc, (i as u32) * 37 + 5);
+            scalar.set(&[i], h::adc, (i as u32) * 37 + 5);
+        }
+        simd.transform_simd::<4>(|c| {
+            let a: Simd<u32, 4> = c.load(h::adc);
+            c.store(h::adc, a + Simd::splat(1));
+        });
+        scalar.for_each(|r| {
+            let a: u32 = r.get(h::adc);
+            r.set(h::adc, a.wrapping_add(1));
+        });
+        for i in 0..n {
+            assert_eq!(
+                simd.get::<u32>(&[i], h::adc),
+                scalar.get::<u32>(&[i], h::adc),
+                "bits={bits} record {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rank3_traversals_cover_every_record_once() {
+    use llama::mapping::soa::SoA;
+
+    let e = (Dyn(2u32), Dyn(3u32), Dyn(5u32));
+    let mut via_for_each = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
+    via_for_each.for_each(|r| {
+        let y: f32 = r.get(p::y);
+        r.set(p::y, y + 1.0);
+    });
+
+    let mut via_chunks = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
+    let mut tails = 0;
+    via_chunks.transform_simd::<4>(|c| {
+        if c.lanes() < 4 {
+            tails += 1;
+        }
+        let y: Simd<f32, 4> = c.load(p::y);
+        c.store(p::y, y + Simd::splat(1.0));
+    });
+    // Inner extent 5 with 4 lanes: one tail (of 1) per inner row, 6 rows.
+    assert_eq!(tails, 6);
+
+    for i in 0..2 {
+        for j in 0..3 {
+            for k in 0..5 {
+                assert_eq!(via_for_each.get::<f32>(&[i, j, k], p::y), 1.0);
+                assert_eq!(via_chunks.get::<f32>(&[i, j, k], p::y), 1.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn rank2_parallel_shards_split_the_outer_dimension() {
+    use llama::mapping::soa::SoA;
+    use llama::shard::ViewShards;
+
+    let e = (Dyn(7u32), Dyn(5u32));
+    let mut v = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
+    {
+        let shards = ViewShards::split(&mut v, 3).unwrap();
+        assert_eq!(shards.bounds(), &[0, 2, 4, 7]);
+        let mut cursors = shards.cursors();
+        for cur in &mut cursors {
+            let (lo, hi) = cur.outer_range();
+            cur.for_each(|r| {
+                assert!(r.index()[0] >= lo && r.index()[0] < hi);
+                let x: f32 = r.get(p::x);
+                r.set(p::x, x + 1.0);
+            });
+        }
+    }
+    for i in 0..7 {
+        for j in 0..5 {
+            assert_eq!(v.get::<f32>(&[i, j], p::x), 1.0);
+        }
+    }
+
+    // The parallel SIMD walk matches the serial chunking on rank 2.
+    let mut serial = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
+    let mut par = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
+    fn op<M: SimdAccess<P>>(c: &mut Chunk<'_, P, M, HeapStorage, 4>) {
+        let x: Simd<f32, 4> = c.load(p::x);
+        let y: Simd<f32, 4> = c.load(p::y);
+        c.store(p::y, x + y + Simd::splat(0.5));
+    }
+    serial.transform_simd::<4>(op::<_>);
+    // SAFETY: the kernel touches only its own chunk's records.
+    unsafe { par.par_transform_simd_with::<4, _>(3, op::<_>) };
+    for i in 0..7 {
+        for j in 0..5 {
+            assert_eq!(
+                serial.get::<f32>(&[i, j], p::y).to_bits(),
+                par.get::<f32>(&[i, j], p::y).to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn chunk_accessors_expose_index_lanes_and_base() {
+    use llama::mapping::soa::SoA;
+
+    let mut v = alloc_view(SoA::<P, _>::new((Dyn(6u32),)), &HeapAlloc);
+    let mut seen = Vec::new();
+    v.transform_simd::<4>(|c| {
+        seen.push((c.index().to_vec(), c.base(), c.lanes(), c.count()));
+    });
+    assert_eq!(seen, vec![(vec![0], 0, 4, 6), (vec![4], 4, 2, 6)]);
+}

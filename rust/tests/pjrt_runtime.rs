@@ -138,8 +138,10 @@ fn bitpack_artifact_increments_packed_values() {
     for (i, &v) in vals.iter().enumerate() {
         write_bits(&mut bytes, i * BITS as usize, BITS, v as u64);
     }
-    let words: Vec<u32> =
-        bytes[..nwords * 4].chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+    let words: Vec<u32> = bytes[..nwords * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
 
     let out = engine.execute_u32("bitpack_roundtrip", &[(words, vec![nwords])]).unwrap();
     assert_eq!(out.len(), 1);

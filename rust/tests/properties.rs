@@ -310,6 +310,226 @@ fn prop_run_copy_agrees_with_field_wise() {
 }
 
 #[test]
+fn prop_par_for_each_bit_identical_to_serial_across_mappings() {
+    // The parallel sharded traversal must produce the bytes the serial
+    // engine produces, for every mapping (shardable ones split, the rest
+    // fall back), at thread counts that do and don't divide the extent.
+    use llama::blob::HeapStorage;
+    use llama::mapping::aos::{AoS, Packed};
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::bytesplit::Bytesplit;
+    use llama::mapping::changetype::ChangeType;
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::mapping::heatmap::Heatmap;
+    use llama::mapping::null::NullMapping;
+    use llama::mapping::one::One;
+    use llama::mapping::soa::{MultiBlob, SingleBlob, SoA};
+    use llama::mapping::split::Split;
+    use llama::view::RecordRefMut;
+
+    // Per-record op touching only the record's own fields (the contract
+    // under which parallel results are bit-identical).
+    fn op<M: MemoryAccess<R>>(rec: &mut RecordRefMut<'_, R, M, HeapStorage>) {
+        let a: f64 = rec.get(r::a);
+        let b: f32 = rec.get(r::b);
+        let c: u32 = rec.get(r::c);
+        let d: i16 = rec.get(r::d);
+        rec.set(r::a, a * 0.5 + 1.0);
+        rec.set(r::b, b * b - 2.0);
+        rec.set(r::c, c.rotate_left(7) ^ 0xA5A5_A5A5);
+        rec.set(r::d, d.wrapping_add(3));
+    }
+
+    fn run<M: MemoryAccess<R>>(m: M, n: usize, seed: u64, threads: Option<usize>) -> Vec<u64> {
+        let mut v = alloc_view(m, &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            v.set(&[i], r::a, rng.f64_range(-1e6, 1e6));
+            v.set(&[i], r::b, rng.f64_range(-1e3, 1e3) as f32);
+            v.set(&[i], r::c, rng.next_u64() as u32);
+            v.set(&[i], r::d, rng.range_i64(-20000, 20000) as i16);
+        }
+        match threads {
+            Some(t) => v.par_for_each_with(t, op::<M>),
+            None => v.for_each(op::<M>),
+        }
+        (0..n)
+            .flat_map(|i| {
+                [
+                    v.get::<f64>(&[i], r::a).to_bits(),
+                    v.get::<f32>(&[i], r::b).to_bits() as u64,
+                    v.get::<u32>(&[i], r::c) as u64,
+                    v.get::<i16>(&[i], r::d) as u16 as u64,
+                ]
+            })
+            .collect()
+    }
+
+    forall("par-for-each", 8, |g| (g.range(1, 150), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        macro_rules! check {
+            ($m:expr) => {{
+                let serial = run($m, n, seed, None);
+                for t in [1usize, 2, 4, 7] {
+                    if run($m, n, seed, Some(t)) != serial {
+                        return false;
+                    }
+                }
+            }};
+        }
+        check!(AoS::<R, _>::new(e));
+        check!(AoS::<R, _, Packed>::new(e));
+        check!(SoA::<R, _, MultiBlob>::new(e));
+        check!(SoA::<R, _, SingleBlob>::new(e));
+        check!(AoSoA::<R, _, 8>::new(e));
+        check!(Bytesplit::<R, _>::new(e));
+        check!(ChangeType::<R, R, _>::new(SoA::<R, _>::new(e)));
+        check!(Heatmap::<R, _, 64>::new(SoA::<R, _>::new(e)));
+        check!(FieldAccessCount::new(AoS::<R, _>::new(e)));
+        check!(NullMapping::<R, _>::new(e));
+        check!(One::<R, _>::new(e)); // unshardable: exercises the fallback
+        {
+            const FIRST: u64 = 0b0001; // a
+            const REST: u64 = 0b1110; // b, c, d
+            type M1 = SoA<R, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, FIRST>;
+            type M2 = SoA<R, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, REST>;
+            let sel = llama::record::Selection::new(0, 1);
+            check!(Split::new(M1::new(e), M2::new(e), sel));
+        }
+
+        // Instrumented wrappers must also land the same counter totals
+        // (atomic increments commute across shards).
+        let fac = FieldAccessCount::new(SoA::<R, _>::new(e));
+        let mut v = alloc_view(fac, &HeapAlloc);
+        v.par_for_each_with(4, op);
+        let (reads, writes) = v.mapping().field_counts(r::a);
+        reads == n as u64 && writes == n as u64
+    });
+}
+
+#[test]
+fn prop_par_transform_simd_bit_identical_to_serial_across_mappings() {
+    // SIMD chunk traversal: parallel shards (rank-1 boundaries aligned to
+    // the lane count) must reproduce the serial chunk pattern exactly,
+    // including the tail when the lane count does not divide the extent.
+    use llama::blob::HeapStorage;
+    use llama::mapping::aos::AoS;
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::bitpack_float::BitpackFloatSoA;
+    use llama::mapping::bytesplit::Bytesplit;
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::mapping::heatmap::Heatmap;
+    use llama::mapping::soa::{MultiBlob, SingleBlob, SoA};
+    use llama::mapping::SimdAccess;
+    use llama::simd::Simd;
+    use llama::view::Chunk;
+
+    llama::record! {
+        pub struct B2, mod bf2 {
+            v: f32,
+            w: f32,
+        }
+    }
+
+    fn chunk_op<M: SimdAccess<B2>>(c: &mut Chunk<'_, B2, M, HeapStorage, 4>) {
+        let a: Simd<f32, 4> = c.load(bf2::v);
+        let b: Simd<f32, 4> = c.load(bf2::w);
+        c.store(bf2::v, a * b + a);
+        c.store(bf2::w, b - a);
+    }
+
+    fn run<M: SimdAccess<B2>>(m: M, n: usize, seed: u64, threads: Option<usize>) -> Vec<u32> {
+        let mut v = alloc_view(m, &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            v.set(&[i], bf2::v, rng.f64_range(-1e3, 1e3) as f32);
+            v.set(&[i], bf2::w, rng.f64_range(-1e3, 1e3) as f32);
+        }
+        match threads {
+            // SAFETY: chunk_op touches only its own chunk's records.
+            Some(t) => unsafe { v.par_transform_simd_with::<4, _>(t, chunk_op::<M>) },
+            None => v.transform_simd::<4>(chunk_op::<M>),
+        }
+        (0..n).flat_map(|i| [view_bits(&v, i, bf2::v), view_bits(&v, i, bf2::w)]).collect()
+    }
+
+    fn view_bits<M: MemoryAccess<B2>>(
+        v: &llama::view::View<B2, M, HeapStorage>,
+        i: usize,
+        field: usize,
+    ) -> u32 {
+        v.get::<f32>(&[i], field).to_bits()
+    }
+
+    forall("par-transform-simd", 8, |g| (g.range(1, 130), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        macro_rules! check {
+            ($m:expr) => {{
+                let serial = run($m, n, seed, None);
+                for t in [1usize, 2, 4, 7] {
+                    if run($m, n, seed, Some(t)) != serial {
+                        return false;
+                    }
+                }
+            }};
+        }
+        check!(SoA::<B2, _, MultiBlob>::new(e));
+        check!(SoA::<B2, _, SingleBlob>::new(e));
+        check!(AoS::<B2, _>::new(e));
+        check!(AoSoA::<B2, _, 8>::new(e));
+        check!(Bytesplit::<B2, _>::new(e));
+        check!(BitpackFloatSoA::<B2, _, 8, 23>::new(e));
+        check!(Heatmap::<B2, _, 1>::new(SoA::<B2, _>::new(e)));
+        check!(FieldAccessCount::new(AoS::<B2, _>::new(e)));
+        true
+    });
+}
+
+#[test]
+fn prop_par_bitpack_int_matches_serial_at_byte_misaligned_sizes() {
+    // Bit-packed integers share bytes between neighbours: the shard
+    // splitter must only cut at byte-aligned value boundaries (or fall
+    // back to serial), for every bit count and extent.
+    use llama::blob::HeapStorage;
+    use llama::mapping::bitpack_int::BitpackIntSoADyn;
+    use llama::view::RecordRefMut;
+
+    llama::record! { pub struct I2, mod i2 { v: u64 } }
+    type M2 = BitpackIntSoADyn<I2, (Dyn<u32>,)>;
+
+    fn op(rec: &mut RecordRefMut<'_, I2, M2, HeapStorage>) {
+        let x: u64 = rec.get(i2::v);
+        rec.set(i2::v, x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(13));
+    }
+
+    forall(
+        "par-bitpack-int",
+        25,
+        |g| {
+            let bits = g.range(1, 64) as u32;
+            let n = g.range(1, 120);
+            (bits, n, g.next_u64())
+        },
+        |&(bits, n, seed)| {
+            let run = |threads: Option<usize>| -> Vec<u64> {
+                let mut v = alloc_view(M2::new((Dyn(n as u32),), bits), &HeapAlloc);
+                let mut rng = Rng::new(seed);
+                for i in 0..n {
+                    v.set(&[i], i2::v, rng.next_u64());
+                }
+                match threads {
+                    Some(t) => v.par_for_each_with(t, op),
+                    None => v.for_each(op),
+                }
+                (0..n).map(|i| v.get::<u64>(&[i], i2::v)).collect()
+            };
+            let serial = run(None);
+            [1usize, 2, 4, 7].iter().all(|&t| run(Some(t)) == serial)
+        },
+    );
+}
+
+#[test]
 fn prop_coordinator_completes_every_job_exactly_once() {
     use llama::coordinator::{Backend, Config, Coordinator, JobSpec, Layout};
     forall(
