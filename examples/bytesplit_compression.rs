@@ -32,16 +32,17 @@ fn blobs_of<S: BlobStorage>(s: &S) -> Vec<&[u8]> {
     (0..s.blob_count()).map(|b| s.blob(b)).collect()
 }
 
-fn fill<M: llama::mapping::MemoryAccess<Event>, S: BlobStorage>(
-    v: &mut llama::view::View<Event, M, S>,
-    value_bits: u32,
-) {
+fn fill<M, S: BlobStorage>(v: &mut llama::view::View<Event, M, S>, value_bits: u32)
+where
+    M: llama::mapping::MemoryAccess<Event>,
+    M::Extents: llama::extents::Extents<ArrayIndex = [usize; 1]>,
+{
     let mut rng = Rng::new(17);
     for i in 0..N {
-        v.set(&[i], ev::adc, (rng.range_u64(0, (1 << value_bits) - 1)) as u32);
-        v.set(&[i], ev::channel, rng.range_u64(0, 1023) as u16);
-        v.set(&[i], ev::time, i as u64 * 40 + rng.range_u64(0, 39));
-        v.set(&[i], ev::energy, rng.f64_range(0.0, 100.0) as f32);
+        v.set_t([i], ev::adc, (rng.range_u64(0, (1 << value_bits) - 1)) as u32);
+        v.set_t([i], ev::channel, rng.range_u64(0, 1023) as u16);
+        v.set_t([i], ev::time, i as u64 * 40 + rng.range_u64(0, 39));
+        v.set_t([i], ev::energy, rng.f64_range(0.0, 100.0) as f32);
     }
 }
 

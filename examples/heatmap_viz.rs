@@ -48,7 +48,7 @@ fn main() {
     for _ in 0..2000 {
         // Zipf-ish: hammer the first 10% of particles
         let i = if rng.chance(0.8) { rng.range(0, N / 10 - 1) } else { rng.range(0, N - 1) };
-        let _: f32 = v.get(&[i], llama::nbody::particle::pos::x);
+        let _: f32 = v.get_t([i], llama::nbody::particle::pos::x);
     }
     println!("\npattern 3 — skewed random reads of pos.x (hot head):");
     print!("{}", v.mapping().render_ascii(64));

@@ -51,7 +51,7 @@ llama::record! {
 
 llama::record! {
     /// Calibrated hit, storage types (f32/i32 — §3 Changetype).
-    pub struct HitStored, mod _hs {
+    pub struct HitStored, mod hs {
         pos: { x: f32, y: f32 },
         energy: f32,
         time: f32,
@@ -70,9 +70,9 @@ fn main() -> anyhow::Result<()> {
     // ---- 1. ingest: 12-bit packed raw hits --------------------------------
     let mut raw_view = alloc_view(BitpackIntSoA::<RawHit, _, 12>::new(e), &HeapAlloc);
     for i in 0..N {
-        raw_view.set(&[i], raw::adc, rng.range_u64(0, 4095) as u32);
-        raw_view.set(&[i], raw::channel, (i % 3072) as u32);
-        raw_view.set(&[i], raw::tdc, rng.range_u64(0, 4095) as u32);
+        raw_view.set_t([i], raw::adc, rng.range_u64(0, 4095) as u32);
+        raw_view.set_t([i], raw::channel, (i % 3072) as u32);
+        raw_view.set_t([i], raw::tdc, rng.range_u64(0, 4095) as u32);
     }
     println!(
         "1. ingested {N} raw hits, 12-bit packed: {} B (u32 SoA would be {} B, saving {:.0}%)",
@@ -90,15 +90,15 @@ fn main() -> anyhow::Result<()> {
     let mut hits = alloc_view(counted, &HeapAlloc);
 
     for i in 0..N {
-        let adc: u32 = raw_view.get(&[i], raw::adc);
-        let ch: u32 = raw_view.get(&[i], raw::channel);
-        let tdc: u32 = raw_view.get(&[i], raw::tdc);
+        let adc = raw_view.get_t([i], raw::adc);
+        let ch = raw_view.get_t([i], raw::channel);
+        let tdc = raw_view.get_t([i], raw::tdc);
         // toy calibration: channel -> (x, y) pad position, adc -> energy
-        hits.set(&[i], hit::pos::x, (ch % 64) as f64 * 0.5 - 16.0);
-        hits.set(&[i], hit::pos::y, (ch / 64) as f64 * 0.5 - 12.0);
-        hits.set(&[i], hit::energy, adc as f64 * 0.0125);
-        hits.set(&[i], hit::time, tdc as f64 * 0.78125);
-        hits.set(&[i], hit::channel, ch as i64);
+        hits.set_t([i], hit::pos::x, (ch % 64) as f64 * 0.5 - 16.0);
+        hits.set_t([i], hit::pos::y, (ch / 64) as f64 * 0.5 - 12.0);
+        hits.set_t([i], hit::energy, adc as f64 * 0.0125);
+        hits.set_t([i], hit::time, tdc as f64 * 0.78125);
+        hits.set_t([i], hit::channel, ch as i64);
     }
     println!(
         "2. calibrated into Split(hot pos/energy -> SoA f32 | cold time/channel -> AoS), {} B",
@@ -111,7 +111,7 @@ fn main() -> anyhow::Result<()> {
     let mut total_e = 0.0f64;
     let threshold = 25.0;
     for i in 0..N {
-        let e_i: f64 = hits.get(&[i], hit::energy);
+        let e_i = hits.get_t([i], hit::energy);
         if e_i < threshold {
             continue;
         }
@@ -119,10 +119,10 @@ fn main() -> anyhow::Result<()> {
         let mut cluster_e = e_i;
         for j in i.saturating_sub(3)..(i + 4).min(N) {
             if j != i {
-                let dx: f64 =
-                    hits.get::<f64>(&[i], hit::pos::x) - hits.get::<f64>(&[j], hit::pos::x);
+                let dx =
+                    hits.get_t([i], hit::pos::x) - hits.get_t([j], hit::pos::x);
                 if dx.abs() < 1.0 {
-                    cluster_e += hits.get::<f64>(&[j], hit::energy);
+                    cluster_e += hits.get_t([j], hit::energy);
                 }
             }
         }
@@ -135,17 +135,17 @@ fn main() -> anyhow::Result<()> {
     );
     print!("{}", hits.mapping().render_table());
     let rep = hits.mapping().report();
-    assert!(rep[hit::energy].reads > 0);
-    assert_eq!(rep[3].reads, 0, "cold field 'time' must not be touched by clustering");
+    assert!(rep[hit::energy.i()].reads > 0);
+    assert_eq!(rep[hit::time.i()].reads, 0, "cold field 'time' must not be touched by clustering");
 
     // ---- 4. archive: Bytesplit + zstd --------------------------------------
     let mut archive = alloc_view(Bytesplit::<HitStored, _>::new(e), &HeapAlloc);
     for i in 0..N {
-        archive.set(&[i], hit::pos::x, hits.get::<f64>(&[i], hit::pos::x) as f32);
-        archive.set(&[i], hit::pos::y, hits.get::<f64>(&[i], hit::pos::y) as f32);
-        archive.set(&[i], hit::energy, hits.get::<f64>(&[i], hit::energy) as f32);
-        archive.set(&[i], hit::time, hits.get::<f64>(&[i], hit::time) as f32);
-        archive.set(&[i], hit::channel, hits.get::<i64>(&[i], hit::channel) as i32);
+        archive.set_t([i], hs::pos::x, hits.get_t([i], hit::pos::x) as f32);
+        archive.set_t([i], hs::pos::y, hits.get_t([i], hit::pos::y) as f32);
+        archive.set_t([i], hs::energy, hits.get_t([i], hit::energy) as f32);
+        archive.set_t([i], hs::time, hits.get_t([i], hit::time) as f32);
+        archive.set_t([i], hs::channel, hits.get_t([i], hit::channel) as i32);
     }
     let blobs: Vec<&[u8]> =
         (0..archive.storage().blob_count()).map(|b| archive.storage().blob(b)).collect();

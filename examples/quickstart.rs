@@ -20,36 +20,52 @@ fn main() {
     let mapping = SoA::<Pixel, _>::new(extents);
     let mut image = alloc_view(mapping, &HeapAlloc);
 
-    // Scalar access via tag constants (the record! macro's tags module).
-    image.set(&[3, 4], pixel::color::g, 0.5f32);
-    image.set(&[3, 4], pixel::alpha, 200u8);
-    let g: f32 = image.get(&[3, 4], pixel::color::g);
+    // Typed access via the record!-generated tags: the scalar type is
+    // inferred from the tag and the index rank from the extents — a
+    // wrong-type access (`let g: f64 = ...`), a rank-3 index, or a tag
+    // from another record would all be COMPILE errors, and the access
+    // folds to a constant offset.
+    image.set_t([3, 4], pixel::color::g, 0.5f32);
+    image.set_t([3, 4], pixel::alpha, 200u8);
+    let g = image.get_t([3, 4], pixel::color::g); // g: f32, inferred
     println!("pixel(3,4).color.g = {g}");
 
-    // RecordRef sugar:
-    let px = image.at(&[3, 4]);
-    println!("pixel(3,4) as f64s = {:?}", px.get_selection_f64(pixel::all));
+    // RecordRef sugar: navigate fields and typed sub-records.
+    let px = image.at_t([3, 4]);
+    println!("pixel(3,4).alpha   = {}", px.field(pixel::alpha));
+    println!("pixel(3,4).color   = {:?}", px.sub(pixel::color).read_f64());
+    println!("pixel(3,4) (all)   = {:?}", px.sub(pixel::all).read_f64());
+
+    // (A legacy usize-index API remains for metadata-driven code:
+    // `image.get::<f32, _>(&[3, 4], pixel::color::g.i())` — type and rank
+    // checked only at runtime/debug. New code should prefer the typed
+    // methods used above; see the "Access API" section of the crate docs.)
+    assert_eq!(image.get::<f32, _>(&[3, 4], pixel::color::g.i()), g);
 
     // --- 2. Exchanging the layout touches ONE line -----------------------
     // Same algorithm, AoS layout with padding-minimizing field order:
-    let mut image2 = alloc_view(AoS::<Pixel, _, llama::mapping::aos::MinPad>::new(extents), &HeapAlloc);
-    image2.set(&[3, 4], pixel::color::g, 0.5f32);
-    assert_eq!(image2.get::<f32>(&[3, 4], pixel::color::g), 0.5);
+    let mut image2 =
+        alloc_view(AoS::<Pixel, _, llama::mapping::aos::MinPad>::new(extents), &HeapAlloc);
+    image2.set_t([3, 4], pixel::color::g, 0.5f32);
+    assert_eq!(image2.get_t([3, 4], pixel::color::g), 0.5);
 
     // Layout-aware copy between different layouts:
     llama::copy::copy_view(&image, &mut image2);
-    assert_eq!(image2.get::<u8>(&[3, 4], pixel::alpha), 200);
-    println!("copied SoA -> AoS(MinPad): alpha survives = {}", image2.get::<u8>(&[3, 4], pixel::alpha));
+    assert_eq!(image2.get_t([3, 4], pixel::alpha), 200);
+    println!(
+        "copied SoA -> AoS(MinPad): alpha survives = {}",
+        image2.get_t([3, 4], pixel::alpha)
+    );
 
     // --- 3. Computed mappings: storage != algorithm type -----------------
     // Store the f32 color channels in 10-bit floats (1+5+4): 62% smaller.
     llama::record! { pub struct Color, mod color { r: f32, g: f32, b: f32 } }
     let packed = BitpackFloatSoA::<Color, _, 5, 4>::new((Dyn(4096u32),));
     let mut compact = alloc_view(packed, &HeapAlloc);
-    compact.set(&[7], color::r, 0.75f32);
+    compact.set_t([7], color::r, 0.75f32);
     println!(
         "10-bit float storage: wrote 0.75, read back {} ({} bytes total vs {} for f32)",
-        compact.get::<f32>(&[7], color::r),
+        compact.get_t([7], color::r),
         compact.storage().total_bytes(),
         4096 * 12,
     );
@@ -59,8 +75,8 @@ fn main() {
     let mut tv = alloc_view(traced, &HeapAlloc);
     for i in 0..16usize {
         for j in 0..16usize {
-            let a: u8 = tv.get(&[i, j], pixel::alpha);
-            tv.set(&[i, j], pixel::alpha, a.saturating_add(1));
+            let a = tv.get_t([i, j], pixel::alpha);
+            tv.set_t([i, j], pixel::alpha, a.saturating_add(1));
         }
     }
     println!("\naccess counts:\n{}", tv.mapping().render_table());

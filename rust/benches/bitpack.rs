@@ -75,12 +75,12 @@ fn main() {
     {
         let mut v = alloc_view(SoA::<Hits, _>::new(e), &HeapAlloc);
         for (i, &x) in ints.iter().enumerate() {
-            v.set(&[i], hits::adc, x);
+            v.set_t([i], hits::adc, x);
         }
         b.bench("load u32 SoA", n as u64, || {
             let mut acc = 0u64;
             for i in 0..n {
-                acc += v.get::<u32>(&[i], hits::adc) as u64;
+                acc += v.get_t([i], hits::adc) as u64;
             }
             black_box(acc);
         });
@@ -89,12 +89,12 @@ fn main() {
         ($name:expr, $bits:literal) => {{
             let mut v = alloc_view(BitpackIntSoA::<Hits, _, $bits>::new(e), &HeapAlloc);
             for (i, &x) in ints.iter().enumerate() {
-                v.set(&[i], hits::adc, x);
+                v.set_t([i], hits::adc, x);
             }
             b.bench($name, n as u64, || {
                 let mut acc = 0u64;
                 for i in 0..n {
-                    acc += v.get::<u32>(&[i], hits::adc) as u64;
+                    acc += v.get_t([i], hits::adc) as u64;
                 }
                 black_box(acc);
             });
@@ -135,12 +135,12 @@ fn main() {
     {
         let mut v = alloc_view(SoA::<Vals, _>::new(e), &HeapAlloc);
         for (i, &x) in floats.iter().enumerate() {
-            v.set(&[i], vals::v, x);
+            v.set_t([i], vals::v, x);
         }
         b.bench("load f64 SoA", n as u64, || {
             let mut acc = 0.0f64;
             for i in 0..n {
-                acc += v.get::<f64>(&[i], vals::v);
+                acc += v.get_t([i], vals::v);
             }
             black_box(acc);
         });
@@ -149,12 +149,12 @@ fn main() {
         ($name:expr, $m:expr) => {{
             let mut v = alloc_view($m, &HeapAlloc);
             for (i, &x) in floats.iter().enumerate() {
-                v.set(&[i], vals::v, x);
+                v.set_t([i], vals::v, x);
             }
             b.bench($name, n as u64, || {
                 let mut acc = 0.0f64;
                 for i in 0..n {
-                    acc += v.get::<f64>(&[i], vals::v);
+                    acc += v.get_t([i], vals::v);
                 }
                 black_box(acc);
             });

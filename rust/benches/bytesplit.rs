@@ -28,17 +28,17 @@ llama::record! {
     }
 }
 
-fn fill<M: MemoryAccess<Event>, S: BlobStorage>(
-    v: &mut View<Event, M, S>,
-    n: usize,
-    value_bits: u32,
-) {
+fn fill<M, S: BlobStorage>(v: &mut View<Event, M, S>, n: usize, value_bits: u32)
+where
+    M: MemoryAccess<Event>,
+    M::Extents: llama::extents::Extents<ArrayIndex = [usize; 1]>,
+{
     let mut rng = Rng::new(17);
     for i in 0..n {
-        v.set(&[i], ev::adc, rng.range_u64(0, (1u64 << value_bits) - 1) as u32);
-        v.set(&[i], ev::channel, rng.range_u64(0, 1023) as u16);
-        v.set(&[i], ev::time, i as u64 * 40 + rng.range_u64(0, 39));
-        v.set(&[i], ev::energy, rng.f64_range(0.0, 100.0) as f32);
+        v.set_t([i], ev::adc, rng.range_u64(0, (1u64 << value_bits) - 1) as u32);
+        v.set_t([i], ev::channel, rng.range_u64(0, 1023) as u16);
+        v.set_t([i], ev::time, i as u64 * 40 + rng.range_u64(0, 39));
+        v.set_t([i], ev::energy, rng.f64_range(0.0, 100.0) as f32);
     }
 }
 
@@ -93,7 +93,7 @@ fn main() {
         b.bench("sum adc via SoA", n as u64, || {
             let mut acc = 0u64;
             for i in 0..n {
-                acc += v.get::<u32>(&[i], ev::adc) as u64;
+                acc += v.get_t([i], ev::adc) as u64;
             }
             black_box(acc);
         });
@@ -104,7 +104,7 @@ fn main() {
         b.bench("sum adc via Bytesplit", n as u64, || {
             let mut acc = 0u64;
             for i in 0..n {
-                acc += v.get::<u32>(&[i], ev::adc) as u64;
+                acc += v.get_t([i], ev::adc) as u64;
             }
             black_box(acc);
         });

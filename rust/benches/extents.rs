@@ -54,15 +54,20 @@ fn main() {
     // ---- index-arithmetic sweep: 2D gather sum with wrap ----
     // The wrapping neighbour access defeats trivial strength reduction, so
     // per-access linearization (in the chosen index type) stays live.
-    fn stencil<E: Extents>(b: &mut Bencher, name: &str, e: E, items: u64, reps: usize)
-    where
-        E: Copy,
-    {
+    // The typed access API fixes the index rank in the type: rank-2 is a
+    // *bound* here, and `[i, j]` literals need no per-access rank checks.
+    fn stencil<E: Extents<ArrayIndex = [usize; 2]>>(
+        b: &mut Bencher,
+        name: &str,
+        e: E,
+        items: u64,
+        reps: usize,
+    ) {
         let m = SoA::<Cell, E, SingleBlob>::new(e);
         let mut view = alloc_view(m, &HeapAlloc);
         for i in 0..SIDE {
             for j in 0..SIDE {
-                view.set(&[i, j], cell::v, (i * j) as f32);
+                view.set_t([i, j], cell::v, (i * j) as f32);
             }
         }
         b.bench(name, items, || {
@@ -74,10 +79,10 @@ fn main() {
                     for j in 0..SIDE {
                         let jl = (j + SIDE - 1) % SIDE;
                         let jr = (j + 1) % SIDE;
-                        acc += view.get::<f32>(&[iu, j], cell::v)
-                            + view.get::<f32>(&[id, j], cell::v)
-                            + view.get::<f32>(&[i, jl], cell::v)
-                            + view.get::<f32>(&[i, jr], cell::v);
+                        acc += view.get_t([iu, j], cell::v)
+                            + view.get_t([id, j], cell::v)
+                            + view.get_t([i, jl], cell::v)
+                            + view.get_t([i, jr], cell::v);
                     }
                 }
             }

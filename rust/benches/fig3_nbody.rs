@@ -89,6 +89,14 @@ fn main() {
         });
     }
     {
+        // Same kernel, legacy usize-index access path: demonstrates the
+        // typed-tag path is zero-cost (rows must agree within noise).
+        let mut v = views::make_soa_view(&init);
+        b.bench("update SoA-MB LLAMA  SIMD8 legacy-idx", n as u64, || {
+            views::update_simd_idx::<8, _, _>(&mut v);
+        });
+    }
+    {
         let mut s = manual::AosoaSim::<8>::new(&init);
         b.bench("update AoSoA8 manual scalar", n as u64, || {
             s.update_scalar();
@@ -177,6 +185,9 @@ fn main() {
     bench_move!("move SoA-MB LLAMA  SIMD8", views::make_soa_view(&init), |v: &mut _| {
         views::move_simd::<8, _, _>(v)
     });
+    bench_move!("move SoA-MB LLAMA  SIMD8 legacy-idx", views::make_soa_view(&init), |v: &mut _| {
+        views::move_simd_idx::<8, _, _>(v)
+    });
     bench_move!("move AoSoA8 manual scalar", Aosoa::new(&init), |s: &mut Aosoa| s.move_scalar());
     bench_move!("move AoSoA8 LLAMA  scalar", views::make_aosoa_view(&init), |v: &mut _| {
         views::move_scalar(v)
@@ -208,6 +219,57 @@ fn main() {
         "{}",
         b.render_table("move step (runtime per particle)", Some("move AoS    manual scalar"))
     );
+
+    // Schema guard (smoke mode, i.e. CI): the typed-tag n-body path must
+    // emit exactly the expected measurement keys, so the BENCH_fig3.json
+    // perf-trajectory artifact stays diffable across commits and a
+    // typed-path row silently disappearing (or being renamed) fails the
+    // build instead of corrupting the trajectory.
+    if fast {
+        let expect = |step: &str| -> Vec<String> {
+            let mut keys: Vec<String> = [
+                "AoS    manual scalar",
+                "AoS    LLAMA  scalar",
+                "AoS    manual SIMD8",
+                "AoS    LLAMA  SIMD8",
+                "SoA-MB manual scalar",
+                "SoA-MB LLAMA  scalar",
+                "SoA-MB manual SIMD8",
+                "SoA-MB LLAMA  SIMD8",
+                "SoA-MB LLAMA  SIMD8 legacy-idx",
+                "AoSoA8 manual scalar",
+                "AoSoA8 LLAMA  scalar",
+                "AoSoA8 manual SIMD8",
+                "AoSoA8 LLAMA  SIMD8",
+            ]
+            .iter()
+            .map(|k| format!("{step} {k}"))
+            .collect();
+            for layout in ["AoS   ", "SoA-MB", "AoSoA8"] {
+                keys.push(format!("{step} {layout} LLAMA  SIMD8 {par_threads}T"));
+            }
+            keys
+        };
+        // Row order differs slightly between the two tables (the
+        // legacy-idx row sits before the AoSoA block in update, after the
+        // SoA SIMD8 row in move): compare as sorted sets.
+        let mut want_update = expect("update");
+        let mut want_move = expect("move");
+        want_update.sort();
+        want_move.sort();
+        let mut got_update: Vec<String> =
+            b_update.results().iter().map(|m| m.name.clone()).collect();
+        let mut got_move: Vec<String> = b.results().iter().map(|m| m.name.clone()).collect();
+        got_update.sort();
+        got_move.sort();
+        assert_eq!(got_update, want_update, "update-table measurement keys drifted");
+        assert_eq!(got_move, want_move, "move-table measurement keys drifted");
+        println!(
+            "smoke schema guard OK: {} update + {} move keys",
+            got_update.len(),
+            got_move.len()
+        );
+    }
 
     // Machine-readable perf trajectory (uploaded as a CI artifact).
     let written = llama::bench::emit_json(

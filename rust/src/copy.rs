@@ -163,9 +163,9 @@ mod tests {
         n: usize,
     ) {
         for i in 0..n {
-            assert_eq!(v.get::<f64>(&[i], p::pos::x), i as f64);
-            assert_eq!(v.get::<f64>(&[i], p::pos::y), -(i as f64));
-            assert_eq!(v.get::<f32>(&[i], p::m), (i * 2) as f32);
+            assert_eq!(v.get::<f64, _>(&[i], p::pos::x), i as f64);
+            assert_eq!(v.get::<f64, _>(&[i], p::pos::y), -(i as f64));
+            assert_eq!(v.get::<f32, _>(&[i], p::m), (i * 2) as f32);
         }
     }
 
@@ -226,7 +226,7 @@ mod tests {
         copy_view(&a, &mut b);
         for i in 0..3usize {
             for j in 0..4usize {
-                assert_eq!(b.get::<f64>(&[i, j], p::pos::x), (i * 10 + j) as f64);
+                assert_eq!(b.get::<f64, _>(&[i, j], p::pos::x), (i * 10 + j) as f64);
             }
         }
     }
@@ -242,7 +242,7 @@ mod tests {
         }
         copy_view(&a, &mut b);
         for i in 0..8usize {
-            assert_eq!(b.get::<f64>(&[i], q::a), i as f64 + 0.5);
+            assert_eq!(b.get::<f64, _>(&[i], q::a), i as f64 + 0.5);
         }
     }
 }

@@ -122,11 +122,57 @@ impl<I: IndexType> Extent for Dyn<I> {
     }
 }
 
+/// The const-rank array index type: `[usize; RANK]`.
+///
+/// The typed access API ([`crate::view::View::get_t`] and friends) takes
+/// indices as `ArrayIndex<RANK>` with the rank fixed by the view's
+/// [`Extents::RANK`], so a wrong-rank access is a *compile error* (a
+/// `[usize; 3]` is not a `[usize; 2]`) and the access path carries no
+/// slice-length checks. The legacy `&[usize]` API remains as a thin
+/// compatibility layer that converts (with one runtime rank assert).
+pub type ArrayIndex<const RANK: usize> = [usize; RANK];
+
+/// Abstraction over `[usize; N]` for any rank `N` — the bound carried by
+/// [`Extents::ArrayIndex`], letting rank-generic code (the bulk-traversal
+/// odometers in [`crate::view`]) hold exact-size index arrays instead of
+/// `MAX_RANK`-padded buffers plus a runtime rank.
+pub trait RankIndex:
+    Copy + Clone + Debug + PartialEq + Eq + Send + Sync + 'static
+{
+    /// The array rank (number of dimensions).
+    const RANK: usize;
+    /// The all-zeros index.
+    fn zeroed() -> Self;
+    /// View as a slice of length [`RANK`](RankIndex::RANK).
+    fn as_slice(&self) -> &[usize];
+    /// View as a mutable slice of length [`RANK`](RankIndex::RANK).
+    fn as_mut_slice(&mut self) -> &mut [usize];
+}
+
+impl<const N: usize> RankIndex for [usize; N] {
+    const RANK: usize = N;
+    #[inline(always)]
+    fn zeroed() -> Self {
+        [0; N]
+    }
+    #[inline(always)]
+    fn as_slice(&self) -> &[usize] {
+        self
+    }
+    #[inline(always)]
+    fn as_mut_slice(&mut self) -> &mut [usize] {
+        self
+    }
+}
+
 /// A full set of array extents: a tuple of per-dimension [`Extent`]s
 /// (rank 1–4) sharing one index type.
 pub trait Extents: Copy + Debug + Send + Sync + 'static {
     /// The shared index arithmetic type.
     type Index: IndexType;
+    /// The const-rank array index type, `[usize; RANK]` — see
+    /// [`ArrayIndex`].
+    type ArrayIndex: RankIndex;
     /// Number of array dimensions.
     const RANK: usize;
     /// Per-dimension compile-time extents ([`DYN`] where runtime).
@@ -154,6 +200,7 @@ macro_rules! impl_extents_tuple {
     ($rank:literal; $($T:ident . $idx:tt),+) => {
         impl<I: IndexType, $($T: Extent<Index = I>),+> Extents for ($($T,)+) {
             type Index = I;
+            type ArrayIndex = [usize; $rank];
             const RANK: usize = $rank;
             const STATIC_EXTENTS: &'static [usize] = &[$($T::STATIC),+];
             #[inline(always)]
@@ -316,6 +363,20 @@ impl Linearizer for Morton {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn array_index_rank_is_in_the_type() {
+        fn idx_of<E: Extents>() -> E::ArrayIndex {
+            <E::ArrayIndex as RankIndex>::zeroed()
+        }
+        let mut i2 = idx_of::<(Dyn<u32>, Dyn<u32>)>();
+        assert_eq!(i2, [0usize, 0]);
+        assert_eq!(<[usize; 2] as RankIndex>::RANK, 2);
+        i2.as_mut_slice()[1] = 7;
+        assert_eq!(i2.as_slice(), &[0, 7]);
+        // The alias is the same type.
+        let _: ArrayIndex<2> = i2;
+    }
 
     #[test]
     fn static_extents_are_zero_sized() {

@@ -29,45 +29,79 @@
 //! let mapping = SoA::<Particle, _>::new(extents);
 //! let mut view = alloc_view(mapping, &HeapAlloc);
 //!
-//! view.set(&[3], particle::mass, 1.5f32);
-//! let m: f32 = view.get(&[3], particle::mass);
+//! // Typed access: the tag carries the field's scalar type and record,
+//! // the index is a const-rank array — wrong type, wrong record, or
+//! // wrong rank would not compile.
+//! view.set_t([3], particle::mass, 1.5f32);
+//! let m = view.get_t([3], particle::mass); // m: f32, inferred
 //! assert_eq!(m, 1.5);
+//!
+//! // Record navigation: typed field and sub-record projection.
+//! let r = view.at_t([3]);
+//! assert_eq!(r.field(particle::mass), 1.5);
+//! assert_eq!(r.sub(particle::pos).read_f64(), vec![0.0, 0.0, 0.0]);
 //!
 //! // Bulk traversal engine: visit every record scalar-wise...
 //! view.for_each(|r| {
 //!     let i = r.index()[0] as f32;
-//!     r.set(particle::mass, i);
+//!     r.set_field(particle::mass, i);
 //! });
-//! assert_eq!(view.get::<f32>(&[7], particle::mass), 7.0);
+//! assert_eq!(view.get_t([7], particle::mass), 7.0);
 //!
 //! // ...or stream SIMD chunks; the mapping picks the fastest path
 //! // (SoA here: contiguous vector moves — swap in AoS/AoSoA and this
 //! // code does not change).
 //! view.transform_simd::<4>(|c| {
-//!     let m: Simd<f32, 4> = c.load(particle::mass);
-//!     c.store(particle::mass, m + m);
+//!     let m = c.load_t(particle::mass); // Simd<f32, 4>, inferred
+//!     c.store_t(particle::mass, m + m);
 //! });
-//! assert_eq!(view.get::<f32>(&[7], particle::mass), 14.0);
+//! assert_eq!(view.get_t([7], particle::mass), 14.0);
 //!
 //! // ...and fan either traversal out over threads (`LLAMA_THREADS`, or
 //! // all cores): the mapping's `shard_bounds` proof splits the view into
 //! // disjoint shards, falling back to the serial engine when it can't.
 //! view.par_for_each(|r| {
-//!     let m: f32 = r.get(particle::mass);
-//!     r.set(particle::mass, m + 1.0);
+//!     let m = r.field(particle::mass);
+//!     r.set_field(particle::mass, m + 1.0);
 //! });
-//! // The chunk variant is `unsafe`: `Chunk::get`/`set` can reach other
-//! // shards' records, so the kernel must not touch bytes another shard
-//! // stores (this one only uses its own chunk — see `shard`).
+//! // The chunk variant is `unsafe`: `Chunk::get_t`/`set_t` can reach
+//! // other shards' records, so the kernel must not touch bytes another
+//! // shard stores (this one only uses its own chunk — see `shard`).
 //! // SAFETY: the kernel touches only its own chunk's records.
 //! unsafe {
 //!     view.par_transform_simd::<4, _>(|c| {
-//!         let m: Simd<f32, 4> = c.load(particle::mass);
-//!         c.store(particle::mass, m - Simd::splat(1.0));
+//!         let m = c.load_t(particle::mass);
+//!         c.store_t(particle::mass, m - Simd::splat(1.0));
 //!     });
 //! }
-//! assert_eq!(view.get::<f32>(&[7], particle::mass), 14.0);
+//! assert_eq!(view.get_t([7], particle::mass), 14.0);
 //! ```
+//!
+//! # Access API
+//!
+//! The access layer has two parallel method families (see [`view`] for
+//! the full list):
+//!
+//! - **Typed tags (preferred).** [`crate::record!`] emits a zero-sized
+//!   [`record::FieldTag`] value per leaf (`particle::mass`) and a
+//!   [`record::GroupTag`] per sub-record (`particle::pos`, `::all`). The
+//!   `*_t` methods and the [`view::RecordRef`] navigation infer the
+//!   scalar type from the tag, tie the tag to its record dimension, and
+//!   take const-rank [`extents::ArrayIndex`] indices (`[usize; RANK]`) —
+//!   so wrong-type, wrong-record, and wrong-rank accesses are *compile
+//!   errors* and the monomorphized access path carries no slice-rank
+//!   checks. Tags fold to constant field indices: the typed path is
+//!   zero-cost (property-tested bit-identical to the legacy path, and
+//!   benchmarked against it in `fig3_nbody`).
+//! - **Legacy indices (compatibility).** The original `usize`-index /
+//!   `&[usize]` methods remain, their field parameter generic over
+//!   [`record::FieldIndex`] (raw indices or tags; explicitly-typed call
+//!   sites write `get::<f32, _>(...)`). Type and rank agreement are only
+//!   debug-asserted on the scalar path (`at`/`at_mut` assert the rank at
+//!   runtime). Metadata-driven code
+//!   ([`view::load_as_f64`], [`copy`]) legitimately lives here; the
+//!   `RecordRef::get_selection_f64` escape hatch is deprecated in favor
+//!   of the typed sub-record projection [`view::RecordRef::sub`].
 //!
 //! The crate layers (paper section → module):
 //! - §2 compile-time array extents → [`extents`]
@@ -103,7 +137,9 @@ pub mod prelude {
     pub use crate::blob::{
         alloc_view, AlignedAlloc, ArrayStorage, BlobAlloc, BlobStorage, HeapAlloc,
     };
-    pub use crate::extents::{ColMajor, Dyn, Extent, Extents, Fix, Linearizer, Morton, RowMajor};
+    pub use crate::extents::{
+        ArrayIndex, ColMajor, Dyn, Extent, Extents, Fix, Linearizer, Morton, RankIndex, RowMajor,
+    };
     pub use crate::mapping::aos::{AoS, FieldOrder, Packed};
     pub use crate::mapping::aosoa::AoSoA;
     pub use crate::mapping::bitpack_float::BitpackFloatSoA;
@@ -119,8 +155,13 @@ pub mod prelude {
     pub use crate::mapping::{
         FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess,
     };
-    pub use crate::record::{Bf16, Field, RecordDim, Scalar, ScalarType, Selection, F16};
+    pub use crate::record::{
+        Bf16, Field, FieldIndex, FieldTag, GroupTag, Leaf, RecordDim, Scalar, ScalarType, Sel,
+        Selection, F16,
+    };
     pub use crate::shard::{thread_count, thread_count_or, ShardCursor, ViewShards};
     pub use crate::simd::{Simd, SimdElem};
-    pub use crate::view::{Chunk, RecordRef, RecordRefMut, View};
+    pub use crate::view::{
+        Chunk, FieldRefMut, IndexOf, RecordRef, RecordRefMut, SubRecordRef, View,
+    };
 }

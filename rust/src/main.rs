@@ -236,12 +236,12 @@ fn cmd_compress(rest: &[String]) -> i32 {
         let adc = rng.range_u64(0, 4095) as u32;
         let t = (i as u64) * 25 + rng.range_u64(0, 31);
         let e = (adc as f32) * 0.05;
-        soa.set(&[i], ev::adc, adc);
-        soa.set(&[i], ev::time, t);
-        soa.set(&[i], ev::energy, e);
-        bs.set(&[i], ev::adc, adc);
-        bs.set(&[i], ev::time, t);
-        bs.set(&[i], ev::energy, e);
+        soa.set_t([i], ev::adc, adc);
+        soa.set_t([i], ev::time, t);
+        soa.set_t([i], ev::energy, e);
+        bs.set_t([i], ev::adc, adc);
+        bs.set_t([i], ev::time, t);
+        bs.set_t([i], ev::energy, e);
     }
 
     println!("compression of {n} HEP-like events (adc 12-bit, monotonic time, f32 energy):");

@@ -24,7 +24,7 @@ use crate::simd::{Simd, SimdElem};
 /// llama::record! { pub struct P, mod p { x: f32, y: f32 } }
 /// let mut v = alloc_view(AoSoA::<P, _, 8>::new((Dyn(32u32),)), &HeapAlloc);
 /// v.set(&[9], p::y, 3.0f32);
-/// assert_eq!(v.get::<f32>(&[9], p::y), 3.0);
+/// assert_eq!(v.get::<f32, _>(&[9], p::y), 3.0);
 /// ```
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AoSoA<R, E, const LANES: usize, L = RowMajor, const MASK: u64 = { u64::MAX }> {
@@ -208,9 +208,9 @@ mod tests {
         let m = AoSoA::<P, _, 4>::new((Dyn(10u32),));
         assert_eq!(m.blob_size(0), 3 * 4 * 16); // ceil(10/4)=3 blocks
         // record 5 = block 1, lane 1: field region + lane * scalar size
-        assert_eq!(m.blob_nr_and_offset(&[5], p::x), (0, 64 + 4));
-        assert_eq!(m.blob_nr_and_offset(&[5], p::y), (0, 64 + 16 + 4));
-        assert_eq!(m.blob_nr_and_offset(&[5], p::m), (0, 64 + 32 + 8));
+        assert_eq!(m.blob_nr_and_offset(&[5], p::x.i()), (0, 64 + 4));
+        assert_eq!(m.blob_nr_and_offset(&[5], p::y.i()), (0, 64 + 16 + 4));
+        assert_eq!(m.blob_nr_and_offset(&[5], p::m.i()), (0, 64 + 32 + 8));
     }
 
     #[test]
@@ -218,12 +218,12 @@ mod tests {
         use crate::mapping::FieldRun;
         let m = AoSoA::<P, _, 4>::new((Dyn(10u32),));
         // lane 1 of block 1 (byte 64 + 16 + 4): 3 lanes left in the block.
-        assert_eq!(m.contiguous_run(5, p::y), Some(FieldRun { blob: 0, offset: 84, len: 3 }));
+        assert_eq!(m.contiguous_run(5, p::y.i()), Some(FieldRun { blob: 0, offset: 84, len: 3 }));
         // block start: full block available.
-        assert_eq!(m.contiguous_run(4, p::x), Some(FieldRun { blob: 0, offset: 64, len: 4 }));
+        assert_eq!(m.contiguous_run(4, p::x.i()), Some(FieldRun { blob: 0, offset: 64, len: 4 }));
         // tail block is clipped to the extent (records 8, 9 only).
-        assert_eq!(m.contiguous_run(8, p::x).unwrap().len, 2);
-        assert_eq!(m.contiguous_run(10, p::x), None);
+        assert_eq!(m.contiguous_run(8, p::x.i()).unwrap().len, 2);
+        assert_eq!(m.contiguous_run(10, p::x.i()), None);
     }
 
     #[test]
@@ -234,8 +234,8 @@ mod tests {
             v.set(&[i], p::m, -(i as f64));
         }
         for i in 0..20 {
-            assert_eq!(v.get::<f32>(&[i], p::x), i as f32);
-            assert_eq!(v.get::<f64>(&[i], p::m), -(i as f64));
+            assert_eq!(v.get::<f32, _>(&[i], p::x), i as f32);
+            assert_eq!(v.get::<f64, _>(&[i], p::m), -(i as f64));
         }
     }
 

@@ -165,7 +165,7 @@ pub fn unpack_float_bits(packed: u64, exp_bits: u32, man_bits: u32) -> f64 {
 /// // 16-bit custom floats: 1+8+7 = bfloat16-shaped storage for f64 fields.
 /// let mut view = alloc_view(BitpackFloatSoA::<V, _, 8, 7>::new((Dyn(32u32),)), &HeapAlloc);
 /// view.set(&[0], v::e, 1.5f64);
-/// assert_eq!(view.get::<f64>(&[0], v::e), 1.5);
+/// assert_eq!(view.get::<f64, _>(&[0], v::e), 1.5);
 /// ```
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BitpackFloatSoA<R, E, const EXP: u32, const MAN: u32, L = RowMajor> {
@@ -352,8 +352,8 @@ mod tests {
         for i in 0..64usize {
             // f64 through e8m23 loses precision to f32 granularity — exact
             // here because quarters are representable.
-            assert_eq!(v.get::<f64>(&[i], vec2::x), i as f64 * 0.25);
-            assert_eq!(v.get::<f32>(&[i], vec2::y), -(i as f32) * 0.5);
+            assert_eq!(v.get::<f64, _>(&[i], vec2::x), i as f64 * 0.25);
+            assert_eq!(v.get::<f32, _>(&[i], vec2::y), -(i as f32) * 0.5);
         }
     }
 

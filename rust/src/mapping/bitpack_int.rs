@@ -141,8 +141,8 @@ pub fn packed_blob_size(count: usize, bits: u32) -> usize {
 /// let mut v = alloc_view(BitpackIntSoA::<Hit, _, 12>::new((Dyn(16u32),)), &HeapAlloc);
 /// v.set(&[3], hit::adc, 4095u16);
 /// v.set(&[4], hit::ch, -17i32);
-/// assert_eq!(v.get::<u16>(&[3], hit::adc), 4095);
-/// assert_eq!(v.get::<i32>(&[4], hit::ch), -17);
+/// assert_eq!(v.get::<u16, _>(&[3], hit::adc), 4095);
+/// assert_eq!(v.get::<i32, _>(&[4], hit::ch), -17);
 /// ```
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BitpackIntSoA<R, E, const BITS: u32, L = RowMajor> {
@@ -369,9 +369,9 @@ mod tests {
             v.set(&[i], hit::time, (i * 7) as u64);
         }
         for i in 0..100usize {
-            assert_eq!(v.get::<u16>(&[i], hit::adc), (i * 41 % 4096) as u16);
-            assert_eq!(v.get::<i32>(&[i], hit::channel), (i as i32) - 50);
-            assert_eq!(v.get::<u64>(&[i], hit::time), (i * 7) as u64);
+            assert_eq!(v.get::<u16, _>(&[i], hit::adc), (i * 41 % 4096) as u16);
+            assert_eq!(v.get::<i32, _>(&[i], hit::channel), (i as i32) - 50);
+            assert_eq!(v.get::<u64, _>(&[i], hit::time), (i * 7) as u64);
         }
     }
 
@@ -388,13 +388,13 @@ mod tests {
     fn truncation_wraps() {
         let mut v = alloc_view(BitpackIntSoA::<Hit, _, 8>::new((Dyn(4u32),)), &HeapAlloc);
         v.set(&[0], hit::adc, 0x1FFu16); // 9 bits -> low 8 kept
-        assert_eq!(v.get::<u16>(&[0], hit::adc), 0xFF);
+        assert_eq!(v.get::<u16, _>(&[0], hit::adc), 0xFF);
         v.set(&[1], hit::channel, -1i32); // 0xFF -> sign-extends back to -1
-        assert_eq!(v.get::<i32>(&[1], hit::channel), -1);
+        assert_eq!(v.get::<i32, _>(&[1], hit::channel), -1);
         v.set(&[2], hit::channel, 127i32);
-        assert_eq!(v.get::<i32>(&[2], hit::channel), 127);
+        assert_eq!(v.get::<i32, _>(&[2], hit::channel), 127);
         v.set(&[3], hit::channel, 128i32); // wraps to -128 in 8-bit
-        assert_eq!(v.get::<i32>(&[3], hit::channel), -128);
+        assert_eq!(v.get::<i32, _>(&[3], hit::channel), -128);
     }
 
     #[test]
@@ -407,7 +407,7 @@ mod tests {
             b.set(&[i], hit::time, val);
         }
         for i in 0..64usize {
-            assert_eq!(a.get::<u64>(&[i], hit::time), b.get::<u64>(&[i], hit::time));
+            assert_eq!(a.get::<u64, _>(&[i], hit::time), b.get::<u64, _>(&[i], hit::time));
         }
         assert_eq!(a.storage().total_bytes(), b.storage().total_bytes());
     }
@@ -421,9 +421,9 @@ mod tests {
         // Overwrite the middle, check neighbours.
         v.set(&[7], hit::adc, 127u16);
         v.set(&[8], hit::adc, 0u16);
-        assert_eq!(v.get::<u16>(&[6], hit::adc), (6 * 9) % 128);
-        assert_eq!(v.get::<u16>(&[7], hit::adc), 127);
-        assert_eq!(v.get::<u16>(&[8], hit::adc), 0);
-        assert_eq!(v.get::<u16>(&[9], hit::adc), (9 * 9) % 128);
+        assert_eq!(v.get::<u16, _>(&[6], hit::adc), (6 * 9) % 128);
+        assert_eq!(v.get::<u16, _>(&[7], hit::adc), 127);
+        assert_eq!(v.get::<u16, _>(&[8], hit::adc), 0);
+        assert_eq!(v.get::<u16, _>(&[9], hit::adc), (9 * 9) % 128);
     }
 }

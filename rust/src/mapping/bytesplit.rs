@@ -30,7 +30,7 @@ use crate::record::{RecordDim, Scalar};
 /// llama::record! { pub struct T, mod t { v: u32 } }
 /// let mut view = alloc_view(Bytesplit::<T, _>::new((Dyn(4u32),)), &HeapAlloc);
 /// view.set(&[0], t::v, 0x01020304u32);
-/// assert_eq!(view.get::<u32>(&[0], t::v), 0x01020304);
+/// assert_eq!(view.get::<u32, _>(&[0], t::v), 0x01020304);
 /// // plane 0 holds the low bytes of all 4 values first:
 /// assert_eq!(view.storage().blob(0)[0], 0x04);
 /// assert_eq!(view.storage().blob(0)[4], 0x03); // plane 1 starts at count=4
@@ -132,9 +132,9 @@ mod tests {
             v.set(&[i], rec::flt, i as f32 / 7.0);
         }
         for i in 0..64usize {
-            assert_eq!(v.get::<u32>(&[i], rec::small), (i * 3) as u32);
-            assert_eq!(v.get::<u64>(&[i], rec::wide), u64::MAX - i as u64);
-            assert_eq!(v.get::<f32>(&[i], rec::flt), i as f32 / 7.0);
+            assert_eq!(v.get::<u32, _>(&[i], rec::small), (i * 3) as u32);
+            assert_eq!(v.get::<u64, _>(&[i], rec::wide), u64::MAX - i as u64);
+            assert_eq!(v.get::<f32, _>(&[i], rec::flt), i as f32 / 7.0);
         }
     }
 
@@ -145,7 +145,7 @@ mod tests {
         for i in 0..256usize {
             v.set(&[i], rec::small, (i % 100) as u32); // < 256: one byte
         }
-        let blob = v.storage().blob(rec::small);
+        let blob = v.storage().blob(rec::small.i());
         assert_eq!(blob.len(), 1024);
         // planes 1..3 (bytes 256..1024) must be entirely zero
         assert!(blob[256..].iter().all(|&b| b == 0));

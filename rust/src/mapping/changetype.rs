@@ -40,7 +40,7 @@ pub fn convert_scalar<A: Scalar, B: Scalar>(a: A) -> B {
 /// let inner = SoA::<Ps, _>::new((Dyn(16u32),));
 /// let mut v = alloc_view(ChangeType::<P, Ps, _>::new(inner), &HeapAlloc);
 /// v.set(&[2], p::x, 0.5f64);                    // algorithm type: f64
-/// assert_eq!(v.get::<f64>(&[2], p::x), 0.5);    // stored as f32
+/// assert_eq!(v.get::<f64, _>(&[2], p::x), 0.5);    // stored as f32
 /// assert_eq!(v.storage().total_bytes(), 16 * 8); // half of the f64 SoA
 /// ```
 #[derive(Clone, Copy, Debug, Default)]
@@ -176,8 +176,8 @@ mod tests {
         let mut v = alloc_view(ChangeType::<P, Pf32, _>::new(inner), &HeapAlloc);
         v.set(&[1], p::pos::x, 2.5f64);
         v.set(&[1], p::count, -9i64);
-        assert_eq!(v.get::<f64>(&[1], p::pos::x), 2.5);
-        assert_eq!(v.get::<i64>(&[1], p::count), -9);
+        assert_eq!(v.get::<f64, _>(&[1], p::pos::x), 2.5);
+        assert_eq!(v.get::<i64, _>(&[1], p::count), -9);
         // storage is f32-sized
         assert_eq!(v.storage().total_bytes(), 8 * (4 + 4 + 4));
     }
@@ -187,9 +187,9 @@ mod tests {
         let inner = AoS::<Pbf16, _>::new((Dyn(8u32),));
         let mut v = alloc_view(ChangeType::<P, Pbf16, _>::new(inner), &HeapAlloc);
         v.set(&[0], p::pos::y, 1.0f64);
-        assert_eq!(v.get::<f64>(&[0], p::pos::y), 1.0); // exact in bf16
+        assert_eq!(v.get::<f64, _>(&[0], p::pos::y), 1.0); // exact in bf16
         v.set(&[0], p::pos::x, 3.14159f64);
-        let loaded = v.get::<f64>(&[0], p::pos::x);
+        let loaded = v.get::<f64, _>(&[0], p::pos::x);
         assert!((loaded - 3.14159).abs() < 0.02, "bf16 precision: {loaded}");
         // storage is 2+2+2 bytes per record
         assert_eq!(v.storage().total_bytes(), 8 * 6);
@@ -201,7 +201,7 @@ mod tests {
         let mut v = alloc_view(ChangeType::<P, Pf32, _>::new(inner), &HeapAlloc);
         let x = 1.0 + 1e-12; // not representable in f32
         v.set(&[0], p::pos::x, x);
-        let back = v.get::<f64>(&[0], p::pos::x);
+        let back = v.get::<f64, _>(&[0], p::pos::x);
         assert_eq!(back, 1.0); // rounded to f32
     }
 
@@ -210,6 +210,6 @@ mod tests {
         let inner = SoA::<Pf32, _>::new((Dyn(4u32),));
         let mut v = alloc_view(ChangeType::<P, Pf32, _>::new(inner), &HeapAlloc);
         v.set(&[2], p::count, i64::from(i32::MAX));
-        assert_eq!(v.get::<i64>(&[2], p::count), i64::from(i32::MAX));
+        assert_eq!(v.get::<i64, _>(&[2], p::count), i64::from(i32::MAX));
     }
 }

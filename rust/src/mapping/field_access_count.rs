@@ -70,8 +70,9 @@ impl<R: RecordDim, M: MemoryAccess<R>> FieldAccessCount<R, M> {
         &self.inner
     }
 
-    /// Total (reads, writes) for `field`.
-    pub fn field_counts(&self, field: usize) -> (u64, u64) {
+    /// Total (reads, writes) for `field` (a raw index or a typed tag).
+    pub fn field_counts(&self, field: impl crate::record::FieldIndex) -> (u64, u64) {
+        let field = field.field_index();
         (
             self.counters.reads[field].load(Ordering::Relaxed),
             self.counters.writes[field].load(Ordering::Relaxed),
@@ -204,15 +205,15 @@ mod tests {
         }
         let mut acc = 0.0;
         for i in 0..16usize {
-            acc += v.get::<f64>(&[i], p::x);
+            acc += v.get::<f64, _>(&[i], p::x);
         }
         v.set(&[0], p::m, acc as f32);
         let rep = v.mapping().report();
-        assert_eq!(rep[p::x].reads, 16);
-        assert_eq!(rep[p::x].writes, 16);
-        assert_eq!(rep[p::m].reads, 0);
-        assert_eq!(rep[p::m].writes, 1);
-        assert_eq!(rep[p::x].field, "x");
+        assert_eq!(rep[p::x.i()].reads, 16);
+        assert_eq!(rep[p::x.i()].writes, 16);
+        assert_eq!(rep[p::m.i()].reads, 0);
+        assert_eq!(rep[p::m.i()].writes, 1);
+        assert_eq!(rep[p::x.i()].field, "x");
     }
 
     #[test]
@@ -247,7 +248,7 @@ mod tests {
             b.set(&[i], p::x, (i * i) as f64);
         }
         for i in 0..8usize {
-            assert_eq!(a.get::<f64>(&[i], p::x), b.get::<f64>(&[i], p::x));
+            assert_eq!(a.get::<f64, _>(&[i], p::x), b.get::<f64, _>(&[i], p::x));
         }
     }
 }

@@ -196,7 +196,7 @@ mod tests {
         let hm = Heatmap::<P, _, 1>::new(SoA::<P, _>::new((Dyn(4u32),)));
         let mut v = alloc_view(hm, &HeapAlloc);
         v.set(&[0], p::x, 1.0f64);
-        let _ = v.get::<f64>(&[0], p::x);
+        let _ = v.get::<f64, _>(&[0], p::x);
         let counts = v.mapping().blob_counts(0);
         // bytes 0..8 touched twice (one store + one load)
         assert_eq!(&counts[..8], &[2; 8]);

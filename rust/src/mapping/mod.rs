@@ -187,6 +187,15 @@ pub trait PhysicalMapping<R: RecordDim>: Mapping<R> {
 ///
 /// Physical mappings implement this via [`impl_memory_access_via_physical!`];
 /// computed mappings implement it directly (pack/unpack, convert, count...).
+///
+/// The mapping layer deliberately stays on the erased `(idx: &[usize],
+/// field: usize)` currency: 13 mapping implementations dispatch on runtime
+/// metadata anyway, and the typed layer above
+/// ([`crate::view::View::get_t`] and friends) resolves tags to constant
+/// field indices and const-rank indices to slices *before* calling down,
+/// so the generic bounds here never need the tag path. Type agreement is
+/// debug-asserted against `R::FIELDS` ([`physical_load`]); the typed API
+/// makes those asserts unreachable by construction.
 pub trait MemoryAccess<R: RecordDim>: Mapping<R> {
     /// Load the scalar at `(idx, field)` as `T`.
     ///

@@ -85,7 +85,7 @@ mod tests {
         let mut v = alloc_view(NullMapping::<P, _>::new((Dyn(4u32),)), &HeapAlloc);
         assert_eq!(v.storage().total_bytes(), 0);
         v.set(&[1], p::a, 9.0f32);
-        assert_eq!(v.get::<f32>(&[1], p::a), 0.0);
-        assert_eq!(v.get::<u32>(&[3], p::b), 0);
+        assert_eq!(v.get::<f32, _>(&[1], p::a), 0.0);
+        assert_eq!(v.get::<u32, _>(&[3], p::b), 0);
     }
 }

@@ -87,9 +87,9 @@ mod tests {
         let mut v = alloc_view(One::<P, _>::new((Dyn(100u32),)), &HeapAlloc);
         assert_eq!(v.storage().total_bytes(), 12);
         v.set(&[13], p::a, 3.5f32);
-        assert_eq!(v.get::<f32>(&[99], p::a), 3.5);
-        assert_eq!(v.get::<f32>(&[0], p::a), 3.5);
+        assert_eq!(v.get::<f32, _>(&[99], p::a), 3.5);
+        assert_eq!(v.get::<f32, _>(&[0], p::a), 3.5);
         v.set(&[0], p::b, -7i64);
-        assert_eq!(v.get::<i64>(&[42], p::b), -7);
+        assert_eq!(v.get::<i64, _>(&[42], p::b), -7);
     }
 }

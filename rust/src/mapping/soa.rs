@@ -46,7 +46,7 @@ impl BlobPolicy for SingleBlob {
 /// llama::record! { pub struct P, mod p { x: f64, m: f32 } }
 /// let mut v = alloc_view(SoA::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
 /// v.set(&[5], p::x, 1.0f64);
-/// assert_eq!(v.get::<f64>(&[5], p::x), 1.0);
+/// assert_eq!(v.get::<f64, _>(&[5], p::x), 1.0);
 /// ```
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SoA<R, E, B = MultiBlob, L = RowMajor, const MASK: u64 = { u64::MAX }> {
@@ -326,8 +326,8 @@ mod tests {
         assert_eq!(<SoA<P, (Dyn<u32>,)> as Mapping<P>>::BLOB_COUNT, 4);
         assert_eq!(m.blob_size(0), 80); // pos.x: 10 f64
         assert_eq!(m.blob_size(3), 40); // mass: 10 f32
-        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::y), (1, 56));
-        assert_eq!(m.blob_nr_and_offset(&[7], p::mass), (3, 28));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::y.i()), (1, 56));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::mass.i()), (3, 28));
     }
 
     #[test]
@@ -335,17 +335,17 @@ mod tests {
         let m = SoA::<P, _, SingleBlob>::new((Dyn(10u32),));
         assert_eq!(<SoA<P, (Dyn<u32>,), SingleBlob> as Mapping<P>>::BLOB_COUNT, 1);
         assert_eq!(m.blob_size(0), 10 * (24 + 4));
-        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::x), (0, 56));
-        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::y), (0, 80 + 56));
-        assert_eq!(m.blob_nr_and_offset(&[7], p::mass), (0, 240 + 28));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::x.i()), (0, 56));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::y.i()), (0, 80 + 56));
+        assert_eq!(m.blob_nr_and_offset(&[7], p::mass.i()), (0, 240 + 28));
     }
 
     #[test]
     fn roundtrip_2d() {
         let mut v = alloc_view(SoA::<P, _>::new((Dyn(4u32), Dyn(5u32))), &HeapAlloc);
         v.set(&[2, 3], p::pos::z, 9.25f64);
-        assert_eq!(v.get::<f64>(&[2, 3], p::pos::z), 9.25);
-        assert_eq!(v.get::<f64>(&[3, 2], p::pos::z), 0.0);
+        assert_eq!(v.get::<f64, _>(&[2, 3], p::pos::z), 9.25);
+        assert_eq!(v.get::<f64, _>(&[3, 2], p::pos::z), 0.0);
     }
 
     #[test]
@@ -357,8 +357,8 @@ mod tests {
         let s: Simd<f64, 4> = v.load_simd(&[4], p::pos::x);
         assert_eq!(s.0, [4.0, 5.0, 6.0, 7.0]);
         v.store_simd(&[8], p::pos::x, Simd([100.0f64, 101.0, 102.0, 103.0]));
-        assert_eq!(v.get::<f64>(&[9], p::pos::x), 101.0);
-        assert_eq!(v.get::<f64>(&[12], p::pos::x), 12.0);
+        assert_eq!(v.get::<f64, _>(&[9], p::pos::x), 101.0);
+        assert_eq!(v.get::<f64, _>(&[12], p::pos::x), 12.0);
     }
 
     #[test]
@@ -366,16 +366,18 @@ mod tests {
         use crate::mapping::FieldRun;
         let m = SoA::<P, _>::new((Dyn(10u32),));
         // MultiBlob: run covers the rest of the field's own blob.
-        assert_eq!(m.contiguous_run(3, p::pos::y), Some(FieldRun { blob: 1, offset: 24, len: 7 }));
-        assert_eq!(m.contiguous_run(0, p::mass), Some(FieldRun { blob: 3, offset: 0, len: 10 }));
-        assert_eq!(m.contiguous_run(10, p::mass), None);
+        let run = m.contiguous_run(3, p::pos::y.i());
+        assert_eq!(run, Some(FieldRun { blob: 1, offset: 24, len: 7 }));
+        let run = m.contiguous_run(0, p::mass.i());
+        assert_eq!(run, Some(FieldRun { blob: 3, offset: 0, len: 10 }));
+        assert_eq!(m.contiguous_run(10, p::mass.i()), None);
         // SingleBlob: run starts at the field's region within blob 0.
         let sb = SoA::<P, _, SingleBlob>::new((Dyn(10u32),));
-        let run = sb.contiguous_run(3, p::pos::y);
+        let run = sb.contiguous_run(3, p::pos::y.i());
         assert_eq!(run, Some(FieldRun { blob: 0, offset: 104, len: 7 }));
         // ColMajor linearization breaks contiguity.
         let cm = SoA::<P, (Dyn<u32>,), MultiBlob, crate::extents::ColMajor>::new((Dyn(10u32),));
-        assert_eq!(cm.contiguous_run(0, p::mass), None);
+        assert_eq!(cm.contiguous_run(0, p::mass.i()), None);
     }
 
     #[test]
@@ -384,6 +386,6 @@ mod tests {
         let m = SoA::<P, (Dyn<u32>,), MultiBlob, RowMajor, M>::new((Dyn(10u32),));
         assert_eq!(<SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, M> as Mapping<P>>::BLOB_COUNT, 1);
         assert_eq!(m.blob_size(0), 40);
-        assert_eq!(m.blob_nr_and_offset(&[3], p::mass), (0, 12));
+        assert_eq!(m.blob_nr_and_offset(&[3], p::mass.i()), (0, 12));
     }
 }

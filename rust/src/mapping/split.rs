@@ -34,10 +34,13 @@ where
 {
     /// Split `selection` into `first`, complement into `second`.
     ///
+    /// Accepts a runtime [`Selection`] or a typed selection tag from
+    /// [`crate::record!`] (e.g. `p::pos`), which converts.
+    ///
     /// The inner mappings see the full record dimension but must only be
     /// asked about their own fields; construct them with matching masks.
-    pub fn new(first: M1, second: M2, selection: Selection) -> Self {
-        Split { first, second, selection, _pd: PhantomData }
+    pub fn new(first: M1, second: M2, selection: impl Into<Selection>) -> Self {
+        Split { first, second, selection: selection.into(), _pd: PhantomData }
     }
 
     /// The selection routed to the first mapping.
@@ -230,8 +233,8 @@ mod tests {
         assert_eq!(v.storage().total_bytes(), 3 * 8 * 8);
         v.set(&[2], p::pos::y, 4.0f64);
         v.set(&[2], p::mass, 2.0f32); // discarded
-        assert_eq!(v.get::<f64>(&[2], p::pos::y), 4.0);
-        assert_eq!(v.get::<f32>(&[2], p::mass), 0.0);
+        assert_eq!(v.get::<f64, _>(&[2], p::pos::y), 4.0);
+        assert_eq!(v.get::<f32, _>(&[2], p::mass), 0.0);
     }
 
     #[test]
@@ -247,8 +250,8 @@ mod tests {
         v.set(&[1], p::pos::x, 1.0f64);
         v.set(&[1], p::vel::z, -1.0f64);
         v.set(&[1], p::mass, 0.5f32);
-        assert_eq!(v.get::<f64>(&[1], p::pos::x), 1.0);
-        assert_eq!(v.get::<f64>(&[1], p::vel::z), -1.0);
-        assert_eq!(v.get::<f32>(&[1], p::mass), 0.5);
+        assert_eq!(v.get::<f64, _>(&[1], p::pos::x), 1.0);
+        assert_eq!(v.get::<f64, _>(&[1], p::vel::z), -1.0);
+        assert_eq!(v.get::<f32, _>(&[1], p::mass), 0.5);
     }
 }

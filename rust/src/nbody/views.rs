@@ -8,28 +8,38 @@
 //! per-mapping access path (SoA: contiguous vector moves, AoSoA: in-block
 //! lane vectors, AoS: scalar walk). Matching the manual versions' runtime
 //! is the paper's zero-overhead claim (experiment E1).
+//!
+//! The kernels use the *typed* tag API (`load_t`/`store_t`/`get_t`,
+//! `field`/`set_field`): scalar types are inferred from the tags and
+//! checked at compile time. [`update_simd_idx`]/[`move_simd_idx`] keep
+//! the identical kernels on the legacy `usize`-index path — the
+//! `fig3_nbody` bench runs both so the typed path's zero cost stays
+//! measured.
 
 use super::{particle, pp_interaction, Particle, ParticleData, EPS2, TIMESTEP};
 use crate::blob::{alloc_view, AlignedAlloc, AlignedStorage};
+use crate::extents::Extents;
 use crate::mapping::{MemoryAccess, SimdAccess};
 use crate::nbody::manual::simd_interaction;
 use crate::simd::Simd;
 use crate::view::{Chunk, RecordRefMut, View};
 
-/// Fill a view from shared initial conditions.
+/// Fill a view from shared initial conditions (typed API: the rank-1
+/// index shape is part of the signature).
 pub fn fill_view<M, S>(view: &mut View<Particle, M, S>, init: &[ParticleData])
 where
     M: MemoryAccess<Particle>,
+    M::Extents: Extents<ArrayIndex = [usize; 1]>,
     S: crate::blob::BlobStorage,
 {
     for (i, p) in init.iter().enumerate() {
-        view.set(&[i], particle::pos::x, p.pos.x);
-        view.set(&[i], particle::pos::y, p.pos.y);
-        view.set(&[i], particle::pos::z, p.pos.z);
-        view.set(&[i], particle::vel::x, p.vel.x);
-        view.set(&[i], particle::vel::y, p.vel.y);
-        view.set(&[i], particle::vel::z, p.vel.z);
-        view.set(&[i], particle::mass, p.mass);
+        view.set_t([i], particle::pos::x, p.pos.x);
+        view.set_t([i], particle::pos::y, p.pos.y);
+        view.set_t([i], particle::pos::z, p.pos.z);
+        view.set_t([i], particle::vel::x, p.vel.x);
+        view.set_t([i], particle::vel::y, p.vel.y);
+        view.set_t([i], particle::vel::z, p.vel.z);
+        view.set_t([i], particle::mass, p.mass);
     }
 }
 
@@ -37,21 +47,22 @@ where
 pub fn snapshot_view<M, S>(view: &View<Particle, M, S>) -> Vec<ParticleData>
 where
     M: MemoryAccess<Particle>,
+    M::Extents: Extents<ArrayIndex = [usize; 1]>,
     S: crate::blob::BlobStorage,
 {
     (0..view.count())
         .map(|i| ParticleData {
             pos: super::PVec {
-                x: view.get(&[i], particle::pos::x),
-                y: view.get(&[i], particle::pos::y),
-                z: view.get(&[i], particle::pos::z),
+                x: view.get_t([i], particle::pos::x),
+                y: view.get_t([i], particle::pos::y),
+                z: view.get_t([i], particle::pos::z),
             },
             vel: super::PVec {
-                x: view.get(&[i], particle::vel::x),
-                y: view.get(&[i], particle::vel::y),
-                z: view.get(&[i], particle::vel::z),
+                x: view.get_t([i], particle::vel::x),
+                y: view.get_t([i], particle::vel::y),
+                z: view.get_t([i], particle::vel::z),
             },
-            mass: view.get(&[i], particle::mass),
+            mass: view.get_t([i], particle::mass),
         })
         .collect()
 }
@@ -66,28 +77,28 @@ where
     S: crate::blob::BlobStorage,
 {
     let i = c.base();
-    let pix: f32 = c.get(i, particle::pos::x);
-    let piy: f32 = c.get(i, particle::pos::y);
-    let piz: f32 = c.get(i, particle::pos::z);
+    let pix = c.get_t(i, particle::pos::x);
+    let piy = c.get_t(i, particle::pos::y);
+    let piz = c.get_t(i, particle::pos::z);
     let mut acc = (0.0f32, 0.0f32, 0.0f32);
     for j in 0..c.count() {
         pp_interaction(
             pix,
             piy,
             piz,
-            c.get(j, particle::pos::x),
-            c.get(j, particle::pos::y),
-            c.get(j, particle::pos::z),
-            c.get(j, particle::mass),
+            c.get_t(j, particle::pos::x),
+            c.get_t(j, particle::pos::y),
+            c.get_t(j, particle::pos::z),
+            c.get_t(j, particle::mass),
             &mut acc,
         );
     }
-    let vx: f32 = c.get(i, particle::vel::x);
-    let vy: f32 = c.get(i, particle::vel::y);
-    let vz: f32 = c.get(i, particle::vel::z);
-    c.set(i, particle::vel::x, vx + acc.0);
-    c.set(i, particle::vel::y, vy + acc.1);
-    c.set(i, particle::vel::z, vz + acc.2);
+    let vx = c.get_t(i, particle::vel::x);
+    let vy = c.get_t(i, particle::vel::y);
+    let vz = c.get_t(i, particle::vel::z);
+    c.set_t(i, particle::vel::x, vx + acc.0);
+    c.set_t(i, particle::vel::y, vy + acc.1);
+    c.set_t(i, particle::vel::z, vz + acc.2);
 }
 
 /// Layout-generic scalar update (the original LLAMA paper's routine),
@@ -125,15 +136,15 @@ where
     M: MemoryAccess<Particle>,
     S: crate::blob::BlobStorage,
 {
-    let px: f32 = r.get(particle::pos::x);
-    let py: f32 = r.get(particle::pos::y);
-    let pz: f32 = r.get(particle::pos::z);
-    let vx: f32 = r.get(particle::vel::x);
-    let vy: f32 = r.get(particle::vel::y);
-    let vz: f32 = r.get(particle::vel::z);
-    r.set(particle::pos::x, px + vx * TIMESTEP);
-    r.set(particle::pos::y, py + vy * TIMESTEP);
-    r.set(particle::pos::z, pz + vz * TIMESTEP);
+    let px = r.field(particle::pos::x);
+    let py = r.field(particle::pos::y);
+    let pz = r.field(particle::pos::z);
+    let vx = r.field(particle::vel::x);
+    let vy = r.field(particle::vel::y);
+    let vz = r.field(particle::vel::z);
+    r.set_field(particle::pos::x, px + vx * TIMESTEP);
+    r.set_field(particle::pos::y, py + vy * TIMESTEP);
+    r.set_field(particle::pos::z, pz + vz * TIMESTEP);
 }
 
 /// Layout-generic scalar move: a plain record-wise bulk traversal
@@ -165,9 +176,9 @@ where
     S: crate::blob::BlobStorage,
 {
     // llama::loadSimd(particleView(i), simdParticles)
-    let pix: Simd<f32, N> = c.load(particle::pos::x);
-    let piy: Simd<f32, N> = c.load(particle::pos::y);
-    let piz: Simd<f32, N> = c.load(particle::pos::z);
+    let pix: Simd<f32, N> = c.load_t(particle::pos::x);
+    let piy: Simd<f32, N> = c.load_t(particle::pos::y);
+    let piz: Simd<f32, N> = c.load_t(particle::pos::z);
     let mut ax = Simd::<f32, N>::default();
     let mut ay = Simd::<f32, N>::default();
     let mut az = Simd::<f32, N>::default();
@@ -176,22 +187,22 @@ where
             pix,
             piy,
             piz,
-            Simd::splat(c.get(j, particle::pos::x)),
-            Simd::splat(c.get(j, particle::pos::y)),
-            Simd::splat(c.get(j, particle::pos::z)),
-            Simd::splat(c.get(j, particle::mass)),
+            Simd::splat(c.get_t(j, particle::pos::x)),
+            Simd::splat(c.get_t(j, particle::pos::y)),
+            Simd::splat(c.get_t(j, particle::pos::z)),
+            Simd::splat(c.get_t(j, particle::mass)),
             &mut ax,
             &mut ay,
             &mut az,
         );
     }
     // llama::storeSimd(simdParticles(tag::Vel{}), particleView(i)(tag::Vel{}))
-    let vx: Simd<f32, N> = c.load(particle::vel::x);
-    let vy: Simd<f32, N> = c.load(particle::vel::y);
-    let vz: Simd<f32, N> = c.load(particle::vel::z);
-    c.store(particle::vel::x, vx + ax);
-    c.store(particle::vel::y, vy + ay);
-    c.store(particle::vel::z, vz + az);
+    let vx: Simd<f32, N> = c.load_t(particle::vel::x);
+    let vy: Simd<f32, N> = c.load_t(particle::vel::y);
+    let vz: Simd<f32, N> = c.load_t(particle::vel::z);
+    c.store_t(particle::vel::x, vx + ax);
+    c.store_t(particle::vel::y, vy + ay);
+    c.store_t(particle::vel::z, vz + az);
 }
 
 /// Layout-generic SIMD update — the Figure 2 routine through the bulk
@@ -231,15 +242,15 @@ where
     S: crate::blob::BlobStorage,
 {
     let dt = Simd::<f32, N>::splat(TIMESTEP);
-    let px: Simd<f32, N> = c.load(particle::pos::x);
-    let py: Simd<f32, N> = c.load(particle::pos::y);
-    let pz: Simd<f32, N> = c.load(particle::pos::z);
-    let vx: Simd<f32, N> = c.load(particle::vel::x);
-    let vy: Simd<f32, N> = c.load(particle::vel::y);
-    let vz: Simd<f32, N> = c.load(particle::vel::z);
-    c.store(particle::pos::x, px + vx * dt);
-    c.store(particle::pos::y, py + vy * dt);
-    c.store(particle::pos::z, pz + vz * dt);
+    let px: Simd<f32, N> = c.load_t(particle::pos::x);
+    let py: Simd<f32, N> = c.load_t(particle::pos::y);
+    let pz: Simd<f32, N> = c.load_t(particle::pos::z);
+    let vx: Simd<f32, N> = c.load_t(particle::vel::x);
+    let vy: Simd<f32, N> = c.load_t(particle::vel::y);
+    let vz: Simd<f32, N> = c.load_t(particle::vel::z);
+    c.store_t(particle::pos::x, px + vx * dt);
+    c.store_t(particle::pos::y, py + vy * dt);
+    c.store_t(particle::pos::z, pz + vz * dt);
 }
 
 /// Layout-generic SIMD move through the bulk engine.
@@ -260,6 +271,82 @@ where
 {
     // SAFETY: the kernel loads and stores only its own chunk's records.
     unsafe { view.par_transform_simd_with::<N, _>(threads, |c| move_chunk(c)) }
+}
+
+/// [`update_simd`] on the *legacy* `usize`-index access path: the same
+/// kernel with every tag converted to its flattened index up front
+/// (`tag.i()`), exercising `Chunk::load`/`store`/`get` instead of the
+/// typed `*_t` entry points. Identical operations in identical order —
+/// results are bit-identical to [`update_simd`], and the `fig3_nbody`
+/// bench row pair (typed vs `legacy-idx`) demonstrates the typed path is
+/// zero-cost.
+pub fn update_simd_idx<const N: usize, M, S>(view: &mut View<Particle, M, S>)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    const PX: usize = particle::pos::x.i();
+    const PY: usize = particle::pos::y.i();
+    const PZ: usize = particle::pos::z.i();
+    const VX: usize = particle::vel::x.i();
+    const VY: usize = particle::vel::y.i();
+    const VZ: usize = particle::vel::z.i();
+    const MASS: usize = particle::mass.i();
+    view.transform_simd::<N>(|c| {
+        let pix: Simd<f32, N> = c.load(PX);
+        let piy: Simd<f32, N> = c.load(PY);
+        let piz: Simd<f32, N> = c.load(PZ);
+        let mut ax = Simd::<f32, N>::default();
+        let mut ay = Simd::<f32, N>::default();
+        let mut az = Simd::<f32, N>::default();
+        for j in 0..c.count() {
+            simd_interaction(
+                pix,
+                piy,
+                piz,
+                Simd::splat(c.get(j, PX)),
+                Simd::splat(c.get(j, PY)),
+                Simd::splat(c.get(j, PZ)),
+                Simd::splat(c.get(j, MASS)),
+                &mut ax,
+                &mut ay,
+                &mut az,
+            );
+        }
+        let vx: Simd<f32, N> = c.load(VX);
+        let vy: Simd<f32, N> = c.load(VY);
+        let vz: Simd<f32, N> = c.load(VZ);
+        c.store(VX, vx + ax);
+        c.store(VY, vy + ay);
+        c.store(VZ, vz + az);
+    });
+}
+
+/// [`move_simd`] on the legacy `usize`-index access path (see
+/// [`update_simd_idx`]).
+pub fn move_simd_idx<const N: usize, M, S>(view: &mut View<Particle, M, S>)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage,
+{
+    const PX: usize = particle::pos::x.i();
+    const PY: usize = particle::pos::y.i();
+    const PZ: usize = particle::pos::z.i();
+    const VX: usize = particle::vel::x.i();
+    const VY: usize = particle::vel::y.i();
+    const VZ: usize = particle::vel::z.i();
+    view.transform_simd::<N>(|c| {
+        let dt = Simd::<f32, N>::splat(TIMESTEP);
+        let px: Simd<f32, N> = c.load(PX);
+        let py: Simd<f32, N> = c.load(PY);
+        let pz: Simd<f32, N> = c.load(PZ);
+        let vx: Simd<f32, N> = c.load(VX);
+        let vy: Simd<f32, N> = c.load(VY);
+        let vz: Simd<f32, N> = c.load(VZ);
+        c.store(PX, px + vx * dt);
+        c.store(PY, py + vy * dt);
+        c.store(PZ, pz + vz * dt);
+    });
 }
 
 /// The rank-1 u32-indexed extents used by all Figure-3 views
@@ -373,6 +460,32 @@ mod tests {
         let s = snapshot_view(&soa);
         assert_eq!(max_pos_delta(&snapshot_view(&aos), &s), 0.0);
         assert_eq!(max_pos_delta(&snapshot_view(&aosoa), &s), 0.0);
+    }
+
+    #[test]
+    fn legacy_index_kernels_bit_identical_to_typed() {
+        // The typed-tag path and the usize-index path are the same kernel;
+        // results must agree bit for bit on every layout.
+        let init = init_particles(N, 7);
+        macro_rules! check_layout {
+            ($make:ident) => {{
+                let mut typed = $make(&init);
+                let mut legacy = $make(&init);
+                for _ in 0..STEPS {
+                    update_simd::<8, _, _>(&mut typed);
+                    move_simd::<8, _, _>(&mut typed);
+                    update_simd_idx::<8, _, _>(&mut legacy);
+                    move_simd_idx::<8, _, _>(&mut legacy);
+                }
+                assert_eq!(
+                    max_pos_delta(&snapshot_view(&typed), &snapshot_view(&legacy)),
+                    0.0
+                );
+            }};
+        }
+        check_layout!(make_aos_view);
+        check_layout!(make_soa_view);
+        check_layout!(make_aosoa_view);
     }
 
     #[test]

@@ -35,7 +35,10 @@
 //! shard boundaries to the lane count so every worker sees the same chunk
 //! pattern as the serial walk. A kernel whose per-record result depends
 //! only on the pre-pass state (the n-body update/move kernels) therefore
-//! produces **bit-identical** results at any thread count.
+//! produces **bit-identical** results at any thread count. The shard
+//! walkers reuse the serial engine's const-rank index cursors
+//! ([`crate::extents::ArrayIndex`]), so the parallel path carries no
+//! per-access rank checks either.
 //!
 //! ## Safety split: `par_for_each` is safe, `par_transform_simd` is not
 //!
@@ -437,7 +440,7 @@ mod tests {
         assert!(ViewShards::split(&mut v, 4).is_none());
         // ...but the parallel entry points still work via the fallback.
         v.par_for_each_with(4, |r| r.set(p::q, 7i32));
-        assert_eq!(v.get::<i32>(&[63], p::q), 7);
+        assert_eq!(v.get::<i32, _>(&[63], p::q), 7);
     }
 
     #[test]
@@ -448,7 +451,7 @@ mod tests {
             r.set(p::q, i as i32 + 1);
         });
         for i in 0..103 {
-            assert_eq!(v.get::<i32>(&[i], p::q), i as i32 + 1);
+            assert_eq!(v.get::<i32, _>(&[i], p::q), i as i32 + 1);
         }
     }
 
@@ -473,8 +476,8 @@ mod tests {
         }
         for i in 0..103 {
             assert_eq!(
-                serial.get::<f64>(&[i], p::x).to_bits(),
-                par.get::<f64>(&[i], p::x).to_bits()
+                serial.get::<f64, _>(&[i], p::x).to_bits(),
+                par.get::<f64, _>(&[i], p::x).to_bits()
             );
         }
     }

@@ -20,7 +20,11 @@
 //! ([`crate::mapping::SimdAccess`]) and on [`crate::view::View`]: SoA and
 //! in-block AoSoA lower to contiguous vector moves; AoS keeps per-lane
 //! scalar loads (the paper found these *faster* than hardware gathers on
-//! the tested CPU).
+//! the tested CPU). The typed entry points
+//! ([`crate::view::View::load_simd_t`], [`crate::view::Chunk::load_t`])
+//! infer the lane element type from the field tag, so a lane-type
+//! mismatch is a compile error; the legacy `T`-explicit methods remain
+//! for index-driven code.
 
 use crate::record::Scalar;
 

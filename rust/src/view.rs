@@ -3,20 +3,71 @@
 //! A [`View`] binds a mapping to blob storage and spans the data space.
 //! Programs address records with array indices, obtaining a [`RecordRef`]
 //! (or [`RecordRefMut`]) — the analogue of LLAMA's `RecordRef` — and
-//! finally scalars via typed `get`/`set` with tag constants from
-//! [`crate::record!`]. Loads/stores through *computed* mappings (bitpack,
-//! changetype, ...) transparently run the mapping's pack/unpack logic —
-//! the Rust rendering of C++ LLAMA's proxy references.
+//! finally scalars via the tags from [`crate::record!`]. Loads/stores
+//! through *computed* mappings (bitpack, changetype, ...) transparently
+//! run the mapping's pack/unpack logic — the Rust rendering of C++
+//! LLAMA's proxy references.
+//!
+//! # Access API
+//!
+//! Two parallel method families address scalars:
+//!
+//! - **Typed (preferred)** — `*_t` methods plus the [`RecordRef`]
+//!   navigation take a [`crate::record::FieldTag`] value and a const-rank
+//!   [`crate::extents::ArrayIndex`] (`[usize; RANK]`). The field's scalar
+//!   type is *inferred from the tag* and the rank from the extents, so a
+//!   wrong-type, wrong-record, or wrong-rank access **does not compile**,
+//!   and the monomorphized access carries no slice-length checks:
+//!   [`View::get_t`]/[`View::set_t`], [`View::at_t`]/[`View::at_mut_t`],
+//!   [`View::load_simd_t`]/[`View::store_simd_t`],
+//!   [`RecordRef::field`]/[`RecordRefMut::field_mut`]/[`RecordRef::sub`],
+//!   [`Chunk::load_t`]/[`Chunk::store_t`].
+//! - **Legacy (compatibility)** — the original `usize`-index/`&[usize]`
+//!   methods ([`View::get`]/[`View::set`], [`View::at`], [`Chunk::load`],
+//!   ...). Their field parameter is now generic over [`FieldIndex`]
+//!   (declared *after* the scalar type, so explicitly-typed call sites
+//!   write `get::<f32, _>(...)`), accepting both raw `usize` values and
+//!   typed tags, which convert to their index. Scalar type and index
+//!   rank are checked only by debug asserts on the scalar path
+//!   ([`View::at`]/[`View::at_mut`] do assert the rank at runtime, since
+//!   they persist the index into a cursor). Kept for metadata-driven
+//!   code ([`load_as_f64`], [`crate::copy`]); new code should use the
+//!   typed family.
+//!
+//! Both families monomorphize to identical machine code when given the
+//! same constant field — the typed path is zero-cost, verified by the
+//! typed-vs-legacy property tests and the `fig3_nbody` bench rows.
 
 use crate::blob::BlobStorage;
-use crate::extents::Extents;
-use crate::mapping::{MemoryAccess, SimdAccess};
-use crate::record::{RecordDim, Scalar, Selection};
+use crate::extents::{Extents, RankIndex};
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::record::{FieldIndex, FieldTag, GroupTag, RecordDim, Scalar, Selection};
 use crate::simd::{Simd, SimdElem};
 use std::marker::PhantomData;
 
 /// Maximum supported array rank (extents tuples go up to 4).
 pub const MAX_RANK: usize = 4;
+
+/// The const-rank array index type of a view with mapping `M`:
+/// `[usize; RANK]` with the rank taken from the mapping's extents.
+pub type IndexOf<R, M> = <<M as Mapping<R>>::Extents as Extents>::ArrayIndex;
+
+/// Convert a legacy `&[usize]` index to the const-rank array index,
+/// asserting the rank matches (the one runtime check the compatibility
+/// layer keeps; the typed API needs none).
+#[inline(always)]
+fn rank_checked<E: Extents>(idx: &[usize]) -> E::ArrayIndex {
+    assert_eq!(
+        idx.len(),
+        E::RANK,
+        "index rank {} does not match view rank {}",
+        idx.len(),
+        E::RANK
+    );
+    let mut a = <E::ArrayIndex as RankIndex>::zeroed();
+    a.as_mut_slice().copy_from_slice(idx);
+    a
+}
 
 /// A view over a data space: mapping + blob storage.
 ///
@@ -87,28 +138,109 @@ where
         self.mapping.extents().count()
     }
 
-    /// Typed scalar load at `(idx, field)`.
+    // ---- typed access (compile-time-checked) ----
+
+    /// Typed scalar load at `(idx, tag)` — the element type is inferred
+    /// from the tag and the index rank from the extents, both checked at
+    /// compile time.
+    ///
+    /// ```
+    /// use llama::prelude::*;
+    /// llama::record! { pub struct Px, mod px { r: f32, alpha: u8 } }
+    /// let mut v = alloc_view(SoA::<Px, _>::new((Dyn(4u32),)), &HeapAlloc);
+    /// v.set_t([2], px::alpha, 200u8);
+    /// let a = v.get_t([2], px::alpha); // a: u8, inferred
+    /// assert_eq!(a, 200);
+    /// ```
+    ///
+    /// A wrong-type access does not compile (the legacy `usize` API only
+    /// debug-asserts this):
+    /// ```compile_fail,E0308
+    /// use llama::prelude::*;
+    /// llama::record! { pub struct Px, mod px { r: f32, alpha: u8 } }
+    /// let v = alloc_view(SoA::<Px, _>::new((Dyn(4u32),)), &HeapAlloc);
+    /// let _: f32 = v.get_t([0], px::alpha); // ERROR: alpha is u8, not f32
+    /// ```
+    ///
+    /// Neither does a wrong-rank index ...
+    /// ```compile_fail,E0308
+    /// use llama::prelude::*;
+    /// llama::record! { pub struct Px, mod px { r: f32, alpha: u8 } }
+    /// let v = alloc_view(SoA::<Px, _>::new((Dyn(4u32), Dyn(4u32))), &HeapAlloc);
+    /// let _ = v.get_t([0, 0, 0], px::r); // ERROR: rank-3 index, rank-2 view
+    /// ```
+    ///
+    /// ... or a tag of a *different record dimension*:
+    /// ```compile_fail,E0271
+    /// use llama::prelude::*;
+    /// llama::record! { pub struct Px, mod px { r: f32 } }
+    /// llama::record! { pub struct Particle, mod particle { mass: f32 } }
+    /// let v = alloc_view(SoA::<Px, _>::new((Dyn(4u32),)), &HeapAlloc);
+    /// let _ = v.get_t([0], particle::mass); // ERROR: Particle tag, Px view
+    /// ```
     #[inline(always)]
-    pub fn get<T: Scalar>(&self, idx: &[usize], field: usize) -> T {
-        self.mapping.load(&self.storage, idx, field)
+    pub fn get_t<F: FieldTag<Record = R>>(&self, idx: IndexOf<R, M>, tag: F) -> F::Elem {
+        let _ = tag;
+        self.mapping.load(&self.storage, idx.as_slice(), F::INDEX)
     }
 
-    /// Typed scalar store at `(idx, field)`.
+    /// Typed scalar store at `(idx, tag)`; see [`get_t`](View::get_t).
+    ///
+    /// Storing a mistyped value does not compile:
+    /// ```compile_fail,E0308
+    /// use llama::prelude::*;
+    /// llama::record! { pub struct Px, mod px { r: f32, alpha: u8 } }
+    /// let mut v = alloc_view(SoA::<Px, _>::new((Dyn(4u32),)), &HeapAlloc);
+    /// v.set_t([0], px::r, 1.0f64); // ERROR: r is f32
+    /// ```
     #[inline(always)]
-    pub fn set<T: Scalar>(&mut self, idx: &[usize], field: usize, v: T) {
-        self.mapping.store(&mut self.storage, idx, field, v)
+    pub fn set_t<F: FieldTag<Record = R>>(&mut self, idx: IndexOf<R, M>, tag: F, v: F::Elem) {
+        let _ = tag;
+        self.mapping.store(&mut self.storage, idx.as_slice(), F::INDEX, v)
     }
 
-    /// Borrow the record at `idx`.
+    /// Borrow the record at the const-rank index `idx`.
+    #[inline(always)]
+    pub fn at_t(&self, idx: IndexOf<R, M>) -> RecordRef<'_, R, M, S> {
+        RecordRef { view: self, idx }
+    }
+
+    /// Mutably borrow the record at the const-rank index `idx`.
+    #[inline(always)]
+    pub fn at_mut_t(&mut self, idx: IndexOf<R, M>) -> RecordRefMut<'_, R, M, S> {
+        RecordRefMut { view: self, idx }
+    }
+
+    // ---- legacy access (compatibility layer) ----
+
+    /// Typed scalar load at `(idx, field)` — legacy entry point: `T` must
+    /// be named explicitly (debug-asserted against the metadata) and the
+    /// index rank is only checked by the mapping's debug asserts. Prefer
+    /// [`get_t`](View::get_t).
+    #[inline(always)]
+    pub fn get<T: Scalar, F: FieldIndex>(&self, idx: &[usize], field: F) -> T {
+        self.mapping.load(&self.storage, idx, field.field_index())
+    }
+
+    /// Typed scalar store at `(idx, field)` — legacy entry point; prefer
+    /// [`set_t`](View::set_t).
+    #[inline(always)]
+    pub fn set<T: Scalar, F: FieldIndex>(&mut self, idx: &[usize], field: F, v: T) {
+        self.mapping.store(&mut self.storage, idx, field.field_index(), v)
+    }
+
+    /// Borrow the record at `idx` (legacy entry point: rank checked at
+    /// runtime; prefer [`at_t`](View::at_t)).
     #[inline(always)]
     pub fn at<'v>(&'v self, idx: &[usize]) -> RecordRef<'v, R, M, S> {
-        RecordRef { view: self, idx: pad_idx(idx), rank: idx.len() }
+        RecordRef { view: self, idx: rank_checked::<M::Extents>(idx) }
     }
 
-    /// Mutably borrow the record at `idx`.
+    /// Mutably borrow the record at `idx` (legacy entry point; prefer
+    /// [`at_mut_t`](View::at_mut_t)).
     #[inline(always)]
     pub fn at_mut<'v>(&'v mut self, idx: &[usize]) -> RecordRefMut<'v, R, M, S> {
-        RecordRefMut { view: self, idx: pad_idx(idx), rank: idx.len() }
+        RecordRefMut { view: self, idx: rank_checked::<M::Extents>(idx) }
     }
 
     /// Destructure into mapping and storage.
@@ -123,26 +255,58 @@ where
     M: SimdAccess<R>,
     S: BlobStorage,
 {
-    /// `loadSimd`: `N` lanes of `field` starting at `idx` along the last
-    /// array dimension, vectorized where the mapping allows (§5).
+    /// Typed `loadSimd`: `N` lanes of the tagged field starting at `idx`
+    /// along the last array dimension, vectorized where the mapping
+    /// allows (§5). Element type and index rank are compile-checked; see
+    /// [`get_t`](View::get_t).
     #[inline(always)]
-    pub fn load_simd<T: Scalar + SimdElem, const N: usize>(
-        &self,
-        idx: &[usize],
-        field: usize,
-    ) -> Simd<T, N> {
-        self.mapping.load_simd(&self.storage, idx, field)
+    pub fn load_simd_t<F, const N: usize>(&self, idx: IndexOf<R, M>, tag: F) -> Simd<F::Elem, N>
+    where
+        F: FieldTag<Record = R>,
+        F::Elem: SimdElem,
+    {
+        let _ = tag;
+        self.mapping.load_simd(&self.storage, idx.as_slice(), F::INDEX)
     }
 
-    /// `storeSimd`: write `N` lanes of `field` starting at `idx`.
+    /// Typed `storeSimd`: write `N` lanes of the tagged field starting at
+    /// `idx`.
     #[inline(always)]
-    pub fn store_simd<T: Scalar + SimdElem, const N: usize>(
+    pub fn store_simd_t<F, const N: usize>(
+        &mut self,
+        idx: IndexOf<R, M>,
+        tag: F,
+        v: Simd<F::Elem, N>,
+    ) where
+        F: FieldTag<Record = R>,
+        F::Elem: SimdElem,
+    {
+        let _ = tag;
+        self.mapping.store_simd(&mut self.storage, idx.as_slice(), F::INDEX, v)
+    }
+
+    /// `loadSimd`: `N` lanes of `field` starting at `idx` along the last
+    /// array dimension (legacy entry point; prefer
+    /// [`load_simd_t`](View::load_simd_t)).
+    #[inline(always)]
+    pub fn load_simd<T: Scalar + SimdElem, const N: usize, F: FieldIndex>(
+        &self,
+        idx: &[usize],
+        field: F,
+    ) -> Simd<T, N> {
+        self.mapping.load_simd(&self.storage, idx, field.field_index())
+    }
+
+    /// `storeSimd`: write `N` lanes of `field` starting at `idx` (legacy
+    /// entry point; prefer [`store_simd_t`](View::store_simd_t)).
+    #[inline(always)]
+    pub fn store_simd<T: Scalar + SimdElem, const N: usize, F: FieldIndex>(
         &mut self,
         idx: &[usize],
-        field: usize,
+        field: F,
         v: Simd<T, N>,
     ) {
-        self.mapping.store_simd(&mut self.storage, idx, field, v)
+        self.mapping.store_simd(&mut self.storage, idx, field.field_index(), v)
     }
 }
 
@@ -164,7 +328,9 @@ where
     /// rank. Rank-1 views skip the odometer entirely; the per-record
     /// access cost is whatever the mapping's `load`/`store` costs — for
     /// SoA that monomorphizes to contiguous slice iteration, for
-    /// computed mappings to their pack/unpack logic.
+    /// computed mappings to their pack/unpack logic. The cursor's index
+    /// is a const-rank array (no `MAX_RANK` padding, no per-access rank
+    /// checks).
     ///
     /// The multithreaded counterpart is
     /// [`par_for_each`](crate::shard#parallel-traversal).
@@ -195,7 +361,9 @@ pub(crate) fn for_each_outer<R, M, S>(
     if rank == 1 {
         // Linear fast path: no index odometer in the loop.
         for i in outer_begin..outer_end {
-            f(&mut view.at_mut(&[i]));
+            let mut idx = <IndexOf<R, M> as RankIndex>::zeroed();
+            idx.as_mut_slice()[0] = i;
+            f(&mut RecordRefMut { view: &mut *view, idx });
         }
         return;
     }
@@ -205,10 +373,10 @@ pub(crate) fn for_each_outer<R, M, S>(
             return;
         }
     }
-    let mut idx = [0usize; MAX_RANK];
-    idx[0] = outer_begin;
+    let mut idx = <IndexOf<R, M> as RankIndex>::zeroed();
+    idx.as_mut_slice()[0] = outer_begin;
     loop {
-        f(&mut view.at_mut(&idx[..rank]));
+        f(&mut RecordRefMut { view: &mut *view, idx });
         if !advance_bounded(&e, &mut idx, rank, outer_end) {
             return;
         }
@@ -221,10 +389,11 @@ pub(crate) fn for_each_outer<R, M, S>(
 #[inline(always)]
 fn advance_bounded<E: Extents>(
     e: &E,
-    idx: &mut [usize; MAX_RANK],
+    idx: &mut E::ArrayIndex,
     dims: usize,
     outer_end: usize,
 ) -> bool {
+    let idx = idx.as_mut_slice();
     let mut d = dims;
     while d > 0 {
         d -= 1;
@@ -269,7 +438,7 @@ where
     ///
     /// `N = 1` is the scalar traversal of Table 1 — identical operations
     /// to a hand-written scalar loop, so results are bit-identical.
-    /// The chunk also exposes whole-view scalar access ([`Chunk::get`])
+    /// The chunk also exposes whole-view scalar access ([`Chunk::get_t`])
     /// for algorithms that combine streaming with random access (the
     /// n-body j-loop).
     ///
@@ -311,9 +480,9 @@ pub(crate) fn walk_chunks<R, M, S, const N: usize>(
         let mut b = outer_begin;
         while b < outer_end {
             let len = N.min(outer_end - b);
-            let mut idx = [0usize; MAX_RANK];
-            idx[0] = b;
-            f(&mut Chunk { view: &mut *view, idx, rank, len });
+            let mut idx = <IndexOf<R, M> as RankIndex>::zeroed();
+            idx.as_mut_slice()[0] = b;
+            f(&mut Chunk { view: &mut *view, idx, len });
             b += N;
         }
         return;
@@ -329,17 +498,17 @@ pub(crate) fn walk_chunks<R, M, S, const N: usize>(
             return;
         }
     }
-    let mut idx = [0usize; MAX_RANK];
-    idx[0] = outer_begin;
+    let mut idx = <IndexOf<R, M> as RankIndex>::zeroed();
+    idx.as_mut_slice()[0] = outer_begin;
     loop {
         let mut b = 0;
         while b < inner {
             let len = N.min(inner - b);
-            idx[last] = b;
-            f(&mut Chunk { view: &mut *view, idx, rank, len });
+            idx.as_mut_slice()[last] = b;
+            f(&mut Chunk { view: &mut *view, idx, len });
             b += N;
         }
-        idx[last] = 0;
+        idx.as_mut_slice()[last] = 0;
         if !advance_bounded(&e, &mut idx, last, outer_end) {
             return;
         }
@@ -348,12 +517,17 @@ pub(crate) fn walk_chunks<R, M, S, const N: usize>(
 
 /// Cursor over up to `N` records consecutive along the innermost array
 /// dimension during a bulk traversal ([`View::transform_simd`]).
-/// `load`/`store` move whole lane vectors; `get`/`set` reach any record
-/// of a rank-1 view scalar-wise.
-pub struct Chunk<'v, R, M, S, const N: usize> {
+/// `load_t`/`store_t` move whole lane vectors; `get_t`/`set_t` reach any
+/// record of a rank-1 view scalar-wise. The index is a const-rank array
+/// ([`crate::extents::ArrayIndex`]) — no padding, no per-access rank
+/// checks.
+pub struct Chunk<'v, R, M, S, const N: usize>
+where
+    R: RecordDim,
+    M: Mapping<R>,
+{
     view: &'v mut View<R, M, S>,
-    idx: [usize; MAX_RANK],
-    rank: usize,
+    idx: <M::Extents as Extents>::ArrayIndex,
     /// Active lanes: `N` except for the tail chunk of a row.
     len: usize,
 }
@@ -367,20 +541,21 @@ where
     /// Array index of the chunk's first record.
     #[inline(always)]
     pub fn index(&self) -> &[usize] {
-        &self.idx[..self.rank]
+        self.idx.as_slice()
     }
 
     /// Row-major traversal position of the chunk's first record (for
     /// rank-1 views: its linear index).
     #[inline(always)]
     pub fn base(&self) -> usize {
-        if self.rank == 1 {
-            return self.idx[0];
+        let rank = <M::Extents as Extents>::RANK;
+        if rank == 1 {
+            return self.idx.as_slice()[0];
         }
         let e = self.view.extents();
         let mut lin = 0usize;
-        for d in 0..self.rank {
-            lin = lin * e.extent(d) + self.idx[d];
+        for d in 0..rank {
+            lin = lin * e.extent(d) + self.idx.as_slice()[d];
         }
         lin
     }
@@ -398,69 +573,153 @@ where
         self.view.count()
     }
 
-    /// Load the chunk's lanes of `field`. Tail chunks
+    // ---- typed access (compile-time-checked) ----
+
+    /// Typed load of the chunk's lanes of the tagged field — the lane
+    /// element type is inferred from the tag. Tail chunks
     /// ([`lanes`](Chunk::lanes)` < N`) load lane-wise; their unused lanes
-    /// are `T::default()`.
+    /// are `Default::default()`.
     #[inline(always)]
-    pub fn load<T: Scalar + SimdElem>(&self, field: usize) -> Simd<T, N> {
+    pub fn load_t<F>(&self, tag: F) -> Simd<F::Elem, N>
+    where
+        F: FieldTag<Record = R>,
+        F::Elem: SimdElem,
+    {
+        let _ = tag;
+        self.load::<F::Elem, _>(F::INDEX)
+    }
+
+    /// Typed store of the chunk's lanes of the tagged field. Tail chunks
+    /// store lane-wise; lanes past [`lanes`](Chunk::lanes) are never
+    /// written.
+    #[inline(always)]
+    pub fn store_t<F>(&mut self, tag: F, v: Simd<F::Elem, N>)
+    where
+        F: FieldTag<Record = R>,
+        F::Elem: SimdElem,
+    {
+        let _ = tag;
+        self.store::<F::Elem, _>(F::INDEX, v)
+    }
+
+    /// Typed scalar load of the tagged field at any record `i` of a
+    /// rank-1 view (compile error on higher ranks).
+    #[inline(always)]
+    pub fn get_t<F: FieldTag<Record = R>>(&self, i: usize, tag: F) -> F::Elem {
+        const {
+            assert!(
+                <M::Extents as Extents>::RANK == 1,
+                "Chunk::get_t addresses records by rank-1 index"
+            )
+        };
+        let _ = tag;
+        self.view.get(&[i], F::INDEX)
+    }
+
+    /// Typed scalar store of the tagged field at any record `i` of a
+    /// rank-1 view (compile error on higher ranks).
+    #[inline(always)]
+    pub fn set_t<F: FieldTag<Record = R>>(&mut self, i: usize, tag: F, v: F::Elem) {
+        const {
+            assert!(
+                <M::Extents as Extents>::RANK == 1,
+                "Chunk::set_t addresses records by rank-1 index"
+            )
+        };
+        let _ = tag;
+        self.view.set(&[i], F::INDEX, v)
+    }
+
+    // ---- legacy access (compatibility layer) ----
+
+    /// Load the chunk's lanes of `field` (legacy entry point; prefer
+    /// [`load_t`](Chunk::load_t)). Tail chunks load lane-wise; their
+    /// unused lanes are `T::default()`.
+    #[inline(always)]
+    pub fn load<T: Scalar + SimdElem, F: FieldIndex>(&self, field: F) -> Simd<T, N> {
+        let field = field.field_index();
         if self.len == N {
-            return self.view.load_simd(&self.idx[..self.rank], field);
+            return self.view.load_simd(self.idx.as_slice(), field);
         }
         let mut out = Simd::<T, N>::default();
-        let last = self.rank - 1;
+        let last = <M::Extents as Extents>::RANK - 1;
         let mut idx = self.idx;
         for k in 0..self.len {
-            idx[last] = self.idx[last] + k;
-            out.0[k] = self.view.get(&idx[..self.rank], field);
+            idx.as_mut_slice()[last] = self.idx.as_slice()[last] + k;
+            out.0[k] = self.view.get(idx.as_slice(), field);
         }
         out
     }
 
-    /// Store the chunk's lanes of `field`. Tail chunks store lane-wise;
-    /// lanes past [`lanes`](Chunk::lanes) are never written.
+    /// Store the chunk's lanes of `field` (legacy entry point; prefer
+    /// [`store_t`](Chunk::store_t)). Tail chunks store lane-wise; lanes
+    /// past [`lanes`](Chunk::lanes) are never written.
     #[inline(always)]
-    pub fn store<T: Scalar + SimdElem>(&mut self, field: usize, v: Simd<T, N>) {
+    pub fn store<T: Scalar + SimdElem, F: FieldIndex>(&mut self, field: F, v: Simd<T, N>) {
+        let field = field.field_index();
         if self.len == N {
-            self.view.store_simd(&self.idx[..self.rank], field, v);
+            self.view.store_simd(self.idx.as_slice(), field, v);
             return;
         }
-        let last = self.rank - 1;
+        let last = <M::Extents as Extents>::RANK - 1;
         let mut idx = self.idx;
         for k in 0..self.len {
-            idx[last] = self.idx[last] + k;
-            self.view.set(&idx[..self.rank], field, v.0[k]);
+            idx.as_mut_slice()[last] = self.idx.as_slice()[last] + k;
+            self.view.set(idx.as_slice(), field, v.0[k]);
         }
     }
 
-    /// Scalar load of `field` at any record `i` of a rank-1 view.
+    /// Scalar load of `field` at any record `i` of a rank-1 view (legacy
+    /// entry point; prefer [`get_t`](Chunk::get_t)).
     #[inline(always)]
-    pub fn get<T: Scalar>(&self, i: usize, field: usize) -> T {
-        debug_assert_eq!(self.rank, 1, "Chunk::get addresses records by rank-1 index");
-        self.view.get(&[i], field)
+    pub fn get<T: Scalar, F: FieldIndex>(&self, i: usize, field: F) -> T {
+        debug_assert_eq!(
+            <M::Extents as Extents>::RANK,
+            1,
+            "Chunk::get addresses records by rank-1 index"
+        );
+        self.view.get(&[i], field.field_index())
     }
 
-    /// Scalar store of `field` at any record `i` of a rank-1 view.
+    /// Scalar store of `field` at any record `i` of a rank-1 view (legacy
+    /// entry point; prefer [`set_t`](Chunk::set_t)).
     #[inline(always)]
-    pub fn set<T: Scalar>(&mut self, i: usize, field: usize, v: T) {
-        debug_assert_eq!(self.rank, 1, "Chunk::set addresses records by rank-1 index");
-        self.view.set(&[i], field, v)
+    pub fn set<T: Scalar, F: FieldIndex>(&mut self, i: usize, field: F, v: T) {
+        debug_assert_eq!(
+            <M::Extents as Extents>::RANK,
+            1,
+            "Chunk::set addresses records by rank-1 index"
+        );
+        self.view.set(&[i], field.field_index(), v)
     }
-}
-
-#[inline(always)]
-fn pad_idx(idx: &[usize]) -> [usize; MAX_RANK] {
-    debug_assert!(idx.len() <= MAX_RANK);
-    let mut a = [0usize; MAX_RANK];
-    a[..idx.len()].copy_from_slice(idx);
-    a
 }
 
 /// Immutable reference to one record of a view (LLAMA `RecordRef`).
-#[derive(Clone, Copy)]
-pub struct RecordRef<'v, R, M, S> {
+pub struct RecordRef<'v, R, M, S>
+where
+    R: RecordDim,
+    M: Mapping<R>,
+{
     view: &'v View<R, M, S>,
-    idx: [usize; MAX_RANK],
-    rank: usize,
+    idx: <M::Extents as Extents>::ArrayIndex,
+}
+
+impl<'v, R, M, S> Clone for RecordRef<'v, R, M, S>
+where
+    R: RecordDim,
+    M: Mapping<R>,
+{
+    #[inline(always)]
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<'v, R, M, S> Copy for RecordRef<'v, R, M, S>
+where
+    R: RecordDim,
+    M: Mapping<R>,
+{
 }
 
 impl<'v, R, M, S> RecordRef<'v, R, M, S>
@@ -472,31 +731,122 @@ where
     /// The array index of this record.
     #[inline(always)]
     pub fn index(&self) -> &[usize] {
-        &self.idx[..self.rank]
+        self.idx.as_slice()
     }
 
-    /// Typed scalar load of `field`.
+    /// Typed scalar load of the tagged field — the element type is
+    /// inferred from the tag (compile-time checked).
     #[inline(always)]
-    pub fn get<T: Scalar>(&self, field: usize) -> T {
-        self.view.get(self.index_slice(), field)
+    pub fn field<F: FieldTag<Record = R>>(&self, tag: F) -> F::Elem {
+        let _ = tag;
+        self.view.get(self.idx.as_slice(), F::INDEX)
+    }
+
+    /// Project onto the sub-record named by the selection tag — the typed
+    /// replacement for [`get_selection_f64`](RecordRef::get_selection_f64).
+    ///
+    /// ```
+    /// use llama::prelude::*;
+    /// llama::record! { pub struct P, mod p { pos: { x: f64, y: f64 }, q: i32 } }
+    /// let mut v = alloc_view(SoA::<P, _>::new((Dyn(4u32),)), &HeapAlloc);
+    /// v.set_t([1], p::pos::x, 1.5);
+    /// let r = v.at_t([1]);
+    /// let pos = r.sub(p::pos);
+    /// assert_eq!(pos.field(p::pos::x), 1.5); // typed leaf within the span
+    /// assert_eq!(pos.read_f64(), vec![1.5, 0.0]);
+    /// ```
+    #[inline(always)]
+    pub fn sub<G: GroupTag<Record = R>>(&self, group: G) -> SubRecordRef<'v, R, M, S, G> {
+        let _ = group;
+        SubRecordRef { view: self.view, idx: self.idx, _pd: PhantomData }
+    }
+
+    /// Typed scalar load of `field` (legacy entry point; prefer
+    /// [`field`](RecordRef::field)).
+    #[inline(always)]
+    pub fn get<T: Scalar, F: FieldIndex>(&self, field: F) -> T {
+        self.view.get(self.idx.as_slice(), field.field_index())
     }
 
     /// Load every field of `sel` widened to `f64` (order of `sel`).
+    #[deprecated(
+        since = "0.1.0",
+        note = "use the typed sub-record projection: `RecordRef::sub(tag).read_f64()`"
+    )]
     pub fn get_selection_f64(&self, sel: Selection) -> Vec<f64> {
-        sel.indices().map(|f| load_as_f64(self.view, self.index_slice(), f)).collect()
+        sel.indices().map(|f| load_as_f64(self.view, self.idx.as_slice(), f)).collect()
+    }
+}
+
+/// Typed projection of one record onto a sub-record span, produced by
+/// [`RecordRef::sub`] / [`RecordRefMut::sub`]. The selection (start, len,
+/// record dimension) lives in the type, so cross-record selections are
+/// compile errors and leaf access within the span is compile-checked.
+pub struct SubRecordRef<'v, R, M, S, G>
+where
+    R: RecordDim,
+    M: Mapping<R>,
+{
+    view: &'v View<R, M, S>,
+    idx: <M::Extents as Extents>::ArrayIndex,
+    _pd: PhantomData<G>,
+}
+
+impl<'v, R, M, S, G> SubRecordRef<'v, R, M, S, G>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+    G: GroupTag<Record = R>,
+{
+    /// The span as a runtime [`Selection`].
+    #[inline(always)]
+    pub fn selection(&self) -> Selection {
+        G::SELECTION
     }
 
+    /// Number of leaves in the span.
     #[inline(always)]
-    fn index_slice(&self) -> &[usize] {
-        &self.idx[..self.rank]
+    pub fn len(&self) -> usize {
+        G::LEN
+    }
+
+    /// Whether the span is empty.
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        G::LEN == 0
+    }
+
+    /// Typed scalar load of a leaf *within the span* — membership is
+    /// checked at compile time (a tag outside the sub-record fails the
+    /// build during monomorphization).
+    #[inline(always)]
+    pub fn field<F: FieldTag<Record = R>>(&self, tag: F) -> F::Elem {
+        const {
+            assert!(
+                F::INDEX >= G::START && F::INDEX < G::START + G::LEN,
+                "field tag is not part of this sub-record selection"
+            )
+        };
+        let _ = tag;
+        self.view.get(self.idx.as_slice(), F::INDEX)
+    }
+
+    /// Load every leaf of the span widened to `f64`, in span order — the
+    /// typed successor of `RecordRef::get_selection_f64`.
+    pub fn read_f64(&self) -> Vec<f64> {
+        G::SELECTION.indices().map(|f| load_as_f64(self.view, self.idx.as_slice(), f)).collect()
     }
 }
 
 /// Mutable reference to one record of a view.
-pub struct RecordRefMut<'v, R, M, S> {
+pub struct RecordRefMut<'v, R, M, S>
+where
+    R: RecordDim,
+    M: Mapping<R>,
+{
     view: &'v mut View<R, M, S>,
-    idx: [usize; MAX_RANK],
-    rank: usize,
+    idx: <M::Extents as Extents>::ArrayIndex,
 }
 
 impl<'v, R, M, S> RecordRefMut<'v, R, M, S>
@@ -508,22 +858,98 @@ where
     /// The array index of this record.
     #[inline(always)]
     pub fn index(&self) -> &[usize] {
-        &self.idx[..self.rank]
+        self.idx.as_slice()
     }
 
-    /// Typed scalar load of `field`.
+    /// Typed scalar load of the tagged field (compile-time checked).
     #[inline(always)]
-    pub fn get<T: Scalar>(&self, field: usize) -> T {
+    pub fn field<F: FieldTag<Record = R>>(&self, tag: F) -> F::Elem {
+        let _ = tag;
         let idx = self.idx;
-        self.view.get(&idx[..self.rank], field)
+        self.view.get(idx.as_slice(), F::INDEX)
     }
 
-    /// Typed scalar store of `field`.
+    /// Typed scalar store of the tagged field (compile-time checked).
     #[inline(always)]
-    pub fn set<T: Scalar>(&mut self, field: usize, v: T) {
+    pub fn set_field<F: FieldTag<Record = R>>(&mut self, tag: F, v: F::Elem) {
+        let _ = tag;
         let idx = self.idx;
-        let rank = self.rank;
-        self.view.set(&idx[..rank], field, v)
+        self.view.set(idx.as_slice(), F::INDEX, v)
+    }
+
+    /// Navigate to the tagged field, yielding a read/write proxy — the
+    /// Rust rendering of LLAMA's proxy references, usable through
+    /// computed mappings (which have no address to hand out).
+    #[inline(always)]
+    pub fn field_mut<F: FieldTag<Record = R>>(&mut self, tag: F) -> FieldRefMut<'_, R, M, S, F> {
+        let _ = tag;
+        FieldRefMut { view: &mut *self.view, idx: self.idx, _pd: PhantomData }
+    }
+
+    /// Project onto the sub-record named by the selection tag (read-only;
+    /// see [`RecordRef::sub`]).
+    #[inline(always)]
+    pub fn sub<G: GroupTag<Record = R>>(&self, group: G) -> SubRecordRef<'_, R, M, S, G> {
+        let _ = group;
+        SubRecordRef { view: &*self.view, idx: self.idx, _pd: PhantomData }
+    }
+
+    /// Typed scalar load of `field` (legacy entry point; prefer
+    /// [`field`](RecordRefMut::field)).
+    #[inline(always)]
+    pub fn get<T: Scalar, F: FieldIndex>(&self, field: F) -> T {
+        let idx = self.idx;
+        self.view.get(idx.as_slice(), field.field_index())
+    }
+
+    /// Typed scalar store of `field` (legacy entry point; prefer
+    /// [`set_field`](RecordRefMut::set_field)).
+    #[inline(always)]
+    pub fn set<T: Scalar, F: FieldIndex>(&mut self, field: F, v: T) {
+        let idx = self.idx;
+        self.view.set(idx.as_slice(), field.field_index(), v)
+    }
+}
+
+/// Read/write proxy to one tagged field of one record, produced by
+/// [`RecordRefMut::field_mut`]. Works through computed mappings: `get`
+/// runs the mapping's unpack logic, `set` its pack logic.
+pub struct FieldRefMut<'v, R, M, S, F>
+where
+    R: RecordDim,
+    M: Mapping<R>,
+{
+    view: &'v mut View<R, M, S>,
+    idx: <M::Extents as Extents>::ArrayIndex,
+    _pd: PhantomData<F>,
+}
+
+impl<'v, R, M, S, F> FieldRefMut<'v, R, M, S, F>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+    F: FieldTag<Record = R>,
+{
+    /// Load the field's value.
+    #[inline(always)]
+    pub fn get(&self) -> F::Elem {
+        let idx = self.idx;
+        self.view.get(idx.as_slice(), F::INDEX)
+    }
+
+    /// Store a value into the field.
+    #[inline(always)]
+    pub fn set(&mut self, v: F::Elem) {
+        let idx = self.idx;
+        self.view.set(idx.as_slice(), F::INDEX, v)
+    }
+
+    /// Read-modify-write the field through the mapping.
+    #[inline(always)]
+    pub fn update(&mut self, f: impl FnOnce(F::Elem) -> F::Elem) {
+        let v = self.get();
+        self.set(f(v));
     }
 }
 
@@ -537,19 +963,19 @@ where
 {
     use crate::record::ScalarType as St;
     match R::FIELDS[field].ty {
-        St::F32 => view.get::<f32>(idx, field) as f64,
-        St::F64 => view.get::<f64>(idx, field),
-        St::I8 => view.get::<i8>(idx, field) as f64,
-        St::I16 => view.get::<i16>(idx, field) as f64,
-        St::I32 => view.get::<i32>(idx, field) as f64,
-        St::I64 => view.get::<i64>(idx, field) as f64,
-        St::U8 => view.get::<u8>(idx, field) as f64,
-        St::U16 => view.get::<u16>(idx, field) as f64,
-        St::U32 => view.get::<u32>(idx, field) as f64,
-        St::U64 => view.get::<u64>(idx, field) as f64,
-        St::Bool => view.get::<bool>(idx, field) as u8 as f64,
-        St::F16 => view.get::<crate::record::F16>(idx, field).as_f64(),
-        St::Bf16 => view.get::<crate::record::Bf16>(idx, field).as_f64(),
+        St::F32 => view.get::<f32, _>(idx, field) as f64,
+        St::F64 => view.get::<f64, _>(idx, field),
+        St::I8 => view.get::<i8, _>(idx, field) as f64,
+        St::I16 => view.get::<i16, _>(idx, field) as f64,
+        St::I32 => view.get::<i32, _>(idx, field) as f64,
+        St::I64 => view.get::<i64, _>(idx, field) as f64,
+        St::U8 => view.get::<u8, _>(idx, field) as f64,
+        St::U16 => view.get::<u16, _>(idx, field) as f64,
+        St::U32 => view.get::<u32, _>(idx, field) as f64,
+        St::U64 => view.get::<u64, _>(idx, field) as f64,
+        St::Bool => view.get::<bool, _>(idx, field) as u8 as f64,
+        St::F16 => view.get::<crate::record::F16, _>(idx, field).as_f64(),
+        St::Bf16 => view.get::<crate::record::Bf16, _>(idx, field).as_f64(),
     }
 }
 
@@ -597,15 +1023,50 @@ mod tests {
     fn record_ref_access() {
         let mut v = alloc_view(SoA::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
         {
-            let mut r = v.at_mut(&[5]);
-            r.set(p::pos::x, 1.5f64);
-            r.set(p::q, -3i32);
-            assert_eq!(r.get::<f64>(p::pos::x), 1.5);
+            let mut r = v.at_mut_t([5]);
+            r.set_field(p::pos::x, 1.5f64);
+            r.set_field(p::q, -3i32);
+            assert_eq!(r.field(p::pos::x), 1.5);
         }
-        let r = v.at(&[5]);
-        assert_eq!(r.get::<i32>(p::q), -3);
-        assert_eq!(r.get_selection_f64(p::pos), vec![1.5, 0.0]);
+        let r = v.at_t([5]);
+        assert_eq!(r.field(p::q), -3);
+        assert_eq!(r.sub(p::pos).read_f64(), vec![1.5, 0.0]);
         assert_eq!(r.index(), &[5]);
+    }
+
+    #[test]
+    fn legacy_api_agrees_with_typed() {
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
+        // Legacy entry points accept both raw usize indices and tags.
+        v.set(&[2], p::pos::y, 2.5f64);
+        v.set(&[2], 2usize, 9i32); // p::q by raw index
+        assert_eq!(v.get::<f64, _>(&[2], p::pos::y), 2.5);
+        assert_eq!(v.get_t([2], p::q), 9);
+        let r = v.at(&[2]);
+        assert_eq!(r.get::<f64, _>(p::pos::y), 2.5);
+        // The deprecated selection escape hatch still works and agrees
+        // with the typed projection.
+        #[allow(deprecated)]
+        let legacy = r.get_selection_f64(p::pos.selection());
+        assert_eq!(legacy, r.sub(p::pos).read_f64());
+    }
+
+    #[test]
+    fn field_mut_proxy_reads_and_writes() {
+        let mut v = alloc_view(AoS::<P, _>::new((Dyn(4u32),)), &HeapAlloc);
+        let mut r = v.at_mut_t([1]);
+        let mut fx = r.field_mut(p::pos::x);
+        assert_eq!(fx.get(), 0.0);
+        fx.set(4.0);
+        fx.update(|x| x * 2.0);
+        assert_eq!(r.field(p::pos::x), 8.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match view rank")]
+    fn legacy_at_checks_rank() {
+        let v = alloc_view(SoA::<P, _>::new((Dyn(4u32), Dyn(4u32))), &HeapAlloc);
+        let _ = v.at(&[1]); // rank-1 index on a rank-2 view
     }
 
     #[test]
@@ -629,9 +1090,9 @@ mod tests {
     fn load_store_as_f64() {
         use super::{load_as_f64, store_from_f64};
         let mut v = alloc_view(SoA::<P, _>::new((Dyn(4u32),)), &HeapAlloc);
-        store_from_f64(&mut v, &[1], p::q, 42.0);
-        assert_eq!(v.get::<i32>(&[1], p::q), 42);
-        assert_eq!(load_as_f64(&v, &[1], p::q), 42.0);
+        store_from_f64(&mut v, &[1], p::q.i(), 42.0);
+        assert_eq!(v.get_t([1], p::q), 42);
+        assert_eq!(load_as_f64(&v, &[1], p::q.i()), 42.0);
     }
 
     #[test]
@@ -639,10 +1100,10 @@ mod tests {
         let mut v = alloc_view(SoA::<P, _>::new((Dyn(6u32),)), &HeapAlloc);
         v.for_each(|r| {
             let i = r.index()[0];
-            r.set(p::q, i as i32 + 1);
+            r.set_field(p::q, i as i32 + 1);
         });
         for i in 0..6 {
-            assert_eq!(v.get::<i32>(&[i], p::q), i as i32 + 1);
+            assert_eq!(v.get_t([i], p::q), i as i32 + 1);
         }
 
         let mut v2 = alloc_view(AoS::<P, _>::new((Dyn(3u32), Dyn(4u32))), &HeapAlloc);
@@ -650,31 +1111,31 @@ mod tests {
         v2.for_each(|r| {
             seen.push((r.index()[0], r.index()[1]));
             let (i, j) = (r.index()[0], r.index()[1]);
-            r.set(p::pos::x, (i * 10 + j) as f64);
+            r.set_field(p::pos::x, (i * 10 + j) as f64);
         });
         assert_eq!(seen.len(), 12);
         // row-major order, each index exactly once
         assert_eq!(seen[0], (0, 0));
         assert_eq!(seen[1], (0, 1));
         assert_eq!(seen[11], (2, 3));
-        assert_eq!(v2.get::<f64>(&[2, 3], p::pos::x), 23.0);
+        assert_eq!(v2.get_t([2, 3], p::pos::x), 23.0);
     }
 
     #[test]
     fn transform_simd_chunks_cover_the_view() {
         let mut v = alloc_view(SoA::<P, _>::new((Dyn(16u32),)), &HeapAlloc);
         for i in 0..16 {
-            v.set(&[i], p::pos::x, i as f64);
+            v.set_t([i], p::pos::x, i as f64);
         }
         let mut bases = Vec::new();
         v.transform_simd::<4>(|c| {
             bases.push(c.base());
-            let x: crate::simd::Simd<f64, 4> = c.load(p::pos::x);
-            c.store(p::pos::x, x + crate::simd::Simd::splat(100.0));
+            let x = c.load_t(p::pos::x);
+            c.store_t(p::pos::x, x + crate::simd::Simd::splat(100.0));
         });
         assert_eq!(bases, vec![0, 4, 8, 12]);
         for i in 0..16 {
-            assert_eq!(v.get::<f64>(&[i], p::pos::x), i as f64 + 100.0);
+            assert_eq!(v.get_t([i], p::pos::x), i as f64 + 100.0);
         }
     }
 
@@ -682,18 +1143,18 @@ mod tests {
     fn chunk_exposes_whole_view_scalar_access() {
         let mut v = alloc_view(SoA::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
         for i in 0..8 {
-            v.set(&[i], p::pos::x, i as f64);
+            v.set_t([i], p::pos::x, i as f64);
         }
         // Each chunk sums the whole view (the n-body j-loop shape).
         v.transform_simd::<2>(|c| {
             let mut sum = 0.0;
             for j in 0..c.count() {
-                sum += c.get::<f64>(j, p::pos::x);
+                sum += c.get_t(j, p::pos::x);
             }
-            c.set(c.base(), p::pos::y, sum);
+            c.set_t(c.base(), p::pos::y, sum);
         });
         for base in [0usize, 2, 4, 6] {
-            assert_eq!(v.get::<f64>(&[base], p::pos::y), 28.0);
+            assert_eq!(v.get_t([base], p::pos::y), 28.0);
         }
     }
 
@@ -701,22 +1162,22 @@ mod tests {
     fn transform_simd_handles_ragged_extents_with_a_tail_chunk() {
         let mut v = alloc_view(SoA::<P, _>::new((Dyn(10u32),)), &HeapAlloc);
         for i in 0..10 {
-            v.set(&[i], p::pos::x, i as f64);
+            v.set_t([i], p::pos::x, i as f64);
         }
         let mut seen = Vec::new();
         v.transform_simd::<4>(|c| {
             seen.push((c.base(), c.lanes()));
-            let x: crate::simd::Simd<f64, 4> = c.load(p::pos::x);
+            let x = c.load_t(p::pos::x);
             if c.lanes() < 4 {
                 // Inactive lanes load as default.
                 assert_eq!(x.0[2], 0.0);
                 assert_eq!(x.0[3], 0.0);
             }
-            c.store(p::pos::x, x + crate::simd::Simd::splat(100.0));
+            c.store_t(p::pos::x, x + crate::simd::Simd::splat(100.0));
         });
         assert_eq!(seen, vec![(0, 4), (4, 4), (8, 2)]);
         for i in 0..10 {
-            assert_eq!(v.get::<f64>(&[i], p::pos::x), i as f64 + 100.0);
+            assert_eq!(v.get_t([i], p::pos::x), i as f64 + 100.0);
         }
     }
 
@@ -727,8 +1188,8 @@ mod tests {
         let mut chunks = Vec::new();
         v.transform_simd::<4>(|c| {
             chunks.push((c.index().to_vec(), c.lanes()));
-            let x: crate::simd::Simd<f64, 4> = c.load(p::pos::x);
-            c.store(p::pos::x, x + crate::simd::Simd::splat(1.0));
+            let x = c.load_t(p::pos::x);
+            c.store_t(p::pos::x, x + crate::simd::Simd::splat(1.0));
         });
         assert_eq!(chunks.len(), 9);
         assert_eq!(chunks[0], (vec![0, 0], 4));
@@ -737,7 +1198,7 @@ mod tests {
         // Every record incremented exactly once.
         for i in 0..3 {
             for j in 0..10 {
-                assert_eq!(v.get::<f64>(&[i, j], p::pos::x), 1.0);
+                assert_eq!(v.get_t([i, j], p::pos::x), 1.0);
             }
         }
     }

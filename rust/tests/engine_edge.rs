@@ -52,7 +52,7 @@ fn single_element_views_traverse_once() {
         r.set(p::y, x + 1.0);
     });
     assert_eq!(visits, 1);
-    assert_eq!(v.get::<f32>(&[0], p::y), 3.0);
+    assert_eq!(v.get::<f32, _>(&[0], p::y), 3.0);
 
     let mut chunks = Vec::new();
     v.transform_simd::<8>(|c| {
@@ -63,11 +63,11 @@ fn single_element_views_traverse_once() {
         c.store(p::x, x + Simd::splat(1.0));
     });
     assert_eq!(chunks, vec![(0, 1)]);
-    assert_eq!(v.get::<f32>(&[0], p::x), 3.0);
+    assert_eq!(v.get::<f32, _>(&[0], p::x), 3.0);
 
     // Parallel entry points fall back to serial for a 1-record view.
     v.par_for_each_with(4, |r| r.set(p::y, 9.0f32));
-    assert_eq!(v.get::<f32>(&[0], p::y), 9.0);
+    assert_eq!(v.get::<f32, _>(&[0], p::y), 9.0);
 }
 
 /// Apply `x += 1` through `transform_simd::<4>` (tail of 3 at n=7) and
@@ -97,8 +97,8 @@ fn tail_matches_scalar<M: SimdAccess<P> + Clone>(m: M) {
     assert_eq!(tail_chunks, if n % 4 == 0 { 0 } else { 1 });
     for i in 0..n {
         assert_eq!(
-            simd.get::<f32>(&[i], p::x).to_bits(),
-            scalar.get::<f32>(&[i], p::x).to_bits(),
+            simd.get::<f32, _>(&[i], p::x).to_bits(),
+            scalar.get::<f32, _>(&[i], p::x).to_bits(),
             "record {i}"
         );
     }
@@ -170,8 +170,8 @@ fn bitpack_int_tail_matches_scalar() {
         });
         for i in 0..n {
             assert_eq!(
-                simd.get::<u32>(&[i], h::adc),
-                scalar.get::<u32>(&[i], h::adc),
+                simd.get::<u32, _>(&[i], h::adc),
+                scalar.get::<u32, _>(&[i], h::adc),
                 "bits={bits} record {i}"
             );
         }
@@ -204,8 +204,8 @@ fn rank3_traversals_cover_every_record_once() {
     for i in 0..2 {
         for j in 0..3 {
             for k in 0..5 {
-                assert_eq!(via_for_each.get::<f32>(&[i, j, k], p::y), 1.0);
-                assert_eq!(via_chunks.get::<f32>(&[i, j, k], p::y), 1.0);
+                assert_eq!(via_for_each.get::<f32, _>(&[i, j, k], p::y), 1.0);
+                assert_eq!(via_chunks.get::<f32, _>(&[i, j, k], p::y), 1.0);
             }
         }
     }
@@ -233,7 +233,7 @@ fn rank2_parallel_shards_split_the_outer_dimension() {
     }
     for i in 0..7 {
         for j in 0..5 {
-            assert_eq!(v.get::<f32>(&[i, j], p::x), 1.0);
+            assert_eq!(v.get::<f32, _>(&[i, j], p::x), 1.0);
         }
     }
 
@@ -251,8 +251,8 @@ fn rank2_parallel_shards_split_the_outer_dimension() {
     for i in 0..7 {
         for j in 0..5 {
             assert_eq!(
-                serial.get::<f32>(&[i, j], p::y).to_bits(),
-                par.get::<f32>(&[i, j], p::y).to_bits()
+                serial.get::<f32, _>(&[i, j], p::y).to_bits(),
+                par.get::<f32, _>(&[i, j], p::y).to_bits()
             );
         }
     }

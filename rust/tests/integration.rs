@@ -42,22 +42,46 @@ fn fill_event<M: MemoryAccess<Event>, S: BlobStorage>(v: &mut View<Event, M, S>,
 
 fn check_event<M: MemoryAccess<Event>, S: BlobStorage>(v: &View<Event, M, S>, n: usize) {
     for i in 0..n {
-        assert_eq!(v.get::<f64>(&[i], ev::hit::pos::x), i as f64 * 1.5);
-        assert_eq!(v.get::<f64>(&[i], ev::hit::pos::y), -(i as f64));
-        assert_eq!(v.get::<u32>(&[i], ev::hit::adc), (i * 3) as u32);
-        assert_eq!(v.get::<u64>(&[i], ev::time), (i * 100) as u64);
-        assert_eq!(v.get::<bool>(&[i], ev::good), i % 3 == 0);
+        assert_eq!(v.get::<f64, _>(&[i], ev::hit::pos::x), i as f64 * 1.5);
+        assert_eq!(v.get::<f64, _>(&[i], ev::hit::pos::y), -(i as f64));
+        assert_eq!(v.get::<u32, _>(&[i], ev::hit::adc), (i * 3) as u32);
+        assert_eq!(v.get::<u64, _>(&[i], ev::time), (i * 100) as u64);
+        assert_eq!(v.get::<bool, _>(&[i], ev::good), i % 3 == 0);
     }
 }
 
 #[test]
 fn two_level_nesting_flattens_correctly() {
     assert_eq!(<Event as RecordDim>::FIELD_COUNT, 5);
-    assert_eq!(ev::hit::pos::x, 0);
-    assert_eq!(ev::hit::adc, 2);
-    assert_eq!(ev::time, 3);
-    assert_eq!(ev::hit.start, 0);
-    assert_eq!(ev::hit.len, 3);
+    assert_eq!(ev::hit::pos::x.i(), 0);
+    assert_eq!(ev::hit::adc.i(), 2);
+    assert_eq!(ev::time.i(), 3);
+    assert_eq!(ev::hit.start(), 0);
+    assert_eq!(ev::hit.len(), 3);
+}
+
+#[test]
+fn typed_tags_navigate_two_level_nesting() {
+    use llama::record::FieldTag;
+    let e = (Dyn(4u32),);
+    let mut v = alloc_view(SoA::<Event, _>::new(e), &HeapAlloc);
+    v.set_t([1], ev::hit::pos::y, -2.0);
+    v.set_t([1], ev::good, true);
+    // Element types are inferred from the tags at any nesting depth.
+    let y: f64 = v.get_t([1], ev::hit::pos::y);
+    assert_eq!(y, -2.0);
+    assert!(v.get_t([1], ev::good));
+    // Typed sub-record projection spans the nested group.
+    let r = v.at_t([1]);
+    let hit = r.sub(ev::hit);
+    assert_eq!(hit.selection(), llama::record::Selection::new(0, 3));
+    assert_eq!(hit.field(ev::hit::pos::y), -2.0);
+    assert_eq!(hit.read_f64(), vec![0.0, -2.0, 0.0]);
+    // Tag metadata is compile-time constant.
+    fn index_of<F: FieldTag>(_: F) -> usize {
+        F::INDEX
+    }
+    assert_eq!(index_of(ev::time), 3);
 }
 
 #[test]
@@ -117,7 +141,7 @@ fn instrumentation_wraps_any_inner_mapping() {
     let _: u32 = v.get(&[3], ints::a);
     let (r, w) = v.mapping().field_counts(ints::a);
     assert_eq!((r, w), (1, 1));
-    assert_eq!(v.get::<u32>(&[3], ints::a), 12345);
+    assert_eq!(v.get::<u32, _>(&[3], ints::a), 12345);
 
     // Heatmap over AoSoA (physical), cache-line granularity.
     let hm = Heatmap::<Event, _, 64>::new(AoSoA::<Event, _, 8>::new(e));
@@ -137,7 +161,7 @@ fn changetype_over_bitpack_composes() {
     let ct = ChangeType::<Wide, Narrow, _>::new(inner);
     let mut v = alloc_view(ct, &HeapAlloc);
     v.set(&[5], wide::v, 1.5f64);
-    assert_eq!(v.get::<f64>(&[5], wide::v), 1.5);
+    assert_eq!(v.get::<f64, _>(&[5], wide::v), 1.5);
     // 16 bits per value + slack
     assert_eq!(v.storage().total_bytes(), 32 * 2 + 8);
 }
@@ -156,8 +180,8 @@ fn split_null_cache_pattern() {
     let mut v = alloc_view(split, &HeapAlloc);
     v.set(&[1], ev::hit::pos::x, 9.0f64);
     v.set(&[1], ev::time, 7u64);
-    assert_eq!(v.get::<f64>(&[1], ev::hit::pos::x), 9.0);
-    assert_eq!(v.get::<u64>(&[1], ev::time), 0); // discarded
+    assert_eq!(v.get::<f64, _>(&[1], ev::hit::pos::x), 9.0);
+    assert_eq!(v.get::<u64, _>(&[1], ev::time), 0); // discarded
     assert_eq!(v.storage().total_bytes(), 2 * 8 * 8);
 }
 
@@ -174,7 +198,7 @@ fn zero_overhead_static_view_is_trivially_copyable() {
     let mut a = view;
     a.set(&[3], v3::y, 8.5f32);
     let b = a; // Copy
-    assert_eq!(b.get::<f32>(&[3], v3::y), 8.5);
+    assert_eq!(b.get::<f32, _>(&[3], v3::y), 8.5);
 }
 
 #[test]
@@ -192,7 +216,7 @@ fn simd_roundtrip_through_all_simd_layouts() {
             let s: Simd<f32, 8> = v.load_simd(&[8], p::a);
             assert_eq!(s.0, [8., 9., 10., 11., 12., 13., 14., 15.]);
             v.store_simd(&[16], p::a, s + Simd::splat(100.0));
-            assert_eq!(v.get::<f32>(&[17], p::a), 109.0);
+            assert_eq!(v.get::<f32, _>(&[17], p::a), 109.0);
         }};
     }
     simd_check!(AoS::<P, _>::new(e));
@@ -233,7 +257,7 @@ fn morton_layout_roundtrips_2d() {
     }
     for i in 0..16usize {
         for j in 0..16usize {
-            assert_eq!(v.get::<f32>(&[i, j], cell::v), (i * 16 + j) as f32);
+            assert_eq!(v.get::<f32, _>(&[i, j], cell::v), (i * 16 + j) as f32);
         }
     }
 }
@@ -244,7 +268,7 @@ fn one_mapping_broadcast_with_nbody_record() {
     use llama::nbody::{particle, Particle};
     let mut v = alloc_view(One::<Particle, _>::new((Dyn(64u32),)), &HeapAlloc);
     v.set(&[0], particle::mass, 2.5f32);
-    assert_eq!(v.get::<f32>(&[63], particle::mass), 2.5);
+    assert_eq!(v.get::<f32, _>(&[63], particle::mass), 2.5);
     assert_eq!(v.storage().total_bytes(), <Particle as RecordDim>::PACKED_SIZE);
 }
 
@@ -253,7 +277,7 @@ fn bf16_scalars_in_records() {
     llama::record! { pub struct Half, mod half { v: Bf16 } }
     let mut v = alloc_view(SoA::<Half, _>::new((Dyn(4u32),)), &HeapAlloc);
     v.set(&[0], half::v, Bf16::from_f32(1.5));
-    assert_eq!(v.get::<Bf16>(&[0], half::v).to_f32(), 1.5);
+    assert_eq!(v.get::<Bf16, _>(&[0], half::v).to_f32(), 1.5);
 }
 
 #[test]

@@ -2,7 +2,7 @@
 //! invariants over mappings, bit packing, float repacking, copy, and the
 //! coordinator.
 
-use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+use llama::blob::{alloc_view, HeapAlloc};
 use llama::extents::Dyn;
 use llama::mapping::bitpack_float::{pack_float_bits, unpack_float_bits};
 use llama::mapping::bitpack_int::{read_bits, sign_extend, write_bits};
@@ -40,10 +40,10 @@ fn roundtrip_prop<M: MemoryAccess<R>>(m: M, n: usize, seed: u64) -> bool {
         v.set(&[i], r::d, d);
     }
     vals.iter().enumerate().all(|(i, &(a, b, c, d))| {
-        v.get::<f64>(&[i], r::a) == a
-            && v.get::<f32>(&[i], r::b) == b
-            && v.get::<u32>(&[i], r::c) == c
-            && v.get::<i16>(&[i], r::d) == d
+        v.get::<f64, _>(&[i], r::a) == a
+            && v.get::<f32, _>(&[i], r::b) == b
+            && v.get::<u32, _>(&[i], r::c) == c
+            && v.get::<i16, _>(&[i], r::d) == d
     })
 }
 
@@ -191,9 +191,145 @@ fn prop_bitpack_int_view_roundtrips_masked() {
             for (i, &val) in vals.iter().enumerate() {
                 v.set(&[i], ifld::v, val);
             }
-            vals.iter().enumerate().all(|(i, &val)| v.get::<u64>(&[i], ifld::v) == val & mask)
+            vals.iter().enumerate().all(|(i, &val)| v.get::<u64, _>(&[i], ifld::v) == val & mask)
         },
     );
+}
+
+#[test]
+fn prop_typed_api_bit_identical_to_legacy_across_mappings() {
+    // The typed tag API (`set_t`/`get_t`, `field`/`set_field`,
+    // `load_t`/`store_t`, `load_simd_t`/`store_simd_t`) must produce
+    // exactly the bytes and values of the legacy usize-index API on every
+    // mapping — the zero-cost claim of the access-API redesign, checked
+    // as bit-identity over scalar writes, bulk traversals, and SIMD
+    // chunk transforms. All 13 mappings are covered between the float
+    // record here and the integer record below.
+    use llama::mapping::aos::{AoS, MinPad, Packed};
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::bitpack_float::BitpackFloatSoA;
+    use llama::mapping::bytesplit::Bytesplit;
+    use llama::mapping::changetype::ChangeType;
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::mapping::heatmap::Heatmap;
+    use llama::mapping::null::NullMapping;
+    use llama::mapping::one::One;
+    use llama::mapping::soa::{MultiBlob, SingleBlob, SoA};
+    use llama::mapping::split::Split;
+    use llama::mapping::SimdAccess;
+    use llama::simd::Simd;
+
+    llama::record! {
+        pub struct T, mod tf {
+            v: f32,
+            w: f32,
+        }
+    }
+
+    // Drive one view through the typed API, its twin through the legacy
+    // usize API, and compare every value bit for bit. The typed calls fix
+    // the index rank in the bound.
+    fn agree<M>(m: M, n: usize, seed: u64) -> bool
+    where
+        M: SimdAccess<T> + Clone,
+        M::Extents: llama::extents::Extents<ArrayIndex = [usize; 1]>,
+    {
+        let mut typed = alloc_view(m.clone(), &HeapAlloc);
+        let mut legacy = alloc_view(m, &HeapAlloc);
+        let mut rng_a = Rng::new(seed);
+        let mut rng_b = Rng::new(seed);
+        for i in 0..n {
+            typed.set_t([i], tf::v, rng_a.f64_range(-1e3, 1e3) as f32);
+            typed.set_t([i], tf::w, rng_a.f64_range(-1e3, 1e3) as f32);
+            legacy.set::<f32, _>(&[i], tf::v.i(), rng_b.f64_range(-1e3, 1e3) as f32);
+            legacy.set::<f32, _>(&[i], tf::w.i(), rng_b.f64_range(-1e3, 1e3) as f32);
+        }
+        // Scalar bulk traversal: typed navigation vs legacy get/set.
+        typed.for_each(|r| {
+            let v = r.field(tf::v);
+            let w = r.field(tf::w);
+            r.set_field(tf::v, v * w - 1.0);
+        });
+        legacy.for_each(|r| {
+            let v: f32 = r.get(tf::v.i());
+            let w: f32 = r.get(tf::w.i());
+            r.set(tf::v.i(), v * w - 1.0);
+        });
+        // SIMD chunk transform: load_t/store_t vs load/store.
+        typed.transform_simd::<4>(|c| {
+            let a = c.load_t(tf::v);
+            let b = c.load_t(tf::w);
+            c.store_t(tf::w, a + b);
+        });
+        legacy.transform_simd::<4>(|c| {
+            let a: Simd<f32, 4> = c.load(tf::v.i());
+            let b: Simd<f32, 4> = c.load(tf::w.i());
+            c.store(tf::w.i(), a + b);
+        });
+        // Direct SIMD entry points where a full vector fits.
+        if n >= 4 {
+            let a: Simd<f32, 4> = typed.load_simd_t([0], tf::v);
+            typed.store_simd_t([0], tf::v, a);
+            let b: Simd<f32, 4> = legacy.load_simd(&[0], tf::v.i());
+            legacy.store_simd(&[0], tf::v.i(), b);
+            if a.0.map(f32::to_bits) != b.0.map(f32::to_bits) {
+                return false;
+            }
+        }
+        (0..n).all(|i| {
+            typed.get_t([i], tf::v).to_bits() == legacy.get::<f32, _>(&[i], tf::v.i()).to_bits()
+                && typed.get_t([i], tf::w).to_bits()
+                    == legacy.get::<f32, _>(&[i], tf::w.i()).to_bits()
+        })
+    }
+
+    forall("typed-vs-legacy", 10, |g| (g.range(1, 80), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        let ok = agree(AoS::<T, _>::new(e), n, seed)
+            && agree(AoS::<T, _, Packed>::new(e), n, seed)
+            && agree(AoS::<T, _, MinPad>::new(e), n, seed)
+            && agree(SoA::<T, _, MultiBlob>::new(e), n, seed)
+            && agree(SoA::<T, _, SingleBlob>::new(e), n, seed)
+            && agree(AoSoA::<T, _, 8>::new(e), n, seed)
+            && agree(Bytesplit::<T, _>::new(e), n, seed)
+            && agree(BitpackFloatSoA::<T, _, 8, 23>::new(e), n, seed)
+            && agree(ChangeType::<T, T, _>::new(SoA::<T, _>::new(e)), n, seed)
+            && agree(Heatmap::<T, _, 8>::new(SoA::<T, _>::new(e)), n, seed)
+            && agree(FieldAccessCount::new(AoS::<T, _>::new(e)), n, seed)
+            && agree(NullMapping::<T, _>::new(e), n, seed)
+            && agree(One::<T, _>::new(e), n, seed);
+        let sel = llama::record::Selection::new(0, 1);
+        const FIRST: u64 = 0b01;
+        const REST: u64 = 0b10;
+        type M1 = SoA<T, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, FIRST>;
+        type M2 = SoA<T, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, REST>;
+        ok && agree(Split::new(M1::new(e), M2::new(e), sel), n, seed)
+    });
+
+    // Bit-packed integers (the record above is float-typed): typed vs
+    // legacy over BitpackIntSoA and BitpackIntSoADyn.
+    use llama::mapping::bitpack_int::{BitpackIntSoA, BitpackIntSoADyn};
+    llama::record! { pub struct IT, mod it { v: u32 } }
+    forall("typed-vs-legacy-bitpack-int", 10, |g| (g.range(1, 60), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        fn agree_int<M>(m: M, n: usize, seed: u64) -> bool
+        where
+            M: llama::mapping::MemoryAccess<IT> + Clone,
+            M::Extents: llama::extents::Extents<ArrayIndex = [usize; 1]>,
+        {
+            let mut typed = alloc_view(m.clone(), &HeapAlloc);
+            let mut legacy = alloc_view(m, &HeapAlloc);
+            let mut rng_a = Rng::new(seed);
+            let mut rng_b = Rng::new(seed);
+            for i in 0..n {
+                typed.set_t([i], it::v, rng_a.next_u64() as u32);
+                legacy.set::<u32, _>(&[i], it::v.i(), rng_b.next_u64() as u32);
+            }
+            (0..n).all(|i| typed.get_t([i], it::v) == legacy.get::<u32, _>(&[i], it::v.i()))
+        }
+        agree_int(BitpackIntSoA::<IT, _, 12>::new(e), n, seed)
+            && agree_int(BitpackIntSoADyn::<IT, _>::new(e, 17), n, seed)
+    });
 }
 
 #[test]
@@ -216,8 +352,8 @@ fn prop_copy_preserves_all_fields() {
         copy_view(&a, &mut b);
         copy_view(&b, &mut c);
         (0..n).all(|i| {
-            a.get::<f64>(&[i], r::a) == c.get::<f64>(&[i], r::a)
-                && a.get::<u32>(&[i], r::c) == c.get::<u32>(&[i], r::c)
+            a.get::<f64, _>(&[i], r::a) == c.get::<f64, _>(&[i], r::a)
+                && a.get::<u32, _>(&[i], r::c) == c.get::<u32, _>(&[i], r::c)
         })
     });
 }
@@ -263,7 +399,7 @@ fn prop_bulk_traversal_bit_identical_across_mappings() {
         });
         (0..n)
             .flat_map(|i| {
-                [view.get::<f32>(&[i], bf::v).to_bits(), view.get::<f32>(&[i], bf::w).to_bits()]
+                [view.get::<f32, _>(&[i], bf::v).to_bits(), view.get::<f32, _>(&[i], bf::w).to_bits()]
             })
             .collect()
     }
@@ -301,10 +437,10 @@ fn prop_run_copy_agrees_with_field_wise() {
         llama::copy::field_wise_copy(&src, &mut via_scalar);
         strategy == CopyStrategy::FieldRuns
             && (0..n).all(|i| {
-                via_runs.get::<f64>(&[i], r::a) == via_scalar.get::<f64>(&[i], r::a)
-                    && via_runs.get::<f32>(&[i], r::b) == via_scalar.get::<f32>(&[i], r::b)
-                    && via_runs.get::<u32>(&[i], r::c) == via_scalar.get::<u32>(&[i], r::c)
-                    && via_runs.get::<i16>(&[i], r::d) == via_scalar.get::<i16>(&[i], r::d)
+                via_runs.get::<f64, _>(&[i], r::a) == via_scalar.get::<f64, _>(&[i], r::a)
+                    && via_runs.get::<f32, _>(&[i], r::b) == via_scalar.get::<f32, _>(&[i], r::b)
+                    && via_runs.get::<u32, _>(&[i], r::c) == via_scalar.get::<u32, _>(&[i], r::c)
+                    && via_runs.get::<i16, _>(&[i], r::d) == via_scalar.get::<i16, _>(&[i], r::d)
             })
     });
 }
@@ -356,10 +492,10 @@ fn prop_par_for_each_bit_identical_to_serial_across_mappings() {
         (0..n)
             .flat_map(|i| {
                 [
-                    v.get::<f64>(&[i], r::a).to_bits(),
-                    v.get::<f32>(&[i], r::b).to_bits() as u64,
-                    v.get::<u32>(&[i], r::c) as u64,
-                    v.get::<i16>(&[i], r::d) as u16 as u64,
+                    v.get::<f64, _>(&[i], r::a).to_bits(),
+                    v.get::<f32, _>(&[i], r::b).to_bits() as u64,
+                    v.get::<u32, _>(&[i], r::c) as u64,
+                    v.get::<i16, _>(&[i], r::d) as u16 as u64,
                 ]
             })
             .collect()
@@ -456,9 +592,9 @@ fn prop_par_transform_simd_bit_identical_to_serial_across_mappings() {
     fn view_bits<M: MemoryAccess<B2>>(
         v: &llama::view::View<B2, M, HeapStorage>,
         i: usize,
-        field: usize,
+        field: impl llama::record::FieldIndex,
     ) -> u32 {
-        v.get::<f32>(&[i], field).to_bits()
+        v.get::<f32, _>(&[i], field).to_bits()
     }
 
     forall("par-transform-simd", 8, |g| (g.range(1, 130), g.next_u64()), |&(n, seed)| {
@@ -521,7 +657,7 @@ fn prop_par_bitpack_int_matches_serial_at_byte_misaligned_sizes() {
                     Some(t) => v.par_for_each_with(t, op),
                     None => v.for_each(op),
                 }
-                (0..n).map(|i| v.get::<u64>(&[i], i2::v)).collect()
+                (0..n).map(|i| v.get::<u64, _>(&[i], i2::v)).collect()
             };
             let serial = run(None);
             [1usize, 2, 4, 7].iter().all(|&t| run(Some(t)) == serial)
