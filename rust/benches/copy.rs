@@ -1,0 +1,155 @@
+//! Experiment E9 — layout-aware copy: the cost ladder of the four copy
+//! strategies between the Figure-3 layouts, serial vs parallel.
+//!
+//! The paper's original layout-aware copy result: exchanging data between
+//! views of different mappings can run as whole-blob `memcpy` (identical
+//! layouts), per-field `memcpy` runs (both sides byte-contiguous —
+//! SoA↔SoA across blob policies, SoA↔AoSoA), or a per-(record, field)
+//! scalar loop (everything else). This bench records all three plus the
+//! run-based *parallel* copy (`copy_view_par`): field runs intersected
+//! with the destination mapping's `shard_bounds` boundaries and fanned
+//! over scoped worker threads — disjoint byte ranges per thread for free.
+//!
+//! Expected shape: blob-memcpy ≲ runs ≤ runs-NT « field-wise. The
+//! parallel rows profit only once the copy is large enough to beat the
+//! thread fan-out cost; recording where that crossover sits is the point
+//! of keeping serial and parallel rows side by side in the trajectory.
+//!
+//! Run: `cargo bench --bench copy [-- N]`  (default N=524288;
+//! LLAMA_BENCH_SMOKE=1 shrinks to a smoke run; LLAMA_THREADS overrides
+//! the parallel rows' worker count, default 4; LLAMA_BENCH_JSON=<dir>
+//! writes BENCH_copy.json)
+
+use llama::bench::{black_box, smoke, Bencher};
+use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+use llama::copy::{copy_view, copy_view_par, CopyStrategy};
+use llama::extents::Dyn;
+use llama::mapping::aos::AoS;
+use llama::mapping::aosoa::AoSoA;
+use llama::mapping::soa::{SingleBlob, SoA};
+
+llama::record! {
+    pub struct Particle, mod particle {
+        pos: { x: f32, y: f32, z: f32 },
+        vel: { x: f32, y: f32, z: f32 },
+        mass: f32,
+    }
+}
+
+fn main() {
+    let arg_n: Option<usize> =
+        std::env::args().skip(1).find(|a| !a.starts_with('-')).and_then(|a| a.parse().ok());
+    let fast = smoke();
+    let n = arg_n.unwrap_or(if fast { 4096 } else { 1 << 19 });
+    let threads = llama::shard::thread_count_or(4);
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
+    let e = (Dyn(n as u32),);
+
+    println!("layout-aware copy: n={n} records ({} B payload), {threads}-thread rows\n", n * 28);
+
+    let mut src = alloc_view(SoA::<Particle, _>::new(e), &HeapAlloc);
+    for i in 0..n {
+        src.set_t([i], particle::pos::x, i as f32);
+        src.set_t([i], particle::pos::y, -(i as f32));
+        src.set_t([i], particle::pos::z, 0.5 * i as f32);
+        src.set_t([i], particle::vel::x, 1.0);
+        src.set_t([i], particle::vel::y, -1.0);
+        src.set_t([i], particle::vel::z, 0.0);
+        src.set_t([i], particle::mass, 1.0 + (i % 7) as f32);
+    }
+
+    // Strategy guards: each row must actually exercise the strategy its
+    // name claims, so a silent fallback fails the bench (CI smoke) rather
+    // than corrupting the trajectory.
+    {
+        let mut dst = alloc_view(SoA::<Particle, _>::new(e), &HeapAlloc);
+        assert_eq!(copy_view(&src, &mut dst), CopyStrategy::BlobMemcpy);
+        b.bench("copy SoA-MB -> SoA-MB  blob-memcpy", n as u64, || {
+            copy_view(&src, &mut dst);
+            black_box(dst.storage().blob_len(0));
+        });
+    }
+    {
+        let mut dst = alloc_view(AoSoA::<Particle, _, 8>::new(e), &HeapAlloc);
+        assert_eq!(copy_view(&src, &mut dst), CopyStrategy::FieldRuns);
+        b.bench("copy SoA-MB -> AoSoA8  runs serial", n as u64, || {
+            copy_view(&src, &mut dst);
+            black_box(dst.storage().blob_len(0));
+        });
+    }
+    {
+        let mut dst = alloc_view(AoSoA::<Particle, _, 8>::new(e), &HeapAlloc);
+        let strat = copy_view_par(&src, &mut dst, threads);
+        if threads >= 2 && n >= threads {
+            assert_eq!(strat, CopyStrategy::FieldRunsPar);
+        }
+        b.bench(&format!("copy SoA-MB -> AoSoA8  runs {threads}T"), n as u64, || {
+            copy_view_par(&src, &mut dst, threads);
+            black_box(dst.storage().blob_len(0));
+        });
+    }
+    {
+        let mut dst = alloc_view(SoA::<Particle, _, SingleBlob>::new(e), &HeapAlloc);
+        assert_eq!(copy_view(&src, &mut dst), CopyStrategy::FieldRuns);
+        b.bench("copy SoA-MB -> SoA-SB  runs serial", n as u64, || {
+            copy_view(&src, &mut dst);
+            black_box(dst.storage().blob_len(0));
+        });
+    }
+    {
+        let mut dst = alloc_view(SoA::<Particle, _, SingleBlob>::new(e), &HeapAlloc);
+        let strat = copy_view_par(&src, &mut dst, threads);
+        if threads >= 2 && n >= threads {
+            assert_eq!(strat, CopyStrategy::FieldRunsPar);
+        }
+        b.bench(&format!("copy SoA-MB -> SoA-SB  runs {threads}T"), n as u64, || {
+            copy_view_par(&src, &mut dst, threads);
+            black_box(dst.storage().blob_len(0));
+        });
+    }
+    {
+        let mut dst = alloc_view(AoS::<Particle, _>::new(e), &HeapAlloc);
+        assert_eq!(copy_view(&src, &mut dst), CopyStrategy::FieldWise);
+        b.bench("copy SoA-MB -> AoS     field-wise", n as u64, || {
+            copy_view(&src, &mut dst);
+            black_box(dst.storage().blob_len(0));
+        });
+    }
+
+    println!(
+        "{}",
+        b.render_table("layout-aware copy (per record)", Some("copy SoA-MB -> AoS     field-wise"))
+    );
+
+    // Schema guard (smoke mode, i.e. CI): the measurement-key set of
+    // BENCH_copy.json must stay diffable across commits.
+    if fast {
+        let mut want: Vec<String> = vec![
+            "copy SoA-MB -> SoA-MB  blob-memcpy".into(),
+            "copy SoA-MB -> AoSoA8  runs serial".into(),
+            format!("copy SoA-MB -> AoSoA8  runs {threads}T"),
+            "copy SoA-MB -> SoA-SB  runs serial".into(),
+            format!("copy SoA-MB -> SoA-SB  runs {threads}T"),
+            "copy SoA-MB -> AoS     field-wise".into(),
+        ];
+        want.sort();
+        let mut got: Vec<String> = b.results().iter().map(|m| m.name.clone()).collect();
+        got.sort();
+        assert_eq!(got, want, "copy-table measurement keys drifted");
+        println!("smoke schema guard OK: {} copy keys", got.len());
+    }
+
+    let written = llama::bench::emit_json(
+        "copy",
+        &[
+            ("n", n.to_string()),
+            ("threads", threads.to_string()),
+            ("smoke", (fast as u8).to_string()),
+        ],
+        &[("copy", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
+    if let Some(path) = written {
+        println!("perf trajectory written to {}", path.display());
+    }
+}

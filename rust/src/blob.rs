@@ -8,6 +8,21 @@
 //! view a trivial value type when the extents are compile-time (§2: views
 //! placeable in GPU shared memory; here: `memcpy`-able, stack-residing,
 //! reinterpretable).
+//!
+//! # Byte-exact access and the parallel storage model
+//!
+//! The access layer reaches blob bytes through [`BlobStorage::bytes`] /
+//! [`BlobStorage::bytes_mut`], which materialize a reference over
+//! **exactly** the bytes one access touches — never a whole-blob slice.
+//! For the exclusive storages in this module that is a plain sub-slice;
+//! the distinction matters for the parallel engine: shard workers access
+//! the *same* blobs concurrently through [`ShardBlobs`], a raw,
+//! interior-mutable handle ([`BlobBytes`] spans). Because every
+//! materialized reference covers only the bytes of one access, and the
+//! sharding proof ([`crate::mapping::Mapping::shard_bounds`]) makes those
+//! byte ranges disjoint across workers, the engine never creates
+//! overlapping `&mut` — the whole parallel layer is expressible under
+//! Stacked/Tree Borrows and runs under Miri (see `docs/PARALLELISM.md`).
 
 use crate::mapping::{Mapping, MemoryAccess};
 use crate::record::RecordDim;
@@ -16,8 +31,19 @@ use crate::view::View;
 /// Byte storage for the blobs of a view.
 ///
 /// # Safety-relevant contract
-/// `blob(i)` / `blob_mut(i)` must return stable slices of the size the
-/// mapping requested at allocation for all `i < blob_count()`.
+/// `blob(i)` / `blob_mut(i)` / `bytes(i, ..)` / `bytes_mut(i, ..)` must
+/// address stable buffers of the size the mapping requested at allocation
+/// for all `i < blob_count()`, and `blob_len(i)` must report that size.
+///
+/// # Byte-exact access
+/// Mappings address storage through [`bytes`](BlobStorage::bytes) /
+/// [`bytes_mut`](BlobStorage::bytes_mut) with the exact byte window of
+/// one access. The provided implementations sub-slice
+/// [`blob`](BlobStorage::blob) — correct for exclusively-owned storage.
+/// [`ShardBlobs`] overrides them to materialize references over only the
+/// requested window (its whole-blob methods panic instead), which is what
+/// lets shard workers touch disjoint parts of one blob concurrently
+/// without overlapping references.
 pub trait BlobStorage {
     /// Number of blobs held.
     fn blob_count(&self) -> usize;
@@ -26,9 +52,44 @@ pub trait BlobStorage {
     /// Write access to blob `i`.
     fn blob_mut(&mut self, i: usize) -> &mut [u8];
 
+    /// Byte length of blob `i` (without materializing a whole-blob
+    /// reference — required wherever a [`ShardBlobs`] may be behind the
+    /// trait).
+    fn blob_len(&self, i: usize) -> usize {
+        self.blob(i).len()
+    }
+
+    /// Shared access to exactly `len` bytes of blob `i` at offset `off`.
+    #[inline(always)]
+    fn bytes(&self, i: usize, off: usize, len: usize) -> &[u8] {
+        &self.blob(i)[off..off + len]
+    }
+
+    /// Mutable access to exactly `len` bytes of blob `i` at offset `off`.
+    #[inline(always)]
+    fn bytes_mut(&mut self, i: usize, off: usize, len: usize) -> &mut [u8] {
+        &mut self.blob_mut(i)[off..off + len]
+    }
+
     /// Total bytes across all blobs (reporting).
     fn total_bytes(&self) -> usize {
-        (0..self.blob_count()).map(|i| self.blob(i).len()).sum()
+        (0..self.blob_count()).map(|i| self.blob_len(i)).sum()
+    }
+
+    /// Extract one raw [`BlobBytes`] span per blob. The exclusive `&mut`
+    /// receiver is the proof that no reference to the blob bytes is live
+    /// at extraction time; see [`blob_spans`] for the lifetime contract.
+    ///
+    /// The default derives each span through a separate
+    /// [`blob_mut`](BlobStorage::blob_mut) call — valid for storages
+    /// whose blobs are separate allocations (heap vectors, aligned
+    /// buffers: retagging the storage struct does not touch the heap
+    /// data). Storages whose blobs live *inline in one allocation*
+    /// ([`ArrayStorage`]) must override so all spans derive from a
+    /// single exclusive reborrow — repeated whole-struct reborrows would
+    /// invalidate the earlier spans under Stacked/Tree Borrows.
+    fn spans(&mut self) -> Vec<BlobBytes> {
+        (0..self.blob_count()).map(|i| BlobBytes::from_mut(self.blob_mut(i))).collect()
     }
 }
 
@@ -213,6 +274,195 @@ impl<const SIZE: usize, const BLOBS: usize> BlobStorage for ArrayStorage<SIZE, B
     fn blob_mut(&mut self, i: usize) -> &mut [u8] {
         &mut self.blobs[i]
     }
+    fn spans(&mut self) -> Vec<BlobBytes> {
+        // All blobs live inline in this one allocation: derive every
+        // span from a single exclusive reborrow (`iter_mut` splits it
+        // into disjoint `&mut`s), so no span invalidates another.
+        self.blobs.iter_mut().map(|b| BlobBytes::from_mut(b)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Raw blob spans and the shard-worker storage (the Miri-clean parallel path)
+// ---------------------------------------------------------------------------
+
+/// A raw span over one blob's bytes: pointer + length, no borrow.
+///
+/// This is the `SyncUnsafeCell`-style escape hatch of the storage layer:
+/// a span is extracted from a live `&mut [u8]` (capturing its provenance)
+/// and can then be shared freely across threads — it is `Send + Sync`
+/// because *holding* a span asserts nothing; only [`bytes`](BlobBytes::bytes)
+/// / [`bytes_mut`](BlobBytes::bytes_mut) touch memory, and those are
+/// `unsafe` with a disjointness contract. Every materialized reference
+/// covers exactly the requested byte window, so two threads using spans
+/// of the same blob on disjoint windows never create overlapping
+/// references — the invariant the sharded engine is built on.
+#[derive(Clone, Copy, Debug)]
+pub struct BlobBytes {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: a span is an address, not an access; all accesses go through the
+// unsafe window methods whose contract covers cross-thread disjointness.
+unsafe impl Send for BlobBytes {}
+unsafe impl Sync for BlobBytes {}
+
+impl BlobBytes {
+    /// Capture a span over `slice` (provenance of the full buffer).
+    ///
+    /// The span does not borrow: it stays *valid* only for as long as the
+    /// underlying buffer lives and is not accessed through any path that
+    /// would invalidate `slice`'s provenance. The sharded engine ties
+    /// that lifetime down with a `PhantomData<&mut View>` borrow.
+    pub fn from_mut(slice: &mut [u8]) -> Self {
+        BlobBytes { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    /// Length of the spanned buffer in bytes.
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the spanned buffer is empty.
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Shared view of exactly `len` bytes at `off` (bounds-checked).
+    ///
+    /// # Safety
+    ///
+    /// The underlying buffer must still be live (see
+    /// [`from_mut`](BlobBytes::from_mut)), and for the returned
+    /// reference's lifetime no other thread may *write* any byte of the
+    /// window through another span of the same buffer.
+    #[inline(always)]
+    pub unsafe fn bytes(&self, off: usize, len: usize) -> &[u8] {
+        // Overflow-proof form: `off + len` could wrap in release builds
+        // and let a corrupt window through the check.
+        assert!(len <= self.len && off <= self.len - len, "blob window out of bounds");
+        // SAFETY: in bounds (just checked); validity and non-aliasing are
+        // the caller's contract above.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off), len) }
+    }
+
+    /// Mutable view of exactly `len` bytes at `off` (bounds-checked).
+    ///
+    /// # Safety
+    ///
+    /// As [`bytes`](BlobBytes::bytes), and additionally no other thread
+    /// may *read or write* any byte of the window through another span
+    /// for the returned reference's lifetime.
+    #[inline(always)]
+    #[allow(clippy::mut_from_ref)] // the whole point: interior mutability
+    pub unsafe fn bytes_mut(&self, off: usize, len: usize) -> &mut [u8] {
+        // Overflow-proof form; see `bytes`.
+        assert!(len <= self.len && off <= self.len - len, "blob window out of bounds");
+        // SAFETY: in bounds (just checked); validity and exclusivity of
+        // the window are the caller's contract above.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(off), len) }
+    }
+}
+
+/// Extract one [`BlobBytes`] span per blob of `storage`
+/// ([`BlobStorage::spans`]).
+///
+/// Takes `&mut` — the exclusive borrow is the proof that no reference to
+/// the blob bytes is live when the spans are captured. Callers (the shard
+/// engine, the parallel copy) must keep that exclusivity for as long as
+/// the spans are used, e.g. by holding the `&mut` borrow in a
+/// `PhantomData` for the span consumers' lifetime.
+pub fn blob_spans<S: BlobStorage>(storage: &mut S) -> Vec<BlobBytes> {
+    storage.spans()
+}
+
+/// Per-worker blob storage of the sharded parallel engine: one
+/// [`BlobBytes`] span per blob of a shared view.
+///
+/// Implements [`BlobStorage`] with **byte-exact** windows: `bytes` /
+/// `bytes_mut` materialize references over only the requested range, so
+/// several workers holding `ShardBlobs` over the *same* blobs can access
+/// disjoint byte ranges concurrently without ever creating overlapping
+/// references (the property Miri's aliasing models check). The
+/// whole-blob methods `blob` / `blob_mut` panic: a whole-blob reference
+/// would overlap every other worker's windows by construction.
+///
+/// Constructed only by the parallel engine ([`crate::shard`]) and the
+/// parallel copy ([`crate::copy`]); user kernels meet it as the storage
+/// type of the record/chunk cursors inside `par_for_each` /
+/// `par_transform_simd` closures.
+#[derive(Clone, Debug)]
+pub struct ShardBlobs {
+    blobs: Vec<BlobBytes>,
+}
+
+impl ShardBlobs {
+    /// Assemble a worker-side storage from blob spans.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee, for the lifetime of the returned value:
+    ///
+    /// 1. every span's underlying buffer stays live and is not accessed
+    ///    through any other path than [`BlobBytes`] spans of the same
+    ///    extraction (typically enforced by holding the `&mut View`
+    ///    borrow the spans came from), and
+    /// 2. byte ranges accessed through this storage are never accessed
+    ///    concurrently through another handle to the same buffers,
+    ///    except for concurrent *reads* of bytes nobody writes.
+    ///
+    /// The sharded traversal discharges (2) via the
+    /// [`Mapping::shard_bounds`](crate::mapping::Mapping::shard_bounds)
+    /// disjointness proof for everything a worker's own cursor touches;
+    /// for whole-view chunk accessors that can reach other shards, the
+    /// obligation is forwarded to `par_transform_simd`'s `unsafe`
+    /// contract.
+    pub unsafe fn new(blobs: Vec<BlobBytes>) -> Self {
+        ShardBlobs { blobs }
+    }
+}
+
+impl BlobStorage for ShardBlobs {
+    #[inline]
+    fn blob_count(&self) -> usize {
+        self.blobs.len()
+    }
+
+    fn blob(&self, _i: usize) -> &[u8] {
+        panic!("whole-blob access through ShardBlobs; use bytes(i, off, len)")
+    }
+
+    fn blob_mut(&mut self, _i: usize) -> &mut [u8] {
+        panic!("whole-blob access through ShardBlobs; use bytes_mut(i, off, len)")
+    }
+
+    #[inline(always)]
+    fn blob_len(&self, i: usize) -> usize {
+        self.blobs[i].len()
+    }
+
+    #[inline(always)]
+    fn bytes(&self, i: usize, off: usize, len: usize) -> &[u8] {
+        // SAFETY: buffer liveness and window disjointness are the
+        // `ShardBlobs::new` contract, discharged by the parallel engine.
+        unsafe { self.blobs[i].bytes(off, len) }
+    }
+
+    #[inline(always)]
+    fn bytes_mut(&mut self, i: usize, off: usize, len: usize) -> &mut [u8] {
+        // SAFETY: as in `bytes`.
+        unsafe { self.blobs[i].bytes_mut(off, len) }
+    }
+
+    fn spans(&mut self) -> Vec<BlobBytes> {
+        // Spans are addresses: re-sharing them is exactly what this
+        // handle exists for (the default would call the panicking
+        // `blob_mut`).
+        self.blobs.clone()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -308,5 +558,61 @@ mod tests {
         let s = AlignedAlloc::<64>.alloc(&[0, 4]);
         assert_eq!(s.blob(0).len(), 0);
         assert_eq!(s.blob(1).len(), 4);
+    }
+
+    #[test]
+    fn byte_exact_windows_default_to_subslices() {
+        let mut s = HeapAlloc.alloc(&[16]);
+        s.bytes_mut(0, 4, 2).copy_from_slice(&[0xab, 0xcd]);
+        assert_eq!(s.bytes(0, 4, 2), &[0xab, 0xcd]);
+        assert_eq!(s.blob(0)[4], 0xab);
+        assert_eq!(s.blob_len(0), 16);
+    }
+
+    #[test]
+    fn shard_blobs_window_access_roundtrips() {
+        let mut s = HeapAlloc.alloc(&[8, 4]);
+        // SAFETY: single handle, source borrow held for the whole test.
+        let mut sh = unsafe { ShardBlobs::new(blob_spans(&mut s)) };
+        assert_eq!(sh.blob_count(), 2);
+        assert_eq!(sh.blob_len(0), 8);
+        assert_eq!(sh.blob_len(1), 4);
+        sh.bytes_mut(1, 1, 2).copy_from_slice(&[7, 9]);
+        assert_eq!(sh.bytes(1, 0, 4), &[0, 7, 9, 0]);
+        assert_eq!(sh.total_bytes(), 12);
+        drop(sh);
+        assert_eq!(s.blob(1), &[0, 7, 9, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "blob window out of bounds")]
+    fn shard_blobs_windows_are_bounds_checked() {
+        let mut s = HeapAlloc.alloc(&[8]);
+        let sh = unsafe { ShardBlobs::new(blob_spans(&mut s)) };
+        let _ = sh.bytes(0, 5, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole-blob access through ShardBlobs")]
+    fn shard_blobs_refuses_whole_blob_references() {
+        let mut s = HeapAlloc.alloc(&[8]);
+        let sh = unsafe { ShardBlobs::new(blob_spans(&mut s)) };
+        let _ = sh.blob(0);
+    }
+
+    #[test]
+    fn disjoint_windows_of_one_blob_from_two_handles() {
+        // The invariant the sharded engine relies on, in miniature: two
+        // handles over the same blob, touching disjoint halves.
+        let mut s = HeapAlloc.alloc(&[8]);
+        let spans = blob_spans(&mut s);
+        // SAFETY: the two handles below only ever access disjoint byte
+        // ranges ([0,4) vs [4,8)), and `s` stays mutably borrowed.
+        let mut a = unsafe { ShardBlobs::new(spans.clone()) };
+        let mut b = unsafe { ShardBlobs::new(spans) };
+        a.bytes_mut(0, 0, 4).copy_from_slice(&[1, 2, 3, 4]);
+        b.bytes_mut(0, 4, 4).copy_from_slice(&[5, 6, 7, 8]);
+        drop((a, b));
+        assert_eq!(s.blob(0), &[1, 2, 3, 4, 5, 6, 7, 8]);
     }
 }

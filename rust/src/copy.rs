@@ -14,20 +14,39 @@
 //! 3. **Field-wise fallback** — per (record, field) scalar load/store
 //!    through both mappings; works for any mapping pair including
 //!    computed ones (and converts precision when types differ, via f64).
+//!
+//! [`copy_view_par`] adds the **parallel run copy**: the linear record
+//! space is partitioned at boundaries the *destination* mapping proves
+//! byte-disjoint ([`crate::mapping::Mapping::shard_bounds`] — the same
+//! proof the sharded traversal uses), and each worker memcpys its ranges'
+//! field runs through a raw [`crate::blob::ShardBlobs`] handle. Source
+//! reads are plain shared reads (nobody writes the source), destination
+//! writes are byte-disjoint across workers, and every materialized
+//! reference covers exactly one run — the copy engine is checker-clean
+//! like the traversal engine (see `docs/PARALLELISM.md`). Workers run the
+//! *same* run walker as the serial strategy 2, so the written bytes are
+//! identical by construction (property-tested in
+//! `tests/properties.rs::prop_par_run_copy_bit_identical_to_field_wise`).
 
-use crate::blob::BlobStorage;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::blob::{blob_spans, BlobStorage, ShardBlobs};
 use crate::extents::Extents;
-use crate::mapping::MemoryAccess;
+use crate::mapping::{Mapping, MemoryAccess};
 use crate::record::RecordDim;
 use crate::view::{load_as_f64, store_from_f64, View};
 
-/// Which strategy [`copy_view`] used (exposed for tests/benches).
+/// Which strategy [`copy_view`] / [`copy_view_par`] used (exposed for
+/// tests/benches).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CopyStrategy {
     /// Whole-blob memcpy.
     BlobMemcpy,
     /// Per-field memcpy of contiguous runs (bulk-traversal engine).
     FieldRuns,
+    /// Per-field memcpy runs fanned over worker threads at
+    /// `shard_bounds`-proven boundaries ([`copy_view_par`] only).
+    FieldRunsPar,
     /// Per-field scalar loop.
     FieldWise,
 }
@@ -54,13 +73,7 @@ where
     if src.mapping().fingerprint() == dst.mapping().fingerprint()
         && MS::BLOB_COUNT == MD::BLOB_COUNT
     {
-        let blob_sizes: Vec<usize> =
-            (0..MS::BLOB_COUNT).map(|b| src.mapping().blob_size(b)).collect();
-        for (b, size) in blob_sizes.into_iter().enumerate() {
-            let s = src.storage().blob(b);
-            let d = dst.storage_mut().blob_mut(b);
-            d[..size].copy_from_slice(&s[..size]);
-        }
+        blob_memcpy(src, dst);
         return CopyStrategy::BlobMemcpy;
     }
 
@@ -72,6 +85,192 @@ where
     // Strategy 3: generic field-wise copy over the index space.
     field_wise_copy(src, dst);
     CopyStrategy::FieldWise
+}
+
+/// [`copy_view`] with the run strategy fanned out over up to `threads`
+/// scoped worker threads (the ROADMAP's run-based parallel copy).
+///
+/// The record space is partitioned at boundaries the destination
+/// mapping's [`shard_bounds`](crate::mapping::Mapping::shard_bounds)
+/// proves byte-disjoint; each worker then copies its ranges' field runs —
+/// the [`contiguous_run`](crate::mapping::Mapping::contiguous_run) ×
+/// `shard_bounds` intersection gives per-thread disjoint byte ranges for
+/// free. Falls back to the serial strategies when the partition or the
+/// runs are unavailable (`threads < 2`, tiny views, mappings that refuse
+/// `shard_bounds` like [`crate::mapping::one::One`], or mappings without
+/// byte-contiguity like the bit-packed ones). Written bytes are identical
+/// to [`copy_view`]'s for every strategy.
+pub fn copy_view_par<R, MS, SS, MD, SD>(
+    src: &View<R, MS, SS>,
+    dst: &mut View<R, MD, SD>,
+    threads: usize,
+) -> CopyStrategy
+where
+    R: RecordDim,
+    MS: MemoryAccess<R>,
+    SS: BlobStorage + Sync,
+    MD: MemoryAccess<R>,
+    SD: BlobStorage + Send + Sync,
+{
+    let n = src.count();
+    assert_eq!(n, dst.count(), "copy_view_par: extents differ");
+
+    if src.mapping().fingerprint() == dst.mapping().fingerprint()
+        && MS::BLOB_COUNT == MD::BLOB_COUNT
+    {
+        blob_memcpy(src, dst);
+        return CopyStrategy::BlobMemcpy;
+    }
+
+    let dm = dst.mapping().clone();
+    // Probe run availability up front (both sides, every field) so the
+    // common no-runs case skips straight to the serial fallback without
+    // spawning workers. Mid-stream gaps are still caught below.
+    let runs_available = n > 0
+        && (0..R::FIELDS.len()).all(|f| {
+            src.mapping().contiguous_run(0, f).is_some() && dm.contiguous_run(0, f).is_some()
+        });
+    if runs_available {
+        if let Some(bounds) = run_copy_bounds::<R, MD>(&dm, n, threads) {
+            let gap = AtomicBool::new(false);
+            let spans = blob_spans(dst.storage_mut());
+            std::thread::scope(|scope| {
+                for w in 0..bounds.len() - 1 {
+                    let (r0, r1) = (bounds[w], bounds[w + 1]);
+                    let (gap, dm, spans) = (&gap, &dm, &spans);
+                    scope.spawn(move || {
+                        // SAFETY (`ShardBlobs::new`): (1) the spans'
+                        // buffers outlive the scope — `dst` stays mutably
+                        // borrowed and untouched until it ends; (2) this
+                        // worker writes only the field runs of records
+                        // [r0, r1), byte-disjoint from every other
+                        // worker's ranges by the `shard_bounds`-validated
+                        // partition, and nothing reads dst concurrently.
+                        let mut out = unsafe { ShardBlobs::new(spans.to_vec()) };
+                        if !run_copy_range(src, dm, &mut out, r0, r1) {
+                            gap.store(true, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+            if !gap.load(Ordering::Relaxed) {
+                return CopyStrategy::FieldRunsPar;
+            }
+            // A mapping reported a mid-stream run gap: the field-wise
+            // rewrite below overwrites every (record, field), so the
+            // partially-written runs are harmless.
+            field_wise_copy(src, dst);
+            return CopyStrategy::FieldWise;
+        }
+    }
+
+    // No runs or no usable partition: serial strategies 2/3.
+    if try_run_copy(src, dst) {
+        return CopyStrategy::FieldRuns;
+    }
+    field_wise_copy(src, dst);
+    CopyStrategy::FieldWise
+}
+
+/// Strategy 1: bytewise-identical layouts, copy whole blobs.
+fn blob_memcpy<R, MS, SS, MD, SD>(src: &View<R, MS, SS>, dst: &mut View<R, MD, SD>)
+where
+    R: RecordDim,
+    MS: MemoryAccess<R>,
+    SS: BlobStorage,
+    MD: MemoryAccess<R>,
+    SD: BlobStorage,
+{
+    let blob_sizes: Vec<usize> = (0..MS::BLOB_COUNT).map(|b| src.mapping().blob_size(b)).collect();
+    for (b, size) in blob_sizes.into_iter().enumerate() {
+        dst.storage_mut().bytes_mut(b, 0, size).copy_from_slice(src.storage().bytes(b, 0, size));
+    }
+}
+
+/// Partition `[0, n)` into up to `threads` ranges whose boundaries the
+/// destination mapping proves byte-disjoint, for the parallel run copy.
+/// `None` when fewer than two non-empty ranges survive the rounding.
+///
+/// The validate-and-round fixpoint mirrors the traversal splitter's
+/// (`shard::ViewShards::split_aligned`), but in plain linear-record
+/// units — the splitter additionally rounds in aligned outer-row units.
+/// A change to either loop's rounding semantics should be mirrored in
+/// the other.
+fn run_copy_bounds<R, M>(m: &M, n: usize, threads: usize) -> Option<Vec<usize>>
+where
+    R: RecordDim,
+    M: Mapping<R>,
+{
+    let want = threads.min(n);
+    if want < 2 {
+        return None;
+    }
+    let mut bounds = Vec::with_capacity(want + 1);
+    bounds.push(0usize);
+    for k in 1..want {
+        let mut b = (n as u128 * k as u128 / want as u128) as usize;
+        let b = loop {
+            if b == 0 {
+                break 0;
+            }
+            // SAFETY: `shard_bounds` has no caller preconditions; its
+            // `unsafe` marks the implementor's obligation, consumed here
+            // as the write-disjointness proof of the parallel copy.
+            let safe = unsafe { m.shard_bounds(b) }?;
+            if safe == b {
+                break b;
+            }
+            b = safe;
+        };
+        if b > *bounds.last().unwrap() {
+            bounds.push(b);
+        }
+    }
+    bounds.push(n);
+    if bounds.len() < 3 {
+        None
+    } else {
+        Some(bounds)
+    }
+}
+
+/// Copy the byte runs of records `[r0, r1)` for every field from `src`
+/// into `out` (the destination's storage, or a worker's [`ShardBlobs`]
+/// handle over it — the shared walker of the serial and parallel run
+/// strategies, so both write identical bytes by construction). Returns
+/// `false` — leaving `out` partially written; callers must then run the
+/// field-wise fallback — as soon as either side reports a gap.
+fn run_copy_range<R, MS, SS, MD, SO>(
+    src: &View<R, MS, SS>,
+    dst_mapping: &MD,
+    out: &mut SO,
+    r0: usize,
+    r1: usize,
+) -> bool
+where
+    R: RecordDim,
+    MS: MemoryAccess<R>,
+    SS: BlobStorage,
+    MD: MemoryAccess<R>,
+    SO: BlobStorage,
+{
+    for (f, field) in R::FIELDS.iter().enumerate() {
+        let size = field.size();
+        let mut lin = r0;
+        while lin < r1 {
+            let (Some(s), Some(d)) =
+                (src.mapping().contiguous_run(lin, f), dst_mapping.contiguous_run(lin, f))
+            else {
+                return false;
+            };
+            let len = s.len.min(d.len).min(r1 - lin);
+            let bytes = len * size;
+            out.bytes_mut(d.blob, d.offset, bytes)
+                .copy_from_slice(src.storage().bytes(s.blob, s.offset, bytes));
+            lin += len;
+        }
+    }
+    true
 }
 
 /// Copy every field as byte runs where both mappings report contiguity
@@ -87,25 +286,8 @@ where
     SD: BlobStorage,
 {
     let n = src.count();
-    for (f, field) in R::FIELDS.iter().enumerate() {
-        let size = field.size();
-        let mut lin = 0;
-        while lin < n {
-            let (Some(s), Some(d)) =
-                (src.mapping().contiguous_run(lin, f), dst.mapping().contiguous_run(lin, f))
-            else {
-                return false;
-            };
-            let len = s.len.min(d.len).min(n - lin);
-            let bytes = len * size;
-            let src_blob = src.storage().blob(s.blob);
-            let dst_blob = dst.storage_mut().blob_mut(d.blob);
-            dst_blob[d.offset..d.offset + bytes]
-                .copy_from_slice(&src_blob[s.offset..s.offset + bytes]);
-            lin += len;
-        }
-    }
-    true
+    let dm = dst.mapping().clone();
+    run_copy_range(src, &dm, dst.storage_mut(), 0, n)
 }
 
 /// Per-(record, field) copy through both mappings.
@@ -212,6 +394,43 @@ mod tests {
         assert_eq!(copy_view(&b, &mut c), CopyStrategy::FieldRuns);
         assert_eq!(copy_view(&c, &mut d), CopyStrategy::FieldRuns);
         check(&d, 33);
+    }
+
+    #[test]
+    fn parallel_run_copy_matches_serial_and_reports_strategy() {
+        let n = 41usize; // deliberately ragged for AoSoA blocks + threads
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        fill(&mut src, n);
+        let mut serial = alloc_view(AoSoA::<P, _, 8>::new((Dyn(n as u32),)), &HeapAlloc);
+        assert_eq!(copy_view(&src, &mut serial), CopyStrategy::FieldRuns);
+        let mut par = alloc_view(AoSoA::<P, _, 8>::new((Dyn(n as u32),)), &HeapAlloc);
+        assert_eq!(copy_view_par(&src, &mut par, 4), CopyStrategy::FieldRunsPar);
+        check(&par, n);
+        // Bytes, not just values: the parallel walker is the serial one.
+        assert_eq!(serial.storage().blob(0), par.storage().blob(0));
+    }
+
+    #[test]
+    fn parallel_copy_falls_back_without_partition_or_runs() {
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(24u32),)), &HeapAlloc);
+        fill(&mut src, 24);
+        // threads < 2: serial run strategy.
+        let mut b = alloc_view(AoSoA::<P, _, 8>::new((Dyn(24u32),)), &HeapAlloc);
+        assert_eq!(copy_view_par(&src, &mut b, 1), CopyStrategy::FieldRuns);
+        check(&b, 24);
+        // Destination without byte-contiguity (AoS): field-wise.
+        let mut c = alloc_view(AoS::<P, _>::new((Dyn(24u32),)), &HeapAlloc);
+        assert_eq!(copy_view_par(&src, &mut c, 4), CopyStrategy::FieldWise);
+        check(&c, 24);
+        // Identical layout keeps the memcpy fast path.
+        let mut d = alloc_view(SoA::<P, _>::new((Dyn(24u32),)), &HeapAlloc);
+        assert_eq!(copy_view_par(&src, &mut d, 4), CopyStrategy::BlobMemcpy);
+        check(&d, 24);
+        // Unshardable destination (One): every index aliases one record —
+        // no partition, no runs, field-wise fallback.
+        let mut e = alloc_view(crate::mapping::one::One::<P, _>::new((Dyn(24u32),)), &HeapAlloc);
+        assert_eq!(copy_view_par(&src, &mut e, 4), CopyStrategy::FieldWise);
+        assert_eq!(e.get::<f32, _>(&[0], p::m), 46.0); // last record wins
     }
 
     #[test]

@@ -110,12 +110,25 @@
 //! - §5 explicit SIMD → [`simd`], and the layout-aware bulk-traversal
 //!   engine → [`view::View::for_each`], [`view::View::transform_simd`],
 //!   [`mapping::Mapping::contiguous_run`] (which also powers the
-//!   run-based [`copy`] strategy), with the multithreaded sharded layer
-//!   → [`shard`] ([`mapping::Mapping::shard_bounds`],
-//!   `View::par_for_each`, `View::par_transform_simd`)
+//!   run-based [`copy`] strategy, serial and parallel), with the
+//!   multithreaded sharded layer → [`shard`]
+//!   ([`mapping::Mapping::shard_bounds`], `View::par_for_each`,
+//!   `View::par_transform_simd`) built on the interior-mutable
+//!   byte-exact storage path → [`blob::BlobBytes`], [`blob::ShardBlobs`]
 //! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
 //! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
 //!   (PJRT behind the `pjrt` cargo feature)
+//!
+//! # Reference documentation
+//!
+//! - `docs/MAPPINGS.md` — the mapping reference manual: layout diagram,
+//!   blob inventory, `contiguous_run` / `shard_bounds` / SIMD support
+//!   matrix, and selection guidance for all 13 mappings.
+//! - `docs/PARALLELISM.md` — the parallel storage soundness model (how
+//!   shard workers share one view's blobs without overlapping `&mut`,
+//!   checked under Miri in CI), the `par_for_each` /
+//!   `par_transform_simd` / `copy_view_par` safety contracts, and the
+//!   `LLAMA_THREADS` policy.
 
 pub mod bench;
 pub mod blob;
@@ -135,7 +148,8 @@ pub mod view;
 /// Convenience re-exports covering the common 90% of the API.
 pub mod prelude {
     pub use crate::blob::{
-        alloc_view, AlignedAlloc, ArrayStorage, BlobAlloc, BlobStorage, HeapAlloc,
+        alloc_view, AlignedAlloc, ArrayStorage, BlobAlloc, BlobBytes, BlobStorage, HeapAlloc,
+        ShardBlobs,
     };
     pub use crate::extents::{
         ArrayIndex, ColMajor, Dyn, Extent, Extents, Fix, Linearizer, Morton, RankIndex, RowMajor,

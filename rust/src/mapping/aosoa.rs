@@ -161,8 +161,9 @@ impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u6
             let lin = L::linearize(&self.extents, idx);
             // Contiguous only when the N lanes stay inside one block.
             if lin % LANES + N <= LANES {
+                // Byte-exact window: sound on the shard-worker storage.
                 let (b, off) = self.blob_nr_and_offset(idx, field);
-                return Simd::from_le_bytes(&storage.blob(b)[off..off + N * T::SIZE]);
+                return Simd::from_le_bytes(storage.bytes(b, off, N * T::SIZE));
             }
         }
         default_load_simd(self, storage, idx, field)
@@ -180,7 +181,7 @@ impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u6
             let lin = L::linearize(&self.extents, idx);
             if lin % LANES + N <= LANES {
                 let (b, off) = self.blob_nr_and_offset(idx, field);
-                v.write_le_bytes(&mut storage.blob_mut(b)[off..off + N * T::SIZE]);
+                v.write_le_bytes(storage.bytes_mut(b, off, N * T::SIZE));
                 return;
             }
         }

@@ -21,7 +21,7 @@ use std::marker::PhantomData;
 
 use crate::blob::BlobStorage;
 use crate::extents::{Extents, Linearizer, RowMajor};
-use crate::mapping::bitpack_int::{packed_blob_size, read_bits, write_bits};
+use crate::mapping::bitpack_int::{bit_window, packed_blob_size, read_bits, write_bits};
 use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
 use crate::record::{RecordDim, Scalar};
 
@@ -234,7 +234,8 @@ impl<R: RecordDim, E: Extents, const EXP: u32, const MAN: u32, L: Linearizer> Me
     fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
         let lin = L::linearize(&self.extents, idx);
         let bits = Self::VALUE_BITS;
-        let raw = read_bits(storage.blob(field), lin * bits as usize, bits);
+        let (byte, shift, win) = bit_window(storage.blob_len(field), lin * bits as usize, bits);
+        let raw = read_bits(storage.bytes(field, byte, win), shift, bits);
         T::from_f64(unpack_float_bits(raw, EXP, MAN))
     }
 
@@ -243,7 +244,8 @@ impl<R: RecordDim, E: Extents, const EXP: u32, const MAN: u32, L: Linearizer> Me
         let lin = L::linearize(&self.extents, idx);
         let bits = Self::VALUE_BITS;
         let raw = pack_float_bits(v.as_f64(), EXP, MAN);
-        write_bits(storage.blob_mut(field), lin * bits as usize, bits, raw);
+        let (byte, shift, win) = bit_window(storage.blob_len(field), lin * bits as usize, bits);
+        write_bits(storage.bytes_mut(field, byte, win), shift, bits, raw);
     }
 }
 

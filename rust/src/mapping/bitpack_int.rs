@@ -85,6 +85,25 @@ pub fn write_bits(blob: &mut [u8], bit: usize, nbits: u32, value: u64) {
     }
 }
 
+/// Byte window of the value stored at absolute bit offset `bit` (`nbits`
+/// wide) within a blob of `len` bytes: `(first_byte, bit_in_window,
+/// window_len)`. The window covers exactly the bytes containing the
+/// value's bits (at most 9), clamped to the blob end.
+///
+/// This is the byte-exact currency the storage layer wants
+/// ([`crate::blob::BlobStorage::bytes`]): passing the window (instead of
+/// the whole blob) to [`read_bits`]/[`write_bits`] keeps every bit-packed
+/// access inside its own byte range, which is what makes byte-aligned
+/// shard boundaries ([`byte_aligned_shard_bound`]) a genuine disjointness
+/// proof on the shard-worker storage.
+#[inline(always)]
+pub fn bit_window(len: usize, bit: usize, nbits: u32) -> (usize, usize, usize) {
+    let byte = bit / 8;
+    let shift = bit % 8;
+    let covered = (shift + nbits as usize).div_ceil(8);
+    (byte, shift, covered.min(len - byte))
+}
+
 /// Sign-extend the low `nbits` of `v` to i128.
 #[inline(always)]
 pub fn sign_extend(v: u64, nbits: u32) -> i128 {
@@ -212,7 +231,8 @@ impl<R: RecordDim, E: Extents, const BITS: u32, L: Linearizer> MemoryAccess<R>
     #[inline(always)]
     fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
         let lin = L::linearize(&self.extents, idx);
-        let raw = read_bits(storage.blob(field), lin * BITS as usize, BITS);
+        let (byte, shift, win) = bit_window(storage.blob_len(field), lin * BITS as usize, BITS);
+        let raw = read_bits(storage.bytes(field, byte, win), shift, BITS);
         if T::TYPE.is_signed_integral() {
             T::from_i128(sign_extend(raw, BITS))
         } else {
@@ -225,7 +245,8 @@ impl<R: RecordDim, E: Extents, const BITS: u32, L: Linearizer> MemoryAccess<R>
         let lin = L::linearize(&self.extents, idx);
         // Two's-complement truncation to BITS bits.
         let raw = v.as_i128() as u64;
-        write_bits(storage.blob_mut(field), lin * BITS as usize, BITS, raw);
+        let (byte, shift, win) = bit_window(storage.blob_len(field), lin * BITS as usize, BITS);
+        write_bits(storage.bytes_mut(field, byte, win), shift, BITS, raw);
     }
 }
 
@@ -295,7 +316,9 @@ impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for BitpackIntSoAD
     #[inline(always)]
     fn load<T: Scalar, S: BlobStorage>(&self, storage: &S, idx: &[usize], field: usize) -> T {
         let lin = L::linearize(&self.extents, idx);
-        let raw = read_bits(storage.blob(field), lin * self.bits as usize, self.bits);
+        let (byte, shift, win) =
+            bit_window(storage.blob_len(field), lin * self.bits as usize, self.bits);
+        let raw = read_bits(storage.bytes(field, byte, win), shift, self.bits);
         if T::TYPE.is_signed_integral() {
             T::from_i128(sign_extend(raw, self.bits))
         } else {
@@ -307,7 +330,9 @@ impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for BitpackIntSoAD
     fn store<T: Scalar, S: BlobStorage>(&self, storage: &mut S, idx: &[usize], field: usize, v: T) {
         let lin = L::linearize(&self.extents, idx);
         let raw = v.as_i128() as u64;
-        write_bits(storage.blob_mut(field), lin * self.bits as usize, self.bits, raw);
+        let (byte, shift, win) =
+            bit_window(storage.blob_len(field), lin * self.bits as usize, self.bits);
+        write_bits(storage.bytes_mut(field, byte, win), shift, self.bits, raw);
     }
 }
 
@@ -341,6 +366,31 @@ mod tests {
         // neighbours preserved
         write_bits(&mut buf, 0, 8, 0xAA);
         assert_eq!(read_bits(&buf, 0, 8), 0xAA);
+    }
+
+    #[test]
+    fn bit_window_covers_exactly_the_value_bytes() {
+        // Aligned 8-bit value: one byte.
+        assert_eq!(bit_window(64, 16, 8), (2, 0, 1));
+        // 13 bits starting mid-byte: bits 13..26 → bytes 1..=3.
+        assert_eq!(bit_window(64, 13, 13), (1, 5, 3));
+        // Worst case: shift 7 + 64 bits spills into a ninth byte.
+        assert_eq!(bit_window(64, 7, 64), (0, 7, 9));
+        // Window clamps to the blob end (the +8 slack absorbs this in
+        // real blobs; the clamp mirrors read_bits' old `avail` logic).
+        assert_eq!(bit_window(4, 16, 64), (2, 0, 2));
+        // Windowed read/write agree with whole-blob read/write.
+        let mut a = vec![0u8; 32];
+        let mut b = vec![0u8; 32];
+        for (i, &(bit, nbits, val)) in
+            [(3usize, 13u32, 0x1abcu64), (60, 17, 0x1ffff), (100, 7, 0x55)].iter().enumerate()
+        {
+            write_bits(&mut a, bit, nbits, val);
+            let (byte, shift, win) = bit_window(b.len(), bit, nbits);
+            write_bits(&mut b[byte..byte + win], shift, nbits, val);
+            assert_eq!(a, b, "case {i}");
+            assert_eq!(read_bits(&b[byte..byte + win], shift, nbits), val, "case {i}");
+        }
     }
 
     #[test]

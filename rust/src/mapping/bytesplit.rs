@@ -85,10 +85,13 @@ impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for Bytesplit<R, E
         debug_assert!(R::FIELDS[field].ty.same(T::TYPE));
         let lin = L::linearize(&self.extents, idx);
         let n = self.extents.count();
-        let blob = storage.blob(field);
         let mut bytes = [0u8; 16];
-        for b in 0..T::SIZE {
-            bytes[b] = blob[b * n + lin];
+        // Byte-exact: the planes are `n` bytes apart, so each of the
+        // value's bytes is its own one-byte window (sound on the
+        // shard-worker storage — record `lin` owns offset `b*n + lin` of
+        // every plane exclusively).
+        for (b, byte) in bytes[..T::SIZE].iter_mut().enumerate() {
+            *byte = storage.bytes(field, b * n + lin, 1)[0];
         }
         T::read_le(&bytes[..T::SIZE])
     }
@@ -98,11 +101,10 @@ impl<R: RecordDim, E: Extents, L: Linearizer> MemoryAccess<R> for Bytesplit<R, E
         debug_assert!(R::FIELDS[field].ty.same(T::TYPE));
         let lin = L::linearize(&self.extents, idx);
         let n = self.extents.count();
-        let blob = storage.blob_mut(field);
         let mut bytes = [0u8; 16];
         v.write_le(&mut bytes[..T::SIZE]);
-        for b in 0..T::SIZE {
-            blob[b * n + lin] = bytes[b];
+        for (b, &byte) in bytes[..T::SIZE].iter().enumerate() {
+            storage.bytes_mut(field, b * n + lin, 1)[0] = byte;
         }
     }
 }

@@ -138,16 +138,18 @@ pub trait Mapping<R: RecordDim>: Clone + Send + Sync {
     /// cannot prove any split safe.
     ///
     /// This is the safety proof carried by the parallel sharded traversal
-    /// ([`crate::shard::ViewShards`]), analogous to how [`contiguous_run`]
-    /// carries the vectorization proof: `Some(b)` asserts that every
-    /// storage byte written through records with traversal position `< b`
-    /// is disjoint from every byte *touched* through records `>= b` (and
-    /// vice versa), and that any side-effect state shared across the split
-    /// (instrumentation counters) is thread-safe. `lin` is always an
-    /// outermost-dimension row boundary times the inner-row record count;
-    /// the splitter re-validates after rounding, so implementations may
-    /// return any safe `b <= lin` (with `shard_bounds(0) == Some(0)` for
-    /// every shardable mapping).
+    /// ([`crate::shard::ViewShards`]) and the run-based parallel copy
+    /// ([`crate::copy::copy_view_par`]), analogous to how
+    /// [`contiguous_run`] carries the vectorization proof: `Some(b)`
+    /// asserts that every storage byte written through records with
+    /// traversal position `< b` is disjoint from every byte *touched*
+    /// through records `>= b` (and vice versa), and that any side-effect
+    /// state shared across the split (instrumentation counters) is
+    /// thread-safe. `lin` may be **any** linear (row-major) record index —
+    /// the traversal splitter passes outermost-dimension row boundaries,
+    /// the parallel copy arbitrary positions; callers re-validate after
+    /// rounding, so implementations may return any safe `b <= lin` (with
+    /// `shard_bounds(0) == Some(0)` for every shardable mapping).
     ///
     /// The conservative default refuses; mappings override with their
     /// proof: per-record byte disjointness lets the physical layouts and
@@ -303,6 +305,11 @@ pub fn store_scalar<T: Scalar>(blob: &mut [u8], off: usize, v: T) {
 }
 
 /// Typed load through a [`PhysicalMapping`].
+///
+/// Byte-exact: materializes a reference over only the scalar's `T::SIZE`
+/// bytes (never the whole blob), so the same monomorphization is sound on
+/// the shard-worker storage ([`crate::blob::ShardBlobs`]) where other
+/// threads concurrently access disjoint windows of the same blob.
 #[inline(always)]
 pub fn physical_load<R, M, T, S>(m: &M, storage: &S, idx: &[usize], field: usize) -> T
 where
@@ -320,10 +327,11 @@ where
         T::TYPE
     );
     let (blob, off) = m.blob_nr_and_offset(idx, field);
-    load_scalar(storage.blob(blob), off)
+    load_scalar(storage.bytes(blob, off, T::SIZE), 0)
 }
 
-/// Typed store through a [`PhysicalMapping`].
+/// Typed store through a [`PhysicalMapping`] (byte-exact; see
+/// [`physical_load`]).
 #[inline(always)]
 pub fn physical_store<R, M, T, S>(m: &M, storage: &mut S, idx: &[usize], field: usize, v: T)
 where
@@ -334,7 +342,7 @@ where
 {
     debug_assert!(R::FIELDS[field].ty.same(T::TYPE));
     let (blob, off) = m.blob_nr_and_offset(idx, field);
-    store_scalar(storage.blob_mut(blob), off, v)
+    store_scalar(storage.bytes_mut(blob, off, T::SIZE), 0, v)
 }
 
 /// Implement [`MemoryAccess`] for a [`PhysicalMapping`] by plain byte access.

@@ -220,9 +220,10 @@ impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> Si
         field: usize,
     ) -> Simd<T, N> {
         if L::LAST_DIM_CONTIGUOUS {
-            // N consecutive records of one field are N consecutive T's.
+            // N consecutive records of one field are N consecutive T's
+            // (byte-exact window: sound on the shard-worker storage).
             let (b, off) = self.blob_nr_and_offset(idx, field);
-            return Simd::from_le_bytes(&storage.blob(b)[off..off + N * T::SIZE]);
+            return Simd::from_le_bytes(storage.bytes(b, off, N * T::SIZE));
         }
         // Fallback: per-lane scalar loads.
         default_load_simd(self, storage, idx, field)
@@ -238,7 +239,7 @@ impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> Si
     ) {
         if L::LAST_DIM_CONTIGUOUS {
             let (b, off) = self.blob_nr_and_offset(idx, field);
-            v.write_le_bytes(&mut storage.blob_mut(b)[off..off + N * T::SIZE]);
+            v.write_le_bytes(storage.bytes_mut(b, off, N * T::SIZE));
             return;
         }
         default_store_simd(self, storage, idx, field, v)

@@ -61,6 +61,11 @@ where
 
 /// Adapter presenting a suffix of a [`BlobStorage`] as its own storage, so
 /// the second inner mapping sees blob indices starting at zero.
+///
+/// Forwards the byte-exact window methods too (not just the whole-blob
+/// pair): in the parallel path the wrapped storage is the shard-worker
+/// [`crate::blob::ShardBlobs`], whose whole-blob methods panic — the
+/// defaults would route `bytes` through `blob`.
 struct OffsetStorage<'s, S>(&'s S, usize);
 
 impl<'s, S: BlobStorage> BlobStorage for OffsetStorage<'s, S> {
@@ -72,6 +77,17 @@ impl<'s, S: BlobStorage> BlobStorage for OffsetStorage<'s, S> {
         self.0.blob(i + self.1)
     }
     fn blob_mut(&mut self, _i: usize) -> &mut [u8] {
+        unreachable!("OffsetStorage is read-only")
+    }
+    #[inline(always)]
+    fn blob_len(&self, i: usize) -> usize {
+        self.0.blob_len(i + self.1)
+    }
+    #[inline(always)]
+    fn bytes(&self, i: usize, off: usize, len: usize) -> &[u8] {
+        self.0.bytes(i + self.1, off, len)
+    }
+    fn bytes_mut(&mut self, _i: usize, _off: usize, _len: usize) -> &mut [u8] {
         unreachable!("OffsetStorage is read-only")
     }
 }
@@ -90,6 +106,18 @@ impl<'s, S: BlobStorage> BlobStorage for OffsetStorageMut<'s, S> {
     #[inline(always)]
     fn blob_mut(&mut self, i: usize) -> &mut [u8] {
         self.0.blob_mut(i + self.1)
+    }
+    #[inline(always)]
+    fn blob_len(&self, i: usize) -> usize {
+        self.0.blob_len(i + self.1)
+    }
+    #[inline(always)]
+    fn bytes(&self, i: usize, off: usize, len: usize) -> &[u8] {
+        self.0.bytes(i + self.1, off, len)
+    }
+    #[inline(always)]
+    fn bytes_mut(&mut self, i: usize, off: usize, len: usize) -> &mut [u8] {
+        self.0.bytes_mut(i + self.1, off, len)
     }
 }
 

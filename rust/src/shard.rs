@@ -40,6 +40,28 @@
 //! ([`crate::extents::ArrayIndex`]), so the parallel path carries no
 //! per-access rank checks either.
 //!
+//! ## Storage soundness — no worker ever holds an aliasing `&mut`
+//!
+//! Each [`ShardCursor`] owns its own worker-side view: the mapping is
+//! cloned (cheap — mappings are extents plus `Arc`-shared
+//! instrumentation counters, so clones keep counting into the same
+//! tallies) and the storage is a [`crate::blob::ShardBlobs`] handle of
+//! raw [`crate::blob::BlobBytes`] spans extracted once, under the
+//! original `&mut View` borrow, at split time. All loads and stores then
+//! materialize references over **exactly the bytes of one access**
+//! (see [`crate::blob::BlobStorage::bytes`]); the `shard_bounds` proof
+//! makes those windows disjoint across workers. No `&mut View`, no
+//! whole-blob `&mut [u8]`, and no other overlapping reference is ever
+//! created by two workers — the engine is expressible under Stacked/Tree
+//! Borrows and is exercised under Miri in CI. The original view stays
+//! mutably borrowed (`PhantomData<&'v mut View>`) until every cursor is
+//! gone, so no third party can touch the blobs mid-flight. The full
+//! model is documented in `docs/PARALLELISM.md`.
+//!
+//! When the mapping refuses to split (or the view is too small), the
+//! parallel entry points traverse serially through a single whole-range
+//! cursor — same walkers, same order, bit-identical results.
+//!
 //! ## Safety split: `par_for_each` is safe, `par_transform_simd` is not
 //!
 //! `par_for_each` hands the kernel a `RecordRefMut` that can only touch
@@ -53,22 +75,10 @@
 //! read or written through another shard's whole-view accessors —
 //! restrict cross-shard access to fields the pass never stores (the
 //! n-body j-loop reads `pos`/`mass` while storing only `vel`).
-//!
-//! ## Aliasing-model caveat
-//!
-//! Internally every worker reconstitutes `&mut View` from one shared
-//! raw pointer. All *actual* loads and stores are byte-disjoint (that is
-//! the `shard_bounds` proof), so no two threads ever touch the same
-//! memory and the generated code contains no overlapping access that
-//! LLVM's `noalias` could act on. Formal aliasing checkers are stricter:
-//! Miri (Stacked/Tree Borrows) flags the overlapping exclusive
-//! reborrows themselves. Making the engine checker-clean needs a
-//! storage-level raw-access path instead of per-thread `&mut View`
-//! (ROADMAP open item).
 
 use std::marker::PhantomData;
 
-use crate::blob::BlobStorage;
+use crate::blob::{blob_spans, BlobBytes, BlobStorage, ShardBlobs};
 use crate::extents::Extents;
 use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
 use crate::record::RecordDim;
@@ -101,11 +111,17 @@ fn parse_thread_count(s: Option<&str>) -> Option<usize> {
 ///
 /// Construction ([`split`](ViewShards::split)) carries the safety proof:
 /// every boundary is validated by the mapping's
-/// [`shard_bounds`](Mapping::shard_bounds) hook. `None` means "traverse
-/// serially" — the mapping refused (e.g. [`crate::mapping::one::One`]),
-/// the view is empty, or fewer than two shards fit.
+/// [`shard_bounds`](Mapping::shard_bounds) hook, and the blob spans the
+/// cursors will access are captured under the exclusive `&mut View`
+/// borrow, which stays alive (`'v`) until the last cursor is dropped.
+/// `None` means "traverse serially" — the mapping refused (e.g.
+/// [`crate::mapping::one::One`]), the view is empty, or fewer than two
+/// shards fit.
 pub struct ViewShards<'v, R, M, S> {
-    view: *mut View<R, M, S>,
+    /// Worker-side mapping template (clones share instrumentation state).
+    mapping: M,
+    /// Raw spans of the view's blobs, shared by all cursors.
+    spans: Vec<BlobBytes>,
     /// Outermost-dimension boundaries: shard `k` spans
     /// `bounds[k]..bounds[k + 1]`; strictly increasing, first 0, last the
     /// outer extent.
@@ -143,11 +159,14 @@ where
         if want <= 1 {
             return None;
         }
+        let mapping = view.mapping().clone();
         let mut bounds = Vec::with_capacity(want + 1);
         bounds.push(0usize);
         for k in 1..want {
             // Even split, rounded to the alignment, then clamped down to
             // the nearest boundary the mapping proves safe (0 always is).
+            // The parallel copy's `copy::run_copy_bounds` mirrors this
+            // fixpoint in linear-record units; keep the two in sync.
             let mut o = (outer as u128 * k as u128 / want as u128) as usize / align * align;
             let b = loop {
                 if o == 0 {
@@ -157,7 +176,7 @@ where
                 // SAFETY: `shard_bounds` has no caller preconditions; its
                 // `unsafe` marks the implementor's obligation, which the
                 // splitter consumes as the disjointness proof.
-                let safe = unsafe { view.mapping().shard_bounds(lin) }?;
+                let safe = unsafe { mapping.shard_bounds(lin) }?;
                 if safe == lin {
                     break o;
                 }
@@ -171,8 +190,10 @@ where
         if bounds.len() < 3 {
             return None;
         }
-        let view: *mut View<R, M, S> = view;
-        Some(ViewShards { view, bounds, _pd: PhantomData })
+        // Capture the raw blob spans last: after this, the view is not
+        // touched again until every cursor (and the `'v` borrow) is gone.
+        let spans = blob_spans(view.storage_mut());
+        Some(ViewShards { mapping, spans, bounds, _pd: PhantomData })
     }
 
     /// Number of shards.
@@ -190,14 +211,27 @@ where
         &self.bounds
     }
 
-    /// Consume the splitter into one cursor per shard. The cursors access
-    /// disjoint bytes and may be moved to different threads.
+    /// Consume the splitter into one cursor per shard. Each cursor owns a
+    /// worker-side view (cloned mapping + raw-span storage) restricted to
+    /// its record range; the cursors access disjoint bytes and may be
+    /// moved to different threads.
     pub fn cursors(self) -> Vec<ShardCursor<'v, R, M, S>> {
-        (0..self.len())
+        let ViewShards { mapping, spans, bounds, .. } = self;
+        (0..bounds.len() - 1)
             .map(|k| ShardCursor {
-                view: self.view,
-                begin: self.bounds[k],
-                end: self.bounds[k + 1],
+                // SAFETY (`ShardBlobs::new`): (1) the spans' buffers stay
+                // live and unreachable elsewhere for `'v` — the source
+                // view is mutably borrowed for as long as any cursor
+                // exists; (2) a cursor's own traversal touches only its
+                // record range's bytes, disjoint across cursors by the
+                // `shard_bounds`-validated boundaries; whole-view chunk
+                // accessors forward the obligation to
+                // `par_transform_simd`'s contract.
+                view: View::from_parts(mapping.clone(), unsafe {
+                    ShardBlobs::new(spans.clone())
+                }),
+                begin: bounds[k],
+                end: bounds[k + 1],
                 _pd: PhantomData,
             })
             .collect()
@@ -225,27 +259,41 @@ where
     }
 }
 
-/// Mutable access to the records of one shard: outermost array indices
-/// `[begin, end)` of a shared view. Created by [`ViewShards`]; sendable
-/// to a worker thread.
-pub struct ShardCursor<'v, R, M, S> {
-    view: *mut View<R, M, S>,
-    begin: usize,
-    end: usize,
-    _pd: PhantomData<&'v mut View<R, M, S>>,
+/// A single whole-range cursor over `view` — the serial fallback of the
+/// parallel entry points (mapping refused to split, or the view is too
+/// small). Same walkers, same order, one handle: trivially exclusive.
+fn whole_cursor<'v, R, M, S>(view: &'v mut View<R, M, S>) -> ShardCursor<'v, R, M, S>
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    let mapping = view.mapping().clone();
+    let outer = view.extents().extent(0);
+    let spans = blob_spans(view.storage_mut());
+    // SAFETY (`ShardBlobs::new`): exactly one handle over the spans
+    // exists and the source view stays mutably borrowed for `'v`, so all
+    // access is exclusive — both contract clauses hold trivially.
+    let storage = unsafe { ShardBlobs::new(spans) };
+    ShardCursor {
+        view: View::from_parts(mapping, storage),
+        begin: 0,
+        end: outer,
+        _pd: PhantomData,
+    }
 }
 
-// SAFETY: a cursor only touches storage bytes of its own shard (the
-// `Mapping::shard_bounds` proof established at split time), mapping and
-// extents are accessed read-only (`Mapping: Send + Sync`), and shared
-// instrumentation state is atomic. `S: Send + Sync` makes the underlying
-// byte buffers safe to access from another thread.
-unsafe impl<'v, R, M, S> Send for ShardCursor<'v, R, M, S>
-where
-    R: Send + Sync,
-    M: Send + Sync,
-    S: Send + Sync,
-{
+/// Mutable access to the records of one shard: outermost array indices
+/// `[begin, end)` of a shared view, through an owned worker-side view
+/// over the shared blobs (see [`crate::shard`] module docs). Created by
+/// [`ViewShards`]; sendable to a worker thread.
+pub struct ShardCursor<'v, R, M, S> {
+    view: View<R, M, ShardBlobs>,
+    begin: usize,
+    end: usize,
+    /// Keeps the source view mutably borrowed while any cursor lives —
+    /// the liveness half of the `ShardBlobs::new` contract.
+    _pd: PhantomData<&'v mut View<R, M, S>>,
 }
 
 impl<'v, R, M, S> ShardCursor<'v, R, M, S>
@@ -261,12 +309,8 @@ where
 
     /// Visit every record of the shard in row-major order — the shard's
     /// slice of [`View::for_each`].
-    pub fn for_each(&mut self, mut f: impl FnMut(&mut RecordRefMut<'_, R, M, S>)) {
-        // SAFETY: cursors of one split never overlap, so this &mut View is
-        // only used to reach bytes no other thread touches (see the
-        // `unsafe impl Send` note and the module docs).
-        let view = unsafe { &mut *self.view };
-        crate::view::for_each_outer(view, self.begin, self.end, &mut f);
+    pub fn for_each(&mut self, mut f: impl FnMut(&mut RecordRefMut<'_, R, M, ShardBlobs>)) {
+        crate::view::for_each_outer(&mut self.view, self.begin, self.end, &mut f);
     }
 
     /// Chunk-walk the shard — the shard's slice of
@@ -282,14 +326,11 @@ where
     /// cross-shard reads of fields no shard writes are always fine.
     pub unsafe fn transform_simd<const N: usize, F>(&mut self, mut f: F)
     where
-        F: FnMut(&mut Chunk<'_, R, M, S, N>),
+        F: FnMut(&mut Chunk<'_, R, M, ShardBlobs, N>),
         M: SimdAccess<R>,
     {
         assert!(N > 0, "lane count must be positive");
-        // SAFETY: as in `for_each`; cross-shard kernel accesses are the
-        // caller's obligation per this fn's contract.
-        let view = unsafe { &mut *self.view };
-        crate::view::walk_chunks(view, self.begin, self.end, &mut f);
+        crate::view::walk_chunks(&mut self.view, self.begin, self.end, &mut f);
     }
 }
 
@@ -304,9 +345,24 @@ where
     /// cannot prove sharding safe (see [`crate::shard`]). Per-record
     /// kernels observe the same pre-pass state as the serial engine, so
     /// results are bit-identical.
+    ///
+    /// The kernel's record cursor is backed by the worker-side storage
+    /// ([`crate::blob::ShardBlobs`]) and can only touch its own record:
+    /// the entry point is a safe fn.
+    ///
+    /// ```
+    /// use llama::prelude::*;
+    /// llama::record! { pub struct P, mod p { x: f64, q: i32 } }
+    /// let mut v = alloc_view(SoA::<P, _>::new((Dyn(100u32),)), &HeapAlloc);
+    /// v.par_for_each(|r| {
+    ///     let i = r.index()[0];
+    ///     r.set_field(p::q, i as i32 * 3);
+    /// });
+    /// assert_eq!(v.get_t([42], p::q), 126);
+    /// ```
     pub fn par_for_each<F>(&mut self, f: F)
     where
-        F: Fn(&mut RecordRefMut<'_, R, M, S>) + Sync,
+        F: Fn(&mut RecordRefMut<'_, R, M, ShardBlobs>) + Sync,
     {
         self.par_for_each_with(thread_count(), f)
     }
@@ -314,13 +370,13 @@ where
     /// [`par_for_each`](View::par_for_each) with an explicit worker count.
     pub fn par_for_each_with<F>(&mut self, threads: usize, f: F)
     where
-        F: Fn(&mut RecordRefMut<'_, R, M, S>) + Sync,
+        F: Fn(&mut RecordRefMut<'_, R, M, ShardBlobs>) + Sync,
     {
         if let Some(shards) = ViewShards::split(self, threads) {
             shards.dispatch(|mut cur| cur.for_each(&f));
             return;
         }
-        self.for_each(f);
+        whole_cursor(self).for_each(f);
     }
 }
 
@@ -348,7 +404,7 @@ where
     /// never stores (the n-body pattern) satisfy this.
     pub unsafe fn par_transform_simd<const N: usize, F>(&mut self, f: F)
     where
-        F: Fn(&mut Chunk<'_, R, M, S, N>) + Sync,
+        F: Fn(&mut Chunk<'_, R, M, ShardBlobs, N>) + Sync,
     {
         // SAFETY: forwarded contract.
         unsafe { self.par_transform_simd_with::<N, F>(thread_count(), f) }
@@ -362,7 +418,7 @@ where
     /// As for [`par_transform_simd`](View::par_transform_simd).
     pub unsafe fn par_transform_simd_with<const N: usize, F>(&mut self, threads: usize, f: F)
     where
-        F: Fn(&mut Chunk<'_, R, M, S, N>) + Sync,
+        F: Fn(&mut Chunk<'_, R, M, ShardBlobs, N>) + Sync,
     {
         assert!(N > 0, "lane count must be positive");
         let align = if <M::Extents as Extents>::RANK == 1 { N } else { 1 };
@@ -372,7 +428,9 @@ where
             shards.dispatch(|mut cur| unsafe { cur.transform_simd::<N, _>(&f) });
             return;
         }
-        self.transform_simd::<N>(f);
+        // SAFETY: single whole-range cursor, no concurrency — every
+        // access the closure can express goes through this one handle.
+        unsafe { whole_cursor(self).transform_simd::<N, _>(f) };
     }
 }
 
@@ -382,6 +440,7 @@ mod tests {
     use crate::blob::{alloc_view, HeapAlloc};
     use crate::extents::Dyn;
     use crate::mapping::bitpack_int::BitpackIntSoA;
+    use crate::mapping::field_access_count::FieldAccessCount;
     use crate::mapping::one::One;
     use crate::mapping::soa::SoA;
 
@@ -441,6 +500,41 @@ mod tests {
         // ...but the parallel entry points still work via the fallback.
         v.par_for_each_with(4, |r| r.set(p::q, 7i32));
         assert_eq!(v.get::<i32, _>(&[63], p::q), 7);
+    }
+
+    #[test]
+    fn cursor_writes_land_in_the_source_view() {
+        // The worker-side views write through raw spans into the same
+        // blobs the source view owns.
+        let mut v = alloc_view(SoA::<P, _>::new((Dyn(9u32),)), &HeapAlloc);
+        {
+            let shards = ViewShards::split(&mut v, 3).unwrap();
+            for mut cur in shards.cursors() {
+                let (lo, hi) = cur.outer_range();
+                cur.for_each(|r| {
+                    let i = r.index()[0];
+                    assert!(i >= lo && i < hi);
+                    r.set(p::q, i as i32 * 11);
+                });
+            }
+        }
+        for i in 0..9 {
+            assert_eq!(v.get::<i32, _>(&[i], p::q), i as i32 * 11);
+        }
+    }
+
+    #[test]
+    fn cloned_mappings_share_instrumentation_counters() {
+        // Worker-side views clone the mapping; the counters are behind an
+        // `Arc`, so parallel counts land in the view's own tallies.
+        let fac = FieldAccessCount::new(SoA::<P, _>::new((Dyn(50u32),)));
+        let mut v = alloc_view(fac, &HeapAlloc);
+        v.par_for_each_with(4, |r| {
+            let x = r.field(p::x);
+            r.set_field(p::x, x + 1.0);
+        });
+        let (reads, writes) = v.mapping().field_counts(p::x);
+        assert_eq!((reads, writes), (50, 50));
     }
 
     #[test]

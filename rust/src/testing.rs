@@ -100,12 +100,24 @@ impl Rng {
 /// Run `prop` on `cases` random inputs produced by `gen`; on failure,
 /// greedily shrink the failing input by re-generating with smaller size
 /// hints and report the smallest failure found.
+///
+/// `LLAMA_PROP_CASES=<k>` (a positive integer) caps the case count of
+/// every property: the Miri CI job runs the parallelism properties under
+/// an interpreter ~100× slower than native and sets a small cap to keep
+/// the job in minutes (the cap only ever *lowers* `cases`).
 pub fn forall<T: Clone + std::fmt::Debug>(
     name: &str,
     cases: usize,
     mut generate: impl FnMut(&mut Rng) -> T,
     mut prop: impl FnMut(&T) -> bool,
 ) {
+    let cases = match std::env::var("LLAMA_PROP_CASES")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(cap) if cap > 0 => cases.min(cap),
+        _ => cases,
+    };
     let mut rng = Rng::new(0xC0FFEE ^ name.len() as u64);
     for case in 0..cases {
         let input = generate(&mut rng);

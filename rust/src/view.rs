@@ -98,10 +98,12 @@ where
             M::BLOB_COUNT
         );
         for i in 0..M::BLOB_COUNT {
+            // `blob_len`, not `blob()`: validation must also work on the
+            // shard-worker storage, which refuses whole-blob references.
             assert!(
-                storage.blob(i).len() >= mapping.blob_size(i),
+                storage.blob_len(i) >= mapping.blob_size(i),
                 "blob {i}: {} bytes provided, mapping needs {}",
-                storage.blob(i).len(),
+                storage.blob_len(i),
                 mapping.blob_size(i)
             );
         }

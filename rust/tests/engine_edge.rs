@@ -3,7 +3,7 @@
 //! traversal — the pinned-down baseline under the serial engine that the
 //! parallel sharded layer is tested against in `properties.rs`.
 
-use llama::blob::{alloc_view, HeapAlloc, HeapStorage};
+use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
 use llama::extents::{Dyn, Extents};
 use llama::mapping::{Mapping, SimdAccess};
 use llama::simd::Simd;
@@ -240,14 +240,16 @@ fn rank2_parallel_shards_split_the_outer_dimension() {
     // The parallel SIMD walk matches the serial chunking on rank 2.
     let mut serial = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
     let mut par = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
-    fn op<M: SimdAccess<P>>(c: &mut Chunk<'_, P, M, HeapStorage, 4>) {
+    // Storage-generic: the serial engine hands chunks over the view's
+    // storage, the parallel engine over the shard-worker storage.
+    fn op<M: SimdAccess<P>, S: BlobStorage>(c: &mut Chunk<'_, P, M, S, 4>) {
         let x: Simd<f32, 4> = c.load(p::x);
         let y: Simd<f32, 4> = c.load(p::y);
         c.store(p::y, x + y + Simd::splat(0.5));
     }
-    serial.transform_simd::<4>(op::<_>);
+    serial.transform_simd::<4>(op::<_, _>);
     // SAFETY: the kernel touches only its own chunk's records.
-    unsafe { par.par_transform_simd_with::<4, _>(3, op::<_>) };
+    unsafe { par.par_transform_simd_with::<4, _>(3, op::<_, _>) };
     for i in 0..7 {
         for j in 0..5 {
             assert_eq!(

@@ -446,11 +446,94 @@ fn prop_run_copy_agrees_with_field_wise() {
 }
 
 #[test]
+fn prop_par_run_copy_bit_identical_to_field_wise() {
+    // The parallel run copy (`copy_view_par`) must write exactly the
+    // values the serial field-wise copy writes, across destination
+    // mappings × threads {1, 2, 4, 7}, including ragged extents —
+    // and mappings that refuse `shard_bounds` (One) or have no
+    // byte-contiguity (AoS) must fall back and still agree.
+    use llama::copy::{copy_view_par, field_wise_copy, CopyStrategy};
+    use llama::mapping::aos::AoS;
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::one::One;
+    use llama::mapping::soa::{SingleBlob, SoA};
+
+    fn snapshot<M: MemoryAccess<R>, S: llama::blob::BlobStorage>(
+        v: &llama::view::View<R, M, S>,
+        n: usize,
+    ) -> Vec<u64> {
+        (0..n)
+            .flat_map(|i| {
+                [
+                    v.get::<f64, _>(&[i], r::a).to_bits(),
+                    v.get::<f32, _>(&[i], r::b).to_bits() as u64,
+                    v.get::<u32, _>(&[i], r::c) as u64,
+                    v.get::<i16, _>(&[i], r::d) as u16 as u64,
+                ]
+            })
+            .collect()
+    }
+
+    forall("par-run-copy", 10, |g| (g.range(1, 150), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        let mut src = alloc_view(SoA::<R, _>::new(e), &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            src.set(&[i], r::a, rng.f64_range(-1e6, 1e6));
+            src.set(&[i], r::b, rng.f64_range(-1e3, 1e3) as f32);
+            src.set(&[i], r::c, rng.next_u64() as u32);
+            src.set(&[i], r::d, rng.range_i64(-30000, 30000) as i16);
+        }
+        macro_rules! check_dst {
+            ($mk:expr) => {{
+                let mut reference = alloc_view($mk, &HeapAlloc);
+                field_wise_copy(&src, &mut reference);
+                let want = snapshot(&reference, n);
+                for t in [1usize, 2, 4, 7] {
+                    let mut dst = alloc_view($mk, &HeapAlloc);
+                    let _ = copy_view_par(&src, &mut dst, t);
+                    if snapshot(&dst, n) != want {
+                        return false;
+                    }
+                }
+            }};
+        }
+        check_dst!(AoSoA::<R, _, 8>::new(e));
+        check_dst!(AoSoA::<R, _, 4>::new(e));
+        check_dst!(SoA::<R, _, SingleBlob>::new(e));
+        check_dst!(AoS::<R, _>::new(e)); // no runs: field-wise fallback
+        // `One` refuses shard_bounds entirely; both paths collapse every
+        // record into the single stored one and must still agree.
+        {
+            let mut reference = alloc_view(One::<R, _>::new(e), &HeapAlloc);
+            field_wise_copy(&src, &mut reference);
+            let want = snapshot(&reference, 1);
+            for t in [2usize, 7] {
+                let mut dst = alloc_view(One::<R, _>::new(e), &HeapAlloc);
+                let s = copy_view_par(&src, &mut dst, t);
+                if s != CopyStrategy::FieldWise || snapshot(&dst, 1) != want {
+                    return false;
+                }
+            }
+        }
+        // Large-enough views at >= 2 threads must actually take the
+        // parallel strategy (not silently fall back forever).
+        if n >= 16 {
+            let mut dst = alloc_view(SoA::<R, _, SingleBlob>::new(e), &HeapAlloc);
+            if copy_view_par(&src, &mut dst, 4) != CopyStrategy::FieldRunsPar {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
 fn prop_par_for_each_bit_identical_to_serial_across_mappings() {
     // The parallel sharded traversal must produce the bytes the serial
     // engine produces, for every mapping (shardable ones split, the rest
     // fall back), at thread counts that do and don't divide the extent.
-    use llama::blob::HeapStorage;
+    use llama::blob::BlobStorage;
     use llama::mapping::aos::{AoS, Packed};
     use llama::mapping::aosoa::AoSoA;
     use llama::mapping::bytesplit::Bytesplit;
@@ -464,8 +547,11 @@ fn prop_par_for_each_bit_identical_to_serial_across_mappings() {
     use llama::view::RecordRefMut;
 
     // Per-record op touching only the record's own fields (the contract
-    // under which parallel results are bit-identical).
-    fn op<M: MemoryAccess<R>>(rec: &mut RecordRefMut<'_, R, M, HeapStorage>) {
+    // under which parallel results are bit-identical). Generic over the
+    // storage: the serial engine hands cursors over the view's own
+    // storage, the parallel engine over the shard-worker storage
+    // (`llama::blob::ShardBlobs`).
+    fn op<M: MemoryAccess<R>, S: BlobStorage>(rec: &mut RecordRefMut<'_, R, M, S>) {
         let a: f64 = rec.get(r::a);
         let b: f32 = rec.get(r::b);
         let c: u32 = rec.get(r::c);
@@ -486,8 +572,8 @@ fn prop_par_for_each_bit_identical_to_serial_across_mappings() {
             v.set(&[i], r::d, rng.range_i64(-20000, 20000) as i16);
         }
         match threads {
-            Some(t) => v.par_for_each_with(t, op::<M>),
-            None => v.for_each(op::<M>),
+            Some(t) => v.par_for_each_with(t, op::<M, _>),
+            None => v.for_each(op::<M, _>),
         }
         (0..n)
             .flat_map(|i| {
@@ -548,7 +634,7 @@ fn prop_par_transform_simd_bit_identical_to_serial_across_mappings() {
     // SIMD chunk traversal: parallel shards (rank-1 boundaries aligned to
     // the lane count) must reproduce the serial chunk pattern exactly,
     // including the tail when the lane count does not divide the extent.
-    use llama::blob::HeapStorage;
+    use llama::blob::{BlobStorage, HeapStorage};
     use llama::mapping::aos::AoS;
     use llama::mapping::aosoa::AoSoA;
     use llama::mapping::bitpack_float::BitpackFloatSoA;
@@ -567,7 +653,9 @@ fn prop_par_transform_simd_bit_identical_to_serial_across_mappings() {
         }
     }
 
-    fn chunk_op<M: SimdAccess<B2>>(c: &mut Chunk<'_, B2, M, HeapStorage, 4>) {
+    // Storage-generic: serial chunks run over the view's storage,
+    // parallel chunks over the shard-worker storage.
+    fn chunk_op<M: SimdAccess<B2>, S: BlobStorage>(c: &mut Chunk<'_, B2, M, S, 4>) {
         let a: Simd<f32, 4> = c.load(bf2::v);
         let b: Simd<f32, 4> = c.load(bf2::w);
         c.store(bf2::v, a * b + a);
@@ -583,8 +671,8 @@ fn prop_par_transform_simd_bit_identical_to_serial_across_mappings() {
         }
         match threads {
             // SAFETY: chunk_op touches only its own chunk's records.
-            Some(t) => unsafe { v.par_transform_simd_with::<4, _>(t, chunk_op::<M>) },
-            None => v.transform_simd::<4>(chunk_op::<M>),
+            Some(t) => unsafe { v.par_transform_simd_with::<4, _>(t, chunk_op::<M, _>) },
+            None => v.transform_simd::<4>(chunk_op::<M, _>),
         }
         (0..n).flat_map(|i| [view_bits(&v, i, bf2::v), view_bits(&v, i, bf2::w)]).collect()
     }
@@ -626,14 +714,14 @@ fn prop_par_bitpack_int_matches_serial_at_byte_misaligned_sizes() {
     // Bit-packed integers share bytes between neighbours: the shard
     // splitter must only cut at byte-aligned value boundaries (or fall
     // back to serial), for every bit count and extent.
-    use llama::blob::HeapStorage;
+    use llama::blob::BlobStorage;
     use llama::mapping::bitpack_int::BitpackIntSoADyn;
     use llama::view::RecordRefMut;
 
     llama::record! { pub struct I2, mod i2 { v: u64 } }
     type M2 = BitpackIntSoADyn<I2, (Dyn<u32>,)>;
 
-    fn op(rec: &mut RecordRefMut<'_, I2, M2, HeapStorage>) {
+    fn op<S: BlobStorage>(rec: &mut RecordRefMut<'_, I2, M2, S>) {
         let x: u64 = rec.get(i2::v);
         rec.set(i2::v, x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(13));
     }
