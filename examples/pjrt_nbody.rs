@@ -188,8 +188,12 @@ fn main() -> anyhow::Result<()> {
 
     // And run the same through the coordinator as batched jobs.
     println!("\ncoordinator path (4 batched PJRT jobs):");
-    let mut coord =
-        Coordinator::start(Config { workers: 2, max_batch: 4, engine: Some(service) });
+    let mut coord = Coordinator::start(Config {
+        workers: 2,
+        max_batch: 4,
+        engine: Some(service),
+        ..Config::default()
+    });
     let mut specs = Vec::new();
     for _ in 0..4 {
         let mut s = JobSpec {
@@ -199,6 +203,7 @@ fn main() -> anyhow::Result<()> {
             n: N,
             steps: 20,
             seed: 3,
+            threads: 0,
         };
         s.id = coord.submit(s.clone());
         specs.push(s);

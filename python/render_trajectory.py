@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Render per-bench trend lines from the accumulated perf trajectory.
+
+Input layout (what the CI ``perf-trajectory`` job accumulates on the
+``perf-trajectory`` branch)::
+
+    runs/<utc-stamp>-<sha>/BENCH_<tag>.json   # llama bench schema 1
+
+Output: one Markdown file per bench tag under ``--out`` (default
+``trends/``), each with a per-measurement table — latest ns/item, delta
+vs the previous run, best/worst across history — and a Unicode
+sparkline trend over the (chronologically sorted) runs, plus an
+``index.md`` linking them. Standard library only, by design: the
+trajectory branch must stay renderable on a bare CI runner.
+
+Usage::
+
+    python3 render_trajectory.py runs --out trends
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SPARK_LEVELS = "▁▂▃▄▅▆▇█"
+
+
+def load_runs(runs_dir: Path):
+    """Yield ``(run_name, {tag: parsed_json})`` sorted chronologically.
+
+    Run directories are named ``<utc-stamp>-<sha>``, so lexicographic
+    order is chronological order. Unparseable files are skipped with a
+    warning on stderr — one corrupt upload must not wedge the branch.
+    """
+    runs = []
+    for run_dir in sorted(p for p in runs_dir.iterdir() if p.is_dir()):
+        benches = {}
+        for f in sorted(run_dir.glob("BENCH_*.json")):
+            try:
+                data = json.loads(f.read_text())
+            except (OSError, json.JSONDecodeError) as e:
+                print(f"warning: skipping {f}: {e}", file=sys.stderr)
+                continue
+            if data.get("schema") != 1:
+                print(f"warning: skipping {f}: unknown schema", file=sys.stderr)
+                continue
+            benches[data.get("bench", f.stem)] = data
+        if benches:
+            runs.append((run_dir.name, benches))
+    return runs
+
+
+def series_by_measurement(runs, tag):
+    """``{(group, name): [(run_name, ns_per_item), ...]}`` for one bench."""
+    series = {}
+    for run_name, benches in runs:
+        data = benches.get(tag)
+        if data is None:
+            continue
+        for group in data.get("groups", []):
+            for m in group.get("measurements", []):
+                key = (group.get("name", "?"), m["name"])
+                series.setdefault(key, []).append((run_name, float(m["ns_per_item"])))
+    return series
+
+
+def sparkline(values):
+    """Map values to ▁..█ (min..max); flat series render mid-level."""
+    if not values:
+        return ""
+    lo, hi = min(values), max(values)
+    if hi <= lo:
+        return SPARK_LEVELS[3] * len(values)
+    span = hi - lo
+    return "".join(
+        SPARK_LEVELS[min(len(SPARK_LEVELS) - 1, int((v - lo) / span * len(SPARK_LEVELS)))]
+        for v in values
+    )
+
+
+def fmt_ns(v):
+    return f"{v:,.2f}"
+
+
+def fmt_delta(prev, cur):
+    """Relative change vs the previous run; positive = slower."""
+    if prev is None or prev == 0:
+        return "—"
+    pct = (cur - prev) / prev * 100.0
+    return f"{pct:+.1f}%"
+
+
+def render_bench(tag, runs, out_dir: Path):
+    series = series_by_measurement(runs, tag)
+    if not series:
+        return None
+    run_names = [name for name, benches in runs if tag in benches]
+    lines = [
+        f"# Perf trajectory — `{tag}`",
+        "",
+        f"{len(run_names)} run(s); latest: `{run_names[-1]}`. Values are ns/item "
+        "(lower is better); the trend column spans the full history, oldest to "
+        "newest.",
+        "",
+        "| group | measurement | latest | Δ prev | best | worst | trend |",
+        "|---|---|---:|---:|---:|---:|---|",
+    ]
+    for (group, name) in sorted(series):
+        points = series[(group, name)]
+        values = [v for _, v in points]
+        prev = values[-2] if len(values) >= 2 else None
+        lines.append(
+            "| {} | `{}` | {} | {} | {} | {} | `{}` |".format(
+                group,
+                name,
+                fmt_ns(values[-1]),
+                fmt_delta(prev, values[-1]),
+                fmt_ns(min(values)),
+                fmt_ns(max(values)),
+                sparkline(values),
+            )
+        )
+    lines.append("")
+    path = out_dir / f"{tag}.md"
+    path.write_text("\n".join(lines))
+    return path
+
+
+def render_all(runs_dir: Path, out_dir: Path):
+    runs = load_runs(runs_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tags = sorted({tag for _, benches in runs for tag in benches})
+    written = []
+    for tag in tags:
+        path = render_bench(tag, runs, out_dir)
+        if path is not None:
+            written.append((tag, path))
+    index = [
+        "# Perf trajectory",
+        "",
+        f"{len(runs)} run(s) under `runs/`; per-bench trends:",
+        "",
+    ]
+    index += [f"- [`{tag}`]({path.name})" for tag, path in written]
+    index.append("")
+    (out_dir / "index.md").write_text("\n".join(index))
+    return written
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("runs", type=Path, help="directory of <stamp>-<sha>/BENCH_*.json runs")
+    ap.add_argument("--out", type=Path, default=Path("trends"), help="output directory")
+    args = ap.parse_args(argv)
+    if not args.runs.is_dir():
+        print(f"error: {args.runs} is not a directory", file=sys.stderr)
+        return 2
+    written = render_all(args.runs, args.out)
+    print(f"rendered {len(written)} bench trend(s) into {args.out}/")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

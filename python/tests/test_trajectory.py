@@ -1,0 +1,124 @@
+"""Tests for the perf-trajectory renderer (stdlib only, no jax needed).
+
+The fixtures below are SYNTHETIC bench JSONs in the llama bench schema
+(schema 1) — hand-written shapes for exercising the renderer, not real
+measurements.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import render_trajectory as rt  # noqa: E402
+
+
+def bench_json(tag, rows):
+    return {
+        "bench": tag,
+        "schema": 1,
+        "meta": {"n": "4096", "smoke": "1"},
+        "groups": [
+            {
+                "name": "g",
+                "measurements": [
+                    {
+                        "name": name,
+                        "median_ns": int(ns * 4096),
+                        "mad_ns": 10,
+                        "samples": 3,
+                        "items": 4096,
+                        "ns_per_item": ns,
+                    }
+                    for name, ns in rows
+                ],
+            }
+        ],
+    }
+
+
+def write_run(runs_dir, name, benches):
+    d = runs_dir / name
+    d.mkdir(parents=True)
+    for tag, data in benches.items():
+        (d / f"BENCH_{tag}.json").write_text(json.dumps(data))
+
+
+def make_history(tmp_path):
+    runs = tmp_path / "runs"
+    write_run(
+        runs,
+        "20260701T000000Z-aaaaaaaaaaaa",
+        {
+            "pool": bench_json("pool", [("dispatch small scoped", 9.0), ("dispatch small pooled", 3.0)]),
+            "fig3": bench_json("fig3", [("update SoA SIMD8", 20.0)]),
+        },
+    )
+    write_run(
+        runs,
+        "20260702T000000Z-bbbbbbbbbbbb",
+        {
+            "pool": bench_json("pool", [("dispatch small scoped", 9.5), ("dispatch small pooled", 2.5)]),
+            "fig3": bench_json("fig3", [("update SoA SIMD8", 18.0)]),
+        },
+    )
+    return runs
+
+
+def test_load_runs_sorted_and_parsed(tmp_path):
+    runs = make_history(tmp_path)
+    loaded = rt.load_runs(runs)
+    assert [name for name, _ in loaded] == [
+        "20260701T000000Z-aaaaaaaaaaaa",
+        "20260702T000000Z-bbbbbbbbbbbb",
+    ]
+    assert set(loaded[0][1]) == {"pool", "fig3"}
+
+
+def test_corrupt_file_is_skipped(tmp_path):
+    runs = make_history(tmp_path)
+    bad = runs / "20260703T000000Z-cccccccccccc"
+    bad.mkdir()
+    (bad / "BENCH_pool.json").write_text("{not json")
+    loaded = rt.load_runs(runs)
+    # The corrupt run contributes nothing but doesn't break the rest.
+    assert len(loaded) == 2
+
+
+def test_series_collects_chronological_values(tmp_path):
+    runs = make_history(tmp_path)
+    series = rt.series_by_measurement(rt.load_runs(runs), "pool")
+    pooled = series[("g", "dispatch small pooled")]
+    assert [v for _, v in pooled] == [3.0, 2.5]
+
+
+def test_sparkline_shapes():
+    assert rt.sparkline([]) == ""
+    assert rt.sparkline([5.0, 5.0, 5.0]) == "▄▄▄"
+    line = rt.sparkline([1.0, 2.0, 3.0])
+    assert len(line) == 3
+    assert line[0] == "▁" and line[-1] == "█"
+
+
+def test_render_all_writes_trends_and_index(tmp_path):
+    runs = make_history(tmp_path)
+    out = tmp_path / "trends"
+    written = rt.render_all(runs, out)
+    assert {tag for tag, _ in written} == {"pool", "fig3"}
+    pool_md = (out / "pool.md").read_text()
+    # Latest value, delta vs previous, and a trend glyph all present.
+    assert "dispatch small pooled" in pool_md
+    assert "2.50" in pool_md
+    assert "-16.7%" in pool_md  # 3.0 -> 2.5
+    assert "+5.6%" in pool_md  # 9.0 -> 9.5 (scoped got slower)
+    index = (out / "index.md").read_text()
+    assert "pool.md" in index and "fig3.md" in index
+
+
+def test_cli_roundtrip(tmp_path):
+    runs = make_history(tmp_path)
+    out = tmp_path / "out"
+    assert rt.main([str(runs), "--out", str(out)]) == 0
+    assert (out / "index.md").exists()
+    assert rt.main([str(tmp_path / "missing"), "--out", str(out)]) == 2

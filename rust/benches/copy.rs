@@ -8,7 +8,8 @@
 //! scalar loop (everything else). This bench records all three plus the
 //! run-based *parallel* copy (`copy_view_par`): field runs intersected
 //! with the destination mapping's `shard_bounds` boundaries and fanned
-//! over scoped worker threads — disjoint byte ranges per thread for free.
+//! over the persistent worker pool — disjoint byte ranges per thread
+//! for free.
 //!
 //! Expected shape: blob-memcpy ≲ runs ≤ runs-NT « field-wise. The
 //! parallel rows profit only once the copy is large enough to beat the

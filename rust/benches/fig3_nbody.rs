@@ -125,6 +125,10 @@ fn main() {
 
     // Sharded parallel rows: the same SIMD-8 kernel fanned out over
     // `par_threads` workers (bit-identical to the serial rows above).
+    // The plain `<T>T` rows dispatch on the persistent worker pool (the
+    // default since the pool landed); the `<T>T scoped` rows force the
+    // old per-call thread spawn/join, so the pool's amortized-dispatch
+    // win is visible on the headline workload.
     {
         let mut v = views::make_aos_view(&init);
         b.bench(&format!("update AoS    LLAMA  SIMD8 {par_threads}T"), n as u64, || {
@@ -141,6 +145,24 @@ fn main() {
         let mut v = views::make_aosoa_view(&init);
         b.bench(&format!("update AoSoA8 LLAMA  SIMD8 {par_threads}T"), n as u64, || {
             views::update_simd_par::<8, _, _>(&mut v, par_threads);
+        });
+    }
+    {
+        let mut v = views::make_aos_view(&init);
+        b.bench(&format!("update AoS    LLAMA  SIMD8 {par_threads}T scoped"), n as u64, || {
+            views::update_simd_par_scoped::<8, _, _>(&mut v, par_threads);
+        });
+    }
+    {
+        let mut v = views::make_soa_view(&init);
+        b.bench(&format!("update SoA-MB LLAMA  SIMD8 {par_threads}T scoped"), n as u64, || {
+            views::update_simd_par_scoped::<8, _, _>(&mut v, par_threads);
+        });
+    }
+    {
+        let mut v = views::make_aosoa_view(&init);
+        b.bench(&format!("update AoSoA8 LLAMA  SIMD8 {par_threads}T scoped"), n as u64, || {
+            views::update_simd_par_scoped::<8, _, _>(&mut v, par_threads);
         });
     }
 
@@ -199,6 +221,9 @@ fn main() {
 
     // Parallel move rows: the memory-bound step rarely profits as much as
     // update, which is itself a finding worth recording in the trajectory.
+    // Pooled (default) vs `scoped` (per-call spawn) matters *most* here:
+    // a move pass is microseconds, so the spawn fee dominates the scoped
+    // rows outright.
     bench_move!(
         &format!("move AoS    LLAMA  SIMD8 {par_threads}T"),
         views::make_aos_view(&init),
@@ -213,6 +238,21 @@ fn main() {
         &format!("move AoSoA8 LLAMA  SIMD8 {par_threads}T"),
         views::make_aosoa_view(&init),
         |v: &mut _| views::move_simd_par::<8, _, _>(v, par_threads)
+    );
+    bench_move!(
+        &format!("move AoS    LLAMA  SIMD8 {par_threads}T scoped"),
+        views::make_aos_view(&init),
+        |v: &mut _| views::move_simd_par_scoped::<8, _, _>(v, par_threads)
+    );
+    bench_move!(
+        &format!("move SoA-MB LLAMA  SIMD8 {par_threads}T scoped"),
+        views::make_soa_view(&init),
+        |v: &mut _| views::move_simd_par_scoped::<8, _, _>(v, par_threads)
+    );
+    bench_move!(
+        &format!("move AoSoA8 LLAMA  SIMD8 {par_threads}T scoped"),
+        views::make_aosoa_view(&init),
+        |v: &mut _| views::move_simd_par_scoped::<8, _, _>(v, par_threads)
     );
 
     println!(
@@ -247,6 +287,7 @@ fn main() {
             .collect();
             for layout in ["AoS   ", "SoA-MB", "AoSoA8"] {
                 keys.push(format!("{step} {layout} LLAMA  SIMD8 {par_threads}T"));
+                keys.push(format!("{step} {layout} LLAMA  SIMD8 {par_threads}T scoped"));
             }
             keys
         };

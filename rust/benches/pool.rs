@@ -1,0 +1,129 @@
+//! Experiment E10 — parallel dispatch latency: per-call scoped spawn vs
+//! the persistent worker pool vs the pool with NUMA pinning, across
+//! small / medium / large extents.
+//!
+//! What the tentpole claims: spawning and joining fresh OS threads on
+//! every `par_for_each` costs a roughly fixed fee per call, which
+//! dominates small and medium extents (where the actual traversal is
+//! microseconds) and still taxes large ones; waking parked pool workers
+//! amortizes that fee to a condvar signal. Expected shape per extent
+//! row: `pooled ≤ pooled+pinned ≪ scoped` on small, `pooled < scoped`
+//! on medium, `pooled ≈ scoped` (no regression) on large where the
+//! traversal itself dominates. The pinned rows only differ from pooled
+//! on multi-node machines (single-node pinning is a no-op) — recording
+//! them anyway keeps the trajectory comparable when CI moves hardware.
+//!
+//! The kernel is deliberately thin (one multiply-add per record): these
+//! rows measure *dispatch*, not compute. `fig3_nbody` carries the
+//! compute-bound counterpart (pooled vs scoped on the n-body update).
+//!
+//! Run: `cargo bench --bench pool`  (LLAMA_BENCH_SMOKE=1 shrinks to a
+//! smoke run; LLAMA_THREADS overrides the worker count, default 4;
+//! LLAMA_BENCH_JSON=<dir> writes BENCH_pool.json)
+
+use llama::bench::{black_box, smoke, Bencher};
+use llama::blob::{alloc_view, HeapAlloc};
+use llama::extents::Dyn;
+use llama::mapping::soa::SoA;
+use llama::pool::WorkerPool;
+
+llama::record! {
+    pub struct P, mod p {
+        x: f64,
+    }
+}
+
+fn main() {
+    let fast = smoke();
+    let threads = llama::shard::thread_count_or(4);
+    let sizes: [(&str, usize); 3] =
+        if fast { [("small", 512), ("medium", 4096), ("large", 32768)] } else {
+            [("small", 4096), ("medium", 262_144), ("large", 4_194_304)]
+        };
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(3, 15) };
+
+    // Explicit pools so the rows are self-contained: an unpinned pool
+    // and a pinned one (identical on single-node machines).
+    let pooled = WorkerPool::with_pinning(threads, false);
+    let pinned = WorkerPool::with_pinning(threads, true);
+
+    println!(
+        "dispatch latency: {threads}-way par_for_each, scoped spawn vs pooled vs pinned\n\
+         (pinned pool NUMA-pinned: {}, one multiply-add per record)\n",
+        pinned.is_pinned()
+    );
+
+    for (label, n) in sizes {
+        let e = (Dyn(n as u32),);
+        {
+            let mut v = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
+            b.bench(&format!("par_for_each {label:<6} {threads}T scoped"), n as u64, || {
+                v.par_for_each_scoped_with(threads, |r| {
+                    let x = r.field(p::x);
+                    r.set_field(p::x, x * 1.000001 + 1.0);
+                });
+                black_box(&v);
+            });
+        }
+        {
+            let mut v = alloc_view(SoA::<P, _>::new(e), &HeapAlloc);
+            b.bench(&format!("par_for_each {label:<6} {threads}T pooled"), n as u64, || {
+                v.par_for_each_on(&pooled, threads, |r| {
+                    let x = r.field(p::x);
+                    r.set_field(p::x, x * 1.000001 + 1.0);
+                });
+                black_box(&v);
+            });
+        }
+        {
+            // Pinned pool + first-touch storage: the full NUMA story.
+            // Pages are placed by the SAME pool that traverses
+            // (`first_touch_on(&pinned, ..)`) so slot k's byte range is
+            // resident on the node of the worker that owns shard k.
+            let mut v = alloc_view(SoA::<P, _>::new(e), &llama::blob::AlignedAlloc::<4096>);
+            llama::pool::first_touch_on(&pinned, v.storage_mut());
+            b.bench(&format!("par_for_each {label:<6} {threads}T pooled+pinned"), n as u64, || {
+                v.par_for_each_on(&pinned, threads, |r| {
+                    let x = r.field(p::x);
+                    r.set_field(p::x, x * 1.000001 + 1.0);
+                });
+                black_box(&v);
+            });
+        }
+    }
+
+    println!("{}", b.render_table("parallel dispatch (per record)", None));
+
+    // Schema guard (smoke mode, i.e. CI): the measurement-key set of
+    // BENCH_pool.json must stay diffable across commits.
+    if fast {
+        let mut want: Vec<String> = Vec::new();
+        for (label, _) in sizes {
+            for mode in ["scoped", "pooled", "pooled+pinned"] {
+                want.push(format!("par_for_each {label:<6} {threads}T {mode}"));
+            }
+        }
+        want.sort();
+        let mut got: Vec<String> = b.results().iter().map(|m| m.name.clone()).collect();
+        got.sort();
+        assert_eq!(got, want, "pool-table measurement keys drifted");
+        println!("smoke schema guard OK: {} dispatch keys", got.len());
+    }
+
+    let written = llama::bench::emit_json(
+        "pool",
+        &[
+            ("n_small", sizes[0].1.to_string()),
+            ("n_medium", sizes[1].1.to_string()),
+            ("n_large", sizes[2].1.to_string()),
+            ("threads", threads.to_string()),
+            ("pinned_effective", (pinned.is_pinned() as u8).to_string()),
+            ("smoke", (fast as u8).to_string()),
+        ],
+        &[("dispatch", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
+    if let Some(path) = written {
+        println!("perf trajectory written to {}", path.display());
+    }
+}

@@ -241,6 +241,44 @@ impl<const ALIGN: usize> BlobAlloc for AlignedAlloc<ALIGN> {
 }
 
 // ---------------------------------------------------------------------------
+// NUMA first-touch placement
+// ---------------------------------------------------------------------------
+
+/// Allocator adapter applying the NUMA **first-touch** placement policy:
+/// after the inner allocator produces the (zeroed, lazily-mapped) blobs,
+/// each worker of the **crate-global** pool faults in the pages of the
+/// byte range its dispatch slot will own in a sharded traversal
+/// ([`crate::pool::first_touch`]) — on a first-touch kernel those pages
+/// become resident on that worker's NUMA node, so a later traversal
+/// through the implicit parallel entry points reads node-local memory.
+/// Views that will be traversed on an *explicit* pool (`*_on` entry
+/// points) should instead allocate plainly and place with
+/// [`crate::pool::first_touch_on`] against that same pool — the slot
+/// partition is per-pool.
+///
+/// The default inner allocator is page-aligned ([`AlignedAlloc<4096>`]):
+/// each blob's *start* then sits on a page boundary (interior slot
+/// boundaries generally fall mid-page, so boundary pages land on
+/// whichever neighbouring slot's worker faults them first — placement
+/// is best-effort at page granularity). A no-op (beyond the inner
+/// allocation) when `LLAMA_NUMA=off`/`LLAMA_POOL=off`, under Miri, or
+/// whenever placement cannot help (single-node machines — the global
+/// pool is then unpinned — or single-worker pools); the touch itself is
+/// value-preserving, so contents equal the inner allocator's either
+/// way.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FirstTouchAlloc<A = AlignedAlloc<4096>>(pub A);
+
+impl<A: BlobAlloc> BlobAlloc for FirstTouchAlloc<A> {
+    type Storage = A::Storage;
+    fn alloc(&self, sizes: &[usize]) -> A::Storage {
+        let mut storage = self.0.alloc(sizes);
+        crate::pool::first_touch(&mut storage);
+        storage
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Inline array storage (the trivially-copyable view of §2)
 // ---------------------------------------------------------------------------
 
@@ -551,6 +589,18 @@ mod tests {
         let copy = s; // Copy!
         assert_eq!(copy.blob(1)[0], 9);
         assert_eq!(std::mem::size_of::<ArrayStorage<64, 2>>(), 128);
+    }
+
+    #[test]
+    fn first_touch_alloc_is_zeroed_and_page_aligned() {
+        // Placement is invisible to correctness: contents and alignment
+        // must equal the inner allocator's.
+        let s = FirstTouchAlloc::<AlignedAlloc<4096>>::default().alloc(&[2 * 4096 + 5, 64]);
+        assert_eq!(s.blob_count(), 2);
+        assert_eq!(s.blob(0).len(), 2 * 4096 + 5);
+        assert!(s.blob(0).iter().all(|&b| b == 0));
+        assert!(s.blob(1).iter().all(|&b| b == 0));
+        assert_eq!(s.blob(0).as_ptr() as usize % 4096, 0);
     }
 
     #[test]

@@ -95,6 +95,12 @@ pub struct JobSpec {
     pub steps: usize,
     /// Initial-conditions seed.
     pub seed: u64,
+    /// Thread-budget request for the native parallel kernels: the job
+    /// leases up to this many threads from the coordinator's worker
+    /// pool (`0` = as many as the pool has uncommitted; PJRT jobs
+    /// ignore it). The actually granted budget is reported in
+    /// [`JobResult::threads`].
+    pub threads: usize,
 }
 
 impl JobSpec {
@@ -122,6 +128,9 @@ pub struct JobResult {
     pub energy_drift: f64,
     /// Steps per second achieved.
     pub steps_per_sec: f64,
+    /// Thread budget the job actually ran with (native backends: the
+    /// granted pool lease, ≥ 1; PJRT: 1; 0 on error).
+    pub threads: usize,
     /// Error message if the job failed.
     pub error: Option<String>,
 }

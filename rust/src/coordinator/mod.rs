@@ -14,7 +14,20 @@
 //!           worker 0    worker 1    worker W   (std threads)
 //!              │            │           │
 //!         native views   native     PJRT Engine (shared, compiled once)
+//!              │            │
+//!         parallel kernels on a leased thread budget
+//!         (crate worker pool; one big job saturates idle workers)
 //! ```
+//!
+//! Native jobs run the **parallel** n-body kernels
+//! (`views::update_simd_par_on` / `update_scalar_par_on`) with a thread
+//! budget leased from the coordinator's [`crate::pool::WorkerPool`]
+//! ([`Config::pool`], default the crate-global pool): a single large
+//! job on an idle pool is granted the whole budget instead of running
+//! single-threaded next to parked workers, while concurrent jobs split
+//! the budget between their leases. The parallel kernels are
+//! bit-identical to the serial ones, so routing through them is a pure
+//! wall-clock change.
 //!
 //! Invariants (checked by `rust/tests/properties.rs`):
 //! - every submitted job completes exactly once (success or error);
@@ -32,8 +45,12 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::nbody::{init_particles, total_energy, views, ParticleData};
+use crate::blob::BlobStorage;
+use crate::mapping::SimdAccess;
+use crate::nbody::{init_particles, total_energy, views, Particle, ParticleData};
+use crate::pool::WorkerPool;
 use crate::runtime::{PjrtService, TensorF32};
+use crate::view::View;
 
 /// Coordinator configuration.
 #[derive(Clone)]
@@ -44,11 +61,19 @@ pub struct Config {
     pub max_batch: usize,
     /// PJRT service handle (required for [`Backend::Pjrt`] jobs).
     pub engine: Option<PjrtService>,
+    /// Worker pool the native parallel kernels dispatch on (`None` =
+    /// the crate-global pool, [`crate::pool::global`]). Tests and
+    /// benches pass an explicitly sized pool for determinism.
+    pub pool: Option<Arc<WorkerPool>>,
+    /// Default per-job thread-budget request for native jobs whose
+    /// [`JobSpec::threads`] is 0 (`0` = lease as much of the pool as
+    /// is uncommitted — one big job on an idle pool saturates it).
+    pub native_threads: usize,
 }
 
 impl Default for Config {
     fn default() -> Self {
-        Config { workers: 2, max_batch: 8, engine: None }
+        Config { workers: 2, max_batch: 8, engine: None, pool: None, native_threads: 0 }
     }
 }
 
@@ -120,6 +145,8 @@ impl Coordinator {
             let rx = batch_rx.clone();
             let results = results_tx.clone();
             let engine = config.engine.clone();
+            let pool = config.pool.clone();
+            let native_threads = config.native_threads;
             let wmetrics = metrics.clone();
             workers.push(std::thread::spawn(move || loop {
                 let next = { rx.lock().unwrap().recv() };
@@ -127,14 +154,22 @@ impl Coordinator {
                     Ok(b) => b,
                     Err(_) => break,
                 };
+                // Native kernels dispatch on the configured pool (or
+                // the crate-global one); budgets are leased per job.
+                // With `LLAMA_POOL=off` and no explicit pool, honor the
+                // opt-out: no persistent pool is ever constructed and
+                // the kernels fall back to per-call scoped dispatch.
+                let kernel_pool: Option<&WorkerPool> = pool
+                    .as_deref()
+                    .or_else(|| crate::pool::pooled_dispatch().then(crate::pool::global));
                 for q in batch {
                     let queue_time = q.submitted_at.elapsed();
                     let t0 = Instant::now();
-                    let outcome = run_job(&q.spec, engine.as_ref());
+                    let outcome = run_job(&q.spec, engine.as_ref(), kernel_pool, native_threads);
                     let exec_time = t0.elapsed();
-                    let (drift, error) = match outcome {
-                        Ok(d) => (d, None),
-                        Err(e) => (f64::NAN, Some(format!("{e:#}"))),
+                    let (drift, threads, error) = match outcome {
+                        Ok((d, t)) => (d, t, None),
+                        Err(e) => (f64::NAN, 0, Some(format!("{e:#}"))),
                     };
                     wmetrics.on_complete(queue_time, exec_time, error.is_some());
                     let _ = results.send(JobResult {
@@ -145,6 +180,7 @@ impl Coordinator {
                         queue_time,
                         energy_drift: drift,
                         steps_per_sec: q.spec.steps as f64 / exec_time.as_secs_f64().max(1e-12),
+                        threads,
                         error,
                     });
                 }
@@ -204,62 +240,104 @@ impl Coordinator {
     }
 }
 
-/// Execute one job, returning the relative energy drift.
-fn run_job(spec: &JobSpec, engine: Option<&PjrtService>) -> anyhow::Result<f64> {
+/// Execute one job, returning the relative energy drift and the thread
+/// budget it ran with. `pool: None` means "pooling opted out"
+/// (`LLAMA_POOL=off` with no explicit [`Config::pool`]): native
+/// kernels then use per-call scoped dispatch at the requested budget.
+fn run_job(
+    spec: &JobSpec,
+    engine: Option<&PjrtService>,
+    pool: Option<&WorkerPool>,
+    default_want: usize,
+) -> anyhow::Result<(f64, usize)> {
     let init = init_particles(spec.n, spec.seed);
     let e0 = total_energy(&init);
-    let finals: Vec<ParticleData> = match spec.backend {
-        Backend::Pjrt => run_pjrt(spec, engine, &init)?,
-        Backend::NativeScalar | Backend::NativeSimd => run_native(spec, &init),
+    let (finals, threads): (Vec<ParticleData>, usize) = match spec.backend {
+        Backend::Pjrt => (run_pjrt(spec, engine, &init)?, 1),
+        Backend::NativeScalar | Backend::NativeSimd => run_native(spec, &init, pool, default_want),
     };
     let e1 = total_energy(&finals);
-    Ok(((e1 - e0) / e0).abs())
+    Ok((((e1 - e0) / e0).abs(), threads))
 }
 
-fn run_native(spec: &JobSpec, init: &[ParticleData]) -> Vec<ParticleData> {
+/// Run `spec.steps` steps of one native job through the **parallel**
+/// kernels, with a thread budget leased from `pool` for the job's
+/// duration: one big job on an idle pool saturates the workers that
+/// batching small jobs would leave parked, while concurrent jobs split
+/// the pool instead of oversubscribing it. A granted budget of 1
+/// degrades to the serial engine (the sharded entry points refuse
+/// single-shard splits), and the parallel kernels are bit-identical to
+/// the serial ones at any budget — routing through them changes
+/// wall-clock time, never results.
+fn run_native(
+    spec: &JobSpec,
+    init: &[ParticleData],
+    pool: Option<&WorkerPool>,
+    default_want: usize,
+) -> (Vec<ParticleData>, usize) {
+    let want = if spec.threads > 0 { spec.threads } else { default_want };
+    // With a pool, the budget is leased (concurrent jobs split the
+    // capacity; the lease returns on drop at the end of this job).
+    // Without one (`LLAMA_POOL=off`), the requested budget is used
+    // as-is on per-call scoped dispatch.
+    let lease = pool.map(|p| p.lease(want));
+    let threads = match &lease {
+        Some(lease) => lease.threads(),
+        None => if want > 0 { want } else { crate::shard::thread_count() },
+    };
     let simd = spec.backend == Backend::NativeSimd;
-    match spec.layout {
-        Layout::Aos => {
-            let mut v = views::make_aos_view(init);
-            for _ in 0..spec.steps {
-                if simd {
-                    views::update_simd::<8, _, _>(&mut v);
-                    views::move_simd::<8, _, _>(&mut v);
-                } else {
-                    views::update_scalar(&mut v);
-                    views::move_scalar(&mut v);
+
+    fn steps<M, S>(
+        v: &mut View<Particle, M, S>,
+        simd: bool,
+        n_steps: usize,
+        pool: Option<&WorkerPool>,
+        threads: usize,
+    ) where
+        M: SimdAccess<Particle>,
+        S: BlobStorage + Send + Sync,
+    {
+        for _ in 0..n_steps {
+            match (pool, simd) {
+                (Some(pool), true) => {
+                    views::update_simd_par_on::<8, _, _>(v, pool, threads);
+                    views::move_simd_par_on::<8, _, _>(v, pool, threads);
+                }
+                (Some(pool), false) => {
+                    views::update_scalar_par_on(v, pool, threads);
+                    views::move_scalar_par_on(v, pool, threads);
+                }
+                (None, true) => {
+                    views::update_simd_par_scoped::<8, _, _>(v, threads);
+                    views::move_simd_par_scoped::<8, _, _>(v, threads);
+                }
+                (None, false) => {
+                    views::update_scalar_par(v, threads);
+                    views::move_scalar_par(v, threads);
                 }
             }
+        }
+    }
+
+    let finals = match spec.layout {
+        Layout::Aos => {
+            let mut v = views::make_aos_view(init);
+            steps(&mut v, simd, spec.steps, pool, threads);
             views::snapshot_view(&v)
         }
         Layout::SoaMb | Layout::Bf16 => {
             // Native bf16 falls back to f32 SoA (bf16 is a PJRT artifact).
             let mut v = views::make_soa_view(init);
-            for _ in 0..spec.steps {
-                if simd {
-                    views::update_simd::<8, _, _>(&mut v);
-                    views::move_simd::<8, _, _>(&mut v);
-                } else {
-                    views::update_scalar(&mut v);
-                    views::move_scalar(&mut v);
-                }
-            }
+            steps(&mut v, simd, spec.steps, pool, threads);
             views::snapshot_view(&v)
         }
         Layout::Aosoa => {
             let mut v = views::make_aosoa_view(init);
-            for _ in 0..spec.steps {
-                if simd {
-                    views::update_simd::<8, _, _>(&mut v);
-                    views::move_simd::<8, _, _>(&mut v);
-                } else {
-                    views::update_scalar(&mut v);
-                    views::move_scalar(&mut v);
-                }
-            }
+            steps(&mut v, simd, spec.steps, pool, threads);
             views::snapshot_view(&v)
         }
-    }
+    };
+    (finals, threads)
 }
 
 fn run_pjrt(
@@ -361,18 +439,19 @@ fn run_pjrt(
 /// Render job results as an aligned table.
 pub fn render_results(specs: &[JobSpec], results: &[JobResult]) -> String {
     let mut out = format!(
-        "{:>4}  {:>9}  {:>14}  {:>6}  {:>6}  {:>12}  {:>10}  {}\n",
-        "id", "layout", "backend", "worker", "batch", "exec", "steps/s", "drift"
+        "{:>4}  {:>9}  {:>14}  {:>6}  {:>6}  {:>4}  {:>12}  {:>10}  {}\n",
+        "id", "layout", "backend", "worker", "batch", "thr", "exec", "steps/s", "drift"
     );
     for r in results {
         let spec = specs.iter().find(|s| s.id == r.id);
         out.push_str(&format!(
-            "{:>4}  {:>9}  {:>14}  {:>6}  {:>6}  {:>12}  {:>10.1}  {}\n",
+            "{:>4}  {:>9}  {:>14}  {:>6}  {:>6}  {:>4}  {:>12}  {:>10.1}  {}\n",
             r.id,
             spec.map(|s| s.layout.name()).unwrap_or("?"),
             spec.map(|s| s.backend.name()).unwrap_or("?"),
             r.worker,
             r.batch_id,
+            r.threads,
             format!("{:.2?}", r.exec_time),
             r.steps_per_sec,
             if let Some(e) = &r.error { e.clone() } else { format!("{:.1e}", r.energy_drift) },
@@ -386,12 +465,13 @@ mod tests {
     use super::*;
 
     fn spec(layout: Layout, backend: Backend, n: usize, steps: usize) -> JobSpec {
-        JobSpec { id: 0, layout, backend, n, steps, seed: 1 }
+        JobSpec { id: 0, layout, backend, n, steps, seed: 1, threads: 0 }
     }
 
     #[test]
     fn native_jobs_complete() {
-        let mut c = Coordinator::start(Config { workers: 2, max_batch: 4, engine: None });
+        let mut c =
+            Coordinator::start(Config { workers: 2, max_batch: 4, ..Config::default() });
         for layout in [Layout::Aos, Layout::SoaMb, Layout::Aosoa] {
             c.submit(spec(layout, Backend::NativeScalar, 64, 2));
             c.submit(spec(layout, Backend::NativeSimd, 64, 2));
@@ -402,6 +482,7 @@ mod tests {
             assert!(r.error.is_none(), "{:?}", r.error);
             assert!(r.energy_drift < 1e-2);
             assert!(r.steps_per_sec > 0.0);
+            assert!(r.threads >= 1);
         }
         let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..6).collect::<Vec<_>>());
@@ -409,7 +490,8 @@ mod tests {
 
     #[test]
     fn pjrt_jobs_error_without_engine() {
-        let mut c = Coordinator::start(Config { workers: 1, max_batch: 2, engine: None });
+        let mut c =
+            Coordinator::start(Config { workers: 1, max_batch: 2, ..Config::default() });
         c.submit(spec(Layout::SoaMb, Backend::Pjrt, 64, 1));
         let results = c.finish();
         assert_eq!(results.len(), 1);
@@ -417,8 +499,72 @@ mod tests {
     }
 
     #[test]
+    fn single_large_native_job_saturates_the_pool() {
+        // The headline of the routing change: one big job on a single
+        // coordinator worker leases the whole (idle) pool instead of
+        // running single-threaded next to parked workers — and the
+        // result is still exactly-once and physically sane.
+        let pool = Arc::new(WorkerPool::with_pinning(4, false));
+        let mut c = Coordinator::start(Config {
+            workers: 1,
+            max_batch: 4,
+            pool: Some(pool),
+            ..Config::default()
+        });
+        c.submit(spec(Layout::SoaMb, Backend::NativeSimd, 256, 2));
+        let results = c.finish();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].error.is_none(), "{:?}", results[0].error);
+        assert_eq!(results[0].threads, 4, "idle 4-thread pool fully leased");
+        assert!(results[0].energy_drift < 1e-2);
+    }
+
+    #[test]
+    fn per_job_thread_budget_request_is_honored() {
+        let pool = Arc::new(WorkerPool::with_pinning(4, false));
+        let mut c = Coordinator::start(Config {
+            workers: 1,
+            max_batch: 4,
+            pool: Some(pool),
+            ..Config::default()
+        });
+        let mut want2 = spec(Layout::Aosoa, Backend::NativeScalar, 128, 1);
+        want2.threads = 2;
+        c.submit(want2);
+        let results = c.finish();
+        assert_eq!(results[0].threads, 2, "JobSpec::threads caps the lease");
+        assert!(results[0].error.is_none());
+    }
+
+    #[test]
+    fn native_results_identical_across_thread_budgets() {
+        // The parallel kernels are bit-identical to serial, so the
+        // energy drift must not depend on the granted budget.
+        let drift_at = |threads: usize| -> f64 {
+            let pool = Arc::new(WorkerPool::with_pinning(4, false));
+            let mut c = Coordinator::start(Config {
+                workers: 1,
+                max_batch: 2,
+                pool: Some(pool),
+                ..Config::default()
+            });
+            let mut s = spec(Layout::SoaMb, Backend::NativeSimd, 96, 3);
+            s.threads = threads;
+            c.submit(s);
+            let results = c.finish();
+            assert!(results[0].error.is_none());
+            assert_eq!(results[0].threads, threads);
+            results[0].energy_drift
+        };
+        let d1 = drift_at(1);
+        assert_eq!(d1.to_bits(), drift_at(2).to_bits());
+        assert_eq!(d1.to_bits(), drift_at(4).to_bits());
+    }
+
+    #[test]
     fn batching_respects_limits_and_completes() {
-        let mut c = Coordinator::start(Config { workers: 1, max_batch: 8, engine: None });
+        let mut c =
+            Coordinator::start(Config { workers: 1, max_batch: 8, ..Config::default() });
         for _ in 0..6 {
             c.submit(spec(Layout::SoaMb, Backend::NativeScalar, 64, 1));
         }

@@ -88,7 +88,9 @@ where
 }
 
 /// [`copy_view`] with the run strategy fanned out over up to `threads`
-/// scoped worker threads (the ROADMAP's run-based parallel copy).
+/// workers of the persistent pool ([`crate::pool`]; per-call scoped
+/// threads under `LLAMA_POOL=off`) — the ROADMAP's run-based parallel
+/// copy.
 ///
 /// The record space is partitioned at boundaries the destination
 /// mapping's [`shard_bounds`](crate::mapping::Mapping::shard_bounds)
@@ -134,25 +136,34 @@ where
         if let Some(bounds) = run_copy_bounds::<R, MD>(&dm, n, threads) {
             let gap = AtomicBool::new(false);
             let spans = blob_spans(dst.storage_mut());
-            std::thread::scope(|scope| {
-                for w in 0..bounds.len() - 1 {
-                    let (r0, r1) = (bounds[w], bounds[w + 1]);
-                    let (gap, dm, spans) = (&gap, &dm, &spans);
-                    scope.spawn(move || {
-                        // SAFETY (`ShardBlobs::new`): (1) the spans'
-                        // buffers outlive the scope — `dst` stays mutably
-                        // borrowed and untouched until it ends; (2) this
-                        // worker writes only the field runs of records
-                        // [r0, r1), byte-disjoint from every other
-                        // worker's ranges by the `shard_bounds`-validated
-                        // partition, and nothing reads dst concurrently.
-                        let mut out = unsafe { ShardBlobs::new(spans.to_vec()) };
-                        if !run_copy_range(src, dm, &mut out, r0, r1) {
-                            gap.store(true, Ordering::Relaxed);
+            {
+                let (gap, dm, spans) = (&gap, &dm, &spans);
+                // One job per worker range, dispatched on the persistent
+                // pool (or per-call scoped threads when `LLAMA_POOL=off`);
+                // `run_jobs` returns only when every job has finished, so
+                // the borrows of `gap`/`dm`/`spans`/`src` stay valid.
+                let jobs: Vec<_> = (0..bounds.len() - 1)
+                    .map(|w| {
+                        let (r0, r1) = (bounds[w], bounds[w + 1]);
+                        move || {
+                            // SAFETY (`ShardBlobs::new`): (1) the spans'
+                            // buffers outlive the dispatch — `dst` stays
+                            // mutably borrowed and untouched until it
+                            // returns; (2) this worker writes only the
+                            // field runs of records [r0, r1),
+                            // byte-disjoint from every other worker's
+                            // ranges by the `shard_bounds`-validated
+                            // partition, and nothing reads dst
+                            // concurrently.
+                            let mut out = unsafe { ShardBlobs::new(spans.to_vec()) };
+                            if !run_copy_range(src, dm, &mut out, r0, r1) {
+                                gap.store(true, Ordering::Relaxed);
+                            }
                         }
-                    });
-                }
-            });
+                    })
+                    .collect();
+                crate::pool::run_jobs(jobs);
+            }
             if !gap.load(Ordering::Relaxed) {
                 return CopyStrategy::FieldRunsPar;
             }

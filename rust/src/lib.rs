@@ -58,8 +58,10 @@
 //! assert_eq!(view.get_t([7], particle::mass), 14.0);
 //!
 //! // ...and fan either traversal out over threads (`LLAMA_THREADS`, or
-//! // all cores): the mapping's `shard_bounds` proof splits the view into
-//! // disjoint shards, falling back to the serial engine when it can't.
+//! // all cores — parked workers of the persistent crate pool, not
+//! // per-call spawns): the mapping's `shard_bounds` proof splits the
+//! // view into disjoint shards, falling back to the serial engine when
+//! // it can't.
 //! view.par_for_each(|r| {
 //!     let m = r.field(particle::mass);
 //!     r.set_field(particle::mass, m + 1.0);
@@ -114,7 +116,10 @@
 //!   multithreaded sharded layer → [`shard`]
 //!   ([`mapping::Mapping::shard_bounds`], `View::par_for_each`,
 //!   `View::par_transform_simd`) built on the interior-mutable
-//!   byte-exact storage path → [`blob::BlobBytes`], [`blob::ShardBlobs`]
+//!   byte-exact storage path → [`blob::BlobBytes`], [`blob::ShardBlobs`],
+//!   dispatched on the persistent worker pool → [`pool`]
+//!   ([`pool::WorkerPool`]; `LLAMA_POOL`) with NUMA-aware placement →
+//!   [`numa`] (`LLAMA_NUMA`, [`blob::FirstTouchAlloc`])
 //! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
 //! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
 //!   (PJRT behind the `pjrt` cargo feature)
@@ -138,6 +143,8 @@ pub mod copy;
 pub mod extents;
 pub mod mapping;
 pub mod nbody;
+pub mod numa;
+pub mod pool;
 pub mod record;
 pub mod runtime;
 pub mod shard;
@@ -148,8 +155,8 @@ pub mod view;
 /// Convenience re-exports covering the common 90% of the API.
 pub mod prelude {
     pub use crate::blob::{
-        alloc_view, AlignedAlloc, ArrayStorage, BlobAlloc, BlobBytes, BlobStorage, HeapAlloc,
-        ShardBlobs,
+        alloc_view, AlignedAlloc, ArrayStorage, BlobAlloc, BlobBytes, BlobStorage,
+        FirstTouchAlloc, HeapAlloc, ShardBlobs,
     };
     pub use crate::extents::{
         ArrayIndex, ColMajor, Dyn, Extent, Extents, Fix, Linearizer, Morton, RankIndex, RowMajor,
@@ -173,6 +180,8 @@ pub mod prelude {
         Bf16, Field, FieldIndex, FieldTag, GroupTag, Leaf, RecordDim, Scalar, ScalarType, Sel,
         Selection, F16,
     };
+    pub use crate::numa::{NumaPolicy, Topology};
+    pub use crate::pool::{Lease, WorkerPool};
     pub use crate::shard::{thread_count, thread_count_or, ShardCursor, ViewShards};
     pub use crate::simd::{Simd, SimdElem};
     pub use crate::view::{

@@ -46,8 +46,10 @@ USAGE: llama-lab <command> [options]
 COMMANDS:
   run      --layout aos|soa|aosoa|bf16 --backend scalar|simd|pjrt
            [--n 1024] [--steps 10] [--seed 1] [--workers 2] [--repeat 1]
+           [--threads 0]   (native kernels' per-job thread budget;
+                            0 = lease as much of the pool as available)
   serve    read jobs from stdin, one per line:
-           <layout> <backend> <n> <steps> [seed]
+           <layout> <backend> <n> <steps> [seed] [threads]
   heatmap  [--n 256] [--granularity 64] [--csv out.csv]
   trace    [--n 256] [--steps 2]
   compress [--n 65536]
@@ -87,12 +89,14 @@ fn cmd_run(rest: &[String]) -> i32 {
     let seed = opt_usize(rest, "--seed", 1) as u64;
     let workers = opt_usize(rest, "--workers", 2);
     let repeat = opt_usize(rest, "--repeat", 1);
+    let threads = opt_usize(rest, "--threads", 0);
 
     let engine = engine_if_needed(&[backend]);
-    let mut coord = Coordinator::start(Config { workers, max_batch: 8, engine });
+    let mut coord =
+        Coordinator::start(Config { workers, max_batch: 8, engine, ..Config::default() });
     let mut specs = Vec::new();
     for _ in 0..repeat {
-        let mut s = JobSpec { id: 0, layout, backend, n, steps, seed };
+        let mut s = JobSpec { id: 0, layout, backend, n, steps, seed, threads };
         s.id = coord.submit(s.clone());
         specs.push(s);
     }
@@ -128,11 +132,13 @@ fn cmd_serve(rest: &[String]) -> i32 {
         let n: usize = parts[2].parse().unwrap_or(1024);
         let steps: usize = parts[3].parse().unwrap_or(1);
         let seed: u64 = parts.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
-        parsed.push(JobSpec { id: 0, layout, backend, n, steps, seed });
+        let threads: usize = parts.get(5).and_then(|s| s.parse().ok()).unwrap_or(0);
+        parsed.push(JobSpec { id: 0, layout, backend, n, steps, seed, threads });
     }
     let backends: Vec<Backend> = parsed.iter().map(|s| s.backend).collect();
     let engine = engine_if_needed(&backends);
-    let mut coord = Coordinator::start(Config { workers, max_batch: 8, engine });
+    let mut coord =
+        Coordinator::start(Config { workers, max_batch: 8, engine, ..Config::default() });
     for mut s in parsed {
         s.id = coord.submit(s.clone());
         specs.push(s);

@@ -21,6 +21,7 @@ use crate::blob::{alloc_view, AlignedAlloc, AlignedStorage};
 use crate::extents::Extents;
 use crate::mapping::{MemoryAccess, SimdAccess};
 use crate::nbody::manual::simd_interaction;
+use crate::pool::WorkerPool;
 use crate::simd::Simd;
 use crate::view::{Chunk, RecordRefMut, View};
 
@@ -128,6 +129,20 @@ where
     unsafe { view.par_transform_simd_with::<1, _>(threads, |c| update_scalar_chunk(c)) }
 }
 
+/// [`update_scalar_par`] dispatched on an explicit [`WorkerPool`] (the
+/// coordinator runs native jobs here with a leased thread budget).
+pub fn update_scalar_par_on<M, S>(
+    view: &mut View<Particle, M, S>,
+    pool: &WorkerPool,
+    threads: usize,
+) where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    // SAFETY: as in `update_scalar_par`.
+    unsafe { view.par_transform_simd_on::<1, _>(pool, threads, |c| update_scalar_chunk(c)) }
+}
+
 /// One record of the scalar move — the shared kernel of [`move_scalar`]
 /// and [`move_scalar_par`]. Touches only the record's own fields.
 #[inline(always)]
@@ -165,6 +180,15 @@ where
     S: crate::blob::BlobStorage + Send + Sync,
 {
     view.par_for_each_with(threads, |r| move_record(r));
+}
+
+/// [`move_scalar_par`] dispatched on an explicit [`WorkerPool`].
+pub fn move_scalar_par_on<M, S>(view: &mut View<Particle, M, S>, pool: &WorkerPool, threads: usize)
+where
+    M: MemoryAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    view.par_for_each_on(pool, threads, |r| move_record(r));
 }
 
 /// One chunk of the SIMD update — the shared kernel of [`update_simd`]
@@ -233,6 +257,31 @@ where
     unsafe { view.par_transform_simd_with::<N, _>(threads, |c| update_chunk(c)) }
 }
 
+/// [`update_simd_par`] dispatched on an explicit [`WorkerPool`] (the
+/// coordinator runs native jobs here with a leased thread budget).
+pub fn update_simd_par_on<const N: usize, M, S>(
+    view: &mut View<Particle, M, S>,
+    pool: &WorkerPool,
+    threads: usize,
+) where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    // SAFETY: as in `update_simd_par`.
+    unsafe { view.par_transform_simd_on::<N, _>(pool, threads, |c| update_chunk(c)) }
+}
+
+/// [`update_simd_par`] forced onto the per-call scoped-spawn dispatch —
+/// the pooled-vs-scoped comparison row of the `fig3_nbody` bench.
+pub fn update_simd_par_scoped<const N: usize, M, S>(view: &mut View<Particle, M, S>, threads: usize)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    // SAFETY: as in `update_simd_par`.
+    unsafe { view.par_transform_simd_scoped_with::<N, _>(threads, |c| update_chunk(c)) }
+}
+
 /// One chunk of the SIMD move — the shared kernel of [`move_simd`] and
 /// [`move_simd_par`].
 #[inline(always)]
@@ -271,6 +320,30 @@ where
 {
     // SAFETY: the kernel loads and stores only its own chunk's records.
     unsafe { view.par_transform_simd_with::<N, _>(threads, |c| move_chunk(c)) }
+}
+
+/// [`move_simd_par`] dispatched on an explicit [`WorkerPool`].
+pub fn move_simd_par_on<const N: usize, M, S>(
+    view: &mut View<Particle, M, S>,
+    pool: &WorkerPool,
+    threads: usize,
+) where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    // SAFETY: the kernel loads and stores only its own chunk's records.
+    unsafe { view.par_transform_simd_on::<N, _>(pool, threads, |c| move_chunk(c)) }
+}
+
+/// [`move_simd_par`] forced onto the per-call scoped-spawn dispatch —
+/// the pooled-vs-scoped comparison row of the `fig3_nbody` bench.
+pub fn move_simd_par_scoped<const N: usize, M, S>(view: &mut View<Particle, M, S>, threads: usize)
+where
+    M: SimdAccess<Particle>,
+    S: crate::blob::BlobStorage + Send + Sync,
+{
+    // SAFETY: the kernel loads and stores only its own chunk's records.
+    unsafe { view.par_transform_simd_scoped_with::<N, _>(threads, |c| move_chunk(c)) }
 }
 
 /// [`update_simd`] on the *legacy* `usize`-index access path: the same
@@ -533,6 +606,38 @@ mod tests {
         check_layout!(make_aos_view);
         check_layout!(make_soa_view);
         check_layout!(make_aosoa_view);
+    }
+
+    #[test]
+    fn pool_dispatched_kernels_bit_identical_to_serial() {
+        // The `_on` (explicit pool, as the coordinator uses) and
+        // `_scoped` (pre-pool spawn, as the bench baseline uses)
+        // dispatch targets are plumbing only: bit-identical results.
+        let n = 101;
+        let init = init_particles(n, 13);
+        let pool = crate::pool::WorkerPool::with_pinning(3, false);
+        let mut serial = make_soa_view(&init);
+        let mut pooled = make_soa_view(&init);
+        let mut scoped = make_soa_view(&init);
+        let mut scalar_serial = make_soa_view(&init);
+        let mut scalar_pooled = make_soa_view(&init);
+        for _ in 0..STEPS {
+            update_simd::<8, _, _>(&mut serial);
+            move_simd::<8, _, _>(&mut serial);
+            update_simd_par_on::<8, _, _>(&mut pooled, &pool, 3);
+            move_simd_par_on::<8, _, _>(&mut pooled, &pool, 3);
+            update_simd_par_scoped::<8, _, _>(&mut scoped, 3);
+            move_simd_par_scoped::<8, _, _>(&mut scoped, 3);
+            update_scalar(&mut scalar_serial);
+            move_scalar(&mut scalar_serial);
+            update_scalar_par_on(&mut scalar_pooled, &pool, 3);
+            move_scalar_par_on(&mut scalar_pooled, &pool, 3);
+        }
+        let r = snapshot_view(&serial);
+        assert_eq!(max_pos_delta(&r, &snapshot_view(&pooled)), 0.0);
+        assert_eq!(max_pos_delta(&r, &snapshot_view(&scoped)), 0.0);
+        let rs = snapshot_view(&scalar_serial);
+        assert_eq!(max_pos_delta(&rs, &snapshot_view(&scalar_pooled)), 0.0);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! NUMA topology probe and thread placement (no extra crates).
+//!
+//! Memory-bound traversals lose a large fraction of their bandwidth when
+//! a worker chews memory resident on a *remote* NUMA node. The paper's
+//! premise — match data movement to the hardware — therefore extends to
+//! thread and page placement, not just byte layout. This module supplies
+//! the two primitives the worker pool ([`crate::pool`]) builds its
+//! placement policy on:
+//!
+//! 1. **Topology probe** ([`probe`] / [`probe_dir`]): parses the Linux
+//!    sysfs tree `/sys/devices/system/node` (`node<k>/cpulist` files in
+//!    the kernel's list format, e.g. `0-3,8-11`). Anything unexpected —
+//!    the directory missing (non-Linux, sandboxes), zero nodes, an
+//!    unreadable `cpulist` — degrades to a single-node fallback covering
+//!    all CPUs, so callers never need a NUMA special case.
+//! 2. **Thread pinning** ([`pin_current_thread`]): restricts the calling
+//!    thread to a CPU set via a hand-declared `sched_setaffinity(2)`
+//!    (the offline image has no libc crate). Compiled to a no-op off
+//!    Linux and under Miri (no foreign calls in the interpreter).
+//!
+//! The placement *policy* — which worker goes to which node, who touches
+//! which pages — lives in [`crate::pool`]; the `LLAMA_NUMA` environment
+//! knob ([`policy`]) selects it:
+//!
+//! - `LLAMA_NUMA=firsttouch` (default): pin pool workers round-robin
+//!   across nodes (only when there are ≥ 2 nodes) and let
+//!   [`crate::pool::first_touch`] fault each worker's shard range into
+//!   node-local pages.
+//! - `LLAMA_NUMA=off`: no pinning, no touch pass.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+/// One NUMA node: its sysfs id and the CPUs it owns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Node {
+    /// Kernel node id (the `<k>` of `node<k>`; ids may have holes).
+    pub id: usize,
+    /// CPU ids local to this node, ascending.
+    pub cpus: Vec<usize>,
+}
+
+/// The machine's NUMA topology as probed from sysfs (or the single-node
+/// fallback when sysfs is unavailable).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Nodes sorted by id. Never empty: the fallback is one node 0
+    /// spanning all CPUs.
+    pub nodes: Vec<Node>,
+}
+
+impl Topology {
+    /// Single node spanning `cpus` CPUs — the fallback when the sysfs
+    /// tree is missing or empty.
+    pub fn single_node(cpus: usize) -> Topology {
+        Topology { nodes: vec![Node { id: 0, cpus: (0..cpus.max(1)).collect() }] }
+    }
+
+    /// Whether placement can matter at all (more than one node).
+    pub fn is_multi_node(&self) -> bool {
+        self.nodes.len() > 1
+    }
+
+    /// Total CPUs across all nodes.
+    pub fn cpu_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// The node that worker slot `slot` of a pool is assigned to
+    /// (round-robin across nodes — neighbouring shards land on
+    /// neighbouring nodes, matching the round-robin job tagging in
+    /// [`crate::pool`]).
+    pub fn node_of_slot(&self, slot: usize) -> &Node {
+        &self.nodes[slot % self.nodes.len()]
+    }
+}
+
+/// Probe the live system: `/sys/devices/system/node`, with the
+/// single-node fallback on any failure. The result is cached for the
+/// process (the tree is immutable at runtime).
+pub fn probe() -> &'static Topology {
+    static TOPO: OnceLock<Topology> = OnceLock::new();
+    TOPO.get_or_init(|| probe_dir(Path::new("/sys/devices/system/node")))
+}
+
+/// Probe a sysfs-shaped directory tree: every `node<k>` subdirectory
+/// with a parseable `cpulist` becomes a [`Node`]. Missing directory,
+/// zero parseable nodes, or any I/O error yields the single-node
+/// fallback (sized by `available_parallelism`). Testable against
+/// fixture directories — see the unit tests.
+pub fn probe_dir(dir: &Path) -> Topology {
+    let fallback =
+        || Topology::single_node(std::thread::available_parallelism().map_or(1, |n| n.get()));
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return fallback();
+    };
+    let mut nodes = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(id) = name.to_str().and_then(parse_node_dir_name) else {
+            continue;
+        };
+        let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+            continue;
+        };
+        let cpus = parse_cpu_list(&list);
+        if !cpus.is_empty() {
+            nodes.push(Node { id, cpus });
+        }
+    }
+    if nodes.is_empty() {
+        return fallback();
+    }
+    nodes.sort_by_key(|n| n.id);
+    Topology { nodes }
+}
+
+/// `"node12"` → `Some(12)`; anything else (including `"node"` or
+/// `"node1a"`) → `None`.
+fn parse_node_dir_name(name: &str) -> Option<usize> {
+    let digits = name.strip_prefix("node")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Parse the kernel's CPU list format: comma-separated single ids and
+/// inclusive ranges, e.g. `"0-3,8,10-11"` → `[0, 1, 2, 3, 8, 10, 11]`.
+/// Malformed pieces are skipped; the result is sorted and deduplicated.
+///
+/// ```
+/// assert_eq!(llama::numa::parse_cpu_list("0-2,5"), vec![0, 1, 2, 5]);
+/// assert!(llama::numa::parse_cpu_list("").is_empty());
+/// ```
+pub fn parse_cpu_list(list: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for piece in list.trim().split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        match piece.split_once('-') {
+            Some((lo, hi)) => {
+                if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
+                {
+                    if lo <= hi && hi - lo < 4096 {
+                        cpus.extend(lo..=hi);
+                    }
+                }
+            }
+            None => {
+                if let Ok(id) = piece.parse::<usize>() {
+                    cpus.push(id);
+                }
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// The NUMA placement policy, from `LLAMA_NUMA` (cached per process).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumaPolicy {
+    /// No pinning, no touch pass.
+    Off,
+    /// Pin pool workers round-robin across nodes (when there are ≥ 2)
+    /// and first-touch shard ranges from their owning workers.
+    FirstTouch,
+}
+
+/// `LLAMA_NUMA=off|firsttouch` (default `firsttouch` — it is a no-op on
+/// single-node machines). Malformed values log once and fall back to
+/// the default, mirroring `shard::thread_count`'s env handling.
+pub fn policy() -> NumaPolicy {
+    static POLICY: OnceLock<NumaPolicy> = OnceLock::new();
+    *POLICY.get_or_init(|| {
+        let raw = std::env::var("LLAMA_NUMA").ok();
+        match parse_policy(raw.as_deref()) {
+            Some(p) => p,
+            None => {
+                eprintln!(
+                    "llama: ignoring malformed LLAMA_NUMA={:?} (want off|firsttouch); \
+                     defaulting to firsttouch",
+                    raw.unwrap_or_default()
+                );
+                NumaPolicy::FirstTouch
+            }
+        }
+    })
+}
+
+/// Parse an `LLAMA_NUMA` value (`None` result = malformed; unset is the
+/// default). Kept separate from the environment so it is testable
+/// without process-global `setenv`.
+fn parse_policy(s: Option<&str>) -> Option<NumaPolicy> {
+    match s.map(str::trim) {
+        None | Some("") => Some(NumaPolicy::FirstTouch),
+        Some("firsttouch") | Some("first-touch") | Some("on") => Some(NumaPolicy::FirstTouch),
+        Some("off") | Some("0") => Some(NumaPolicy::Off),
+        Some(_) => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread pinning: hand-declared sched_setaffinity (no libc crate)
+// ---------------------------------------------------------------------------
+
+/// Pin the calling thread to `cpus`. Returns `true` when the kernel
+/// accepted the mask; `false` on failure, with an empty/oversized set,
+/// off Linux, or under Miri (foreign calls are unsupported there) — the
+/// caller treats a refusal as "run unpinned", never as an error.
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    if cpus.is_empty() {
+        return false;
+    }
+    pin_impl(cpus)
+}
+
+#[cfg(all(target_os = "linux", not(miri)))]
+fn pin_impl(cpus: &[usize]) -> bool {
+    /// Mirrors glibc's `cpu_set_t`: a 1024-bit mask.
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; 16],
+    }
+    extern "C" {
+        /// `sched_setaffinity(2)`; `pid == 0` targets the calling thread.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let mut set = CpuSet { bits: [0; 16] };
+    let mut any = false;
+    for &c in cpus {
+        if c < 1024 {
+            set.bits[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    // SAFETY: `set` is a valid, fully-initialized mask of the size we
+    // pass; the syscall does not retain the pointer past the call.
+    unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
+}
+
+#[cfg(not(all(target_os = "linux", not(miri))))]
+fn pin_impl(_cpus: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_list_parsing() {
+        assert_eq!(parse_cpu_list("0-3,8,10-11"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpu_list("0\n"), vec![0]);
+        assert_eq!(parse_cpu_list(" 4 - 6 , 2 "), vec![2, 4, 5, 6]);
+        assert_eq!(parse_cpu_list("7-5"), Vec::<usize>::new()); // inverted range
+        assert_eq!(parse_cpu_list("1,1,1"), vec![1]); // deduped
+        assert_eq!(parse_cpu_list("x,2,y-3"), vec![2]); // malformed pieces skipped
+        assert!(parse_cpu_list("").is_empty());
+    }
+
+    #[test]
+    fn node_dir_name_parsing() {
+        assert_eq!(parse_node_dir_name("node0"), Some(0));
+        assert_eq!(parse_node_dir_name("node17"), Some(17));
+        assert_eq!(parse_node_dir_name("node"), None);
+        assert_eq!(parse_node_dir_name("node1a"), None);
+        assert_eq!(parse_node_dir_name("cpu0"), None);
+        assert_eq!(parse_node_dir_name("has_cpu"), None);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(parse_policy(None), Some(NumaPolicy::FirstTouch));
+        assert_eq!(parse_policy(Some("")), Some(NumaPolicy::FirstTouch));
+        assert_eq!(parse_policy(Some("firsttouch")), Some(NumaPolicy::FirstTouch));
+        assert_eq!(parse_policy(Some("off")), Some(NumaPolicy::Off));
+        assert_eq!(parse_policy(Some("banana")), None);
+    }
+
+    /// Build a sysfs-shaped fixture tree: `dir/node<k>/cpulist`.
+    fn fixture(name: &str, nodes: &[(usize, &str)]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("llama-numa-{}-{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for (id, cpulist) in nodes {
+            let nd = dir.join(format!("node{id}"));
+            std::fs::create_dir_all(&nd).unwrap();
+            std::fs::write(nd.join("cpulist"), cpulist).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn probe_zero_nodes_falls_back_to_single_node() {
+        let dir = fixture("zero", &[]);
+        let topo = probe_dir(&dir);
+        assert_eq!(topo.nodes.len(), 1);
+        assert_eq!(topo.nodes[0].id, 0);
+        assert!(!topo.is_multi_node());
+        assert!(topo.cpu_count() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn probe_missing_dir_falls_back_to_single_node() {
+        let dir = std::env::temp_dir().join("llama-numa-definitely-missing");
+        let topo = probe_dir(&dir);
+        assert_eq!(topo.nodes.len(), 1);
+        assert!(topo.cpu_count() >= 1);
+    }
+
+    #[test]
+    fn probe_one_node() {
+        let dir = fixture("one", &[(0, "0-7\n")]);
+        let topo = probe_dir(&dir);
+        assert_eq!(topo.nodes.len(), 1);
+        assert_eq!(topo.nodes[0].cpus, (0..8).collect::<Vec<_>>());
+        assert!(!topo.is_multi_node());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn probe_two_nodes() {
+        let dir = fixture("two", &[(0, "0-3\n"), (1, "4-7\n")]);
+        let topo = probe_dir(&dir);
+        assert_eq!(topo.nodes.len(), 2);
+        assert!(topo.is_multi_node());
+        assert_eq!(topo.cpu_count(), 8);
+        assert_eq!(topo.nodes[0].cpus, vec![0, 1, 2, 3]);
+        assert_eq!(topo.nodes[1].cpus, vec![4, 5, 6, 7]);
+        // Round-robin slot assignment wraps.
+        assert_eq!(topo.node_of_slot(0).id, 0);
+        assert_eq!(topo.node_of_slot(1).id, 1);
+        assert_eq!(topo.node_of_slot(2).id, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn probe_nodes_with_id_holes_sorted_by_id() {
+        // Real machines can expose e.g. node0 + node2 (offlined node 1).
+        let dir = fixture("holes", &[(2, "8-15\n"), (0, "0-7\n")]);
+        let topo = probe_dir(&dir);
+        assert_eq!(topo.nodes.iter().map(|n| n.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(topo.nodes[1].cpus, (8..16).collect::<Vec<_>>());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn probe_skips_unparseable_nodes() {
+        let dir = fixture("bad", &[(0, "0-3\n"), (1, "garbage\n")]);
+        let topo = probe_dir(&dir);
+        // node1's cpulist parses to nothing -> dropped; node0 survives.
+        assert_eq!(topo.nodes.len(), 1);
+        assert_eq!(topo.nodes[0].id, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pinning_is_safe_to_call() {
+        // Outcome is platform-dependent (may be refused in sandboxes);
+        // the contract is "never panics, false on refusal".
+        let _ = pin_current_thread(&[0]);
+        assert!(!pin_current_thread(&[]));
+        assert!(!pin_current_thread(&[100_000])); // out of mask range
+    }
+
+    #[test]
+    fn live_probe_is_consistent() {
+        let topo = probe();
+        assert!(!topo.nodes.is_empty());
+        assert!(topo.cpu_count() >= 1);
+        for n in &topo.nodes {
+            assert!(!n.cpus.is_empty());
+        }
+    }
+}

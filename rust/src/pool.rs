@@ -1,0 +1,922 @@
+//! Persistent worker pool: amortized dispatch for the parallel engines.
+//!
+//! Before this module, every `View::par_for_each` /
+//! `View::par_transform_simd` / `copy::copy_view_par` call spawned fresh
+//! OS threads inside `std::thread::scope` and joined them before
+//! returning — hundreds of microseconds of `clone(2)`/`futex` traffic
+//! per *call*, which swamps the actual work on small and medium extents
+//! and throttles any caller that dispatches in a loop (the coordinator,
+//! the n-body step loop). A [`WorkerPool`] spawns its workers **once**:
+//! parked workers sit in a condvar wait on a generation-counted job
+//! queue, a dispatch pushes its jobs and bumps the generation, and the
+//! submitter runs job 0 itself — the same "shard 0 on the calling
+//! thread" shape the scoped path had, minus the per-call spawn/join.
+//!
+//! # Scoped-borrow-safe handoff
+//!
+//! The parallel engines hand workers closures that borrow stack data
+//! (`&f`, shard cursors holding `PhantomData<&'v mut View>` borrows,
+//! `&AtomicBool` gap flags). [`WorkerPool::run_scoped`] accepts exactly
+//! such non-`'static` closures: it erases their lifetime to queue them
+//! (the one `unsafe` in this module) and **does not return until every
+//! queued job has finished** — on the success path, on the panic path
+//! (a drop guard), and even when a job itself panics (workers catch the
+//! unwind, record the payload, and the submitter re-raises it after the
+//! batch drains). The borrows therefore strictly outlive every use, the
+//! same guarantee `std::thread::scope` provides.
+//!
+//! While waiting, the submitter *helps*: it drains queued jobs instead
+//! of parking. This keeps `run_scoped` deadlock-free even when jobs
+//! themselves dispatch on the same pool (every batch has at least one
+//! thread guaranteed to execute its jobs: its own submitter).
+//!
+//! # NUMA placement
+//!
+//! On a multi-node machine (and unless `LLAMA_NUMA=off`,
+//! [`crate::numa::policy`]), pool workers are pinned round-robin across
+//! nodes at spawn, queued jobs carry their slot's preferred node, and
+//! parked workers prefer jobs tagged for their own node (stealing
+//! others only when nothing local is queued). [`first_touch`] completes
+//! the story: it faults the pages of each worker slot's byte range in
+//! from that worker, so a subsequent sharded traversal whose shard `k`
+//! lands on slot `k` reads node-local memory. Placement is best-effort
+//! — single-node machines and refused `sched_setaffinity` degrade to
+//! plain pooling with zero overhead.
+//!
+//! # Which pool runs my dispatch?
+//!
+//! - The parallel entry points without a pool argument use the lazy
+//!   crate-global pool ([`global`], sized by
+//!   [`crate::shard::thread_count`]) — unless `LLAMA_POOL=off`
+//!   ([`pooled_dispatch`]) or under Miri (the global pool's threads
+//!   would outlive the interpreted test binary), where they fall back
+//!   to the per-call scoped spawn ([`run_scoped_spawn`]).
+//! - The `*_on` entry points (`View::par_for_each_on`, …) take an
+//!   explicit [`WorkerPool`] — the coordinator and the benches use
+//!   these for deterministic sizing.
+//!
+//! # Thread budgets
+//!
+//! A pool hands out advisory thread budgets through [`WorkerPool::lease`]:
+//! concurrent callers (coordinator workers) split the pool's capacity
+//! instead of each assuming they own all of it, and a single caller on
+//! an idle pool is granted the whole budget — one big job saturates the
+//! workers that batching small jobs would otherwise leave parked.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::blob::{blob_spans, BlobBytes, BlobStorage};
+use crate::numa::{self, NumaPolicy};
+
+/// A queued, lifetime-erased job plus its batch bookkeeping.
+struct Job {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    batch: Arc<Batch>,
+    /// Preferred NUMA node (pinned pools only); workers prefer matching
+    /// jobs and steal others when nothing local is queued.
+    node: Option<usize>,
+}
+
+/// Completion state of one `run_scoped` batch.
+struct Batch {
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+struct BatchState {
+    remaining: usize,
+    /// First panic payload observed by a worker running this batch's
+    /// jobs; re-raised on the submitting thread.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Batch {
+    fn new(jobs: usize) -> Arc<Batch> {
+        Arc::new(Batch {
+            state: Mutex::new(BatchState { remaining: jobs, panic: None }),
+            done: Condvar::new(),
+        })
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().remaining == 0
+    }
+
+    /// Block until every job of the batch has run; returns the first
+    /// panic payload, if any.
+    fn wait(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.panic.take()
+    }
+}
+
+/// The generation-counted job cell workers park on.
+struct JobCell {
+    jobs: VecDeque<Job>,
+    /// Bumped once per dispatch; lets stats distinguish "parked workers
+    /// woken N times" from "N threads spawned".
+    generation: u64,
+    shutdown: bool,
+}
+
+/// State shared between the pool handle and its workers.
+struct Shared {
+    cell: Mutex<JobCell>,
+    work: Condvar,
+}
+
+impl Shared {
+    /// Pop a job, preferring ones tagged for `my_node`; `None` when the
+    /// queue is empty.
+    fn take_job(cell: &mut JobCell, my_node: Option<usize>) -> Option<Job> {
+        if let Some(nd) = my_node {
+            if let Some(pos) =
+                cell.jobs.iter().position(|j| j.node.is_none() || j.node == Some(nd))
+            {
+                return cell.jobs.remove(pos);
+            }
+        }
+        cell.jobs.pop_front()
+    }
+
+    /// Run one job to completion, recording panics into its batch.
+    fn execute(job: Job) {
+        let Job { run, batch, .. } = job;
+        let result = catch_unwind(AssertUnwindSafe(run));
+        let mut st = batch.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            batch.done.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, my_node: Option<usize>, cpus: Vec<usize>) {
+    if !cpus.is_empty() {
+        // Refusal (sandbox, shrunk cgroup mask) just means "unpinned".
+        let _ = numa::pin_current_thread(&cpus);
+    }
+    loop {
+        let job = {
+            let mut cell = shared.cell.lock().unwrap();
+            loop {
+                if let Some(job) = Shared::take_job(&mut cell, my_node) {
+                    break job;
+                }
+                if cell.shutdown {
+                    return;
+                }
+                cell = shared.work.wait(cell).unwrap();
+            }
+        };
+        Shared::execute(job);
+    }
+}
+
+/// A persistent pool of parked worker threads (see the module docs).
+///
+/// Dropping the pool drains the queue, wakes the workers into shutdown,
+/// and joins them — explicit pools (benches, coordinator tests) clean
+/// up after themselves; the [`global`] pool lives for the process.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Preferred node per worker slot (empty when unpinned): slot `k`
+    /// of a dispatch is tagged `node_ids[(k - 1) % len]`… see
+    /// [`node_of_slot`](WorkerPool::node_of_slot).
+    node_ids: Vec<usize>,
+    /// Advisory thread budget not currently leased out.
+    available: AtomicUsize,
+    /// Worker threads ever spawned — stays equal to
+    /// [`worker_count`](WorkerPool::worker_count) for the pool's whole
+    /// life: workers are never respawned.
+    spawned: AtomicUsize,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` workers, pinned across NUMA nodes when the
+    /// process policy asks for it ([`crate::numa::policy`]) and the
+    /// machine has more than one node.
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool::with_pinning(threads, numa::policy() == NumaPolicy::FirstTouch)
+    }
+
+    /// Pool with explicit control over worker pinning (the benches
+    /// compare pinned and unpinned pools side by side). `pin` is only
+    /// effective on multi-node machines; elsewhere it is a no-op.
+    pub fn with_pinning(threads: usize, pin: bool) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            cell: Mutex::new(JobCell { jobs: VecDeque::new(), generation: 0, shutdown: false }),
+            work: Condvar::new(),
+        });
+        let topo = numa::probe();
+        let pin = pin && topo.is_multi_node();
+        let mut node_ids = Vec::new();
+        let mut workers = Vec::with_capacity(threads);
+        let spawned = AtomicUsize::new(0);
+        for slot in 0..threads {
+            let (node, cpus) = if pin {
+                let nd = topo.node_of_slot(slot);
+                node_ids.push(nd.id);
+                (Some(nd.id), nd.cpus.clone())
+            } else {
+                (None, Vec::new())
+            };
+            let shared = shared.clone();
+            spawned.fetch_add(1, Ordering::Relaxed);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("llama-pool-{slot}"))
+                    .spawn(move || worker_loop(shared, node, cpus))
+                    .expect("spawning pool worker"),
+            );
+        }
+        WorkerPool {
+            shared,
+            workers,
+            node_ids,
+            available: AtomicUsize::new(threads),
+            spawned,
+        }
+    }
+
+    /// Number of worker threads (fixed at construction).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Worker threads ever spawned — equals
+    /// [`worker_count`](WorkerPool::worker_count) because workers are
+    /// never respawned; tests assert this stays flat across dispatches.
+    pub fn spawned_total(&self) -> usize {
+        self.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Dispatches served so far — the job cell's generation counter
+    /// (each `run_scoped` that queues jobs, i.e. has ≥ 2 of them, bumps
+    /// it once).
+    pub fn dispatch_count(&self) -> u64 {
+        self.shared.cell.lock().unwrap().generation
+    }
+
+    /// Whether this pool's workers are NUMA-pinned.
+    pub fn is_pinned(&self) -> bool {
+        !self.node_ids.is_empty()
+    }
+
+    /// Preferred NUMA node for dispatch slot `slot` (slot 0 is the
+    /// submitting thread — unpinned, so `None`; queued slots map
+    /// round-robin onto the pinned workers).
+    fn node_of_slot(&self, slot: usize) -> Option<usize> {
+        if self.node_ids.is_empty() || slot == 0 {
+            None
+        } else {
+            Some(self.node_ids[(slot - 1) % self.node_ids.len()])
+        }
+    }
+
+    /// Run `jobs` to completion: job 0 on the calling thread, the rest
+    /// on the pool's workers. Returns only when every job has finished
+    /// (panics in any job are re-raised here after the batch drains) —
+    /// which is what makes non-`'static` borrows in the jobs sound, the
+    /// same guarantee `std::thread::scope` gives.
+    ///
+    /// ```
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    /// let pool = llama::pool::WorkerPool::with_pinning(2, false);
+    /// let sum = AtomicUsize::new(0); // borrowed, not 'static
+    /// pool.run_scoped((1..=4).map(|k| {
+    ///     let sum = &sum;
+    ///     move || { sum.fetch_add(k, Ordering::Relaxed); }
+    /// }).collect());
+    /// assert_eq!(sum.load(Ordering::Relaxed), 10);
+    /// ```
+    pub fn run_scoped<'env, F>(&self, mut jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        if jobs.is_empty() {
+            return;
+        }
+        let first = jobs.remove(0);
+        if jobs.is_empty() {
+            first();
+            return;
+        }
+        let batch = Batch::new(jobs.len());
+        {
+            let mut cell = self.shared.cell.lock().unwrap();
+            assert!(!cell.shutdown, "dispatch on a shut-down pool");
+            for (i, f) in jobs.into_iter().enumerate() {
+                // Queued job i is dispatch slot i + 1 (slot 0 = caller).
+                let node = self.node_of_slot(i + 1);
+                // SAFETY: the erased borrows stay live until this fn
+                // returns, and it returns only after the batch fully
+                // drains (wait below, plus the drop guard on the panic
+                // path) — see `erase_lifetime`.
+                let run = unsafe { erase_lifetime(f) };
+                cell.jobs.push_back(Job { run, batch: batch.clone(), node });
+            }
+            cell.generation += 1;
+        }
+        self.shared.work.notify_all();
+
+        // If `first` unwinds, the guard still drains the batch before
+        // the erased borrows go out of scope (payloads from pool jobs
+        // are dropped then — the caller's own panic wins).
+        let guard = DrainGuard { pool: self, batch: &batch };
+        first();
+        std::mem::forget(guard);
+        self.help_until_done(&batch);
+        if let Some(payload) = batch.wait() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Drain queued jobs (any batch's) while `batch` is unfinished —
+    /// the submitter works instead of parking, which both finishes
+    /// sooner on a loaded pool and guarantees progress when jobs
+    /// themselves dispatch on this pool.
+    fn help_until_done(&self, batch: &Batch) {
+        while !batch.is_done() {
+            let job = {
+                let mut cell = self.shared.cell.lock().unwrap();
+                Shared::take_job(&mut cell, None)
+            };
+            match job {
+                Some(job) => Shared::execute(job),
+                None => break, // nothing left to help with: park in wait()
+            }
+        }
+    }
+
+    /// Lease an advisory thread budget from the pool: up to `want`
+    /// threads (`0` = "as many as possible"), granted from what other
+    /// live leases have left, always at least 1. Dropping the lease
+    /// returns the budget. Concurrent callers (coordinator workers)
+    /// thereby split the pool instead of oversubscribing it, and a
+    /// single caller on an idle pool gets the whole budget.
+    pub fn lease(&self, want: usize) -> Lease<'_> {
+        let want = if want == 0 { self.worker_count() } else { want };
+        let mut avail = self.available.load(Ordering::Relaxed);
+        loop {
+            let take = avail.min(want);
+            match self.available.compare_exchange_weak(
+                avail,
+                avail - take,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Lease { pool: self, granted: take.max(1), reserved: take },
+                Err(now) => avail = now,
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut cell = self.shared.cell.lock().unwrap();
+            cell.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.worker_count())
+            .field("pinned", &self.is_pinned())
+            .field("dispatches", &self.dispatch_count())
+            .finish()
+    }
+}
+
+/// Drains the batch on unwind from the submitter's own job; forgotten
+/// on the success path.
+struct DrainGuard<'a> {
+    pool: &'a WorkerPool,
+    batch: &'a Batch,
+}
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        self.pool.help_until_done(self.batch);
+        let _ = self.batch.wait();
+    }
+}
+
+/// Erase a job closure's borrow lifetime so it can sit in the queue.
+///
+/// # Safety
+///
+/// The caller must not return (or otherwise invalidate any borrow
+/// captured by `f`) until the job has finished running. `run_scoped`
+/// discharges this by draining the batch on every exit path.
+unsafe fn erase_lifetime<'env, F>(f: F) -> Box<dyn FnOnce() + Send + 'static>
+where
+    F: FnOnce() + Send + 'env,
+{
+    let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+    // SAFETY: only the lifetime bound changes; fat-pointer layout is
+    // identical, and the caller upholds the liveness contract above.
+    unsafe {
+        std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send + 'static>>(
+            boxed,
+        )
+    }
+}
+
+/// An advisory thread budget held out of a pool; see
+/// [`WorkerPool::lease`]. Returned to the pool on drop.
+pub struct Lease<'p> {
+    pool: &'p WorkerPool,
+    granted: usize,
+    reserved: usize,
+}
+
+impl Lease<'_> {
+    /// The thread budget granted (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.granted
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        self.pool.available.fetch_add(self.reserved, Ordering::AcqRel);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global pool and the dispatch policy
+// ---------------------------------------------------------------------------
+
+/// The lazy crate-global pool: sized by [`crate::shard::thread_count`]
+/// (`LLAMA_THREADS`), constructed on first parallel dispatch, alive for
+/// the rest of the process.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(crate::shard::thread_count()))
+}
+
+/// Whether the implicit parallel entry points dispatch on the global
+/// pool (default) or fall back to per-call scoped spawn:
+/// `LLAMA_POOL=off|0` opts out, and Miri always uses the scoped path
+/// (a process-global pool's threads would still be running when the
+/// interpreted test binary exits, which Miri treats as an error;
+/// explicit pools are joined on drop and run under Miri fine).
+/// Parsed once per process; malformed values log one warning and keep
+/// the default (on) — same convention as `LLAMA_THREADS`/`LLAMA_NUMA`.
+pub fn pooled_dispatch() -> bool {
+    if cfg!(miri) {
+        return false;
+    }
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        let raw = std::env::var("LLAMA_POOL").ok();
+        match parse_pool_env(raw.as_deref()) {
+            Some(on) => on,
+            None => {
+                eprintln!(
+                    "llama: ignoring malformed LLAMA_POOL={:?} (want off|on); \
+                     pooled dispatch stays on",
+                    raw.unwrap_or_default()
+                );
+                true
+            }
+        }
+    })
+}
+
+/// Parse an `LLAMA_POOL` value (`None` result = malformed; unset is
+/// the default, on). Kept separate from the environment so it is
+/// testable without process-global `setenv`.
+fn parse_pool_env(s: Option<&str>) -> Option<bool> {
+    match s.map(str::trim) {
+        None | Some("") | Some("on") | Some("1") => Some(true),
+        Some("off") | Some("0") => Some(false),
+        Some(_) => None,
+    }
+}
+
+/// Run a batch of scoped jobs on the policy target: the [`global`] pool
+/// when [`pooled_dispatch`] is on, otherwise a per-call
+/// [`run_scoped_spawn`]. This is the single funnel the parallel engines
+/// (`shard::ViewShards::dispatch`, `copy::copy_view_par`) go through.
+pub fn run_jobs<'env, F>(jobs: Vec<F>)
+where
+    F: FnOnce() + Send + 'env,
+{
+    if pooled_dispatch() {
+        global().run_scoped(jobs);
+    } else {
+        run_scoped_spawn(jobs);
+    }
+}
+
+/// The pre-pool dispatch: job 0 on the calling thread, one fresh scoped
+/// thread per remaining job. Kept as the `LLAMA_POOL=off` / Miri path
+/// and as the baseline the `pool` bench measures the pool against.
+pub fn run_scoped_spawn<'env, F>(mut jobs: Vec<F>)
+where
+    F: FnOnce() + Send + 'env,
+{
+    if jobs.is_empty() {
+        return;
+    }
+    let first = jobs.remove(0);
+    if jobs.is_empty() {
+        first();
+        return;
+    }
+    std::thread::scope(|scope| {
+        for job in jobs {
+            scope.spawn(job);
+        }
+        first();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// First-touch page placement
+// ---------------------------------------------------------------------------
+
+/// [`first_touch_on`] against the crate-[`global`] pool — the pool the
+/// implicit parallel entry points dispatch on, so pages land where
+/// `par_for_each`/`par_transform_simd`/`copy_view_par` will read them.
+/// Returns without ever *constructing* the global pool when placement
+/// cannot happen — pooled dispatch off (`LLAMA_POOL=off`, Miri: those
+/// runs traverse on per-call scoped threads with no stable worker↔node
+/// identity), policy `off`, or a single-node machine — so a program
+/// that merely allocates with [`crate::blob::FirstTouchAlloc`] never
+/// spawns worker threads as a side effect.
+///
+/// Traversals that run on an *explicit* pool (`*_on` entry points)
+/// should place with [`first_touch_on`] against that same pool instead
+/// — the partition is per-pool, so touching with one pool and
+/// traversing with another mislays the ranges.
+pub fn first_touch<S: BlobStorage>(storage: &mut S) {
+    if !pooled_dispatch()
+        || numa::policy() != NumaPolicy::FirstTouch
+        || !numa::probe().is_multi_node()
+    {
+        return;
+    }
+    first_touch_on(global(), storage);
+}
+
+/// Fault `storage`'s pages in from the workers of `pool` that will own
+/// them: dispatch slot `k` touches byte range `[len·k/S, len·(k+1)/S)`
+/// of every blob (one volatile same-value read-modify-write per 4 KiB
+/// page — contents are **always** preserved, so calling this on
+/// already-filled storage is safe), where `S` = the pool's worker
+/// count. That matches the partition of a sharded traversal at the
+/// pool's full width: `S` shards, shard 0 on the calling thread
+/// (wherever it runs — slot 0 here is likewise the caller), shard `k`
+/// preferring the node of worker `k - 1` — so on a first-touch kernel
+/// each worker's shard lands on pages resident on that worker's node.
+/// Traversals at other shard counts get best-effort placement (see the
+/// ROADMAP follow-up). A no-op when the policy is `off` or when
+/// placement cannot help (single worker, or an unpinned pool — its
+/// workers have no node identity, so faulting pages in eagerly would
+/// cost a pass over memory for zero locality benefit).
+pub fn first_touch_on<S: BlobStorage>(pool: &WorkerPool, storage: &mut S) {
+    if numa::policy() != NumaPolicy::FirstTouch || !pool.is_pinned() {
+        return;
+    }
+    let slots = pool.worker_count();
+    if slots < 2 {
+        return;
+    }
+    let spans = blob_spans(storage);
+    let spans: &[BlobBytes] = &spans;
+    pool.run_scoped((0..slots).map(|k| move || touch_slot(spans, k, slots)).collect());
+}
+
+/// Touch one byte per page of slot `k`'s byte range of every span: a
+/// volatile read of the byte followed by a volatile write of the same
+/// value. Volatile so the (semantically no-op) store cannot be
+/// optimized out — the store is what makes the kernel commit the page
+/// on the toucher's node — and value-preserving so the touch is safe
+/// on storage that already holds data.
+fn touch_slot(spans: &[BlobBytes], k: usize, slots: usize) {
+    const PAGE: usize = 4096;
+    for span in spans {
+        let len = span.len() as u128;
+        let lo = (len * k as u128 / slots as u128) as usize;
+        let hi = (len * (k + 1) as u128 / slots as u128) as usize;
+        let mut off = lo;
+        while off < hi {
+            // SAFETY: slot byte ranges are disjoint by construction,
+            // the storage is exclusively borrowed by `first_touch_on`,
+            // and `run_scoped` keeps the spans alive until every slot
+            // is done — the `BlobBytes::bytes_mut` contract holds.
+            unsafe {
+                let byte = span.bytes_mut(off, 1).as_mut_ptr();
+                std::ptr::write_volatile(byte, std::ptr::read_volatile(byte));
+            }
+            off += PAGE;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn pool(n: usize) -> WorkerPool {
+        // Unpinned in tests: deterministic across machines and Miri.
+        WorkerPool::with_pinning(n, false)
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let p = pool(3);
+        let hits = AtomicUsize::new(0);
+        p.run_scoped(
+            (0..17)
+                .map(|_| {
+                    let hits = &hits;
+                    move || {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    fn empty_and_single_job_batches() {
+        let p = pool(2);
+        p.run_scoped(Vec::<fn()>::new());
+        let ran = AtomicUsize::new(0);
+        let ran_ref = &ran;
+        p.run_scoped(vec![move || {
+            ran_ref.fetch_add(1, Ordering::Relaxed);
+        }]);
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+        // Single-job batches run inline: no dispatch was needed.
+        assert_eq!(p.dispatch_count(), 0);
+    }
+
+    #[test]
+    fn reuses_workers_across_dispatches_without_respawn() {
+        let p = pool(4);
+        assert_eq!(p.spawned_total(), 4);
+        let sum = AtomicUsize::new(0);
+        for round in 0..25 {
+            p.run_scoped(
+                (0..6)
+                    .map(|j| {
+                        let sum = &sum;
+                        move || {
+                            sum.fetch_add(round * 6 + j, Ordering::Relaxed);
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), (0..150).sum());
+        assert_eq!(p.dispatch_count(), 25);
+        // The load-bearing claim: 25 dispatches, still the original 4
+        // threads — nothing respawned.
+        assert_eq!(p.spawned_total(), 4);
+        assert_eq!(p.worker_count(), 4);
+    }
+
+    #[test]
+    fn jobs_borrow_stack_data() {
+        let p = pool(2);
+        let mut data = vec![0u64; 64];
+        {
+            // Disjoint &mut chunks into a stack-owned Vec — the borrow
+            // pattern the sharded engine relies on.
+            let chunks: Vec<&mut [u64]> = data.chunks_mut(16).collect();
+            p.run_scoped(
+                chunks
+                    .into_iter()
+                    .enumerate()
+                    .map(|(k, chunk)| {
+                        move || {
+                            for (i, slot) in chunk.iter_mut().enumerate() {
+                                *slot = (k * 100 + i) as u64;
+                            }
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(data[0], 0);
+        assert_eq!(data[17], 101);
+        assert_eq!(data[63], 315);
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let p = pool(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            p.run_scoped(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+                Box::new(|| panic!("job exploded")),
+                Box::new(|| {}),
+            ]);
+        }));
+        let payload = result.expect_err("panic must propagate to the submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "job exploded");
+        // The pool took the hit and keeps serving.
+        let ok = AtomicUsize::new(0);
+        p.run_scoped(
+            (0..2)
+                .map(|_| {
+                    let ok = &ok;
+                    move || {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_pool() {
+        let p = Arc::new(pool(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = p.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    let local = AtomicUsize::new(0);
+                    p.run_scoped(
+                        (0..5)
+                            .map(|_| {
+                                let local = &local;
+                                move || {
+                                    local.fetch_add(1, Ordering::Relaxed);
+                                }
+                            })
+                            .collect::<Vec<_>>(),
+                    );
+                    total.fetch_add(local.load(Ordering::Relaxed), Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 10 * 5);
+    }
+
+    #[test]
+    fn nested_dispatch_from_inside_a_job_completes() {
+        // Jobs that themselves dispatch on the same pool must not
+        // deadlock: the inner submitter helps drain the queue.
+        let p = Arc::new(pool(2));
+        let hits = AtomicUsize::new(0);
+        let hits_ref = &hits;
+        let inner_pool = p.clone();
+        p.run_scoped(
+            (0..3)
+                .map(|_| {
+                    let inner_pool = inner_pool.clone();
+                    move || {
+                        inner_pool.run_scoped(
+                            (0..3)
+                                .map(|_| {
+                                    let hits_ref = &hits_ref;
+                                    move || {
+                                        hits_ref.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                })
+                                .collect::<Vec<_>>(),
+                        );
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn lease_budget_splits_and_returns() {
+        let p = pool(4);
+        let a = p.lease(0);
+        assert_eq!(a.threads(), 4);
+        let b = p.lease(3);
+        assert_eq!(b.threads(), 1); // nothing left, floor of 1
+        drop(a);
+        let c = p.lease(3);
+        assert_eq!(c.threads(), 3);
+        let d = p.lease(0);
+        assert_eq!(d.threads(), 1);
+        drop((b, c, d));
+        assert_eq!(p.lease(0).threads(), 4); // everything returned
+    }
+
+    #[test]
+    fn pool_env_parsing() {
+        assert_eq!(parse_pool_env(None), Some(true));
+        assert_eq!(parse_pool_env(Some("")), Some(true));
+        assert_eq!(parse_pool_env(Some("on")), Some(true));
+        assert_eq!(parse_pool_env(Some("1")), Some(true));
+        assert_eq!(parse_pool_env(Some(" off ")), Some(false));
+        assert_eq!(parse_pool_env(Some("0")), Some(false));
+        assert_eq!(parse_pool_env(Some("OFF")), None); // malformed: warn + default
+    }
+
+    #[test]
+    fn scoped_spawn_fallback_runs_jobs() {
+        let hits = AtomicUsize::new(0);
+        run_scoped_spawn(
+            (0..5)
+                .map(|_| {
+                    let hits = &hits;
+                    move || {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn first_touch_preserves_contents() {
+        // Whatever the policy/topology resolves to (no-op on single
+        // node, volatile RMW touch on NUMA machines), placement must
+        // be invisible to contents — zeroed or already filled.
+        use crate::blob::{BlobAlloc, HeapAlloc};
+        let mut s = HeapAlloc.alloc(&[3 * 4096 + 17, 100]);
+        first_touch(&mut s);
+        assert!(s.blob(0).iter().all(|&b| b == 0));
+        s.blob_mut(0).iter_mut().enumerate().for_each(|(i, b)| *b = i as u8);
+        first_touch(&mut s);
+        assert!(s.blob(0).iter().enumerate().all(|(i, &b)| b == i as u8));
+
+        let p = pool(3); // unpinned: first_touch_on must be a no-op
+        first_touch_on(&p, &mut s);
+        assert!(s.blob(0).iter().enumerate().all(|(i, &b)| b == i as u8));
+        assert_eq!(p.dispatch_count(), 0);
+    }
+
+    #[test]
+    fn touch_slot_is_value_preserving() {
+        // The touch itself (exercised directly — CI machines are
+        // single-node, so the pinned path never runs there): every
+        // slot's volatile RMW leaves a filled buffer bit-identical.
+        use crate::blob::blob_spans;
+        use crate::blob::{BlobAlloc, HeapAlloc};
+        let mut s = HeapAlloc.alloc(&[2 * 4096 + 123]);
+        s.blob_mut(0)
+            .iter_mut()
+            .enumerate()
+            .for_each(|(i, b)| *b = (i * 7 % 251) as u8);
+        let spans = blob_spans(&mut s);
+        for k in 0..4 {
+            touch_slot(&spans, k, 4);
+        }
+        drop(spans);
+        assert!(s.blob(0).iter().enumerate().all(|(i, &b)| b == (i * 7 % 251) as u8));
+    }
+
+    #[test]
+    fn touch_slot_ranges_cover_disjointly() {
+        // Pure-arithmetic check of the slot partition: ranges tile
+        // [0, len) without overlap for awkward lengths.
+        for len in [0usize, 1, 4095, 4096, 4097, 3 * 4096 + 123] {
+            for slots in [2usize, 3, 5] {
+                let mut prev_hi = 0;
+                for k in 0..slots {
+                    let lo = (len as u128 * k as u128 / slots as u128) as usize;
+                    let hi = (len as u128 * (k + 1) as u128 / slots as u128) as usize;
+                    assert_eq!(lo, prev_hi);
+                    prev_hi = hi;
+                }
+                assert_eq!(prev_hi, len);
+            }
+        }
+    }
+}

@@ -4,15 +4,19 @@
 //!
 //! [`ViewShards`] partitions a `&mut View` along the **outermost** array
 //! extent into disjoint [`ShardCursor`]s; [`View::par_for_each`] and
-//! [`View::par_transform_simd`] fan those cursors out over
-//! `std::thread::scope` workers. This drives the hardware the way the
-//! paper's evaluation does (and "LLAMA: The Low-Level Abstraction For
-//! Memory Access" benchmarks as the layout × parallelism matrix): vector
-//! units on the innermost dimension, cores across the outer one.
+//! [`View::par_transform_simd`] fan those cursors out over the
+//! persistent worker pool ([`crate::pool`] — parked workers woken per
+//! dispatch; `LLAMA_POOL=off` falls back to per-call
+//! `std::thread::scope` spawns, and the `*_scoped_with` / `*_on` entry
+//! points pick the dispatch target explicitly). This drives the
+//! hardware the way the paper's evaluation does (and "LLAMA: The
+//! Low-Level Abstraction For Memory Access" benchmarks as the layout ×
+//! parallelism matrix): vector units on the innermost dimension, cores
+//! across the outer one.
 //!
 //! The worker count comes from the `LLAMA_THREADS` environment variable
 //! (a positive integer), defaulting to `available_parallelism`
-//! ([`thread_count`]).
+//! ([`thread_count`]; the value is parsed once per process and cached).
 //!
 //! ## Why this is safe — the `shard_bounds` proof
 //!
@@ -77,10 +81,12 @@
 //! n-body j-loop reads `pos`/`mass` while storing only `vel`).
 
 use std::marker::PhantomData;
+use std::sync::OnceLock;
 
 use crate::blob::{blob_spans, BlobBytes, BlobStorage, ShardBlobs};
 use crate::extents::Extents;
 use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::pool::WorkerPool;
 use crate::record::RecordDim;
 use crate::view::{Chunk, RecordRefMut, View};
 
@@ -95,8 +101,27 @@ pub fn thread_count() -> usize {
 /// `available_parallelism` when `LLAMA_THREADS` is unset or invalid
 /// (used by the benches, which default their parallel rows to 4).
 pub fn thread_count_or(default: usize) -> usize {
-    let env = std::env::var("LLAMA_THREADS").ok();
-    parse_thread_count(env.as_deref()).unwrap_or(default)
+    cached_thread_env().unwrap_or(default)
+}
+
+/// `LLAMA_THREADS`, parsed **once per process** (`OnceLock`): the
+/// parallel entry points consult the thread count on every hot
+/// dispatch, and a `getenv` + parse per call is measurable noise there.
+/// A malformed value logs one warning (instead of silently falling
+/// back) and then behaves as unset.
+fn cached_thread_env() -> Option<usize> {
+    static CACHE: OnceLock<Option<usize>> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        let raw = std::env::var("LLAMA_THREADS").ok();
+        let parsed = parse_thread_count(raw.as_deref());
+        if let (Some(raw), None) = (&raw, parsed) {
+            eprintln!(
+                "llama: ignoring malformed LLAMA_THREADS={raw:?} (want a positive \
+                 integer); using the default thread count"
+            );
+        }
+        parsed
+    })
 }
 
 /// Parse an `LLAMA_THREADS` value: a positive integer, anything else is
@@ -237,26 +262,71 @@ where
             .collect()
     }
 
-    /// Run `f` once per shard, each on its own scoped worker thread
-    /// (shard 0 on the calling thread). Returns when every shard is done.
+    /// Run `f` once per shard — shard 0 on the calling thread, the rest
+    /// on the crate-global worker pool (or per-call scoped threads when
+    /// `LLAMA_POOL=off`; see [`crate::pool::run_jobs`]). Returns when
+    /// every shard is done.
     pub fn dispatch<F>(self, f: F)
     where
         F: Fn(ShardCursor<'v, R, M, S>) + Sync,
         S: Send + Sync,
     {
-        let mut cursors = self.cursors();
-        let rest = cursors.split_off(1);
-        let first = cursors.pop();
-        std::thread::scope(|scope| {
-            for cur in rest {
-                let f = &f;
-                scope.spawn(move || f(cur));
-            }
-            if let Some(cur) = first {
-                f(cur);
-            }
-        });
+        self.dispatch_to(Target::Policy, f);
     }
+
+    /// [`dispatch`](ViewShards::dispatch) pinned to the pre-pool
+    /// per-call scoped-spawn path. Semantically identical; kept for
+    /// `LLAMA_POOL=off` parity tests and as the baseline the `pool`
+    /// bench measures amortized dispatch against.
+    pub fn dispatch_scoped<F>(self, f: F)
+    where
+        F: Fn(ShardCursor<'v, R, M, S>) + Sync,
+        S: Send + Sync,
+    {
+        self.dispatch_to(Target::Scoped, f);
+    }
+
+    /// [`dispatch`](ViewShards::dispatch) on an explicit pool (the
+    /// coordinator's leased-budget kernels and the benches use this).
+    pub fn dispatch_on<F>(self, pool: &WorkerPool, f: F)
+    where
+        F: Fn(ShardCursor<'v, R, M, S>) + Sync,
+        S: Send + Sync,
+    {
+        self.dispatch_to(Target::On(pool), f);
+    }
+
+    /// The one dispatch body behind the three public variants: build
+    /// one job per shard (job 0 always executes on the submitting
+    /// thread) and hand the batch to the target.
+    fn dispatch_to<F>(self, target: Target<'_>, f: F)
+    where
+        F: Fn(ShardCursor<'v, R, M, S>) + Sync,
+        S: Send + Sync,
+    {
+        let f = &f;
+        let jobs: Vec<_> = self.cursors().into_iter().map(|cur| move || f(cur)).collect();
+        match target {
+            Target::Policy => crate::pool::run_jobs(jobs),
+            Target::Scoped => crate::pool::run_scoped_spawn(jobs),
+            Target::On(pool) => pool.run_scoped(jobs),
+        }
+    }
+}
+
+/// Where a parallel entry point sends its shard jobs — the single
+/// point of divergence between the `_with` / `_scoped_with` / `_on`
+/// variants (everything else — splitting, alignment, serial fallback —
+/// is shared).
+#[derive(Clone, Copy)]
+enum Target<'p> {
+    /// The policy default: global pool, or scoped spawn under
+    /// `LLAMA_POOL=off`/Miri ([`crate::pool::run_jobs`]).
+    Policy,
+    /// Per-call scoped spawn, unconditionally.
+    Scoped,
+    /// An explicit pool.
+    On(&'p WorkerPool),
 }
 
 /// A single whole-range cursor over `view` — the serial fallback of the
@@ -372,8 +442,36 @@ where
     where
         F: Fn(&mut RecordRefMut<'_, R, M, ShardBlobs>) + Sync,
     {
+        self.par_for_each_to(Target::Policy, threads, f);
+    }
+
+    /// [`par_for_each_with`](View::par_for_each_with) forced onto the
+    /// per-call scoped-spawn dispatch (no worker pool) — the baseline
+    /// the `pool` bench compares amortized dispatch against.
+    pub fn par_for_each_scoped_with<F>(&mut self, threads: usize, f: F)
+    where
+        F: Fn(&mut RecordRefMut<'_, R, M, ShardBlobs>) + Sync,
+    {
+        self.par_for_each_to(Target::Scoped, threads, f);
+    }
+
+    /// [`par_for_each_with`](View::par_for_each_with) dispatched on an
+    /// explicit [`WorkerPool`] (e.g. one sized by a coordinator thread
+    /// lease) instead of the crate-global pool.
+    pub fn par_for_each_on<F>(&mut self, pool: &WorkerPool, threads: usize, f: F)
+    where
+        F: Fn(&mut RecordRefMut<'_, R, M, ShardBlobs>) + Sync,
+    {
+        self.par_for_each_to(Target::On(pool), threads, f);
+    }
+
+    /// The one split-or-fallback body behind the three variants above.
+    fn par_for_each_to<F>(&mut self, target: Target<'_>, threads: usize, f: F)
+    where
+        F: Fn(&mut RecordRefMut<'_, R, M, ShardBlobs>) + Sync,
+    {
         if let Some(shards) = ViewShards::split(self, threads) {
-            shards.dispatch(|mut cur| cur.for_each(&f));
+            shards.dispatch_to(target, |mut cur| cur.for_each(&f));
             return;
         }
         whole_cursor(self).for_each(f);
@@ -420,12 +518,63 @@ where
     where
         F: Fn(&mut Chunk<'_, R, M, ShardBlobs, N>) + Sync,
     {
+        // SAFETY: forwarded contract.
+        unsafe { self.par_transform_simd_to::<N, F>(Target::Policy, threads, f) }
+    }
+
+    /// [`par_transform_simd_with`](View::par_transform_simd_with) forced
+    /// onto the per-call scoped-spawn dispatch (no worker pool) — the
+    /// baseline the benches compare amortized dispatch against.
+    ///
+    /// # Safety
+    ///
+    /// As for [`par_transform_simd`](View::par_transform_simd).
+    pub unsafe fn par_transform_simd_scoped_with<const N: usize, F>(&mut self, threads: usize, f: F)
+    where
+        F: Fn(&mut Chunk<'_, R, M, ShardBlobs, N>) + Sync,
+    {
+        // SAFETY: forwarded contract.
+        unsafe { self.par_transform_simd_to::<N, F>(Target::Scoped, threads, f) }
+    }
+
+    /// [`par_transform_simd_with`](View::par_transform_simd_with)
+    /// dispatched on an explicit [`WorkerPool`].
+    ///
+    /// # Safety
+    ///
+    /// As for [`par_transform_simd`](View::par_transform_simd).
+    pub unsafe fn par_transform_simd_on<const N: usize, F>(
+        &mut self,
+        pool: &WorkerPool,
+        threads: usize,
+        f: F,
+    ) where
+        F: Fn(&mut Chunk<'_, R, M, ShardBlobs, N>) + Sync,
+    {
+        // SAFETY: forwarded contract.
+        unsafe { self.par_transform_simd_to::<N, F>(Target::On(pool), threads, f) }
+    }
+
+    /// The one split-align-or-fallback body behind the three variants
+    /// above.
+    ///
+    /// # Safety
+    ///
+    /// As for [`par_transform_simd`](View::par_transform_simd).
+    unsafe fn par_transform_simd_to<const N: usize, F>(
+        &mut self,
+        target: Target<'_>,
+        threads: usize,
+        f: F,
+    ) where
+        F: Fn(&mut Chunk<'_, R, M, ShardBlobs, N>) + Sync,
+    {
         assert!(N > 0, "lane count must be positive");
         let align = if <M::Extents as Extents>::RANK == 1 { N } else { 1 };
         if let Some(shards) = ViewShards::split_aligned(self, threads, align) {
             // SAFETY: forwarded contract — the shards themselves are
             // disjoint by the `shard_bounds` proof.
-            shards.dispatch(|mut cur| unsafe { cur.transform_simd::<N, _>(&f) });
+            shards.dispatch_to(target, |mut cur| unsafe { cur.transform_simd::<N, _>(&f) });
             return;
         }
         // SAFETY: single whole-range cursor, no concurrency — every
@@ -573,6 +722,42 @@ mod tests {
                 serial.get::<f64, _>(&[i], p::x).to_bits(),
                 par.get::<f64, _>(&[i], p::x).to_bits()
             );
+        }
+    }
+
+    #[test]
+    fn scoped_explicit_pool_and_policy_dispatch_agree() {
+        // The three dispatch targets (policy = global pool by default,
+        // forced scoped spawn, explicit pool) are pure plumbing: same
+        // shards, same walkers, same values.
+        let pool = crate::pool::WorkerPool::with_pinning(3, false);
+        let mut a = alloc_view(SoA::<P, _>::new((Dyn(41u32),)), &HeapAlloc);
+        let mut b = alloc_view(SoA::<P, _>::new((Dyn(41u32),)), &HeapAlloc);
+        let mut c = alloc_view(SoA::<P, _>::new((Dyn(41u32),)), &HeapAlloc);
+        a.par_for_each_with(4, |r| {
+            let i = r.index()[0];
+            r.set(p::q, i as i32 * 5);
+        });
+        b.par_for_each_scoped_with(4, |r| {
+            let i = r.index()[0];
+            r.set(p::q, i as i32 * 5);
+        });
+        c.par_for_each_on(&pool, 4, |r| {
+            let i = r.index()[0];
+            r.set(p::q, i as i32 * 5);
+        });
+        // SAFETY: the kernel touches only its own chunk's records.
+        unsafe {
+            c.par_transform_simd_on::<4, _>(&pool, 3, |ch| {
+                let q: crate::simd::Simd<i32, 4> = ch.load(p::q);
+                ch.store(p::q, q + q);
+            });
+        }
+        for i in 0..41 {
+            let want = i as i32 * 5;
+            assert_eq!(a.get::<i32, _>(&[i], p::q), want);
+            assert_eq!(b.get::<i32, _>(&[i], p::q), want);
+            assert_eq!(c.get::<i32, _>(&[i], p::q), want * 2);
         }
     }
 

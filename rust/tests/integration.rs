@@ -227,11 +227,12 @@ fn simd_roundtrip_through_all_simd_layouts() {
 #[test]
 fn coordinator_runs_mixed_native_jobs() {
     use llama::coordinator::{Backend, Config, Coordinator, JobSpec, Layout};
-    let mut c = Coordinator::start(Config { workers: 3, max_batch: 4, engine: None });
+    let mut c =
+        Coordinator::start(Config { workers: 3, max_batch: 4, ..Config::default() });
     let mut expected = 0;
     for layout in [Layout::Aos, Layout::SoaMb, Layout::Aosoa] {
         for backend in [Backend::NativeScalar, Backend::NativeSimd] {
-            c.submit(JobSpec { id: 0, layout, backend, n: 128, steps: 2, seed: 5 });
+            c.submit(JobSpec { id: 0, layout, backend, n: 128, steps: 2, seed: 5, threads: 0 });
             expected += 1;
         }
     }

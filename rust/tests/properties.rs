@@ -754,8 +754,109 @@ fn prop_par_bitpack_int_matches_serial_at_byte_misaligned_sizes() {
 }
 
 #[test]
+fn prop_pooled_dispatch_bit_identical_with_worker_reuse() {
+    // The implicit parallel entry points (`par_for_each_with`,
+    // `par_transform_simd_with`, `copy_view_par`) route through the
+    // persistent global pool: across many calls they must keep
+    // producing serial-identical bytes while the pool never respawns a
+    // worker — the whole point of amortized dispatch. (Skipped when
+    // pooling is off: `LLAMA_POOL=off` or Miri, where the entry points
+    // use the per-call scoped spawn that other properties cover.)
+    use llama::blob::BlobStorage;
+    use llama::copy::{copy_view_par, field_wise_copy};
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::soa::SoA;
+    use llama::simd::Simd;
+    use llama::view::{Chunk, RecordRefMut};
+
+    if !llama::pool::pooled_dispatch() {
+        return;
+    }
+
+    fn rec_op<M: MemoryAccess<R>, S: BlobStorage>(rec: &mut RecordRefMut<'_, R, M, S>) {
+        let a: f64 = rec.get(r::a);
+        let c: u32 = rec.get(r::c);
+        rec.set(r::a, a * 1.5 - 2.0);
+        rec.set(r::c, c ^ 0x5A5A_5A5A);
+    }
+
+    fn chunk_op<M: llama::mapping::SimdAccess<R>, S: BlobStorage>(
+        c: &mut Chunk<'_, R, M, S, 4>,
+    ) {
+        let b: Simd<f32, 4> = c.load(r::b);
+        c.store(r::b, b * b - b);
+    }
+
+    fn run(n: usize, seed: u64, threads: Option<usize>) -> Vec<u64> {
+        let mut v = alloc_view(SoA::<R, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            v.set(&[i], r::a, rng.f64_range(-1e6, 1e6));
+            v.set(&[i], r::b, rng.f64_range(-1e3, 1e3) as f32);
+            v.set(&[i], r::c, rng.next_u64() as u32);
+            v.set(&[i], r::d, rng.range_i64(-20000, 20000) as i16);
+        }
+        match threads {
+            Some(t) => {
+                v.par_for_each_with(t, rec_op);
+                // SAFETY: chunk_op touches only its own chunk's records.
+                unsafe { v.par_transform_simd_with::<4, _>(t, chunk_op) };
+            }
+            None => {
+                v.for_each(rec_op);
+                v.transform_simd::<4>(chunk_op);
+            }
+        }
+        // Route the result through the pooled parallel copy as well.
+        let mut copied = alloc_view(AoSoA::<R, _, 8>::new((Dyn(n as u32),)), &HeapAlloc);
+        match threads {
+            Some(t) => {
+                let _ = copy_view_par(&v, &mut copied, t);
+            }
+            None => field_wise_copy(&v, &mut copied),
+        }
+        (0..n)
+            .flat_map(|i| {
+                [
+                    copied.get::<f64, _>(&[i], r::a).to_bits(),
+                    copied.get::<f32, _>(&[i], r::b).to_bits() as u64,
+                    copied.get::<u32, _>(&[i], r::c) as u64,
+                    copied.get::<i16, _>(&[i], r::d) as u16 as u64,
+                ]
+            })
+            .collect()
+    }
+
+    // Force the pool into existence before snapshotting its stats, so
+    // lazy construction is not mistaken for churn.
+    let _ = run(16, 1, Some(2));
+    let pool = llama::pool::global();
+    let workers0 = pool.worker_count();
+    let spawned0 = pool.spawned_total();
+    let dispatches0 = pool.dispatch_count();
+    assert_eq!(spawned0, workers0);
+
+    forall("pooled-reuse", 8, |g| (g.range(2, 140), g.next_u64()), |&(n, seed)| {
+        let serial = run(n, seed, None);
+        [1usize, 2, 4, 7].iter().all(|&t| run(n, seed, Some(t)) == serial)
+    });
+
+    // The load-bearing half: many dispatches later, the original
+    // workers are still the only ones that ever existed.
+    assert_eq!(pool.spawned_total(), spawned0, "pool respawned workers");
+    assert_eq!(pool.worker_count(), workers0);
+    assert!(pool.dispatch_count() > dispatches0, "parallel calls bypassed the pool");
+}
+
+#[test]
 fn prop_coordinator_completes_every_job_exactly_once() {
+    // Exactly-once and FIFO-per-batch-key must survive the pooled
+    // kernel routing: jobs now lease thread budgets from a shared
+    // worker pool (including budgets > 1 on large jobs), and none of
+    // that may change completion or dispatch-order semantics.
     use llama::coordinator::{Backend, Config, Coordinator, JobSpec, Layout};
+    use llama::pool::WorkerPool;
+    use std::sync::Arc;
     forall(
         "coordinator-complete",
         6,
@@ -767,19 +868,50 @@ fn prop_coordinator_completes_every_job_exactly_once() {
         },
         |&(workers, max_batch, jobs, seed)| {
             let mut rng = Rng::new(seed);
-            let mut c = Coordinator::start(Config { workers, max_batch, engine: None });
+            let pool = Arc::new(WorkerPool::with_pinning(3, false));
+            let mut c = Coordinator::start(Config {
+                workers,
+                max_batch,
+                pool: Some(pool),
+                ..Config::default()
+            });
+            let mut specs = Vec::new();
             for _ in 0..jobs {
                 let layout = [Layout::Aos, Layout::SoaMb, Layout::Aosoa][rng.range(0, 2)];
                 let backend =
                     [Backend::NativeScalar, Backend::NativeSimd][rng.range(0, 1)];
-                c.submit(JobSpec { id: 0, layout, backend, n: 32, steps: 1, seed: 1 });
+                // Mix serial, capped, and "whole pool" budget requests.
+                let threads = [1usize, 2, 0][rng.range(0, 2)];
+                let mut s =
+                    JobSpec { id: 0, layout, backend, n: 32, steps: 1, seed: 1, threads };
+                s.id = c.submit(s.clone());
+                specs.push(s);
             }
             let results = c.finish();
-            // exactly once, ids 0..jobs, all succeeded
+            // exactly once, ids 0..jobs, all succeeded, budgets >= 1
             let mut ids: Vec<u64> = results.iter().map(|x| x.id).collect();
             ids.sort_unstable();
-            ids == (0..jobs as u64).collect::<Vec<_>>()
-                && results.iter().all(|x| x.error.is_none())
+            if ids != (0..jobs as u64).collect::<Vec<_>>()
+                || !results.iter().all(|x| x.error.is_none() && x.threads >= 1)
+            {
+                return false;
+            }
+            // FIFO per batch key: results are sorted by id, so for jobs
+            // sharing a key the dispatcher's batch ids must be
+            // non-decreasing in submission order.
+            for key in specs.iter().map(|s| s.batch_key()) {
+                let batches: Vec<u64> = results
+                    .iter()
+                    .filter(|r| {
+                        specs.iter().any(|s| s.id == r.id && s.batch_key() == key)
+                    })
+                    .map(|r| r.batch_id)
+                    .collect();
+                if batches.windows(2).any(|w| w[0] > w[1]) {
+                    return false;
+                }
+            }
+            true
         },
     );
 }
