@@ -1,0 +1,273 @@
+//! Distributed n-body over the LLAMA wire transport.
+//!
+//! A parent process keeps the authoritative particle state in an **AoS**
+//! view and drives the simulation; ≥2 worker *processes* (spawned from
+//! this same binary, connected over a Unix domain socket) each own a
+//! disjoint shard of the particle range and compute with a **different
+//! mapping** than the parent — even workers decode into SoA (multi-blob),
+//! odd workers into AoSoA⟨8⟩. Per step:
+//!
+//! 1. the parent [`encode`]s the full state once and broadcasts the
+//!    [`WireMsg`] to every worker ([`WireMsg::write_to`]),
+//! 2. each worker [`decode_into`]s its own layout (run-based relayout —
+//!    never the field-wise fallback), integrates its `[lo, hi)` range
+//!    with the exact serial accumulation order, and ships the shard back
+//!    as a wire message,
+//! 3. the parent adopts each shard zero-copy ([`decode_adopt`]) and
+//!    writes it into the AoS state.
+//!
+//! Because every worker reads the same pre-step state and the per-particle
+//! arithmetic matches `views::update_scalar`/`move_scalar` op for op, the
+//! distributed result is **bit-identical** to the single-process serial
+//! run — the example asserts `max |Δpos| == 0.0`.
+//!
+//! Run: `cargo run --example distributed_nbody -- [n] [steps] [workers]`
+
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::process::Command;
+
+use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+use llama::copy::CopyStrategy;
+use llama::extents::{Dyn, Extents};
+use llama::mapping::MemoryAccess;
+use llama::nbody::views::{self, AosoaMap, Ext1, SoaMbMap};
+use llama::nbody::{
+    init_particles, max_pos_delta, particle, pp_interaction, total_energy, Particle, TIMESTEP,
+};
+use llama::transport::{decode_adopt, decode_into, encode, WireMsg};
+use llama::view::View;
+
+/// Worker `w`'s record range out of `n` particles split `nworkers` ways.
+/// Parent and workers compute this independently; the formula must agree.
+fn shard_range(w: usize, nworkers: usize, n: usize) -> (usize, usize) {
+    (w * n / nworkers, (w + 1) * n / nworkers)
+}
+
+/// Copy one particle record between two views (possibly different
+/// mappings) — the field list written out once.
+fn copy_particle<MS, SS, MD, SD>(
+    src: &View<Particle, MS, SS>,
+    i: usize,
+    dst: &mut View<Particle, MD, SD>,
+    j: usize,
+) where
+    MS: MemoryAccess<Particle>,
+    MS::Extents: Extents<ArrayIndex = [usize; 1]>,
+    SS: BlobStorage,
+    MD: MemoryAccess<Particle>,
+    MD::Extents: Extents<ArrayIndex = [usize; 1]>,
+    SD: BlobStorage,
+{
+    dst.set_t([j], particle::pos::x, src.get_t([i], particle::pos::x));
+    dst.set_t([j], particle::pos::y, src.get_t([i], particle::pos::y));
+    dst.set_t([j], particle::pos::z, src.get_t([i], particle::pos::z));
+    dst.set_t([j], particle::vel::x, src.get_t([i], particle::vel::x));
+    dst.set_t([j], particle::vel::y, src.get_t([i], particle::vel::y));
+    dst.set_t([j], particle::vel::z, src.get_t([i], particle::vel::z));
+    dst.set_t([j], particle::mass, src.get_t([i], particle::mass));
+}
+
+/// Update + move for records `[lo, hi)` of `v`, reading the whole view.
+///
+/// The per-particle arithmetic (j-order of the accumulation, `vel += acc`,
+/// then `pos += vel·dt` field by field) mirrors `views::update_scalar` /
+/// `views::move_scalar` exactly, so a union of disjoint ranges over the
+/// same pre-step state is bit-identical to the serial pass — the update
+/// stores only its own record's `vel` and the move only its own `pos`.
+fn step_range<M, S>(v: &mut View<Particle, M, S>, lo: usize, hi: usize)
+where
+    M: MemoryAccess<Particle>,
+    M::Extents: Extents<ArrayIndex = [usize; 1]>,
+    S: BlobStorage,
+{
+    let n = v.count();
+    for i in lo..hi {
+        let pix = v.get_t([i], particle::pos::x);
+        let piy = v.get_t([i], particle::pos::y);
+        let piz = v.get_t([i], particle::pos::z);
+        let mut acc = (0.0f32, 0.0f32, 0.0f32);
+        for j in 0..n {
+            pp_interaction(
+                pix,
+                piy,
+                piz,
+                v.get_t([j], particle::pos::x),
+                v.get_t([j], particle::pos::y),
+                v.get_t([j], particle::pos::z),
+                v.get_t([j], particle::mass),
+                &mut acc,
+            );
+        }
+        let vx = v.get_t([i], particle::vel::x);
+        let vy = v.get_t([i], particle::vel::y);
+        let vz = v.get_t([i], particle::vel::z);
+        v.set_t([i], particle::vel::x, vx + acc.0);
+        v.set_t([i], particle::vel::y, vy + acc.1);
+        v.set_t([i], particle::vel::z, vz + acc.2);
+    }
+    for i in lo..hi {
+        let px = v.get_t([i], particle::pos::x);
+        let py = v.get_t([i], particle::pos::y);
+        let pz = v.get_t([i], particle::pos::z);
+        let vx = v.get_t([i], particle::vel::x);
+        let vy = v.get_t([i], particle::vel::y);
+        let vz = v.get_t([i], particle::vel::z);
+        v.set_t([i], particle::pos::x, px + vx * TIMESTEP);
+        v.set_t([i], particle::pos::y, py + vy * TIMESTEP);
+        v.set_t([i], particle::pos::z, pz + vz * TIMESTEP);
+    }
+}
+
+/// Worker body, generic over the worker's compute mapping: per step,
+/// receive the full state, relayout into `make`'s mapping, integrate the
+/// shard, ship the shard back on the wire.
+fn worker_loop<M, F>(
+    stream: &mut UnixStream,
+    widx: usize,
+    nworkers: usize,
+    steps: usize,
+    make: &F,
+) -> std::io::Result<()>
+where
+    M: MemoryAccess<Particle>,
+    M::Extents: Extents<ArrayIndex = [usize; 1]>,
+    F: Fn(Ext1) -> M,
+{
+    for _ in 0..steps {
+        let msg = WireMsg::read_from(stream)?;
+        let n = msg.record_count();
+        let (lo, hi) = shard_range(widx, nworkers, n);
+        let mut v = alloc_view(make((Dyn(n as u32),)), &HeapAlloc);
+        let strategy = decode_into(msg, &mut v).expect("worker: bad state header");
+        // Wire SoA → SoA/AoSoA always has byte-contiguous runs on both
+        // sides; the scalar fallback would mean the fast path regressed.
+        assert_ne!(strategy, CopyStrategy::FieldWise, "relayout fell back to field-wise");
+        step_range(&mut v, lo, hi);
+        let mut shard = alloc_view(make((Dyn((hi - lo) as u32),)), &HeapAlloc);
+        for k in 0..(hi - lo) {
+            copy_particle(&v, lo + k, &mut shard, k);
+        }
+        encode(&shard).write_to(stream)?;
+    }
+    Ok(())
+}
+
+fn worker_main(sock: &str, widx: usize, nworkers: usize, steps: usize) -> std::io::Result<()> {
+    let mut stream = UnixStream::connect(sock)?;
+    // Hello: identify ourselves so the parent maps streams to shard
+    // ranges regardless of connection order.
+    stream.write_all(&[widx as u8])?;
+    if widx % 2 == 0 {
+        worker_loop(&mut stream, widx, nworkers, steps, &|e| SoaMbMap::new(e))
+    } else {
+        worker_loop(&mut stream, widx, nworkers, steps, &|e| AosoaMap::new(e))
+    }
+}
+
+fn layout_name(widx: usize) -> &'static str {
+    if widx % 2 == 0 {
+        "SoA<MultiBlob>"
+    } else {
+        "AoSoA<8>"
+    }
+}
+
+fn main() -> std::io::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    if args.get(1).map(String::as_str) == Some("--worker") {
+        let widx: usize = args[3].parse().expect("worker index");
+        let nworkers: usize = args[4].parse().expect("worker count");
+        let steps: usize = args[5].parse().expect("step count");
+        return worker_main(&args[2], widx, nworkers, steps);
+    }
+
+    let n: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(96);
+    let steps: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(3);
+    let nworkers: usize = args.get(3).and_then(|a| a.parse().ok()).unwrap_or(3).clamp(2, 8);
+    println!("distributed n-body: n={n}, {steps} steps, {nworkers} workers (parent layout AoS)");
+
+    let init = init_particles(n, 7);
+    println!("initial energy: {:.6}", total_energy(&init));
+
+    // Serial reference: the stock single-process engine on an AoS view.
+    let mut serial = views::make_aos_view(&init);
+    for _ in 0..steps {
+        views::update_scalar(&mut serial);
+        views::move_scalar(&mut serial);
+    }
+    let serial_snap = views::snapshot_view(&serial);
+
+    // Rendezvous socket in the temp dir, keyed by pid.
+    let sock = std::env::temp_dir().join(format!("llama-dnbody-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let listener = UnixListener::bind(&sock)?;
+
+    // Spawn the workers from this same binary and collect their hellos.
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    for w in 0..nworkers {
+        let (lo, hi) = shard_range(w, nworkers, n);
+        println!("  worker {w}: range [{lo},{hi})  layout {}", layout_name(w));
+        children.push(
+            Command::new(&exe)
+                .arg("--worker")
+                .arg(&sock)
+                .arg(w.to_string())
+                .arg(nworkers.to_string())
+                .arg(steps.to_string())
+                .spawn()?,
+        );
+    }
+    let mut slots: Vec<Option<UnixStream>> = (0..nworkers).map(|_| None).collect();
+    for _ in 0..nworkers {
+        let (mut s, _) = listener.accept()?;
+        let mut hello = [0u8; 1];
+        s.read_exact(&mut hello)?;
+        slots[hello[0] as usize] = Some(s);
+    }
+    let mut streams: Vec<UnixStream> =
+        slots.into_iter().map(|s| s.expect("every worker said hello")).collect();
+
+    // The distributed run against the same initial state.
+    let mut state = views::make_aos_view(&init);
+    let mut broadcast_strategy = CopyStrategy::FieldWise;
+    let mut frame_bytes = 0usize;
+    for _ in 0..steps {
+        let msg = encode(&state);
+        broadcast_strategy = msg.strategy;
+        frame_bytes = msg.frame_len();
+        for s in &mut streams {
+            msg.write_to(s)?;
+        }
+        for (w, s) in streams.iter_mut().enumerate() {
+            let (lo, hi) = shard_range(w, nworkers, n);
+            let reply = WireMsg::read_from(s)?;
+            assert_eq!(reply.record_count(), hi - lo, "worker {w} returned a wrong-sized shard");
+            // Shard payloads are already in the canonical wire layout:
+            // adopt the bytes without relayout, then write into the AoS
+            // state record-wise.
+            let shard = decode_adopt::<Particle, Ext1>(reply, (Dyn((hi - lo) as u32),))
+                .expect("parent: bad shard header");
+            for k in 0..(hi - lo) {
+                copy_particle(&shard, k, &mut state, lo + k);
+            }
+        }
+    }
+    drop(streams);
+    for mut c in children {
+        let status = c.wait()?;
+        assert!(status.success(), "a worker exited with {status}");
+    }
+    let _ = std::fs::remove_file(&sock);
+
+    println!("state broadcast: strategy {broadcast_strategy:?}, frame {frame_bytes} bytes/step");
+
+    let dist_snap = views::snapshot_view(&state);
+    let delta = max_pos_delta(&serial_snap, &dist_snap);
+    println!("final energy:   {:.6}", total_energy(&dist_snap));
+    println!("max |Δpos| distributed vs serial: {delta:e} (0 = bit-identical)");
+    assert_eq!(delta, 0.0, "distributed result diverged from the serial reference");
+    println!("OK: {nworkers} workers x {steps} steps, mixed layouts, bit-identical to serial");
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Experiment E11 — view transport: the wire encode/decode cost ladder.
+//!
+//! The serving tier ships views between processes as a versioned wire
+//! message (`llama::transport`): a header describing record layout,
+//! extents, and mapping identity plus one packed field-major payload
+//! blob. Encoding is a layout-aware copy into the wire mapping, decoding
+//! either adopts the payload bytes directly (zero relayout) or streams
+//! them into the receiver's mapping through the run-based copy engine.
+//!
+//! Rows record that ladder: run-based encode vs the field-wise fallback,
+//! zero-copy adopt vs run-based relayout (serial and parallel) vs the
+//! scalar fallback, and the raw header+payload framing. Every decode row
+//! pays one payload clone per iteration (messages are consumed); the
+//! cost is identical across rows, so the ladder's shape is unaffected.
+//!
+//! Run: `cargo bench --bench transport [-- N]`  (default N=524288;
+//! LLAMA_BENCH_SMOKE=1 shrinks to a smoke run; LLAMA_THREADS overrides
+//! the parallel rows' worker count, default 4; LLAMA_BENCH_JSON=<dir>
+//! writes BENCH_transport.json)
+
+use llama::bench::{black_box, smoke, Bencher};
+use llama::blob::{alloc_view, HeapAlloc};
+use llama::copy::CopyStrategy;
+use llama::extents::Dyn;
+use llama::mapping::aos::AoS;
+use llama::mapping::aosoa::AoSoA;
+use llama::mapping::soa::{MultiBlob, SoA};
+use llama::transport::{decode_adopt, decode_into, decode_into_par, encode, encode_par, WireMsg};
+
+llama::record! {
+    pub struct Particle, mod particle {
+        pos: { x: f32, y: f32, z: f32 },
+        vel: { x: f32, y: f32, z: f32 },
+        mass: f32,
+    }
+}
+
+fn main() {
+    let arg_n: Option<usize> =
+        std::env::args().skip(1).find(|a| !a.starts_with('-')).and_then(|a| a.parse().ok());
+    let fast = smoke();
+    let n = arg_n.unwrap_or(if fast { 4096 } else { 1 << 19 });
+    let threads = llama::shard::thread_count_or(4);
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
+    let e = (Dyn(n as u32),);
+
+    println!("view transport: n={n} records ({} B payload), {threads}-thread rows\n", n * 28);
+
+    let mut soa = alloc_view(SoA::<Particle, _, MultiBlob>::new(e), &HeapAlloc);
+    let mut aos = alloc_view(AoS::<Particle, _>::new(e), &HeapAlloc);
+    for i in 0..n {
+        soa.set_t([i], particle::pos::x, i as f32);
+        soa.set_t([i], particle::pos::y, -(i as f32));
+        soa.set_t([i], particle::pos::z, 0.5 * i as f32);
+        soa.set_t([i], particle::vel::x, 1.0);
+        soa.set_t([i], particle::vel::y, -1.0);
+        soa.set_t([i], particle::vel::z, 0.0);
+        soa.set_t([i], particle::mass, 1.0 + (i % 7) as f32);
+        aos.set_t([i], particle::mass, 1.0 + (i % 7) as f32);
+    }
+
+    // Strategy guards, as in the copy bench: every row must exercise the
+    // path its name claims — a silent fallback fails CI smoke instead of
+    // corrupting the trajectory.
+    assert_eq!(encode(&soa).strategy, CopyStrategy::FieldRuns);
+    b.bench("encode SoA-MB -> wire  runs serial", n as u64, || {
+        black_box(encode(&soa).payload.len());
+    });
+    {
+        let strat = encode_par(&soa, threads).strategy;
+        if threads >= 2 && n >= threads {
+            assert_eq!(strat, CopyStrategy::FieldRunsPar);
+        }
+        b.bench(&format!("encode SoA-MB -> wire  runs {threads}T"), n as u64, || {
+            black_box(encode_par(&soa, threads).payload.len());
+        });
+    }
+    assert_eq!(encode(&aos).strategy, CopyStrategy::FieldWise);
+    b.bench("encode AoS    -> wire  field-wise", n as u64, || {
+        black_box(encode(&aos).payload.len());
+    });
+
+    let msg = encode(&soa);
+
+    // Zero-copy adopt: header validation + taking ownership of the
+    // payload bytes. The per-iteration msg clone IS the row's memcpy —
+    // adopt itself moves no payload bytes.
+    b.bench("decode wire -> wire    adopt", n as u64, || {
+        let v = decode_adopt::<Particle, _>(msg.clone(), e).expect("adopt");
+        black_box(v.get_t([n - 1], particle::mass));
+    });
+    {
+        let mut dst = alloc_view(SoA::<Particle, _, MultiBlob>::new(e), &HeapAlloc);
+        assert_eq!(decode_into(msg.clone(), &mut dst).expect("decode"), CopyStrategy::FieldRuns);
+        b.bench("decode wire -> SoA-MB  runs serial", n as u64, || {
+            black_box(decode_into(msg.clone(), &mut dst).expect("decode"));
+        });
+    }
+    {
+        let mut dst = alloc_view(AoSoA::<Particle, _, 8>::new(e), &HeapAlloc);
+        assert_eq!(decode_into(msg.clone(), &mut dst).expect("decode"), CopyStrategy::FieldRuns);
+        b.bench("decode wire -> AoSoA8  runs serial", n as u64, || {
+            black_box(decode_into(msg.clone(), &mut dst).expect("decode"));
+        });
+    }
+    {
+        let mut dst = alloc_view(AoSoA::<Particle, _, 8>::new(e), &HeapAlloc);
+        let strat = decode_into_par(msg.clone(), &mut dst, threads).expect("decode");
+        if threads >= 2 && n >= threads {
+            assert_eq!(strat, CopyStrategy::FieldRunsPar);
+        }
+        b.bench(&format!("decode wire -> AoSoA8  runs {threads}T"), n as u64, || {
+            black_box(decode_into_par(msg.clone(), &mut dst, threads).expect("decode"));
+        });
+    }
+    {
+        let mut dst = alloc_view(AoS::<Particle, _>::new(e), &HeapAlloc);
+        assert_eq!(decode_into(msg.clone(), &mut dst).expect("decode"), CopyStrategy::FieldWise);
+        b.bench("decode wire -> AoS     field-wise", n as u64, || {
+            black_box(decode_into(msg.clone(), &mut dst).expect("decode"));
+        });
+    }
+
+    // Raw framing: serialize header + payload into a reused buffer and
+    // parse it back (the cost a socket adds on top of encode/decode).
+    {
+        let mut buf = Vec::with_capacity(msg.frame_len());
+        b.bench("frame  write + parse   header+payload", n as u64, || {
+            buf.clear();
+            msg.write_to(&mut buf).expect("write frame");
+            let parsed = WireMsg::read_from(&mut buf.as_slice()).expect("parse frame");
+            black_box(parsed.payload.len());
+        });
+    }
+
+    println!(
+        "{}",
+        b.render_table("view transport (per record)", Some("decode wire -> AoS     field-wise"))
+    );
+
+    // Schema guard (smoke mode, i.e. CI): the measurement-key set of
+    // BENCH_transport.json must stay diffable across commits.
+    if fast {
+        let mut want: Vec<String> = vec![
+            "encode SoA-MB -> wire  runs serial".into(),
+            format!("encode SoA-MB -> wire  runs {threads}T"),
+            "encode AoS    -> wire  field-wise".into(),
+            "decode wire -> wire    adopt".into(),
+            "decode wire -> SoA-MB  runs serial".into(),
+            "decode wire -> AoSoA8  runs serial".into(),
+            format!("decode wire -> AoSoA8  runs {threads}T"),
+            "decode wire -> AoS     field-wise".into(),
+            "frame  write + parse   header+payload".into(),
+        ];
+        want.sort();
+        let mut got: Vec<String> = b.results().iter().map(|m| m.name.clone()).collect();
+        got.sort();
+        assert_eq!(got, want, "transport-table measurement keys drifted");
+        println!("smoke schema guard OK: {} transport keys", got.len());
+    }
+
+    let written = llama::bench::emit_json(
+        "transport",
+        &[
+            ("n", n.to_string()),
+            ("threads", threads.to_string()),
+            ("smoke", (fast as u8).to_string()),
+        ],
+        &[("transport", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
+    if let Some(path) = written {
+        println!("perf trajectory written to {}", path.display());
+    }
+}

@@ -111,6 +111,24 @@ pub struct HeapStorage {
     blobs: Vec<Vec<u8>>,
 }
 
+impl HeapStorage {
+    /// Storage adopting existing buffers as blobs, without copying.
+    ///
+    /// The byte-adoption path of the view transport
+    /// ([`crate::transport::decode_adopt`]): wire payload bytes become
+    /// view storage directly. [`crate::view::View::from_parts`] validates
+    /// the sizes against the mapping.
+    pub fn from_blobs(blobs: Vec<Vec<u8>>) -> Self {
+        HeapStorage { blobs }
+    }
+
+    /// Take the blob buffers back out, without copying (the encode-side
+    /// counterpart of [`from_blobs`](HeapStorage::from_blobs)).
+    pub fn into_blobs(self) -> Vec<Vec<u8>> {
+        self.blobs
+    }
+}
+
 impl BlobStorage for HeapStorage {
     #[inline]
     fn blob_count(&self) -> usize {

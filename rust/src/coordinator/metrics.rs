@@ -1,10 +1,12 @@
-//! Coordinator metrics registry: queue/exec timings, batch stats.
+//! Coordinator metrics registry: queue/exec timings, batch stats,
+//! admission-control counters (queue depth, rejects, admission waits).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Aggregated coordinator metrics (all counters monotonically increase).
+/// Aggregated coordinator metrics (counters monotonically increase;
+/// `queue_depth` is a gauge).
 #[derive(Debug, Default)]
 pub struct Metrics {
     jobs_submitted: AtomicU64,
@@ -14,12 +16,56 @@ pub struct Metrics {
     queue_ns_total: AtomicU64,
     exec_ns_total: AtomicU64,
     batch_sizes: Mutex<Vec<usize>>,
+    // Admission control (see `crate::coordinator::Ingest`).
+    queue_depth: AtomicU64,
+    queue_depth_max: AtomicU64,
+    rejected_full: AtomicU64,
+    rejected_deadline: AtomicU64,
+    rejected_quota: AtomicU64,
+    admission_waits: AtomicU64,
+    admission_wait_ns: AtomicU64,
 }
 
 impl Metrics {
     /// Record a submission.
     pub fn on_submit(&self) {
         self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an admitted job with the queue depth after its enqueue.
+    pub fn on_enqueue(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+        self.queue_depth_max.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Record a dispatched (dequeued) job with the depth after removal.
+    pub fn on_dequeue(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Record a full-queue rejection ([`Admission::Reject`]).
+    ///
+    /// [`Admission::Reject`]: crate::coordinator::Admission::Reject
+    pub fn on_reject_full(&self) {
+        self.rejected_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an admission deadline expiry ([`Admission::Block`]).
+    ///
+    /// [`Admission::Block`]: crate::coordinator::Admission::Block
+    pub fn on_reject_deadline(&self) {
+        self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a per-client quota rejection.
+    pub fn on_reject_quota(&self) {
+        self.rejected_quota.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record time a submitter spent blocked waiting for admission.
+    pub fn on_admission_wait(&self, wait: Duration) {
+        self.admission_waits.fetch_add(1, Ordering::Relaxed);
+        self.admission_wait_ns.fetch_add(wait.as_nanos() as u64, Ordering::Relaxed);
     }
 
     /// Record a dispatched batch of `size` jobs.
@@ -78,18 +124,56 @@ impl Metrics {
         Duration::from_nanos(self.exec_ns_total.load(Ordering::Relaxed) / done)
     }
 
+    /// Current ingestion queue depth (gauge).
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of the ingestion queue depth.
+    pub fn max_queue_depth(&self) -> u64 {
+        self.queue_depth_max.load(Ordering::Relaxed)
+    }
+
+    /// Rejected submissions as `(queue_full, deadline, quota)`.
+    pub fn rejected(&self) -> (u64, u64, u64) {
+        (
+            self.rejected_full.load(Ordering::Relaxed),
+            self.rejected_deadline.load(Ordering::Relaxed),
+            self.rejected_quota.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Total rejected submissions across all reasons.
+    pub fn rejected_total(&self) -> u64 {
+        let (f, d, q) = self.rejected();
+        f + d + q
+    }
+
+    /// Mean time submitters spent blocked for admission (blocking
+    /// submissions only; 0 when none blocked).
+    pub fn mean_admission_wait(&self) -> Duration {
+        let waits = self.admission_waits.load(Ordering::Relaxed).max(1);
+        Duration::from_nanos(self.admission_wait_ns.load(Ordering::Relaxed) / waits)
+    }
+
     /// Render a summary block.
     pub fn render(&self) -> String {
         let (s, c, f) = self.job_counts();
+        let (rf, rd, rq) = self.rejected();
         format!(
             "jobs: {s} submitted, {c} completed, {f} failed\n\
              batches: {} (mean size {:.2}, max {})\n\
-             mean queue {:?}, mean exec {:?}\n",
+             queue: depth {} (max {}), rejected {} (full {rf}, deadline {rd}, quota {rq})\n\
+             mean queue {:?}, mean exec {:?}, mean admission wait {:?}\n",
             self.batches(),
             self.mean_batch_size(),
             self.max_batch_size(),
+            self.queue_depth(),
+            self.max_queue_depth(),
+            self.rejected_total(),
             self.mean_queue_time(),
             self.mean_exec_time(),
+            self.mean_admission_wait(),
         )
     }
 }

@@ -8,13 +8,16 @@
 //! aggregates metrics. Python never appears on this path.
 //!
 //! ```text
-//! submit() ─► queue ─► dispatcher (batches by batch_key, FIFO)
-//!                          │
-//!              ┌───────────┼───────────┐
-//!           worker 0    worker 1    worker W   (std threads)
-//!              │            │           │
-//!         native views   native     PJRT Engine (shared, compiled once)
-//!              │            │
+//! Ingest::submit*() ─► bounded queue ─► dispatcher (batches by batch_key, FIFO)
+//!  (admission control:      │
+//!   reject-with-retry /     │
+//!   block-with-deadline,    │
+//!   per-client quotas)      │
+//!              ┌────────────┼───────────┐
+//!           worker 0     worker 1    worker W   (std threads)
+//!              │             │           │
+//!         native views    native     PJRT Engine (shared, compiled once)
+//!              │             │
 //!         parallel kernels on a leased thread budget
 //!         (crate worker pool; one big job saturates idle workers)
 //! ```
@@ -29,18 +32,30 @@
 //! bit-identical to the serial ones, so routing through them is a pure
 //! wall-clock change.
 //!
-//! Invariants (checked by `rust/tests/properties.rs`):
-//! - every submitted job completes exactly once (success or error);
+//! Submissions pass through the bounded **ingestion queue** ([`ingest`]):
+//! callers obtain a clonable [`Ingest`] handle and choose the admission
+//! behavior on a full queue — fail fast with a retry-after hint or block
+//! up to a deadline ([`Admission`]) — with optional per-client quotas on
+//! queue occupancy. Queue depth, rejects, and admission waits land in
+//! [`Metrics`]. See `docs/SERVING.md` for the semantics.
+//!
+//! Invariants (checked by `rust/tests/properties.rs` and
+//! `rust/tests/ingestion.rs`):
+//! - every *admitted* job completes exactly once (success or error);
 //! - batches never exceed `max_batch` and never mix batch keys;
-//! - jobs with the same batch key dispatch in FIFO order.
+//! - jobs with the same batch key dispatch in FIFO order;
+//! - queue depth never exceeds [`Config::queue_capacity`].
 
+pub mod ingest;
 pub mod job;
 pub mod metrics;
 
+pub use ingest::{Admission, Ingest, SubmitError};
 pub use job::{Backend, JobResult, JobSpec, Layout};
 pub use metrics::Metrics;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use ingest::Queued;
+
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -69,43 +84,60 @@ pub struct Config {
     /// [`JobSpec::threads`] is 0 (`0` = lease as much of the pool as
     /// is uncommitted — one big job on an idle pool saturates it).
     pub native_threads: usize,
+    /// Capacity of the bounded ingestion queue: jobs admitted but not
+    /// yet dispatched. Full-queue behavior is per-submission
+    /// ([`Admission`]).
+    pub queue_capacity: usize,
+    /// Max ingestion-queue slots any single client may occupy at once
+    /// via [`Ingest::submit_from`] (0 = no per-client cap). Fairness
+    /// between *running* jobs is separate: thread budgets are leased
+    /// per job from the worker pool.
+    pub client_quota: usize,
 }
 
 impl Default for Config {
     fn default() -> Self {
-        Config { workers: 2, max_batch: 8, engine: None, pool: None, native_threads: 0 }
+        Config {
+            workers: 2,
+            max_batch: 8,
+            engine: None,
+            pool: None,
+            native_threads: 0,
+            queue_capacity: 1024,
+            client_quota: 0,
+        }
     }
-}
-
-struct Queued {
-    spec: JobSpec,
-    submitted_at: Instant,
 }
 
 /// The layout-lab coordinator. See module docs.
 pub struct Coordinator {
-    submit_tx: Option<mpsc::Sender<Queued>>,
+    ingest: Ingest,
     results_rx: mpsc::Receiver<JobResult>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
-    next_id: AtomicU64,
-    submitted: usize,
 }
 
 impl Coordinator {
     /// Start the worker pool and dispatcher.
     pub fn start(config: Config) -> Self {
         let metrics = Arc::new(Metrics::default());
-        let (submit_tx, submit_rx) = mpsc::channel::<Queued>();
+        let ingest = Ingest::new(
+            config.queue_capacity,
+            config.client_quota,
+            config.workers.max(1),
+            metrics.clone(),
+        );
         let (batch_tx, batch_rx) = mpsc::channel::<(u64, Vec<Queued>)>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let (results_tx, results_rx) = mpsc::channel::<JobResult>();
 
-        // Dispatcher: drain the queue, group runs of equal batch_key (FIFO,
-        // up to max_batch), hand batches to workers.
+        // Dispatcher: the queue's single consumer (preserving FIFO
+        // dispatch order), grouping runs of equal batch_key up to
+        // max_batch and handing batches to workers.
         let max_batch = config.max_batch.max(1);
         let dmetrics = metrics.clone();
+        let dingest = ingest.clone();
         let dispatcher = std::thread::spawn(move || {
             let mut batch_id = 0u64;
             let mut pending: Option<Queued> = None;
@@ -113,22 +145,22 @@ impl Coordinator {
                 // Block for the first job of the next batch.
                 let first = match pending.take() {
                     Some(q) => q,
-                    None => match submit_rx.recv() {
-                        Ok(q) => q,
-                        Err(_) => break, // channel closed: drain done
+                    None => match dingest.next_job() {
+                        Some(q) => q,
+                        None => break, // queue closed: drain done
                     },
                 };
                 let key = first.spec.batch_key();
                 let mut batch = vec![first];
                 // Greedily take more of the same key without blocking.
                 while batch.len() < max_batch {
-                    match submit_rx.try_recv() {
-                        Ok(q) if q.spec.batch_key() == key => batch.push(q),
-                        Ok(q) => {
+                    match dingest.try_next_job() {
+                        Some(q) if q.spec.batch_key() == key => batch.push(q),
+                        Some(q) => {
                             pending = Some(q);
                             break;
                         }
-                        Err(_) => break,
+                        None => break,
                     }
                 }
                 dmetrics.on_batch(batch.len());
@@ -188,29 +220,23 @@ impl Coordinator {
         }
         drop(results_tx);
 
-        Coordinator {
-            submit_tx: Some(submit_tx),
-            results_rx,
-            dispatcher: Some(dispatcher),
-            workers,
-            metrics,
-            next_id: AtomicU64::new(0),
-            submitted: 0,
-        }
+        Coordinator { ingest, results_rx, dispatcher: Some(dispatcher), workers, metrics }
     }
 
-    /// Submit a job; returns its assigned id.
-    pub fn submit(&mut self, mut spec: JobSpec) -> u64 {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        spec.id = id;
-        self.metrics.on_submit();
-        self.submitted += 1;
-        self.submit_tx
-            .as_ref()
-            .expect("coordinator already shut down")
-            .send(Queued { spec, submitted_at: Instant::now() })
-            .expect("dispatcher alive");
-        id
+    /// Submit a job, blocking without a deadline while the queue is
+    /// full; returns its assigned id.
+    ///
+    /// Thin wrapper over [`Ingest::submit`]. For fail-fast admission,
+    /// deadlines, or per-client accounting, take an [`Coordinator::ingest`]
+    /// handle and pick an [`Admission`] policy explicitly.
+    pub fn submit(&mut self, spec: JobSpec) -> u64 {
+        self.ingest.submit(spec).expect("coordinator ingestion queue closed")
+    }
+
+    /// A clonable submission handle feeding this coordinator's bounded
+    /// ingestion queue; safe to hand to concurrent producer threads.
+    pub fn ingest(&self) -> Ingest {
+        self.ingest.clone()
     }
 
     /// The metrics registry.
@@ -218,12 +244,17 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Close the queue, wait for all submitted jobs, return their results
+    /// Close the queue, wait for all admitted jobs, return their results
     /// sorted by id.
+    ///
+    /// Outstanding [`Ingest`] handles fail with [`SubmitError::Closed`]
+    /// from here on; quiesce producer threads first if every submission
+    /// must be admitted.
     pub fn finish(mut self) -> Vec<JobResult> {
-        drop(self.submit_tx.take()); // close queue -> dispatcher drains
-        let mut results = Vec::with_capacity(self.submitted);
-        for _ in 0..self.submitted {
+        self.ingest.close(); // dispatcher drains the queue and exits
+        let admitted = self.ingest.admitted() as usize; // exact after close
+        let mut results = Vec::with_capacity(admitted);
+        for _ in 0..admitted {
             match self.results_rx.recv() {
                 Ok(r) => results.push(r),
                 Err(_) => break,
@@ -237,6 +268,14 @@ impl Coordinator {
         }
         results.sort_by_key(|r| r.id);
         results
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Abandoning a coordinator without `finish` must not leave the
+        // dispatcher parked on the queue forever.
+        self.ingest.close();
     }
 }
 

@@ -101,9 +101,10 @@
 //!   sites write `get::<f32, _>(...)`). Type and rank agreement are only
 //!   debug-asserted on the scalar path (`at`/`at_mut` assert the rank at
 //!   runtime). Metadata-driven code
-//!   ([`view::load_as_f64`], [`copy`]) legitimately lives here; the
-//!   `RecordRef::get_selection_f64` escape hatch is deprecated in favor
-//!   of the typed sub-record projection [`view::RecordRef::sub`].
+//!   ([`view::load_as_f64`], [`copy`]) legitimately lives here; for
+//!   selection-wide reads use the typed sub-record projection
+//!   [`view::RecordRef::sub`] (the deprecated `get_selection_f64` escape
+//!   hatch was removed in 0.2).
 //!
 //! The crate layers (paper section → module):
 //! - §2 compile-time array extents → [`extents`]
@@ -122,7 +123,9 @@
 //!   [`numa`] (`LLAMA_NUMA`, [`blob::FirstTouchAlloc`])
 //! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
 //! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
-//!   (PJRT behind the `pjrt` cargo feature)
+//!   (PJRT behind the `pjrt` cargo feature), with bounded, quota-aware job
+//!   ingestion → [`coordinator::Ingest`] and layout-aware view transport
+//!   across processes → [`transport`] (`examples/distributed_nbody.rs`)
 //!
 //! # Reference documentation
 //!
@@ -134,6 +137,10 @@
 //!   checked under Miri in CI), the `par_for_each` /
 //!   `par_transform_simd` / `copy_view_par` safety contracts, and the
 //!   `LLAMA_THREADS` policy.
+//! - `docs/SERVING.md` — the serving tier: the [`transport`] wire format
+//!   specification, the coordinator's admission control / backpressure
+//!   semantics ([`coordinator::Admission`]), and the per-client quota
+//!   model.
 
 pub mod bench;
 pub mod blob;
@@ -150,6 +157,7 @@ pub mod runtime;
 pub mod shard;
 pub mod simd;
 pub mod testing;
+pub mod transport;
 pub mod view;
 
 /// Convenience re-exports covering the common 90% of the API.
@@ -174,7 +182,7 @@ pub mod prelude {
     pub use crate::mapping::soa::{MultiBlob, SingleBlob, SoA};
     pub use crate::mapping::split::Split;
     pub use crate::mapping::{
-        FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess,
+        FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess, StaticMask,
     };
     pub use crate::record::{
         Bf16, Field, FieldIndex, FieldTag, GroupTag, Leaf, RecordDim, Scalar, ScalarType, Sel,
@@ -184,6 +192,10 @@ pub mod prelude {
     pub use crate::pool::{Lease, WorkerPool};
     pub use crate::shard::{thread_count, thread_count_or, ShardCursor, ViewShards};
     pub use crate::simd::{Simd, SimdElem};
+    pub use crate::transport::{
+        decode_adopt, decode_into, decode_into_par, encode, encode_par, WireError, WireMapping,
+        WireMsg,
+    };
     pub use crate::view::{
         Chunk, FieldRefMut, IndexOf, RecordRef, RecordRefMut, SubRecordRef, View,
     };

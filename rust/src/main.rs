@@ -143,14 +143,15 @@ fn cmd_serve(rest: &[String]) -> i32 {
         s.id = coord.submit(s.clone());
         specs.push(s);
     }
-    let metrics_snapshot;
-    let results = {
-        metrics_snapshot = coord.metrics().render();
-        let _ = &metrics_snapshot;
-        coord.finish()
-    };
+    // Keep an ingest handle past `finish` so the serving status below
+    // reflects the drained state (queue depth back to 0, final
+    // rejected-by-reason counts).
+    let ing = coord.ingest();
+    let results = coord.finish();
     print!("{}", render_results(&specs, &results));
-    0
+    println!("--- serving status ---");
+    print!("{}", ing.metrics().render());
+    i32::from(results.iter().any(|r| r.error.is_some()))
 }
 
 fn cmd_heatmap(rest: &[String]) -> i32 {

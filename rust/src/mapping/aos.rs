@@ -10,7 +10,7 @@
 use std::marker::PhantomData;
 
 use crate::extents::{Extents, Linearizer, RowMajor};
-use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::mapping::{FieldMask, Mapping, MemoryAccess, PhysicalMapping, SimdAccess, StaticMask};
 use crate::record::{Field, RecordDim, Scalar};
 use crate::simd::SimdElem;
 
@@ -215,6 +215,10 @@ impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64>
     }
 }
 
+impl<R, E, FO, L, const MASK: u64> StaticMask for AoS<R, E, FO, L, MASK> {
+    const FIELD_MASK: u64 = MASK;
+}
+
 impl<R: RecordDim, E: Extents, FO: FieldOrder, L: Linearizer, const MASK: u64> Mapping<R>
     for AoS<R, E, FO, L, MASK>
 {
@@ -319,17 +323,17 @@ mod tests {
         assert_eq!(AoS::<P, (Dyn<u32>,)>::record_size(), 32);
         let m = AoS::<P, _>::new((Dyn(4u32),));
         assert_eq!(m.blob_size(0), 4 * 32);
-        assert_eq!(m.blob_nr_and_offset(&[1], p::pos::z.i()), (0, 32 + 16));
-        assert_eq!(m.blob_nr_and_offset(&[2], p::mass.i()), (0, 64 + 24));
-        assert_eq!(m.blob_nr_and_offset(&[2], p::flag.i()), (0, 64 + 28));
+        assert_eq!(m.blob_nr_and_offset_t(&[1], p::pos::z), (0, 32 + 16));
+        assert_eq!(m.blob_nr_and_offset_t(&[2], p::mass), (0, 64 + 24));
+        assert_eq!(m.blob_nr_and_offset_t(&[2], p::flag), (0, 64 + 28));
     }
 
     #[test]
     fn packed_layout() {
         assert_eq!(AoS::<P, (Dyn<u32>,), Packed>::record_size(), 29);
         let m = AoS::<P, (Dyn<u32>,), Packed>::new((Dyn(4u32),));
-        assert_eq!(m.blob_nr_and_offset(&[1], p::pos::x.i()), (0, 29));
-        assert_eq!(m.blob_nr_and_offset(&[0], p::flag.i()), (0, 28));
+        assert_eq!(m.blob_nr_and_offset_t(&[1], p::pos::x), (0, 29));
+        assert_eq!(m.blob_nr_and_offset_t(&[0], p::flag), (0, 28));
     }
 
     #[test]
@@ -338,7 +342,7 @@ mod tests {
         // here, so offsets match packed; size has no padding.
         assert_eq!(AoS::<P, (Dyn<u32>,), MinPad>::record_size(), 29);
         let m = AoS::<P, (Dyn<u32>,), MinPad>::new((Dyn(2u32),));
-        assert_eq!(m.blob_nr_and_offset(&[0], p::mass.i()), (0, 24));
+        assert_eq!(m.blob_nr_and_offset_t(&[0], p::mass), (0, 24));
     }
 
     crate::record! {
@@ -357,10 +361,10 @@ mod tests {
         // minpad order: b(8) d(4) c(2) a(1) => size 15, offsets b=0 d=8 c=12 a=14
         assert_eq!(AoS::<Shuffled, (Dyn<u32>,), MinPad>::record_size(), 15);
         let m = AoS::<Shuffled, (Dyn<u32>,), MinPad>::new((Dyn(2u32),));
-        assert_eq!(m.blob_nr_and_offset(&[0], sh::b.i()), (0, 0));
-        assert_eq!(m.blob_nr_and_offset(&[0], sh::d.i()), (0, 8));
-        assert_eq!(m.blob_nr_and_offset(&[0], sh::c.i()), (0, 12));
-        assert_eq!(m.blob_nr_and_offset(&[0], sh::a.i()), (0, 14));
+        assert_eq!(m.blob_nr_and_offset_t(&[0], sh::b), (0, 0));
+        assert_eq!(m.blob_nr_and_offset_t(&[0], sh::d), (0, 8));
+        assert_eq!(m.blob_nr_and_offset_t(&[0], sh::c), (0, 12));
+        assert_eq!(m.blob_nr_and_offset_t(&[0], sh::a), (0, 14));
     }
 
     #[test]
@@ -370,7 +374,7 @@ mod tests {
         let m = AoS::<P, (Dyn<u32>,), Aligned, RowMajor, M>::new((Dyn(4u32),));
         assert_eq!(AoS::<P, (Dyn<u32>,), Aligned, RowMajor, M>::record_size(), 24);
         assert_eq!(m.blob_size(0), 96);
-        assert_eq!(m.blob_nr_and_offset(&[1], p::pos::y.i()), (0, 32));
+        assert_eq!(m.blob_nr_and_offset_t(&[1], p::pos::y), (0, 32));
     }
 
     #[test]

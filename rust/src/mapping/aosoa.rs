@@ -13,7 +13,9 @@ use crate::blob::BlobStorage;
 use crate::extents::{Extents, Linearizer, RowMajor};
 use crate::mapping::aos::{offsets_of, record_size_of, FieldOrderKind};
 use crate::mapping::soa::{default_load_simd, default_store_simd};
-use crate::mapping::{FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::mapping::{
+    FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess, StaticMask,
+};
 use crate::record::{RecordDim, Scalar};
 use crate::simd::{Simd, SimdElem};
 
@@ -62,6 +64,10 @@ impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u6
     fn blocks(&self) -> usize {
         self.extents.count().div_ceil(LANES)
     }
+}
+
+impl<R, E, const LANES: usize, L, const MASK: u64> StaticMask for AoSoA<R, E, LANES, L, MASK> {
+    const FIELD_MASK: u64 = MASK;
 }
 
 impl<R: RecordDim, E: Extents, const LANES: usize, L: Linearizer, const MASK: u64> Mapping<R>
@@ -209,9 +215,9 @@ mod tests {
         let m = AoSoA::<P, _, 4>::new((Dyn(10u32),));
         assert_eq!(m.blob_size(0), 3 * 4 * 16); // ceil(10/4)=3 blocks
         // record 5 = block 1, lane 1: field region + lane * scalar size
-        assert_eq!(m.blob_nr_and_offset(&[5], p::x.i()), (0, 64 + 4));
-        assert_eq!(m.blob_nr_and_offset(&[5], p::y.i()), (0, 64 + 16 + 4));
-        assert_eq!(m.blob_nr_and_offset(&[5], p::m.i()), (0, 64 + 32 + 8));
+        assert_eq!(m.blob_nr_and_offset_t(&[5], p::x), (0, 64 + 4));
+        assert_eq!(m.blob_nr_and_offset_t(&[5], p::y), (0, 64 + 16 + 4));
+        assert_eq!(m.blob_nr_and_offset_t(&[5], p::m), (0, 64 + 32 + 8));
     }
 
     #[test]
@@ -219,12 +225,12 @@ mod tests {
         use crate::mapping::FieldRun;
         let m = AoSoA::<P, _, 4>::new((Dyn(10u32),));
         // lane 1 of block 1 (byte 64 + 16 + 4): 3 lanes left in the block.
-        assert_eq!(m.contiguous_run(5, p::y.i()), Some(FieldRun { blob: 0, offset: 84, len: 3 }));
+        assert_eq!(m.contiguous_run_t(5, p::y), Some(FieldRun { blob: 0, offset: 84, len: 3 }));
         // block start: full block available.
-        assert_eq!(m.contiguous_run(4, p::x.i()), Some(FieldRun { blob: 0, offset: 64, len: 4 }));
+        assert_eq!(m.contiguous_run_t(4, p::x), Some(FieldRun { blob: 0, offset: 64, len: 4 }));
         // tail block is clipped to the extent (records 8, 9 only).
-        assert_eq!(m.contiguous_run(8, p::x.i()).unwrap().len, 2);
-        assert_eq!(m.contiguous_run(10, p::x.i()), None);
+        assert_eq!(m.contiguous_run_t(8, p::x).unwrap().len, 2);
+        assert_eq!(m.contiguous_run_t(10, p::x), None);
     }
 
     #[test]

@@ -38,7 +38,7 @@ pub mod split;
 
 use crate::blob::BlobStorage;
 use crate::extents::Extents;
-use crate::record::{RecordDim, Scalar};
+use crate::record::{FieldIndex, RecordDim, Scalar};
 use crate::simd::{Simd, SimdElem};
 
 /// A subset of the record dimension's fields as a bitmask (field `i` ⇔ bit
@@ -133,6 +133,15 @@ pub trait Mapping<R: RecordDim>: Clone + Send + Sync {
         None
     }
 
+    /// [`contiguous_run`](Mapping::contiguous_run) accepting either a raw
+    /// field index or a typed field tag from [`crate::record!`]
+    /// ([`FieldIndex`]) — call sites name the field (`p::mass`) instead of
+    /// spelling `p::mass.i()`.
+    #[inline(always)]
+    fn contiguous_run_t<F: FieldIndex>(&self, lin: usize, field: F) -> Option<FieldRun> {
+        self.contiguous_run(lin, field.field_index())
+    }
+
     /// Largest record index `b <= lin` at which the row-major traversal
     /// order may be split for concurrent access, or `None` if this mapping
     /// cannot prove any split safe.
@@ -183,6 +192,27 @@ pub trait Mapping<R: RecordDim>: Clone + Send + Sync {
 pub trait PhysicalMapping<R: RecordDim>: Mapping<R> {
     /// Locate `(idx, field)`; `idx.len() == RANK`.
     fn blob_nr_and_offset(&self, idx: &[usize], field: usize) -> (usize, usize);
+
+    /// [`blob_nr_and_offset`](PhysicalMapping::blob_nr_and_offset)
+    /// accepting either a raw field index or a typed field tag
+    /// ([`FieldIndex`]).
+    #[inline(always)]
+    fn blob_nr_and_offset_t<F: FieldIndex>(&self, idx: &[usize], field: F) -> (usize, usize) {
+        self.blob_nr_and_offset(idx, field.field_index())
+    }
+}
+
+/// A mapping type whose field coverage is a compile-time constant mask:
+/// the maskable physical layouts ([`aos::AoS`], [`soa::SoA`],
+/// [`aosoa::AoSoA`] carry a `const MASK: u64` parameter) and the
+/// mask-oblivious [`null::NullMapping`] (which accepts every field).
+///
+/// This is the evidence [`split::Split::new_typed`] consumes to prove at
+/// compile time that the fields routed to each half of a split are
+/// actually mapped by it.
+pub trait StaticMask {
+    /// Fields this mapping type stores (bit `i` ⇔ flattened field `i`).
+    const FIELD_MASK: u64;
 }
 
 /// Uniform scalar access through a mapping: the trait `View` talks to.

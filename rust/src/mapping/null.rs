@@ -11,7 +11,7 @@ use std::marker::PhantomData;
 
 use crate::blob::BlobStorage;
 use crate::extents::Extents;
-use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
+use crate::mapping::{Mapping, MemoryAccess, SimdAccess, StaticMask};
 use crate::record::{RecordDim, Scalar};
 
 /// Discards stores; loads yield `T::default()`. Occupies zero storage.
@@ -26,6 +26,12 @@ impl<R: RecordDim, E: Extents> NullMapping<R, E> {
     pub fn new(extents: E) -> Self {
         NullMapping { extents, _pd: PhantomData }
     }
+}
+
+// Null accepts (and discards) every field, so it covers any selection a
+// `Split` routes to it.
+impl<R, E> StaticMask for NullMapping<R, E> {
+    const FIELD_MASK: u64 = u64::MAX;
 }
 
 impl<R: RecordDim, E: Extents> Mapping<R> for NullMapping<R, E> {

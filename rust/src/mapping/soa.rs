@@ -9,7 +9,9 @@ use std::marker::PhantomData;
 
 use crate::blob::BlobStorage;
 use crate::extents::{Extents, Linearizer, RowMajor};
-use crate::mapping::{FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
+use crate::mapping::{
+    FieldMask, FieldRun, Mapping, MemoryAccess, PhysicalMapping, SimdAccess, StaticMask,
+};
 use crate::record::{RecordDim, Scalar};
 use crate::simd::{Simd, SimdElem};
 
@@ -101,6 +103,10 @@ impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64>
 
     /// Per-field scalar sizes (constant LUT).
     pub const SIZES: [usize; crate::record::MAX_FIELDS] = crate::record::size_lut(R::FIELDS);
+}
+
+impl<R, E, B, L, const MASK: u64> StaticMask for SoA<R, E, B, L, MASK> {
+    const FIELD_MASK: u64 = MASK;
 }
 
 impl<R: RecordDim, E: Extents, B: BlobPolicy, L: Linearizer, const MASK: u64> Mapping<R>
@@ -327,8 +333,8 @@ mod tests {
         assert_eq!(<SoA<P, (Dyn<u32>,)> as Mapping<P>>::BLOB_COUNT, 4);
         assert_eq!(m.blob_size(0), 80); // pos.x: 10 f64
         assert_eq!(m.blob_size(3), 40); // mass: 10 f32
-        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::y.i()), (1, 56));
-        assert_eq!(m.blob_nr_and_offset(&[7], p::mass.i()), (3, 28));
+        assert_eq!(m.blob_nr_and_offset_t(&[7], p::pos::y), (1, 56));
+        assert_eq!(m.blob_nr_and_offset_t(&[7], p::mass), (3, 28));
     }
 
     #[test]
@@ -336,9 +342,9 @@ mod tests {
         let m = SoA::<P, _, SingleBlob>::new((Dyn(10u32),));
         assert_eq!(<SoA<P, (Dyn<u32>,), SingleBlob> as Mapping<P>>::BLOB_COUNT, 1);
         assert_eq!(m.blob_size(0), 10 * (24 + 4));
-        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::x.i()), (0, 56));
-        assert_eq!(m.blob_nr_and_offset(&[7], p::pos::y.i()), (0, 80 + 56));
-        assert_eq!(m.blob_nr_and_offset(&[7], p::mass.i()), (0, 240 + 28));
+        assert_eq!(m.blob_nr_and_offset_t(&[7], p::pos::x), (0, 56));
+        assert_eq!(m.blob_nr_and_offset_t(&[7], p::pos::y), (0, 80 + 56));
+        assert_eq!(m.blob_nr_and_offset_t(&[7], p::mass), (0, 240 + 28));
     }
 
     #[test]
@@ -367,18 +373,18 @@ mod tests {
         use crate::mapping::FieldRun;
         let m = SoA::<P, _>::new((Dyn(10u32),));
         // MultiBlob: run covers the rest of the field's own blob.
-        let run = m.contiguous_run(3, p::pos::y.i());
+        let run = m.contiguous_run_t(3, p::pos::y);
         assert_eq!(run, Some(FieldRun { blob: 1, offset: 24, len: 7 }));
-        let run = m.contiguous_run(0, p::mass.i());
+        let run = m.contiguous_run_t(0, p::mass);
         assert_eq!(run, Some(FieldRun { blob: 3, offset: 0, len: 10 }));
-        assert_eq!(m.contiguous_run(10, p::mass.i()), None);
+        assert_eq!(m.contiguous_run_t(10, p::mass), None);
         // SingleBlob: run starts at the field's region within blob 0.
         let sb = SoA::<P, _, SingleBlob>::new((Dyn(10u32),));
-        let run = sb.contiguous_run(3, p::pos::y.i());
+        let run = sb.contiguous_run_t(3, p::pos::y);
         assert_eq!(run, Some(FieldRun { blob: 0, offset: 104, len: 7 }));
         // ColMajor linearization breaks contiguity.
         let cm = SoA::<P, (Dyn<u32>,), MultiBlob, crate::extents::ColMajor>::new((Dyn(10u32),));
-        assert_eq!(cm.contiguous_run(0, p::mass.i()), None);
+        assert_eq!(cm.contiguous_run_t(0, p::mass), None);
     }
 
     #[test]
@@ -387,6 +393,6 @@ mod tests {
         let m = SoA::<P, (Dyn<u32>,), MultiBlob, RowMajor, M>::new((Dyn(10u32),));
         assert_eq!(<SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, M> as Mapping<P>>::BLOB_COUNT, 1);
         assert_eq!(m.blob_size(0), 40);
-        assert_eq!(m.blob_nr_and_offset(&[3], p::mass.i()), (0, 12));
+        assert_eq!(m.blob_nr_and_offset_t(&[3], p::mass), (0, 12));
     }
 }

@@ -12,8 +12,8 @@ use std::marker::PhantomData;
 
 use crate::blob::BlobStorage;
 
-use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
-use crate::record::{RecordDim, Scalar, Selection};
+use crate::mapping::{FieldMask, Mapping, MemoryAccess, SimdAccess, StaticMask};
+use crate::record::{GroupTag, RecordDim, Scalar, Selection};
 use crate::simd::{Simd, SimdElem};
 
 /// Routes fields in `selection` to `M1`, the rest to `M2`. `M1`'s blobs
@@ -41,6 +41,65 @@ where
     /// asked about their own fields; construct them with matching masks.
     pub fn new(first: M1, second: M2, selection: impl Into<Selection>) -> Self {
         Split { first, second, selection: selection.into(), _pd: PhantomData }
+    }
+
+    /// Construct a split whose routing is *proved* at compile time: the
+    /// selection tag's fields must be covered by `M1`'s field mask and
+    /// the complement by `M2`'s ([`StaticMask`]).
+    ///
+    /// ```
+    /// use llama::prelude::*;
+    /// llama::record! {
+    ///     pub struct P, mod p { pos: { x: f64, y: f64 }, m: f32 }
+    /// }
+    /// const HOT: u64 = 0b011; // pos.*
+    /// const COLD: u64 = 0b100; // m
+    /// type M1 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, HOT>;
+    /// type M2 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, COLD>;
+    /// let e = (Dyn(4u32),);
+    /// let split = Split::new_typed(M1::new(e), M2::new(e), p::pos);
+    /// let mut v = alloc_view(split, &HeapAlloc);
+    /// v.set(&[1], p::pos::y, 2.0f64);
+    /// assert_eq!(v.get::<f64, _>(&[1], p::pos::y), 2.0);
+    /// ```
+    ///
+    /// A selection one half does not map is a compile error (raised
+    /// during monomorphization, like the typed access API's checks):
+    ///
+    /// ```compile_fail
+    /// use llama::prelude::*;
+    /// llama::record! {
+    ///     pub struct P, mod p { pos: { x: f64, y: f64 }, m: f32 }
+    /// }
+    /// const WRONG: u64 = 0b100; // maps only `m`, not `pos.*`
+    /// type M1 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, WRONG>;
+    /// let e = (Dyn(4u32),);
+    /// // ERROR: `p::pos` is not covered by M1's field mask
+    /// let _ = Split::new_typed(M1::new(e), NullMapping::<P, _>::new(e), p::pos);
+    /// ```
+    ///
+    /// The runtime-checked [`new`](Split::new) remains for selections
+    /// assembled at runtime or for inner mappings without a static mask.
+    pub fn new_typed<G>(first: M1, second: M2, group: G) -> Self
+    where
+        G: GroupTag<Record = R>,
+        M1: StaticMask,
+        M2: StaticMask,
+    {
+        const {
+            let sel = FieldMask::from_selection(G::SELECTION);
+            assert!(
+                sel.0 & !M1::FIELD_MASK == 0,
+                "Split::new_typed: selection is not covered by the first mapping's field mask"
+            );
+            let rest = sel.complement(R::FIELDS.len());
+            assert!(
+                rest.0 & !M2::FIELD_MASK == 0,
+                "Split::new_typed: complement is not covered by the second mapping's field mask"
+            );
+        }
+        let _ = group;
+        Split { first, second, selection: G::SELECTION, _pd: PhantomData }
     }
 
     /// The selection routed to the first mapping.
@@ -255,7 +314,7 @@ mod tests {
         const POS: u64 = 0b0000111;
         type M1 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, POS>;
         let e = (Dyn(8u32),);
-        let split = Split::new(M1::new(e), NullMapping::<P, _>::new(e), p::pos);
+        let split = Split::new_typed(M1::new(e), NullMapping::<P, _>::new(e), p::pos);
         let mut v = alloc_view(split, &HeapAlloc);
         assert_eq!(v.storage().blob_count(), 3);
         assert_eq!(v.storage().total_bytes(), 3 * 8 * 8);
@@ -272,7 +331,7 @@ mod tests {
         type M1 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, HOT>;
         type M2 = SoA<P, (Dyn<u32>,), MultiBlob, RowMajor, COLD>;
         let e = (Dyn(4u32),);
-        let split = Split::new(M1::new(e), M2::new(e), p::pos);
+        let split = Split::new_typed(M1::new(e), M2::new(e), p::pos);
         let mut v = alloc_view(split, &HeapAlloc);
         assert_eq!(v.storage().blob_count(), 7);
         v.set(&[1], p::pos::x, 1.0f64);

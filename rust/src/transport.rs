@@ -1,0 +1,631 @@
+//! Layout-aware view transport: ship views across process boundaries.
+//!
+//! The paper's core claim — access is decoupled from layout — holds
+//! across a wire as well as across a function call. This module defines a
+//! versioned wire format for views: a header describing the record
+//! dimension, the array extents, the payload mapping's identity
+//! (fingerprint) and the blob geometry, followed by the raw payload
+//! bytes. The payload always uses the **canonical wire layout**
+//! [`WireMapping`] (packed field-major single blob: SoA single-blob,
+//! row-major, full mask), so any two endpoints agree on the byte meaning
+//! without exchanging mapping *types* — only the header's identity
+//! strings are compared.
+//!
+//! - **Encode** ([`encode`] / [`encode_par`]) relayouts the source view
+//!   into the canonical payload with the layout-aware copy engine
+//!   ([`crate::copy::copy_view`]): memcpy-grade
+//!   [`contiguous_run`](crate::mapping::Mapping::contiguous_run) field
+//!   runs where the source layout permits (SoA, AoSoA), whole-blob
+//!   memcpy when the source *is* the canonical layout, and the
+//!   field-wise fallback for computed/bit-packed mappings. The strategy
+//!   used is recorded in the message for observability.
+//! - **Decode** either **adopts** the payload bytes directly as view
+//!   storage ([`decode_adopt`]: same mapping ⇒ zero relayout, zero
+//!   copy), or **streams** them into the receiver's preferred mapping
+//!   ([`decode_into`] / [`decode_into_par`]) via the same copy engine —
+//!   the receiver's layout may differ arbitrarily from the sender's.
+//!
+//! [`WireMsg::write_to`] / [`WireMsg::read_from`] frame messages over any
+//! `Write`/`Read` transport (the distributed n-body example uses a Unix
+//! socket; see `examples/distributed_nbody.rs` and `docs/SERVING.md` for
+//! the byte-level format specification).
+
+use std::io::{self, Read, Write};
+
+use crate::blob::{alloc_view, BlobStorage, HeapAlloc, HeapStorage};
+use crate::copy::{copy_view, copy_view_par, CopyStrategy};
+use crate::extents::{Extents, RowMajor};
+use crate::mapping::soa::{SingleBlob, SoA};
+use crate::mapping::{Mapping, MemoryAccess};
+use crate::record::RecordDim;
+use crate::view::View;
+
+/// Wire format version this build speaks; [`WireMsg::read_from`] rejects
+/// others.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Frame magic ("LLAMA Wire") guarding against misaligned streams.
+pub const WIRE_MAGIC: [u8; 4] = *b"LLWv";
+
+/// The canonical wire payload layout: every field's values packed
+/// contiguously, field regions concatenated in record order into one
+/// blob, row-major linearization, all fields present.
+///
+/// Chosen because it is (a) unambiguous given only the record dimension
+/// and the extents — no padding, no interleaving parameters — and (b)
+/// run-friendly on both ends: every mapping with byte-contiguity copies
+/// to/from it as whole-field memcpy runs.
+pub type WireMapping<R, E> = SoA<R, E, SingleBlob, RowMajor>;
+
+/// A decoded-header + payload wire message.
+///
+/// Produced by [`encode`]/[`encode_par`] or [`WireMsg::read_from`];
+/// consumed by [`decode_adopt`]/[`decode_into`] or
+/// [`WireMsg::write_to`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireMsg {
+    /// Wire format version ([`WIRE_VERSION`]).
+    pub version: u16,
+    /// Record-dimension descriptor ([`record_descriptor`]): name plus
+    /// every flattened field as `path:type`. Both ends must agree.
+    pub record: String,
+    /// Layout fingerprint of the payload mapping
+    /// ([`crate::mapping::Mapping::fingerprint`]); receivers adopt only
+    /// on an exact match.
+    pub fingerprint: String,
+    /// Runtime extent of each array dimension, outermost first.
+    pub extents: Vec<u64>,
+    /// Copy strategy the encoder used (observability: asserts in tests
+    /// and benches that the memcpy-grade path fired where expected).
+    pub strategy: CopyStrategy,
+    /// The payload: the canonical wire blob's bytes.
+    pub payload: Vec<u8>,
+}
+
+/// Decode-side validation failure: the message header does not match
+/// what the receiver asked the payload to be.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Message version differs from [`WIRE_VERSION`].
+    Version(u16),
+    /// Record-dimension descriptors differ (incompatible field sets).
+    Record {
+        /// Descriptor the receiver expects.
+        expected: String,
+        /// Descriptor the message carries.
+        got: String,
+    },
+    /// Extents differ (per-dimension values or rank).
+    Extents {
+        /// Extents the receiver expects.
+        expected: Vec<u64>,
+        /// Extents the message carries.
+        got: Vec<u64>,
+    },
+    /// Mapping fingerprints differ — the payload is not the layout the
+    /// receiver tried to adopt.
+    Fingerprint {
+        /// Fingerprint the receiver expects.
+        expected: String,
+        /// Fingerprint the message carries.
+        got: String,
+    },
+    /// Payload byte count does not match the blob geometry the mapping
+    /// requires for the stated extents.
+    Geometry {
+        /// Bytes the mapping requires.
+        expected: usize,
+        /// Bytes the message carries.
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Version(v) => {
+                write!(f, "wire version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::Record { expected, got } => {
+                write!(f, "record mismatch: expected {expected:?}, got {got:?}")
+            }
+            WireError::Extents { expected, got } => {
+                write!(f, "extents mismatch: expected {expected:?}, got {got:?}")
+            }
+            WireError::Fingerprint { expected, got } => {
+                write!(f, "layout mismatch: expected {expected:?}, got {got:?}")
+            }
+            WireError::Geometry { expected, got } => {
+                write!(f, "payload geometry: mapping needs {expected} bytes, message has {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// The record-dimension descriptor shipped in every message header:
+/// record name plus each flattened field as `dotted.path:type`, e.g.
+/// `Particle{pos.x:f32,pos.y:f32,...,mass:f32}`. Two record dimensions
+/// with equal descriptors have identical flattened field sets, so their
+/// canonical wire payloads are interchangeable.
+pub fn record_descriptor<R: RecordDim>() -> String {
+    let fields: Vec<String> =
+        R::FIELDS.iter().map(|f| format!("{}:{}", f.dotted(), f.ty.name())).collect();
+    format!("{}{{{}}}", R::NAME, fields.join(","))
+}
+
+fn extent_values<E: Extents>(e: &E) -> Vec<u64> {
+    (0..E::RANK).map(|d| e.extent(d) as u64).collect()
+}
+
+/// Encode `src` into a wire message, relayouting into the canonical
+/// [`WireMapping`] payload via the layout-aware copy engine.
+///
+/// The strategy the engine picked is recorded in the message:
+/// `BlobMemcpy` when `src` already is the canonical layout, `FieldRuns`
+/// when every field has [`contiguous_run`] byte-contiguity (SoA, AoSoA),
+/// `FieldWise` otherwise (AoS interleaving, computed mappings).
+///
+/// [`contiguous_run`]: crate::mapping::Mapping::contiguous_run
+pub fn encode<R, M, S>(src: &View<R, M, S>) -> WireMsg
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    let e = *src.extents();
+    let mut wire = alloc_view(WireMapping::<R, M::Extents>::new(e), &HeapAlloc);
+    let strategy = copy_view(src, &mut wire);
+    finish_encode(wire, &e, strategy)
+}
+
+/// [`encode`] with the relayout fanned over up to `threads` workers
+/// ([`crate::copy::copy_view_par`]) — for large views whose source
+/// layout has contiguous runs.
+pub fn encode_par<R, M, S>(src: &View<R, M, S>, threads: usize) -> WireMsg
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage + Sync,
+{
+    let e = *src.extents();
+    let mut wire = alloc_view(WireMapping::<R, M::Extents>::new(e), &HeapAlloc);
+    let strategy = copy_view_par(src, &mut wire, threads);
+    finish_encode(wire, &e, strategy)
+}
+
+fn finish_encode<R, E>(
+    wire: View<R, WireMapping<R, E>, HeapStorage>,
+    e: &E,
+    strategy: CopyStrategy,
+) -> WireMsg
+where
+    R: RecordDim,
+    E: Extents,
+{
+    let fingerprint = wire.mapping().fingerprint();
+    let extents = extent_values(e);
+    let (_, storage) = wire.into_parts();
+    let mut blobs = storage.into_blobs();
+    let payload = if blobs.is_empty() { Vec::new() } else { blobs.swap_remove(0) };
+    WireMsg { version: WIRE_VERSION, record: record_descriptor::<R>(), fingerprint, extents, strategy, payload }
+}
+
+/// Adopt the payload bytes directly as the storage of a
+/// [`WireMapping`]-mapped view — **zero relayout, zero copy** (the
+/// `Vec<u8>` moves into the view).
+///
+/// `extents` is the receiver's extents value (any extents type with the
+/// same runtime values works: the canonical layout depends only on the
+/// values, and [`fingerprint`](crate::mapping::Mapping::fingerprint)s
+/// agree across `Fix`/`Dyn` dimensions of equal extent). Fails if the
+/// header's record descriptor, extents, layout fingerprint, or payload
+/// geometry don't match.
+pub fn decode_adopt<R, E>(
+    msg: WireMsg,
+    extents: E,
+) -> Result<View<R, WireMapping<R, E>, HeapStorage>, WireError>
+where
+    R: RecordDim,
+    E: Extents,
+{
+    let mapping = WireMapping::<R, E>::new(extents);
+    validate::<R, _>(&msg, &mapping)?;
+    let need = mapping.blob_size(0);
+    if msg.payload.len() < need {
+        return Err(WireError::Geometry { expected: need, got: msg.payload.len() });
+    }
+    Ok(View::from_parts(mapping, HeapStorage::from_blobs(vec![msg.payload])))
+}
+
+/// Stream the payload into `dst`, whatever its mapping — the relayout
+/// path of the receive side. Returns the copy strategy used (memcpy
+/// field runs into SoA/AoSoA destinations, field-wise into
+/// computed/interleaved ones).
+///
+/// The wire-side view is built over the moved payload bytes (no copy
+/// before the relayout itself). Fails on any header mismatch against
+/// `dst`'s record/extents.
+pub fn decode_into<R, MD, SD>(
+    msg: WireMsg,
+    dst: &mut View<R, MD, SD>,
+) -> Result<CopyStrategy, WireError>
+where
+    R: RecordDim,
+    MD: MemoryAccess<R>,
+    SD: BlobStorage,
+{
+    let wire = decode_adopt::<R, MD::Extents>(msg, *dst.extents())?;
+    Ok(copy_view(&wire, dst))
+}
+
+/// [`decode_into`] with the relayout fanned over up to `threads` workers
+/// ([`crate::copy::copy_view_par`]).
+pub fn decode_into_par<R, MD, SD>(
+    msg: WireMsg,
+    dst: &mut View<R, MD, SD>,
+    threads: usize,
+) -> Result<CopyStrategy, WireError>
+where
+    R: RecordDim,
+    MD: MemoryAccess<R>,
+    SD: BlobStorage + Send + Sync,
+{
+    let wire = decode_adopt::<R, MD::Extents>(msg, *dst.extents())?;
+    Ok(copy_view_par(&wire, dst, threads))
+}
+
+/// Validate the header against a receiver-side canonical mapping.
+fn validate<R, E>(msg: &WireMsg, mapping: &WireMapping<R, E>) -> Result<(), WireError>
+where
+    R: RecordDim,
+    E: Extents,
+{
+    if msg.version != WIRE_VERSION {
+        return Err(WireError::Version(msg.version));
+    }
+    let expected = record_descriptor::<R>();
+    if msg.record != expected {
+        return Err(WireError::Record { expected, got: msg.record.clone() });
+    }
+    let extents = extent_values(mapping.extents());
+    if msg.extents != extents {
+        return Err(WireError::Extents { expected: extents, got: msg.extents.clone() });
+    }
+    let fp = mapping.fingerprint();
+    if msg.fingerprint != fp {
+        return Err(WireError::Fingerprint { expected: fp, got: msg.fingerprint.clone() });
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Cap on header strings accepted by [`WireMsg::read_from`], so a
+/// corrupt length prefix cannot drive an unbounded allocation.
+const MAX_HEADER_STRING: usize = 1 << 20;
+const MAX_RANK: usize = crate::view::MAX_RANK;
+
+impl WireMsg {
+    /// Number of records the extents span.
+    pub fn record_count(&self) -> usize {
+        self.extents.iter().product::<u64>() as usize
+    }
+
+    /// Serialized frame size in bytes (header + payload).
+    pub fn frame_len(&self) -> usize {
+        4 + 2 + 1 + 1
+            + self.extents.len() * 8
+            + 4
+            + self.record.len()
+            + 4
+            + self.fingerprint.len()
+            + 4
+            + 8
+            + self.payload.len()
+    }
+
+    /// Write one framed message.
+    ///
+    /// Frame layout (all integers little-endian):
+    ///
+    /// ```text
+    /// magic            4 bytes  "LLWv"
+    /// version          u16
+    /// strategy         u8       CopyStrategy the encoder used
+    /// rank             u8
+    /// extents          rank × u64
+    /// record_len       u32      then that many UTF-8 bytes
+    /// fingerprint_len  u32      then that many UTF-8 bytes
+    /// blob_count       u32      payload blob geometry (v1: always 1)
+    /// blob_len         u64      per blob
+    /// payload          blob_len bytes
+    /// ```
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        w.write_all(&WIRE_MAGIC)?;
+        w.write_all(&self.version.to_le_bytes())?;
+        w.write_all(&[strategy_code(self.strategy), self.extents.len() as u8])?;
+        for &e in &self.extents {
+            w.write_all(&e.to_le_bytes())?;
+        }
+        w.write_all(&(self.record.len() as u32).to_le_bytes())?;
+        w.write_all(self.record.as_bytes())?;
+        w.write_all(&(self.fingerprint.len() as u32).to_le_bytes())?;
+        w.write_all(self.fingerprint.as_bytes())?;
+        w.write_all(&1u32.to_le_bytes())?;
+        w.write_all(&(self.payload.len() as u64).to_le_bytes())?;
+        w.write_all(&self.payload)
+    }
+
+    /// Read one framed message (see [`write_to`](WireMsg::write_to) for
+    /// the layout). Malformed frames — bad magic, unknown version or
+    /// strategy, oversized header fields, unsupported blob geometry —
+    /// fail with [`io::ErrorKind::InvalidData`].
+    pub fn read_from<Rd: Read>(r: &mut Rd) -> io::Result<WireMsg> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if magic != WIRE_MAGIC {
+            return Err(bad_frame("bad magic"));
+        }
+        let version = u16::from_le_bytes(read_array(r)?);
+        if version != WIRE_VERSION {
+            return Err(bad_frame("unsupported wire version"));
+        }
+        let [strategy, rank] = read_array(r)?;
+        let strategy = strategy_from_code(strategy).ok_or_else(|| bad_frame("bad strategy"))?;
+        let rank = rank as usize;
+        if rank == 0 || rank > MAX_RANK {
+            return Err(bad_frame("bad rank"));
+        }
+        let mut extents = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            extents.push(u64::from_le_bytes(read_array(r)?));
+        }
+        let record = read_string(r)?;
+        let fingerprint = read_string(r)?;
+        let blob_count = u32::from_le_bytes(read_array(r)?);
+        if blob_count != 1 {
+            return Err(bad_frame("unsupported blob geometry"));
+        }
+        let blob_len = u64::from_le_bytes(read_array(r)?);
+        if blob_len > usize::MAX as u64 {
+            return Err(bad_frame("payload too large"));
+        }
+        let mut payload = vec![0u8; blob_len as usize];
+        r.read_exact(&mut payload)?;
+        Ok(WireMsg { version, record, fingerprint, extents, strategy, payload })
+    }
+}
+
+fn bad_frame(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("wire frame: {what}"))
+}
+
+fn read_array<const N: usize, Rd: Read>(r: &mut Rd) -> io::Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn read_string<Rd: Read>(r: &mut Rd) -> io::Result<String> {
+    let len = u32::from_le_bytes(read_array(r)?) as usize;
+    if len > MAX_HEADER_STRING {
+        return Err(bad_frame("header string too long"));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|_| bad_frame("header string not UTF-8"))
+}
+
+fn strategy_code(s: CopyStrategy) -> u8 {
+    match s {
+        CopyStrategy::BlobMemcpy => 0,
+        CopyStrategy::FieldRuns => 1,
+        CopyStrategy::FieldRunsPar => 2,
+        CopyStrategy::FieldWise => 3,
+    }
+}
+
+fn strategy_from_code(c: u8) -> Option<CopyStrategy> {
+    match c {
+        0 => Some(CopyStrategy::BlobMemcpy),
+        1 => Some(CopyStrategy::FieldRuns),
+        2 => Some(CopyStrategy::FieldRunsPar),
+        3 => Some(CopyStrategy::FieldWise),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::extents::{Dyn, Fix};
+    use crate::mapping::aos::AoS;
+    use crate::mapping::aosoa::AoSoA;
+    use crate::mapping::soa::MultiBlob;
+
+    crate::record! {
+        pub struct P, mod p {
+            pos: { x: f64, y: f64 },
+            m: f32,
+        }
+    }
+
+    fn fill<M: MemoryAccess<P>, S: BlobStorage>(v: &mut View<P, M, S>, n: usize) {
+        for i in 0..n {
+            v.set(&[i], p::pos::x, i as f64);
+            v.set(&[i], p::pos::y, -(i as f64));
+            v.set(&[i], p::m, (i * 2) as f32);
+        }
+    }
+
+    fn check<M: MemoryAccess<P>, S: BlobStorage>(v: &View<P, M, S>, n: usize) {
+        for i in 0..n {
+            assert_eq!(v.get::<f64, _>(&[i], p::pos::x), i as f64);
+            assert_eq!(v.get::<f64, _>(&[i], p::pos::y), -(i as f64));
+            assert_eq!(v.get::<f32, _>(&[i], p::m), (i * 2) as f32);
+        }
+    }
+
+    #[test]
+    fn encode_strategy_tracks_source_layout() {
+        let n = 24usize;
+        // Canonical layout already: whole-blob memcpy.
+        let mut a =
+            alloc_view(SoA::<P, _, SingleBlob>::new((Dyn(n as u32),)), &HeapAlloc);
+        fill(&mut a, n);
+        assert_eq!(encode(&a).strategy, CopyStrategy::BlobMemcpy);
+        // Contiguous runs: per-field memcpy.
+        let mut b = alloc_view(SoA::<P, _, MultiBlob>::new((Dyn(n as u32),)), &HeapAlloc);
+        fill(&mut b, n);
+        assert_eq!(encode(&b).strategy, CopyStrategy::FieldRuns);
+        let mut c = alloc_view(AoSoA::<P, _, 8>::new((Dyn(n as u32),)), &HeapAlloc);
+        fill(&mut c, n);
+        assert_eq!(encode(&c).strategy, CopyStrategy::FieldRuns);
+        // Interleaved AoS: field-wise fallback.
+        let mut d = alloc_view(AoS::<P, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        fill(&mut d, n);
+        assert_eq!(encode(&d).strategy, CopyStrategy::FieldWise);
+    }
+
+    #[test]
+    fn adopt_is_zero_relayout() {
+        let n = 16usize;
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        fill(&mut src, n);
+        let msg = encode(&src);
+        let payload = msg.payload.clone();
+        let v = decode_adopt::<P, _>(msg, (Dyn(n as u32),)).unwrap();
+        check(&v, n);
+        // The adopted storage is the payload buffer, bytes untouched.
+        assert_eq!(v.storage().blob(0), &payload[..]);
+    }
+
+    #[test]
+    fn adopt_accepts_equal_static_extents() {
+        // Fix and Dyn extents of equal value produce the same canonical
+        // layout (fingerprints embed runtime values only).
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(12u32),)), &HeapAlloc);
+        fill(&mut src, 12);
+        let v = decode_adopt::<P, _>(encode(&src), (Fix::<u32, 12>::new(),)).unwrap();
+        check(&v, 12);
+    }
+
+    #[test]
+    fn decode_streams_into_other_mappings() {
+        let n = 20usize;
+        let mut src = alloc_view(AoS::<P, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        fill(&mut src, n);
+        let msg = encode(&src);
+
+        let mut soa = alloc_view(SoA::<P, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        assert_eq!(decode_into(msg.clone(), &mut soa).unwrap(), CopyStrategy::FieldRuns);
+        check(&soa, n);
+
+        let mut aosoa = alloc_view(AoSoA::<P, _, 4>::new((Dyn(n as u32),)), &HeapAlloc);
+        assert_eq!(decode_into(msg.clone(), &mut aosoa).unwrap(), CopyStrategy::FieldRuns);
+        check(&aosoa, n);
+
+        let mut aos = alloc_view(AoS::<P, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        assert_eq!(decode_into(msg, &mut aos).unwrap(), CopyStrategy::FieldWise);
+        check(&aos, n);
+    }
+
+    #[test]
+    fn parallel_decode_matches_serial() {
+        let n = 512usize;
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        fill(&mut src, n);
+        let msg = encode_par(&src, 4);
+        let mut dst = alloc_view(AoSoA::<P, _, 8>::new((Dyn(n as u32),)), &HeapAlloc);
+        let strategy = decode_into_par(msg, &mut dst, 4).unwrap();
+        assert!(matches!(strategy, CopyStrategy::FieldRuns | CopyStrategy::FieldRunsPar));
+        check(&dst, n);
+    }
+
+    crate::record! {
+        pub struct Q, mod q { a: f64 }
+    }
+
+    #[test]
+    fn header_mismatches_are_rejected() {
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
+        fill(&mut src, 8);
+        let msg = encode(&src);
+
+        // Wrong extents.
+        let mut dst = alloc_view(SoA::<P, _>::new((Dyn(9u32),)), &HeapAlloc);
+        assert!(matches!(
+            decode_into(msg.clone(), &mut dst),
+            Err(WireError::Extents { .. })
+        ));
+
+        // Wrong record dimension.
+        let mut other = alloc_view(SoA::<Q, _>::new((Dyn(8u32),)), &HeapAlloc);
+        other.set(&[0], q::a, 1.0f64);
+        assert!(matches!(
+            decode_into(msg.clone(), &mut other),
+            Err(WireError::Record { .. })
+        ));
+
+        // Corrupted fingerprint.
+        let mut bad = msg.clone();
+        bad.fingerprint = "AoS<lies>".into();
+        assert!(matches!(
+            decode_adopt::<P, _>(bad, (Dyn(8u32),)),
+            Err(WireError::Fingerprint { .. })
+        ));
+
+        // Unknown version.
+        let mut v2 = msg;
+        v2.version = 2;
+        assert!(matches!(decode_adopt::<P, _>(v2, (Dyn(8u32),)), Err(WireError::Version(2))));
+    }
+
+    #[test]
+    fn framing_round_trips() {
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(2u32), Dyn(3u32))), &HeapAlloc);
+        for i in 0..2usize {
+            for j in 0..3usize {
+                src.set(&[i, j], p::pos::x, (i * 10 + j) as f64);
+            }
+        }
+        let msg = encode(&src);
+        let mut frame = Vec::new();
+        msg.write_to(&mut frame).unwrap();
+        assert_eq!(frame.len(), msg.frame_len());
+        let back = WireMsg::read_from(&mut frame.as_slice()).unwrap();
+        assert_eq!(back, msg);
+        let v = decode_adopt::<P, _>(back, (Dyn(2u32), Dyn(3u32))).unwrap();
+        for i in 0..2usize {
+            for j in 0..3usize {
+                assert_eq!(v.get::<f64, _>(&[i, j], p::pos::x), (i * 10 + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_invalid_data() {
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(4u32),)), &HeapAlloc);
+        fill(&mut src, 4);
+        let mut frame = Vec::new();
+        encode(&src).write_to(&mut frame).unwrap();
+
+        // Truncation anywhere fails cleanly.
+        for cut in [0, 3, 7, frame.len() - 1] {
+            assert!(WireMsg::read_from(&mut &frame[..cut]).is_err());
+        }
+        // Bad magic.
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        let err = WireMsg::read_from(&mut bad.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Bad version.
+        let mut bad = frame;
+        bad[4] = 0xFF;
+        assert!(WireMsg::read_from(&mut bad.as_slice()).is_err());
+    }
+}

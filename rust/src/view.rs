@@ -110,6 +110,13 @@ where
         View { mapping, storage, _pd: PhantomData }
     }
 
+    /// Disassemble the view into mapping and storage (the inverse of
+    /// [`from_parts`](View::from_parts); used by [`crate::transport`] to
+    /// take the encoded payload buffer out without copying).
+    pub fn into_parts(self) -> (M, S) {
+        (self.mapping, self.storage)
+    }
+
     /// The mapping.
     #[inline(always)]
     pub fn mapping(&self) -> &M {
@@ -745,7 +752,8 @@ where
     }
 
     /// Project onto the sub-record named by the selection tag — the typed
-    /// replacement for [`get_selection_f64`](RecordRef::get_selection_f64).
+    /// way to read a whole selection (e.g. widened to `f64` via
+    /// [`SubRecordRef::read_f64`]).
     ///
     /// ```
     /// use llama::prelude::*;
@@ -768,15 +776,6 @@ where
     #[inline(always)]
     pub fn get<T: Scalar, F: FieldIndex>(&self, field: F) -> T {
         self.view.get(self.idx.as_slice(), field.field_index())
-    }
-
-    /// Load every field of `sel` widened to `f64` (order of `sel`).
-    #[deprecated(
-        since = "0.1.0",
-        note = "use the typed sub-record projection: `RecordRef::sub(tag).read_f64()`"
-    )]
-    pub fn get_selection_f64(&self, sel: Selection) -> Vec<f64> {
-        sel.indices().map(|f| load_as_f64(self.view, self.idx.as_slice(), f)).collect()
     }
 }
 
@@ -834,8 +833,8 @@ where
         self.view.get(self.idx.as_slice(), F::INDEX)
     }
 
-    /// Load every leaf of the span widened to `f64`, in span order — the
-    /// typed successor of `RecordRef::get_selection_f64`.
+    /// Load every leaf of the span widened to `f64`, in span order (the
+    /// typed successor of the removed `RecordRef::get_selection_f64`).
     pub fn read_f64(&self) -> Vec<f64> {
         G::SELECTION.indices().map(|f| load_as_f64(self.view, self.idx.as_slice(), f)).collect()
     }
@@ -1046,11 +1045,7 @@ mod tests {
         assert_eq!(v.get_t([2], p::q), 9);
         let r = v.at(&[2]);
         assert_eq!(r.get::<f64, _>(p::pos::y), 2.5);
-        // The deprecated selection escape hatch still works and agrees
-        // with the typed projection.
-        #[allow(deprecated)]
-        let legacy = r.get_selection_f64(p::pos.selection());
-        assert_eq!(legacy, r.sub(p::pos).read_f64());
+        assert_eq!(r.sub(p::pos).read_f64(), vec![0.0, 2.5]);
     }
 
     #[test]

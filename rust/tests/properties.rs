@@ -934,3 +934,193 @@ fn prop_heatmap_total_counts_equal_accesses_times_bytes() {
         total == accesses as u64 * 4
     });
 }
+
+#[test]
+fn prop_wire_roundtrip_all_mappings_bit_identical() {
+    // Transport property: for every mapping and both extent kinds,
+    // encode → frame → parse → decode into the same mapping reproduces
+    // every field bit for bit, and wherever the mapping reports
+    // byte-contiguous runs for all fields the run engine (not the
+    // field-wise fallback) carries the transfer.
+    use llama::blob::HeapStorage;
+    use llama::copy::CopyStrategy;
+    use llama::extents::Fix;
+    use llama::mapping::aos::{AoS, MinPad, Packed};
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::bitpack_float::BitpackFloatSoA;
+    use llama::mapping::bitpack_int::{BitpackIntSoA, BitpackIntSoADyn};
+    use llama::mapping::bytesplit::Bytesplit;
+    use llama::mapping::changetype::ChangeType;
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::mapping::heatmap::Heatmap;
+    use llama::mapping::null::NullMapping;
+    use llama::mapping::one::One;
+    use llama::mapping::soa::{MultiBlob, SingleBlob, SoA};
+    use llama::mapping::split::Split;
+    use llama::mapping::Mapping;
+    use llama::record::RecordDim;
+    use llama::transport::{decode_into, encode, WireMsg};
+    use llama::view::View;
+
+    // Does `m` report a byte-contiguous run for every (record, field)?
+    // If so, falling back to the scalar field-wise copy on either wire
+    // direction would be a fast-path regression.
+    fn runs_everywhere<Rec: RecordDim, M: Mapping<Rec>>(m: &M, n: usize) -> bool {
+        (0..n).all(|lin| (0..Rec::FIELDS.len()).all(|f| m.contiguous_run(lin, f).is_some()))
+    }
+
+    // encode → write_to → read_from → decode_into, with the strategy
+    // guards on both directions. Value comparison is the caller's.
+    fn wire_trip<Rec, M>(
+        src: &View<Rec, M, HeapStorage>,
+        dst: &mut View<Rec, M, HeapStorage>,
+        n: usize,
+    ) -> bool
+    where
+        Rec: RecordDim,
+        M: MemoryAccess<Rec>,
+    {
+        let msg = encode(src);
+        if runs_everywhere::<Rec, M>(src.mapping(), n) && msg.strategy == CopyStrategy::FieldWise {
+            return false;
+        }
+        let mut buf = Vec::new();
+        msg.write_to(&mut buf).unwrap();
+        let parsed = WireMsg::read_from(&mut buf.as_slice()).unwrap();
+        if parsed != msg {
+            return false;
+        }
+        let needs_runs = runs_everywhere::<Rec, M>(dst.mapping(), n);
+        match decode_into(parsed, dst) {
+            Ok(s) => !(needs_runs && s == CopyStrategy::FieldWise),
+            Err(e) => panic!("decode_into rejected its own encode: {e}"),
+        }
+    }
+
+    // The mixed-type record R: fill, round-trip, compare bitwise.
+    fn roundtrip<M>(m: M, n: usize, seed: u64) -> bool
+    where
+        M: MemoryAccess<R> + Clone,
+        M::Extents: llama::extents::Extents<ArrayIndex = [usize; 1]>,
+    {
+        let mut src = alloc_view(m.clone(), &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            src.set(&[i], r::a, rng.f64_range(-1e6, 1e6));
+            src.set(&[i], r::b, rng.f64_range(-1e3, 1e3) as f32);
+            src.set(&[i], r::c, rng.next_u64() as u32);
+            src.set(&[i], r::d, rng.range_i64(-30000, 30000) as i16);
+        }
+        let mut dst = alloc_view(m, &HeapAlloc);
+        wire_trip(&src, &mut dst, n)
+            && (0..n).all(|i| {
+                src.get::<f64, _>(&[i], r::a).to_bits() == dst.get::<f64, _>(&[i], r::a).to_bits()
+                    && src.get::<f32, _>(&[i], r::b).to_bits()
+                        == dst.get::<f32, _>(&[i], r::b).to_bits()
+                    && src.get::<u32, _>(&[i], r::c) == dst.get::<u32, _>(&[i], r::c)
+                    && src.get::<i16, _>(&[i], r::d) == dst.get::<i16, _>(&[i], r::d)
+            })
+    }
+
+    const FIRST: u64 = 0b0001;
+    const REST: u64 = 0b1110;
+
+    // Runtime extents: every structural mapping at random sizes.
+    forall("wire-roundtrip-dyn", 10, |g| (g.range(1, 64), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        let sel = llama::record::Selection::new(0, 1);
+        type M1 = SoA<R, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, FIRST>;
+        type M2 = SoA<R, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, REST>;
+        roundtrip(AoS::<R, _>::new(e), n, seed)
+            && roundtrip(AoS::<R, _, Packed>::new(e), n, seed)
+            && roundtrip(AoS::<R, _, MinPad>::new(e), n, seed)
+            && roundtrip(SoA::<R, _, MultiBlob>::new(e), n, seed)
+            && roundtrip(SoA::<R, _, SingleBlob>::new(e), n, seed)
+            && roundtrip(AoSoA::<R, _, 8>::new(e), n, seed)
+            && roundtrip(Bytesplit::<R, _>::new(e), n, seed)
+            && roundtrip(ChangeType::<R, R, _>::new(SoA::<R, _>::new(e)), n, seed)
+            && roundtrip(Heatmap::<R, _, 8>::new(SoA::<R, _>::new(e)), n, seed)
+            && roundtrip(FieldAccessCount::new(AoS::<R, _>::new(e)), n, seed)
+            && roundtrip(NullMapping::<R, _>::new(e), n, seed)
+            && roundtrip(One::<R, _>::new(e), n, seed)
+            && roundtrip(Split::new(M1::new(e), M2::new(e), sel), n, seed)
+    });
+
+    // Compile-time extents: the same mappings over `Fix` — the wire
+    // header carries extent *values*, so fixed and dynamic views of the
+    // same size interoperate.
+    forall("wire-roundtrip-fix", 6, |g| g.next_u64(), |&seed| {
+        const N: usize = 16;
+        let e = (Fix::<u32, N>::new(),);
+        let sel = llama::record::Selection::new(0, 1);
+        type EF = (Fix<u32, 16>,);
+        type M1 = SoA<R, EF, MultiBlob, llama::extents::RowMajor, FIRST>;
+        type M2 = SoA<R, EF, MultiBlob, llama::extents::RowMajor, REST>;
+        roundtrip(AoS::<R, _>::new(e), N, seed)
+            && roundtrip(AoS::<R, _, Packed>::new(e), N, seed)
+            && roundtrip(AoS::<R, _, MinPad>::new(e), N, seed)
+            && roundtrip(SoA::<R, _, MultiBlob>::new(e), N, seed)
+            && roundtrip(SoA::<R, _, SingleBlob>::new(e), N, seed)
+            && roundtrip(AoSoA::<R, _, 8>::new(e), N, seed)
+            && roundtrip(Bytesplit::<R, _>::new(e), N, seed)
+            && roundtrip(ChangeType::<R, R, _>::new(SoA::<R, _>::new(e)), N, seed)
+            && roundtrip(Heatmap::<R, _, 8>::new(SoA::<R, _>::new(e)), N, seed)
+            && roundtrip(FieldAccessCount::new(AoS::<R, _>::new(e)), N, seed)
+            && roundtrip(NullMapping::<R, _>::new(e), N, seed)
+            && roundtrip(One::<R, _>::new(e), N, seed)
+            && roundtrip(Split::new(M1::new(e), M2::new(e), sel), N, seed)
+    });
+
+    // The bit-packed mappings, on their type-suitable records, over both
+    // extent kinds. Packed storage is idempotent over its own read-back
+    // values, so src-read vs dst-read stays an exact comparison.
+    llama::record! { pub struct WF, mod wff { v: f32, w: f32 } }
+    llama::record! { pub struct WI, mod wfi { v: u32 } }
+
+    fn roundtrip_f32<M>(m: M, n: usize, seed: u64) -> bool
+    where
+        M: MemoryAccess<WF> + Clone,
+        M::Extents: llama::extents::Extents<ArrayIndex = [usize; 1]>,
+    {
+        let mut src = alloc_view(m.clone(), &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            src.set(&[i], wff::v, rng.f64_range(-1e3, 1e3) as f32);
+            src.set(&[i], wff::w, rng.f64_range(-1e3, 1e3) as f32);
+        }
+        let mut dst = alloc_view(m, &HeapAlloc);
+        wire_trip(&src, &mut dst, n)
+            && (0..n).all(|i| {
+                src.get::<f32, _>(&[i], wff::v).to_bits()
+                    == dst.get::<f32, _>(&[i], wff::v).to_bits()
+                    && src.get::<f32, _>(&[i], wff::w).to_bits()
+                        == dst.get::<f32, _>(&[i], wff::w).to_bits()
+            })
+    }
+
+    fn roundtrip_u32<M>(m: M, n: usize, seed: u64) -> bool
+    where
+        M: MemoryAccess<WI> + Clone,
+        M::Extents: llama::extents::Extents<ArrayIndex = [usize; 1]>,
+    {
+        let mut src = alloc_view(m.clone(), &HeapAlloc);
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            src.set(&[i], wfi::v, rng.next_u64() as u32);
+        }
+        let mut dst = alloc_view(m, &HeapAlloc);
+        wire_trip(&src, &mut dst, n)
+            && (0..n).all(|i| src.get::<u32, _>(&[i], wfi::v) == dst.get::<u32, _>(&[i], wfi::v))
+    }
+
+    forall("wire-roundtrip-packed", 8, |g| (g.range(1, 40), g.next_u64()), |&(n, seed)| {
+        let ed = (Dyn(n as u32),);
+        let ef = (Fix::<u32, 16>::new(),);
+        roundtrip_f32(BitpackFloatSoA::<WF, _, 8, 23>::new(ed), n, seed)
+            && roundtrip_f32(BitpackFloatSoA::<WF, _, 8, 23>::new(ef), 16, seed)
+            && roundtrip_u32(BitpackIntSoA::<WI, _, 12>::new(ed), n, seed)
+            && roundtrip_u32(BitpackIntSoA::<WI, _, 12>::new(ef), 16, seed)
+            && roundtrip_u32(BitpackIntSoADyn::<WI, _>::new(ed, 17), n, seed)
+            && roundtrip_u32(BitpackIntSoADyn::<WI, _>::new(ef, 17), 16, seed)
+    });
+}
