@@ -1,47 +1,66 @@
-//! Distributed n-body over the LLAMA wire transport.
+//! Distributed n-body over the LLAMA wire transport — chaos-tested.
 //!
 //! A parent process keeps the authoritative particle state in an **AoS**
 //! view and drives the simulation; ≥2 worker *processes* (spawned from
-//! this same binary, connected over a Unix domain socket) each own a
-//! disjoint shard of the particle range and compute with a **different
-//! mapping** than the parent — even workers decode into SoA (multi-blob),
-//! odd workers into AoSoA⟨8⟩. Per step:
+//! this same binary, connected over a Unix domain socket) compute shards
+//! with a **different mapping** than the parent — even workers decode
+//! into SoA (multi-blob), odd workers into AoSoA⟨8⟩.
 //!
-//! 1. the parent [`encode`]s the full state once and broadcasts the
-//!    [`WireMsg`] to every worker ([`WireMsg::write_to`]),
-//! 2. each worker [`decode_into`]s its own layout (run-based relayout —
-//!    never the field-wise fallback), integrates its `[lo, hi)` range
-//!    with the exact serial accumulation order, and ships the shard back
-//!    as a wire message,
-//! 3. the parent adopts each shard zero-copy ([`decode_adopt`]) and
-//!    writes it into the AoS state.
+//! Per step the parent [`encode`]s the pre-step state once, then farms
+//! out each shard `[lo, hi)` as a request (a CRC-guarded 20-byte range
+//! header followed by the state [`WireMsg`]) to an idle live worker. The
+//! worker [`decode_into`]s its own layout (run-based relayout — never
+//! the field-wise fallback), integrates the range with the exact serial
+//! accumulation order, and replies with the shard as a wire message; the
+//! parent adopts it zero-copy ([`decode_adopt`]) and writes it into the
+//! AoS state.
 //!
-//! Because every worker reads the same pre-step state and the per-particle
-//! arithmetic matches `views::update_scalar`/`move_scalar` op for op, the
-//! distributed result is **bit-identical** to the single-process serial
-//! run — the example asserts `max |Δpos| == 0.0`.
+//! **Fault tolerance** (the point of the protocol): any peer failure —
+//! EOF from a crashed worker process, an injected `io::Error`, or a
+//! checksum-rejected frame ([`WireError::Corrupt`]) — kills that peer
+//! and **re-dispatches its shard** to the surviving workers; with no
+//! worker left, the parent computes remaining shards locally from the
+//! same encoded snapshot. Because every compute path reads the same
+//! pre-step state and performs op-identical arithmetic, the final state
+//! is **bit-identical** to the single-process serial run *even under
+//! injected faults* — the example asserts `max |Δpos| == 0.0`
+//! unconditionally.
+//!
+//! Set `LLAMA_FAULT_SEED=<u64>` to arm the deterministic chaos plan
+//! ([`llama::fault::FaultPlan`]): every parent-side socket is wrapped in
+//! a [`FaultyStream`] (short reads, torn writes, bit flips, injected
+//! errors) and workers crash-exit after a seeded number of requests.
+//! CI runs this under two fixed seeds (see `docs/SERVING.md` §5).
 //!
 //! Run: `cargo run --example distributed_nbody -- [n] [steps] [workers]`
 
-use std::io::{Read, Write};
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::process::Command;
 
-use llama::blob::{alloc_view, BlobStorage, HeapAlloc};
+use llama::blob::{alloc_view, BlobStorage, HeapAlloc, HeapStorage};
+use llama::coordinator::Metrics;
 use llama::copy::CopyStrategy;
 use llama::extents::{Dyn, Extents};
+use llama::fault::{FaultConfig, FaultPlan, FaultyStream};
 use llama::mapping::MemoryAccess;
 use llama::nbody::views::{self, AosoaMap, Ext1, SoaMbMap};
 use llama::nbody::{
     init_particles, max_pos_delta, particle, pp_interaction, total_energy, Particle, TIMESTEP,
 };
-use llama::transport::{decode_adopt, decode_into, encode, WireMsg};
+use llama::transport::{
+    crc32, decode_adopt, decode_into, encode, wire_error_in, WireError, WireMapping, WireMsg,
+};
 use llama::view::View;
 
-/// Worker `w`'s record range out of `n` particles split `nworkers` ways.
-/// Parent and workers compute this independently; the formula must agree.
-fn shard_range(w: usize, nworkers: usize, n: usize) -> (usize, usize) {
-    (w * n / nworkers, (w + 1) * n / nworkers)
+/// Worker exit codes in chaos runs (0 also covers a clean EOF shutdown).
+const EXIT_INJECTED_CRASH: i32 = 3;
+const EXIT_CORRUPT_REQUEST: i32 = 4;
+
+/// Shard `s`'s record range out of `n` particles split `nshards` ways.
+fn shard_range(s: usize, nshards: usize, n: usize) -> (usize, usize) {
+    (s * n / nshards, (s + 1) * n / nshards)
 }
 
 /// Copy one particle record between two views (possibly different
@@ -75,6 +94,8 @@ fn copy_particle<MS, SS, MD, SD>(
 /// `views::move_scalar` exactly, so a union of disjoint ranges over the
 /// same pre-step state is bit-identical to the serial pass — the update
 /// stores only its own record's `vel` and the move only its own `pos`.
+/// This holds regardless of which mapping (or which process) computes
+/// the range — the basis of fault-tolerant re-dispatch.
 fn step_range<M, S>(v: &mut View<Particle, M, S>, lo: usize, hi: usize)
 where
     M: MemoryAccess<Particle>,
@@ -119,27 +140,84 @@ where
     }
 }
 
-/// Worker body, generic over the worker's compute mapping: per step,
-/// receive the full state, relayout into `make`'s mapping, integrate the
-/// shard, ship the shard back on the wire.
-fn worker_loop<M, F>(
+/// The request header preceding each state frame: `[lo u64][hi u64]`
+/// plus a CRC-32 over those 16 bytes — a corrupted range must not make
+/// a worker silently compute the wrong shard.
+fn request_header(lo: usize, hi: usize) -> [u8; 20] {
+    let mut hdr = [0u8; 20];
+    hdr[0..8].copy_from_slice(&(lo as u64).to_le_bytes());
+    hdr[8..16].copy_from_slice(&(hi as u64).to_le_bytes());
+    let c = crc32(&hdr[..16]);
+    hdr[16..20].copy_from_slice(&c.to_le_bytes());
+    hdr
+}
+
+/// True for error kinds that mean "the other end is gone / gave up" —
+/// a clean exit for a worker, a dead peer for the parent.
+fn is_disconnect(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::BrokenPipe
+            | io::ErrorKind::ConnectionReset
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Serve shard requests until the parent hangs up (EOF = shutdown).
+/// Corrupt requests exit with [`EXIT_CORRUPT_REQUEST`]; an armed fault
+/// plan crash-exits with [`EXIT_INJECTED_CRASH`] after a seeded number
+/// of served requests.
+fn worker_serve<M, F>(
     stream: &mut UnixStream,
     widx: usize,
-    nworkers: usize,
-    steps: usize,
     make: &F,
-) -> std::io::Result<()>
+    crash_after: Option<u64>,
+) -> io::Result<i32>
 where
     M: MemoryAccess<Particle>,
     M::Extents: Extents<ArrayIndex = [usize; 1]>,
     F: Fn(Ext1) -> M,
 {
-    for _ in 0..steps {
-        let msg = WireMsg::read_from(stream)?;
+    let mut served = 0u64;
+    loop {
+        let mut hdr = [0u8; 20];
+        match stream.read_exact(&mut hdr) {
+            Ok(()) => {}
+            Err(e) if is_disconnect(&e) => return Ok(0), // parent done
+            Err(e) => return Err(e),
+        }
+        let lo = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let hi = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        let stored = u32::from_le_bytes(hdr[16..20].try_into().unwrap());
+        if crc32(&hdr[..16]) != stored {
+            eprintln!("worker {widx}: corrupt request header (crc mismatch)");
+            return Ok(EXIT_CORRUPT_REQUEST);
+        }
+        let msg = match WireMsg::read_from(stream) {
+            Ok(m) => m,
+            Err(e) if matches!(wire_error_in(&e), Some(WireError::Corrupt { .. })) => {
+                eprintln!("worker {widx}: corrupt state frame: {e}");
+                return Ok(EXIT_CORRUPT_REQUEST);
+            }
+            Err(e) if is_disconnect(&e) => return Ok(0),
+            Err(e) => {
+                eprintln!("worker {widx}: bad state frame: {e}");
+                return Ok(EXIT_CORRUPT_REQUEST);
+            }
+        };
         let n = msg.record_count();
-        let (lo, hi) = shard_range(widx, nworkers, n);
+        if lo > hi || hi > n as u64 {
+            eprintln!("worker {widx}: range [{lo},{hi}) out of bounds for n={n}");
+            return Ok(EXIT_CORRUPT_REQUEST);
+        }
+        let (lo, hi) = (lo as usize, hi as usize);
+
         let mut v = alloc_view(make((Dyn(n as u32),)), &HeapAlloc);
-        let strategy = decode_into(msg, &mut v).expect("worker: bad state header");
+        let strategy = decode_into(msg, &mut v).expect("worker: crc-valid frame must decode");
         // Wire SoA → SoA/AoSoA always has byte-contiguous runs on both
         // sides; the scalar fallback would mean the fast path regressed.
         assert_ne!(strategy, CopyStrategy::FieldWise, "relayout fell back to field-wise");
@@ -148,20 +226,37 @@ where
         for k in 0..(hi - lo) {
             copy_particle(&v, lo + k, &mut shard, k);
         }
-        encode(&shard).write_to(stream)?;
+        match encode(&shard).write_to(stream) {
+            Ok(()) => {}
+            Err(e) if is_disconnect(&e) => return Ok(0), // parent killed us mid-reply
+            Err(e) => return Err(e),
+        }
+        served += 1;
+        if let Some(k) = crash_after {
+            if served >= k {
+                eprintln!("worker {widx}: injected crash after {served} requests");
+                return Ok(EXIT_INJECTED_CRASH);
+            }
+        }
     }
-    Ok(())
 }
 
-fn worker_main(sock: &str, widx: usize, nworkers: usize, steps: usize) -> std::io::Result<()> {
+fn worker_main(sock: &str, widx: usize) -> io::Result<i32> {
     let mut stream = UnixStream::connect(sock)?;
-    // Hello: identify ourselves so the parent maps streams to shard
-    // ranges regardless of connection order.
+    // Hello: identify ourselves so the parent maps streams to peer
+    // slots regardless of connection order.
     stream.write_all(&[widx as u8])?;
+    // Workers derive their crash schedule independently from the same
+    // env seed (FaultPlan decisions are pure functions of seed + site):
+    // roughly half the workers crash, after a seeded request count.
+    let crash_after = FaultPlan::from_env().and_then(|p| {
+        let d = p.draw(0xC0FF_EE00 + widx as u64);
+        (d % 2 == 0).then_some(1 + (d >> 8) % 4)
+    });
     if widx % 2 == 0 {
-        worker_loop(&mut stream, widx, nworkers, steps, &|e| SoaMbMap::new(e))
+        worker_serve(&mut stream, widx, &|e| SoaMbMap::new(e), crash_after)
     } else {
-        worker_loop(&mut stream, widx, nworkers, steps, &|e| AosoaMap::new(e))
+        worker_serve(&mut stream, widx, &|e| AosoaMap::new(e), crash_after)
     }
 }
 
@@ -173,19 +268,58 @@ fn layout_name(widx: usize) -> &'static str {
     }
 }
 
-fn main() -> std::io::Result<()> {
+// ---------------------------------------------------------------------------
+// Parent side
+// ---------------------------------------------------------------------------
+
+type Peer = FaultyStream<UnixStream>;
+type ShardView = View<Particle, WireMapping<Particle, Ext1>, HeapStorage>;
+
+/// Read one shard reply and adopt it zero-copy, folding every failure
+/// mode (truncation, corruption, wrong geometry) into `io::Error`.
+fn read_reply(stream: &mut Peer, want: usize) -> io::Result<ShardView> {
+    let reply = WireMsg::read_from(stream)?;
+    if reply.record_count() != want {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("wrong-sized shard: want {want}, got {}", reply.record_count()),
+        ));
+    }
+    decode_adopt::<Particle, Ext1>(reply, (Dyn(want as u32),))
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+/// Classify a peer failure: checksum rejections land in the corrupt-
+/// frame counter, everything else is a plain transport death.
+fn note_failure(what: &str, peer: usize, e: &io::Error, metrics: &Metrics) {
+    if matches!(wire_error_in(e), Some(WireError::Corrupt { .. })) {
+        metrics.on_corrupt_frame();
+        println!("  [chaos] worker {peer} {what}: corrupt frame ({e})");
+    } else {
+        println!("  [chaos] worker {peer} {what}: {e}");
+    }
+}
+
+fn main() -> io::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     if args.get(1).map(String::as_str) == Some("--worker") {
         let widx: usize = args[3].parse().expect("worker index");
-        let nworkers: usize = args[4].parse().expect("worker count");
-        let steps: usize = args[5].parse().expect("step count");
-        return worker_main(&args[2], widx, nworkers, steps);
+        let code = worker_main(&args[2], widx)?;
+        std::process::exit(code);
     }
 
     let n: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(96);
     let steps: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(3);
     let nworkers: usize = args.get(3).and_then(|a| a.parse().ok()).unwrap_or(3).clamp(2, 8);
-    println!("distributed n-body: n={n}, {steps} steps, {nworkers} workers (parent layout AoS)");
+    let plan = FaultPlan::from_env();
+    let chaos = plan.is_some();
+    // Without a seed the wrapper is an exact passthrough — one code
+    // path, faults only when armed.
+    let plan = plan.unwrap_or_else(|| FaultPlan::new(0, FaultConfig::default()));
+    println!(
+        "distributed n-body: n={n}, {steps} steps, {nworkers} workers (parent layout AoS){}",
+        if chaos { format!(", chaos seed {}", plan.seed()) } else { String::new() }
+    );
 
     let init = init_particles(n, 7);
     println!("initial energy: {:.6}", total_energy(&init));
@@ -207,16 +341,9 @@ fn main() -> std::io::Result<()> {
     let exe = std::env::current_exe()?;
     let mut children = Vec::new();
     for w in 0..nworkers {
-        let (lo, hi) = shard_range(w, nworkers, n);
-        println!("  worker {w}: range [{lo},{hi})  layout {}", layout_name(w));
+        println!("  worker {w}: layout {}", layout_name(w));
         children.push(
-            Command::new(&exe)
-                .arg("--worker")
-                .arg(&sock)
-                .arg(w.to_string())
-                .arg(nworkers.to_string())
-                .arg(steps.to_string())
-                .spawn()?,
+            Command::new(&exe).arg("--worker").arg(&sock).arg(w.to_string()).spawn()?,
         );
     }
     let mut slots: Vec<Option<UnixStream>> = (0..nworkers).map(|_| None).collect();
@@ -226,10 +353,22 @@ fn main() -> std::io::Result<()> {
         s.read_exact(&mut hello)?;
         slots[hello[0] as usize] = Some(s);
     }
-    let mut streams: Vec<UnixStream> =
-        slots.into_iter().map(|s| s.expect("every worker said hello")).collect();
+    // Every parent-side socket goes through the fault plan (per-peer
+    // site ⇒ independent, reproducible fault schedules).
+    let mut peers: Vec<Option<Peer>> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(w, s)| Some(plan.stream(w as u64, s.expect("every worker said hello"))))
+        .collect();
 
-    // The distributed run against the same initial state.
+    // The distributed run against the same initial state. Shards are
+    // dispatched to live peers (one outstanding request per peer);
+    // failed peers are dropped and their shards re-dispatched; with no
+    // peer left, remaining shards are computed locally from the same
+    // encoded snapshot — so the result never depends on who computed.
+    let nshards = nworkers;
+    let metrics = Metrics::default();
+    let (mut deaths, mut redispatched, mut computed_local) = (0usize, 0usize, 0usize);
     let mut state = views::make_aos_view(&init);
     let mut broadcast_strategy = CopyStrategy::FieldWise;
     let mut frame_bytes = 0usize;
@@ -237,37 +376,106 @@ fn main() -> std::io::Result<()> {
         let msg = encode(&state);
         broadcast_strategy = msg.strategy;
         frame_bytes = msg.frame_len();
-        for s in &mut streams {
-            msg.write_to(s)?;
-        }
-        for (w, s) in streams.iter_mut().enumerate() {
-            let (lo, hi) = shard_range(w, nworkers, n);
-            let reply = WireMsg::read_from(s)?;
-            assert_eq!(reply.record_count(), hi - lo, "worker {w} returned a wrong-sized shard");
-            // Shard payloads are already in the canonical wire layout:
-            // adopt the bytes without relayout, then write into the AoS
-            // state record-wise.
-            let shard = decode_adopt::<Particle, Ext1>(reply, (Dyn((hi - lo) as u32),))
-                .expect("parent: bad shard header");
-            for k in 0..(hi - lo) {
-                copy_particle(&shard, k, &mut state, lo + k);
+        let mut todo: VecDeque<usize> = (0..nshards).collect();
+        let mut pending: Vec<Option<usize>> = vec![None; nworkers];
+        let mut remaining = nshards;
+        while remaining > 0 {
+            // Dispatch: hand every idle live peer the next shard.
+            for pi in 0..nworkers {
+                if pending[pi].is_some() {
+                    continue;
+                }
+                let Some(&sh) = todo.front() else { break };
+                let Some(stream) = peers[pi].as_mut() else { continue };
+                let (lo, hi) = shard_range(sh, nshards, n);
+                let sent = stream
+                    .write_all(&request_header(lo, hi))
+                    .and_then(|()| msg.write_to(stream));
+                match sent {
+                    Ok(()) => {
+                        todo.pop_front();
+                        pending[pi] = Some(sh);
+                    }
+                    Err(e) => {
+                        note_failure("send failed", pi, &e, &metrics);
+                        peers[pi] = None; // drop ⇒ worker sees EOF
+                        deaths += 1;
+                    }
+                }
+            }
+            // No live peer accepted work: compute the rest locally
+            // from the same canonical snapshot.
+            if pending.iter().all(Option::is_none) {
+                while let Some(sh) = todo.pop_front() {
+                    let (lo, hi) = shard_range(sh, nshards, n);
+                    let mut full = decode_adopt::<Particle, Ext1>(msg.clone(), (Dyn(n as u32),))
+                        .expect("parent: own snapshot always decodes");
+                    step_range(&mut full, lo, hi);
+                    for k in lo..hi {
+                        copy_particle(&full, k, &mut state, k);
+                    }
+                    computed_local += 1;
+                    remaining -= 1;
+                }
+                continue;
+            }
+            // Collect: one reply per peer with an outstanding shard.
+            for pi in 0..nworkers {
+                let Some(sh) = pending[pi] else { continue };
+                let stream = peers[pi].as_mut().expect("pending implies live");
+                let (lo, hi) = shard_range(sh, nshards, n);
+                match read_reply(stream, hi - lo) {
+                    Ok(shard) => {
+                        for k in 0..(hi - lo) {
+                            copy_particle(&shard, k, &mut state, lo + k);
+                        }
+                        pending[pi] = None;
+                        remaining -= 1;
+                    }
+                    Err(e) => {
+                        note_failure("reply failed", pi, &e, &metrics);
+                        peers[pi] = None;
+                        pending[pi] = None;
+                        todo.push_back(sh);
+                        deaths += 1;
+                        redispatched += 1;
+                    }
+                }
             }
         }
     }
-    drop(streams);
+    drop(peers); // EOF = shutdown signal to surviving workers
+    let mut statuses = Vec::new();
     for mut c in children {
-        let status = c.wait()?;
-        assert!(status.success(), "a worker exited with {status}");
+        statuses.push(c.wait()?);
     }
     let _ = std::fs::remove_file(&sock);
 
-    println!("state broadcast: strategy {broadcast_strategy:?}, frame {frame_bytes} bytes/step");
+    println!("state broadcast: strategy {broadcast_strategy:?}, frame {frame_bytes} bytes/req");
+    if chaos {
+        println!(
+            "chaos: {deaths} peer deaths, {redispatched} shards re-dispatched, \
+             {computed_local} computed locally, {} corrupt frames caught",
+            metrics.corrupt_frames()
+        );
+        for (w, st) in statuses.iter().enumerate() {
+            println!("  worker {w} exited with {st}");
+        }
+    } else {
+        assert_eq!(deaths, 0, "no faults armed, yet a peer died");
+        for st in &statuses {
+            assert!(st.success(), "a worker exited with {st}");
+        }
+    }
 
     let dist_snap = views::snapshot_view(&state);
     let delta = max_pos_delta(&serial_snap, &dist_snap);
     println!("final energy:   {:.6}", total_energy(&dist_snap));
     println!("max |Δpos| distributed vs serial: {delta:e} (0 = bit-identical)");
     assert_eq!(delta, 0.0, "distributed result diverged from the serial reference");
-    println!("OK: {nworkers} workers x {steps} steps, mixed layouts, bit-identical to serial");
+    println!(
+        "OK: {nworkers} workers x {steps} steps, mixed layouts{}, bit-identical to serial",
+        if chaos { ", injected faults" } else { "" }
+    );
     Ok(())
 }

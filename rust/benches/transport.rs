@@ -123,6 +123,8 @@ fn main() {
 
     // Raw framing: serialize header + payload into a reused buffer and
     // parse it back (the cost a socket adds on top of encode/decode).
+    // Since wire v2 both directions run every byte through the frame
+    // checksum, so this row includes two CRC passes.
     {
         let mut buf = Vec::with_capacity(msg.frame_len());
         b.bench("frame  write + parse   header+payload", n as u64, || {
@@ -132,6 +134,13 @@ fn main() {
             black_box(parsed.payload.len());
         });
     }
+
+    // The checksum alone, over the payload bytes — the incremental cost
+    // v2 integrity added to each frame direction, isolated from the
+    // header serialization around it.
+    b.bench("frame  crc32           payload", n as u64, || {
+        black_box(llama::transport::crc32(&msg.payload));
+    });
 
     println!(
         "{}",
@@ -151,6 +160,7 @@ fn main() {
             format!("decode wire -> AoSoA8  runs {threads}T"),
             "decode wire -> AoS     field-wise".into(),
             "frame  write + parse   header+payload".into(),
+            "frame  crc32           payload".into(),
         ];
         want.sort();
         let mut got: Vec<String> = b.results().iter().map(|m| m.name.clone()).collect();

@@ -88,6 +88,12 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Assumed per-job execution time for the `retry_after` hint before any
+/// job has completed (no observed service rate yet). Deliberately
+/// pessimistic relative to the 1 ms floor: a cold coordinator facing an
+/// already-full queue should not invite an immediate thundering herd.
+pub const COLD_START_EXEC_ESTIMATE: Duration = Duration::from_millis(10);
+
 /// A job admitted to the queue (dispatcher currency).
 pub(crate) struct Queued {
     pub(crate) spec: JobSpec,
@@ -360,10 +366,22 @@ impl Ingest {
 
     /// Retry hint under full-queue rejection: the time the backlog takes
     /// to drain at the observed service rate (mean exec time × depth /
-    /// workers), clamped to `[1ms, 10s]` (no observations yet ⇒ floor).
+    /// workers), clamped to `[1ms, 10s]`.
+    ///
+    /// Cold start: before any job has *completed* there is no observed
+    /// service rate — `mean_exec_time()` would read 0 and every hint
+    /// would collapse to the 1 ms floor even against a full queue,
+    /// telling rejected clients to hammer a coordinator that has not
+    /// proven it can drain at all. Until the first completion the hint
+    /// substitutes [`COLD_START_EXEC_ESTIMATE`] as the per-job cost, so
+    /// it still scales with the backlog.
     fn retry_after(&self) -> Duration {
         let sh = &*self.shared;
-        let per_job = sh.metrics.mean_exec_time();
+        let per_job = if sh.metrics.job_counts().1 == 0 {
+            COLD_START_EXEC_ESTIMATE
+        } else {
+            sh.metrics.mean_exec_time()
+        };
         let hint = per_job.mul_f64(sh.queue.depth() as f64 / sh.workers as f64);
         hint.clamp(Duration::from_millis(1), Duration::from_secs(10))
     }
@@ -475,6 +493,34 @@ mod tests {
         q.try_push(1).ok().unwrap();
         let r = q.push_blocking(2, Some(Duration::from_millis(10)));
         assert!(matches!(r, Err(PushErr::TimedOut)));
+    }
+
+    #[test]
+    fn cold_start_retry_after_uses_documented_default() {
+        use super::super::job::{Backend, JobSpec, Layout};
+        // Standalone ingest front: capacity 1, 2 workers, fresh metrics
+        // — no dispatcher, so nothing ever completes and the service
+        // rate stays unobserved.
+        let ing = Ingest::new(1, 0, 2, Arc::new(Metrics::default()));
+        let spec = || JobSpec {
+            id: 0,
+            layout: Layout::SoaMb,
+            backend: Backend::NativeScalar,
+            n: 8,
+            steps: 1,
+            seed: 1,
+            threads: 0,
+        };
+        ing.submit_with(spec(), Admission::Reject).unwrap();
+        match ing.submit_with(spec(), Admission::Reject) {
+            Err(SubmitError::QueueFull { retry_after }) => {
+                // depth 1 over 2 workers at the documented cold-start
+                // estimate: exactly half of it — not the degenerate
+                // 1 ms floor a zero mean-exec would have produced.
+                assert_eq!(retry_after, COLD_START_EXEC_ESTIMATE.mul_f64(0.5));
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
     }
 
     #[test]

@@ -131,6 +131,10 @@ pub struct JobResult {
     /// Thread budget the job actually ran with (native backends: the
     /// granted pool lease, ≥ 1; PJRT: 1; 0 on error).
     pub threads: usize,
-    /// Error message if the job failed.
+    /// Attempts the job took (1 = first try succeeded; > 1 means the
+    /// retry policy re-dispatched it after failures/panics).
+    pub attempts: u32,
+    /// Error message of the **last** attempt if the job ultimately
+    /// failed (earlier attempts' errors are superseded).
     pub error: Option<String>,
 }

@@ -24,6 +24,11 @@ pub struct Metrics {
     rejected_quota: AtomicU64,
     admission_waits: AtomicU64,
     admission_wait_ns: AtomicU64,
+    // Fault tolerance (see `crate::coordinator::RetryPolicy` and
+    // `crate::fault`).
+    jobs_panicked: AtomicU64,
+    job_retries: AtomicU64,
+    corrupt_frames: AtomicU64,
 }
 
 impl Metrics {
@@ -66,6 +71,25 @@ impl Metrics {
     pub fn on_admission_wait(&self, wait: Duration) {
         self.admission_waits.fetch_add(1, Ordering::Relaxed);
         self.admission_wait_ns.fetch_add(wait.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record a job attempt that panicked (the worker caught it and
+    /// survived; counted once per panicking attempt, so a job that
+    /// panics on every one of its `max_attempts` counts that many).
+    pub fn on_job_panic(&self) {
+        self.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a failed attempt being re-dispatched under the retry
+    /// policy (counted once per extra attempt, not per job).
+    pub fn on_job_retry(&self) {
+        self.job_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a wire frame rejected by its checksum
+    /// ([`WireError::Corrupt`](crate::transport::WireError::Corrupt)).
+    pub fn on_corrupt_frame(&self) {
+        self.corrupt_frames.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a dispatched batch of `size` jobs.
@@ -156,6 +180,21 @@ impl Metrics {
         Duration::from_nanos(self.admission_wait_ns.load(Ordering::Relaxed) / waits)
     }
 
+    /// Job attempts that panicked (and were caught).
+    pub fn panics(&self) -> u64 {
+        self.jobs_panicked.load(Ordering::Relaxed)
+    }
+
+    /// Extra attempts dispatched by the retry policy.
+    pub fn retries(&self) -> u64 {
+        self.job_retries.load(Ordering::Relaxed)
+    }
+
+    /// Wire frames rejected by checksum.
+    pub fn corrupt_frames(&self) -> u64 {
+        self.corrupt_frames.load(Ordering::Relaxed)
+    }
+
     /// Render a summary block.
     pub fn render(&self) -> String {
         let (s, c, f) = self.job_counts();
@@ -164,6 +203,7 @@ impl Metrics {
             "jobs: {s} submitted, {c} completed, {f} failed\n\
              batches: {} (mean size {:.2}, max {})\n\
              queue: depth {} (max {}), rejected {} (full {rf}, deadline {rd}, quota {rq})\n\
+             faults: {} panics caught, {} retries, {} corrupt frames\n\
              mean queue {:?}, mean exec {:?}, mean admission wait {:?}\n",
             self.batches(),
             self.mean_batch_size(),
@@ -171,6 +211,9 @@ impl Metrics {
             self.queue_depth(),
             self.max_queue_depth(),
             self.rejected_total(),
+            self.panics(),
+            self.retries(),
+            self.corrupt_frames(),
             self.mean_queue_time(),
             self.mean_exec_time(),
             self.mean_admission_wait(),

@@ -39,12 +39,25 @@
 //! queue occupancy. Queue depth, rejects, and admission waits land in
 //! [`Metrics`]. See `docs/SERVING.md` for the semantics.
 //!
-//! Invariants (checked by `rust/tests/properties.rs` and
-//! `rust/tests/ingestion.rs`):
+//! **Fault tolerance:** every job attempt runs under
+//! `std::panic::catch_unwind`, so a panicking kernel becomes a typed
+//! [`JobResult::error`] on a *surviving* worker, never a dead thread.
+//! Failed attempts (panic or error) are re-dispatched in place per
+//! [`Config::retry`] ([`RetryPolicy`]: exponential backoff with
+//! deterministic per-(job, attempt) jitter); [`Config::faults`] accepts
+//! a seeded [`crate::fault::FaultPlan`] that injects job panics and
+//! delays for chaos testing (`LLAMA_FAULT_SEED`). Caught panics,
+//! retries, and checksum-rejected wire frames all land in [`Metrics`].
+//! See `docs/SERVING.md` §5 "Failure model".
+//!
+//! Invariants (checked by `rust/tests/properties.rs`,
+//! `rust/tests/ingestion.rs`, and `rust/tests/faults.rs`):
 //! - every *admitted* job completes exactly once (success or error);
 //! - batches never exceed `max_batch` and never mix batch keys;
 //! - jobs with the same batch key dispatch in FIFO order;
-//! - queue depth never exceeds [`Config::queue_capacity`].
+//! - queue depth never exceeds [`Config::queue_capacity`];
+//! - a panicking job never kills its worker, and a job never runs more
+//!   than [`RetryPolicy::max_attempts`] times.
 
 pub mod ingest;
 pub mod job;
@@ -58,9 +71,10 @@ use ingest::Queued;
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::blob::BlobStorage;
+use crate::fault::{FaultPlan, JobFault};
 use crate::mapping::SimdAccess;
 use crate::nbody::{init_particles, total_energy, views, Particle, ParticleData};
 use crate::pool::WorkerPool;
@@ -93,6 +107,13 @@ pub struct Config {
     /// between *running* jobs is separate: thread budgets are leased
     /// per job from the worker pool.
     pub client_quota: usize,
+    /// Retry policy for failed/panicked job attempts. The default runs
+    /// each job exactly once (no retries) — existing behavior.
+    pub retry: RetryPolicy,
+    /// Optional seeded fault plan injecting job panics/delays
+    /// ([`crate::fault::FaultPlan::job_fault`]) — the chaos-testing
+    /// hook. `None` (the default) injects nothing.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for Config {
@@ -105,7 +126,62 @@ impl Default for Config {
             native_threads: 0,
             queue_capacity: 1024,
             client_quota: 0,
+            retry: RetryPolicy::default(),
+            faults: None,
         }
+    }
+}
+
+/// How failed job attempts are re-dispatched: up to `max_attempts`
+/// total runs, sleeping an exponentially growing, deterministically
+/// jittered backoff between them.
+///
+/// The backoff for the `k`-th failed attempt is
+/// `min(cap, base × 2^(k−1))`, of which half is kept and half is
+/// jittered by a stable hash of `(job id, k)` ("equal jitter") — so
+/// simultaneous failures don't re-dispatch in lockstep, yet every run
+/// with the same ids sleeps the same schedule (no wall-clock, no global
+/// RNG; reproducibility is the point of the whole fault layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per job, ≥ 1 (1 = no retries, the default).
+    pub max_attempts: u32,
+    /// Backoff before the first retry.
+    pub base: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(250),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Policy allowing `n` retries (`n + 1` total attempts) with the
+    /// default backoff shape.
+    pub fn retries(n: u32) -> RetryPolicy {
+        RetryPolicy { max_attempts: n.saturating_add(1), ..RetryPolicy::default() }
+    }
+
+    /// Sleep before re-dispatching after failed attempt number
+    /// `failed_attempt` (1-based) of job `job`.
+    pub fn backoff(&self, failed_attempt: u32, job: u64) -> Duration {
+        let shift = failed_attempt.saturating_sub(1).min(20);
+        let capped = self.base.saturating_mul(1u32 << shift).min(self.cap);
+        let half = capped / 2;
+        let jitter_ns = if half.is_zero() {
+            0
+        } else {
+            crate::fault::hash2(job, u64::from(failed_attempt))
+                % (half.as_nanos().max(1) as u64)
+        };
+        half + Duration::from_nanos(jitter_ns)
     }
 }
 
@@ -179,6 +255,8 @@ impl Coordinator {
             let engine = config.engine.clone();
             let pool = config.pool.clone();
             let native_threads = config.native_threads;
+            let retry = config.retry;
+            let faults = config.faults.clone();
             let wmetrics = metrics.clone();
             workers.push(std::thread::spawn(move || loop {
                 let next = { rx.lock().unwrap().recv() };
@@ -197,7 +275,51 @@ impl Coordinator {
                 for q in batch {
                     let queue_time = q.submitted_at.elapsed();
                     let t0 = Instant::now();
-                    let outcome = run_job(&q.spec, engine.as_ref(), kernel_pool, native_threads);
+                    let max_attempts = retry.max_attempts.max(1);
+                    let mut attempt: u32 = 1;
+                    // Attempt loop: panics are caught (the worker
+                    // survives any kernel), failed attempts back off
+                    // and re-run in place up to the policy's budget.
+                    // Pool kernel panics are safe to catch here: the
+                    // pool resumes a shard panic on this (submitter)
+                    // thread only after draining the batch, so the
+                    // pool itself stays consistent.
+                    let outcome = loop {
+                        let injected = match &faults {
+                            Some(p) => p.job_fault(q.spec.id, attempt - 1),
+                            None => JobFault::None,
+                        };
+                        let caught =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                match injected {
+                                    JobFault::Panic => {
+                                        panic!("injected fault: job panic (attempt {attempt})")
+                                    }
+                                    JobFault::Delay(d) => std::thread::sleep(d),
+                                    JobFault::None => {}
+                                }
+                                run_job(&q.spec, engine.as_ref(), kernel_pool, native_threads)
+                            }));
+                        let attempt_result = match caught {
+                            Ok(r) => r,
+                            Err(payload) => {
+                                wmetrics.on_job_panic();
+                                Err(anyhow::anyhow!(
+                                    "job panicked: {}",
+                                    panic_message(payload.as_ref())
+                                ))
+                            }
+                        };
+                        match attempt_result {
+                            Ok(ok) => break Ok(ok),
+                            Err(_) if attempt < max_attempts => {
+                                wmetrics.on_job_retry();
+                                std::thread::sleep(retry.backoff(attempt, q.spec.id));
+                                attempt += 1;
+                            }
+                            Err(e) => break Err(e),
+                        }
+                    };
                     let exec_time = t0.elapsed();
                     let (drift, threads, error) = match outcome {
                         Ok((d, t)) => (d, t, None),
@@ -213,6 +335,7 @@ impl Coordinator {
                         energy_drift: drift,
                         steps_per_sec: q.spec.steps as f64 / exec_time.as_secs_f64().max(1e-12),
                         threads,
+                        attempts: attempt,
                         error,
                     });
                 }
@@ -276,6 +399,19 @@ impl Drop for Coordinator {
         // Abandoning a coordinator without `finish` must not leave the
         // dispatcher parked on the queue forever.
         self.ingest.close();
+    }
+}
+
+/// Best-effort text of a caught panic payload (`panic!` with a string
+/// literal or a formatted message covers essentially all of std and
+/// this crate).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
     }
 }
 

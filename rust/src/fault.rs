@@ -1,0 +1,512 @@
+//! Deterministic fault injection for the serving stack (no crates).
+//!
+//! A serving tier that only works on a clean machine is not a serving
+//! tier. This module is the chaos layer underneath the transport and the
+//! coordinator: a seeded plan ([`FaultPlan`]) that derives every fault
+//! decision from a [splitmix64](https://prng.di.unimi.it/splitmix64.c)
+//! stream, so a failing run reproduces **exactly** from its seed — no
+//! wall clock, no global RNG, no flaky CI. LLAMA's own design argument
+//! applies: cross-cutting concerns (instrumentation there, fault
+//! injection here) belong in a composable layer under the access API,
+//! not scattered through call sites.
+//!
+//! Three injection surfaces:
+//!
+//! 1. **Streams** ([`FaultyStream`]): wraps any `Read`/`Write` and
+//!    injects short reads, torn (partial) writes, injected
+//!    `io::Error`s, and single-bit payload flips at configured
+//!    per-call rates. Bit flips are what the transport's CRC-32 frame
+//!    checksum ([`crate::transport`]) exists to catch; short reads and
+//!    torn writes exercise every `read_exact`/`write_all` loop.
+//! 2. **Jobs** ([`FaultPlan::job_fault`]): the coordinator consults the
+//!    plan before each job attempt and injects a panic or a delay
+//!    ([`JobFault`]) — the test harness for panic isolation and
+//!    retry/backoff ([`crate::coordinator::RetryPolicy`]).
+//! 3. **Free draws** ([`FaultPlan::draw`]): a stable per-site hash for
+//!    callers that need their own deterministic schedule (the chaos
+//!    example derives worker crash points from it).
+//!
+//! The environment knob `LLAMA_FAULT_SEED` ([`FaultPlan::from_env`])
+//! arms the chaos preset ([`FaultConfig::chaos`]) across any binary
+//! that opts in — CI runs the distributed n-body example under two
+//! fixed seeds and asserts bit-identity to the serial engine anyway
+//! (see `docs/SERVING.md`, "Failure model").
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Splitmix64
+// ---------------------------------------------------------------------------
+
+/// One splitmix64 scramble of `x`: a high-quality 64→64 bit mixer.
+/// Stateless building block for [`SplitMix`] and for stable per-site
+/// hashes ([`hash2`]).
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stable hash of two words — deterministic jitter and per-site seed
+/// derivation ("the same (job, attempt) always jitters the same way").
+#[inline]
+pub fn hash2(a: u64, b: u64) -> u64 {
+    splitmix64(splitmix64(a) ^ b.rotate_left(32))
+}
+
+/// Splitmix64 PRNG: increment a Weyl sequence, scramble each point.
+/// Unlike `testing::Rng` (xorshift, zero-state pitfalls) every seed is
+/// valid and nearby seeds produce uncorrelated streams — exactly what a
+/// per-site fault schedule needs.
+#[derive(Clone, Debug)]
+pub struct SplitMix {
+    state: u64,
+}
+
+impl SplitMix {
+    /// PRNG seeded at `seed` (any value, including 0).
+    pub fn new(seed: u64) -> SplitMix {
+        SplitMix { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// True with probability `p_1024`/1024. Draws **no** value when the
+    /// probability is zero, so disabled knobs leave the stream
+    /// untouched (an all-zero config is an exact passthrough).
+    #[inline]
+    pub fn chance(&mut self, p_1024: u16) -> bool {
+        p_1024 > 0 && self.next_u64() % 1024 < u64::from(p_1024)
+    }
+
+    /// Uniform in `[0, n)` (`n` ≥ 1).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Fault rates and shapes. Stream probabilities are per I/O call in
+/// parts per 1024; job knobs drive [`FaultPlan::job_fault`]. The
+/// default is **all zero** — a plan with a default config injects
+/// nothing and a [`FaultyStream`] under it is a pure passthrough.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// Per-read probability (/1024) of an injected `io::Error`
+    /// (`ConnectionReset`) instead of reading.
+    pub p_read_error: u16,
+    /// Per-read probability (/1024) of truncating the destination
+    /// buffer to a random shorter length (≥ 1) before reading — no
+    /// bytes are lost, `read_exact` loops must cope.
+    pub p_short_read: u16,
+    /// Per-read probability (/1024) of flipping one bit in the bytes
+    /// just read — in-transit corruption the frame CRC must catch.
+    pub p_read_bit_flip: u16,
+    /// Per-write probability (/1024) of an injected `io::Error`.
+    pub p_write_error: u16,
+    /// Per-write probability (/1024) of accepting only a random prefix
+    /// (≥ 1 byte) of the buffer — `write_all` loops must cope.
+    pub p_torn_write: u16,
+    /// Per-write probability (/1024) of flipping one bit in the bytes
+    /// written out.
+    pub p_write_bit_flip: u16,
+    /// Inject a panic into the first this-many **attempts** of every
+    /// job (0 = none; `u32::MAX` = every attempt). The deterministic
+    /// counterpart to [`p_job_panic`](FaultConfig::p_job_panic) —
+    /// tests use it to script "panics twice, then succeeds".
+    pub panic_first_attempts: u32,
+    /// Per-attempt probability (/1024) of an injected job panic,
+    /// derived from (seed, job id, attempt) — reproducible across
+    /// runs.
+    pub p_job_panic: u16,
+    /// Per-attempt probability (/1024) of an injected job delay.
+    pub p_job_delay: u16,
+    /// The delay injected when `p_job_delay` fires.
+    pub delay: Duration,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            p_read_error: 0,
+            p_short_read: 0,
+            p_read_bit_flip: 0,
+            p_write_error: 0,
+            p_torn_write: 0,
+            p_write_bit_flip: 0,
+            panic_first_attempts: 0,
+            p_job_panic: 0,
+            p_job_delay: 0,
+            delay: Duration::from_millis(1),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// The chaos preset `LLAMA_FAULT_SEED` arms: frequent short
+    /// reads/torn writes (they are harmless by contract), occasional
+    /// bit flips and injected errors, rare job panics/delays. Rates
+    /// are chosen so a tiny CI run still sees several of each.
+    pub fn chaos() -> FaultConfig {
+        FaultConfig {
+            p_read_error: 6,
+            p_short_read: 128,
+            p_read_bit_flip: 10,
+            p_write_error: 6,
+            p_torn_write: 128,
+            p_write_bit_flip: 10,
+            panic_first_attempts: 0,
+            p_job_panic: 48,
+            p_job_delay: 48,
+            delay: Duration::from_millis(2),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The plan
+// ---------------------------------------------------------------------------
+
+/// What [`FaultPlan::job_fault`] tells the coordinator to do to one job
+/// attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobFault {
+    /// Run the attempt untouched.
+    None,
+    /// Panic before the kernel runs (the worker must survive it).
+    Panic,
+    /// Sleep [`FaultConfig::delay`] before the kernel runs.
+    Delay(Duration),
+}
+
+/// A seeded, deterministic fault schedule. Every decision — per stream
+/// site, per (job, attempt) — is a pure function of `(seed, site)`, so
+/// two processes holding the same plan agree on the schedule without
+/// communicating, and any run reproduces from its seed alone.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    cfg: FaultConfig,
+}
+
+/// Domain-separation salts so stream, job, and free-draw schedules
+/// derived from one seed stay uncorrelated.
+const SALT_STREAM: u64 = 0x5354_5245_414D_0001; // "STREAM"
+const SALT_JOB: u64 = 0x4A4F_4246_4C54_0002; // "JOBFLT"
+const SALT_DRAW: u64 = 0x4452_4157_5342_0003; // "DRAWS"
+
+impl FaultPlan {
+    /// Plan with an explicit config.
+    pub fn new(seed: u64, cfg: FaultConfig) -> FaultPlan {
+        FaultPlan { seed, cfg }
+    }
+
+    /// Read `LLAMA_FAULT_SEED` (a u64); when set, arm the
+    /// [`FaultConfig::chaos`] preset under that seed. Unset, empty, or
+    /// unparsable values mean "no plan" — callers treat `None` as
+    /// fault-free.
+    pub fn from_env() -> Option<FaultPlan> {
+        let raw = std::env::var("LLAMA_FAULT_SEED").ok()?;
+        let seed: u64 = raw.trim().parse().ok()?;
+        Some(FaultPlan::new(seed, FaultConfig::chaos()))
+    }
+
+    /// The plan's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The plan's fault rates.
+    pub fn config(&self) -> FaultConfig {
+        self.cfg
+    }
+
+    /// Wrap `inner` in a [`FaultyStream`] whose schedule is derived
+    /// from `(seed, site)` — give each peer/socket its own site id so
+    /// their fault sequences are independent and reproducible.
+    pub fn stream<S>(&self, site: u64, inner: S) -> FaultyStream<S> {
+        FaultyStream::new(inner, hash2(self.seed ^ SALT_STREAM, site), self.cfg)
+    }
+
+    /// The fault (if any) to inject into attempt `attempt` (0-based) of
+    /// job `job`. [`FaultConfig::panic_first_attempts`] wins over the
+    /// probabilistic knobs; decisions are independent per (job,
+    /// attempt) and reproducible.
+    pub fn job_fault(&self, job: u64, attempt: u32) -> JobFault {
+        if attempt < self.cfg.panic_first_attempts {
+            return JobFault::Panic;
+        }
+        let mut rng =
+            SplitMix::new(hash2(self.seed ^ SALT_JOB, hash2(job, u64::from(attempt))));
+        if rng.chance(self.cfg.p_job_panic) {
+            JobFault::Panic
+        } else if rng.chance(self.cfg.p_job_delay) {
+            JobFault::Delay(self.cfg.delay)
+        } else {
+            JobFault::None
+        }
+    }
+
+    /// A stable 64-bit draw for `site` — for callers that derive their
+    /// own schedules (e.g. "worker `w` crashes after `draw(w) % k`
+    /// requests" in the chaos example).
+    pub fn draw(&self, site: u64) -> u64 {
+        hash2(self.seed ^ SALT_DRAW, site)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultyStream
+// ---------------------------------------------------------------------------
+
+/// A `Read`/`Write` adapter injecting faults per its [`FaultConfig`]:
+/// short reads, torn writes, injected `io::Error`s, single-bit flips.
+/// Decisions come from an embedded [`SplitMix`] stream, so an identical
+/// call sequence replays an identical fault sequence.
+///
+/// Contract notes:
+/// - Short reads and torn writes never lose bytes — they only return
+///   less than asked, which correct `read_exact`/`write_all` users
+///   already handle.
+/// - Bit flips corrupt data **in transit** (the source buffer is never
+///   modified on writes).
+/// - Injected errors consume no bytes from the inner stream.
+#[derive(Debug)]
+pub struct FaultyStream<S> {
+    inner: S,
+    rng: SplitMix,
+    cfg: FaultConfig,
+    scratch: Vec<u8>,
+}
+
+impl<S> FaultyStream<S> {
+    /// Wrap `inner` with a fault schedule seeded at `seed`. Prefer
+    /// [`FaultPlan::stream`] so sites derive from one plan.
+    pub fn new(inner: S, seed: u64, cfg: FaultConfig) -> FaultyStream<S> {
+        FaultyStream { inner, rng: SplitMix::new(seed), cfg, scratch: Vec::new() }
+    }
+
+    /// The wrapped stream.
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// The wrapped stream, mutably (bypasses injection).
+    pub fn get_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    fn injected_error(what: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::ConnectionReset, format!("injected fault: {what}"))
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return self.inner.read(buf);
+        }
+        if self.rng.chance(self.cfg.p_read_error) {
+            return Err(Self::injected_error("read error"));
+        }
+        let want = if buf.len() > 1 && self.rng.chance(self.cfg.p_short_read) {
+            1 + self.rng.below(buf.len() as u64 - 1) as usize
+        } else {
+            buf.len()
+        };
+        let n = self.inner.read(&mut buf[..want])?;
+        if n > 0 && self.rng.chance(self.cfg.p_read_bit_flip) {
+            let byte = self.rng.below(n as u64) as usize;
+            let bit = self.rng.below(8) as u32;
+            buf[byte] ^= 1 << bit;
+        }
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        if self.rng.chance(self.cfg.p_write_error) {
+            return Err(Self::injected_error("write error"));
+        }
+        let take = if buf.len() > 1 && self.rng.chance(self.cfg.p_torn_write) {
+            1 + self.rng.below(buf.len() as u64 - 1) as usize
+        } else {
+            buf.len()
+        };
+        if self.rng.chance(self.cfg.p_write_bit_flip) {
+            self.scratch.clear();
+            self.scratch.extend_from_slice(&buf[..take]);
+            let byte = self.rng.below(take as u64) as usize;
+            let bit = self.rng.below(8) as u32;
+            self.scratch[byte] ^= 1 << bit;
+            self.inner.write(&self.scratch)
+        } else {
+            self.inner.write(&buf[..take])
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn splitmix_matches_reference_vectors() {
+        // Reference values from the canonical splitmix64.c with seed 0:
+        // the Weyl increment then the three xor-multiply rounds.
+        let mut rng = SplitMix::new(0);
+        assert_eq!(rng.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(rng.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(rng.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn streams_are_deterministic_per_seed() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix::new(42);
+            (0..32).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix::new(42);
+            (0..32).map(|_| r.next_u64()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = SplitMix::new(43);
+            (0..32).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn zero_config_stream_is_passthrough() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let mut s = FaultyStream::new(Cursor::new(data.clone()), 7, FaultConfig::default());
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+
+        let mut w = FaultyStream::new(Vec::new(), 7, FaultConfig::default());
+        w.write_all(&data).unwrap();
+        assert_eq!(w.into_inner(), data);
+    }
+
+    #[test]
+    fn short_reads_and_torn_writes_lose_nothing() {
+        // Only the length-shaping faults armed: read_exact/write_all
+        // loops must still move every byte, uncorrupted.
+        let cfg = FaultConfig { p_short_read: 1024, p_torn_write: 1024, ..Default::default() };
+        let data: Vec<u8> = (0..4096).map(|i| (i * 31 % 251) as u8).collect();
+
+        let mut r = FaultyStream::new(Cursor::new(data.clone()), 11, cfg);
+        let mut out = vec![0u8; data.len()];
+        r.read_exact(&mut out).unwrap();
+        assert_eq!(out, data);
+
+        let mut w = FaultyStream::new(Vec::new(), 11, cfg);
+        w.write_all(&data).unwrap();
+        assert_eq!(w.into_inner(), data);
+    }
+
+    #[test]
+    fn bit_flips_corrupt_in_transit_only() {
+        let cfg = FaultConfig { p_read_bit_flip: 1024, ..Default::default() };
+        let data = vec![0u8; 64];
+        let mut r = FaultyStream::new(Cursor::new(data.clone()), 5, cfg);
+        let mut out = vec![0u8; 64];
+        r.read_exact(&mut out).unwrap();
+        // Every read call flips exactly one bit in the bytes it
+        // returned, so the output differs from the source...
+        assert_ne!(out, data);
+        // ...and replaying the same seed reproduces the exact flips.
+        let mut r2 = FaultyStream::new(Cursor::new(data), 5, cfg);
+        let mut out2 = vec![0u8; 64];
+        r2.read_exact(&mut out2).unwrap();
+        assert_eq!(out, out2);
+
+        let cfg = FaultConfig { p_write_bit_flip: 1024, ..Default::default() };
+        let src = vec![0xFFu8; 64];
+        let mut w = FaultyStream::new(Vec::new(), 5, cfg);
+        w.write_all(&src).unwrap();
+        assert_ne!(w.get_ref()[..], src[..], "sink saw flipped bytes");
+        assert_eq!(src, vec![0xFFu8; 64], "source buffer untouched");
+    }
+
+    #[test]
+    fn injected_errors_are_typed_and_deterministic() {
+        let cfg = FaultConfig { p_read_error: 1024, ..Default::default() };
+        let mut r = FaultyStream::new(Cursor::new(vec![1u8, 2, 3]), 3, cfg);
+        let err = r.read(&mut [0u8; 2]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        assert!(err.to_string().contains("injected fault"));
+
+        let cfg = FaultConfig { p_write_error: 1024, ..Default::default() };
+        let mut w = FaultyStream::new(Vec::new(), 3, cfg);
+        assert!(w.write(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn job_fault_scripted_attempts_then_probabilistic() {
+        let cfg = FaultConfig { panic_first_attempts: 2, ..Default::default() };
+        let plan = FaultPlan::new(9, cfg);
+        for job in 0..8u64 {
+            assert_eq!(plan.job_fault(job, 0), JobFault::Panic);
+            assert_eq!(plan.job_fault(job, 1), JobFault::Panic);
+            // Probabilistic knobs are all zero: attempt 2 is clean.
+            assert_eq!(plan.job_fault(job, 2), JobFault::None);
+        }
+
+        // Always-delay plan: every attempt sleeps, none panics.
+        let cfg = FaultConfig {
+            p_job_delay: 1024,
+            delay: Duration::from_millis(3),
+            ..Default::default()
+        };
+        let plan = FaultPlan::new(9, cfg);
+        assert_eq!(plan.job_fault(4, 0), JobFault::Delay(Duration::from_millis(3)));
+    }
+
+    #[test]
+    fn plans_agree_across_holders() {
+        // Two plans with equal seed+config produce identical schedules
+        // (the distributed example relies on this: parent and workers
+        // derive the schedule independently from the env seed).
+        let a = FaultPlan::new(1234, FaultConfig::chaos());
+        let b = FaultPlan::new(1234, FaultConfig::chaos());
+        for site in 0..16u64 {
+            assert_eq!(a.draw(site), b.draw(site));
+            assert_eq!(a.job_fault(site, 0), b.job_fault(site, 0));
+        }
+        // Sites are decorrelated: distinct draws.
+        assert_ne!(a.draw(0), a.draw(1));
+    }
+}

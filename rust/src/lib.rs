@@ -124,8 +124,11 @@
 //! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
 //! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
 //!   (PJRT behind the `pjrt` cargo feature), with bounded, quota-aware job
-//!   ingestion → [`coordinator::Ingest`] and layout-aware view transport
-//!   across processes → [`transport`] (`examples/distributed_nbody.rs`)
+//!   ingestion → [`coordinator::Ingest`], layout-aware view transport
+//!   across processes → [`transport`] (checksummed v2 frames;
+//!   `examples/distributed_nbody.rs`), and deterministic fault injection
+//!   for chaos-testing the whole serving path → [`fault`]
+//!   (`LLAMA_FAULT_SEED`, [`coordinator::RetryPolicy`])
 //!
 //! # Reference documentation
 //!
@@ -139,8 +142,9 @@
 //!   `LLAMA_THREADS` policy.
 //! - `docs/SERVING.md` — the serving tier: the [`transport`] wire format
 //!   specification, the coordinator's admission control / backpressure
-//!   semantics ([`coordinator::Admission`]), and the per-client quota
-//!   model.
+//!   semantics ([`coordinator::Admission`]), the per-client quota
+//!   model, and the failure model (frame CRC coverage, retry/backoff,
+//!   chaos-test matrix).
 
 pub mod bench;
 pub mod blob;
@@ -148,6 +152,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod copy;
 pub mod extents;
+pub mod fault;
 pub mod mapping;
 pub mod nbody;
 pub mod numa;
@@ -192,9 +197,10 @@ pub mod prelude {
     pub use crate::pool::{Lease, WorkerPool};
     pub use crate::shard::{thread_count, thread_count_or, ShardCursor, ViewShards};
     pub use crate::simd::{Simd, SimdElem};
+    pub use crate::fault::{FaultConfig, FaultPlan, FaultyStream, JobFault};
     pub use crate::transport::{
-        decode_adopt, decode_into, decode_into_par, encode, encode_par, WireError, WireMapping,
-        WireMsg,
+        crc32, decode_adopt, decode_into, decode_into_par, encode, encode_par, wire_error_in,
+        Crc32, WireError, WireMapping, WireMsg, WIRE_VERSION,
     };
     pub use crate::view::{
         Chunk, FieldRefMut, IndexOf, RecordRef, RecordRefMut, SubRecordRef, View,

@@ -10,7 +10,10 @@
 //!
 //! Argument parsing is hand-rolled (offline image carries no clap).
 
-use llama::coordinator::{render_results, Backend, Config, Coordinator, JobSpec, Layout};
+use llama::coordinator::{
+    render_results, Backend, Config, Coordinator, JobSpec, Layout, RetryPolicy,
+};
+use llama::fault::FaultPlan;
 use llama::runtime::{default_artifacts_dir, Engine, PjrtService, NBODY_ARTIFACTS};
 
 fn main() {
@@ -48,12 +51,20 @@ COMMANDS:
            [--n 1024] [--steps 10] [--seed 1] [--workers 2] [--repeat 1]
            [--threads 0]   (native kernels' per-job thread budget;
                             0 = lease as much of the pool as available)
+           [--retries 0]   (extra attempts per failed/panicked job,
+                            exponential backoff between attempts)
   serve    read jobs from stdin, one per line:
            <layout> <backend> <n> <steps> [seed] [threads]
+           options: [--workers 2] [--retries 0]
   heatmap  [--n 256] [--granularity 64] [--csv out.csv]
   trace    [--n 256] [--steps 2]
   compress [--n 65536]
   artifacts-check
+
+ENVIRONMENT:
+  LLAMA_FAULT_SEED=<u64>  arm the deterministic chaos fault plan (injected
+                          job panics/delays in run/serve; stream faults in
+                          the distributed example) — see docs/SERVING.md §5
 "
     );
 }
@@ -90,10 +101,17 @@ fn cmd_run(rest: &[String]) -> i32 {
     let workers = opt_usize(rest, "--workers", 2);
     let repeat = opt_usize(rest, "--repeat", 1);
     let threads = opt_usize(rest, "--threads", 0);
+    let retries = opt_usize(rest, "--retries", 0) as u32;
 
     let engine = engine_if_needed(&[backend]);
-    let mut coord =
-        Coordinator::start(Config { workers, max_batch: 8, engine, ..Config::default() });
+    let mut coord = Coordinator::start(Config {
+        workers,
+        max_batch: 8,
+        engine,
+        retry: RetryPolicy::retries(retries),
+        faults: FaultPlan::from_env(),
+        ..Config::default()
+    });
     let mut specs = Vec::new();
     for _ in 0..repeat {
         let mut s = JobSpec { id: 0, layout, backend, n, steps, seed, threads };
@@ -137,8 +155,15 @@ fn cmd_serve(rest: &[String]) -> i32 {
     }
     let backends: Vec<Backend> = parsed.iter().map(|s| s.backend).collect();
     let engine = engine_if_needed(&backends);
-    let mut coord =
-        Coordinator::start(Config { workers, max_batch: 8, engine, ..Config::default() });
+    let retries = opt_usize(rest, "--retries", 0) as u32;
+    let mut coord = Coordinator::start(Config {
+        workers,
+        max_batch: 8,
+        engine,
+        retry: RetryPolicy::retries(retries),
+        faults: FaultPlan::from_env(),
+        ..Config::default()
+    });
     for mut s in parsed {
         s.id = coord.submit(s.clone());
         specs.push(s);

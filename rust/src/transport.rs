@@ -29,6 +29,15 @@
 //! `Write`/`Read` transport (the distributed n-body example uses a Unix
 //! socket; see `examples/distributed_nbody.rs` and `docs/SERVING.md` for
 //! the byte-level format specification).
+//!
+//! **Integrity (version 2):** every frame ends in a CRC-32 ([`crc32`],
+//! IEEE polynomial, hand-rolled — no crates) over all preceding frame
+//! bytes, header included. [`WireMsg::read_from`] verifies the checksum
+//! before any decode touches the payload; a mismatch surfaces as a typed
+//! [`WireError::Corrupt`] (retrievable from the `io::Error` via
+//! [`wire_error_in`]), so a flipped bit in transit becomes a clean retry
+//! instead of silently wrong physics. Truncated or garbage frames fail
+//! with bounded allocation — see `docs/SERVING.md` §5 "Failure model".
 
 use std::io::{self, Read, Write};
 
@@ -41,11 +50,76 @@ use crate::record::RecordDim;
 use crate::view::View;
 
 /// Wire format version this build speaks; [`WireMsg::read_from`] rejects
-/// others.
-pub const WIRE_VERSION: u16 = 1;
+/// others. Version 2 appended the trailing frame CRC-32 — v1 frames are
+/// refused outright rather than trusted unchecked.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Frame magic ("LLAMA Wire") guarding against misaligned streams.
 pub const WIRE_MAGIC: [u8; 4] = *b"LLWv";
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE), hand-rolled — same zero-dependency pattern as `numa.rs`
+// ---------------------------------------------------------------------------
+
+/// Table for the reflected IEEE CRC-32 (polynomial `0xEDB88320`), built
+/// at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Incremental CRC-32 (IEEE / zlib variant: init `0xFFFFFFFF`, reflected,
+/// final xor). Known answer: `crc32(b"123456789") == 0xCBF43926`.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    /// Fresh checksum state.
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the checksum.
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut s = self.state;
+        for &b in bytes {
+            s = CRC_TABLE[((s ^ u32::from(b)) & 0xFF) as usize] ^ (s >> 8);
+        }
+        self.state = s;
+    }
+
+    /// The checksum of everything folded in so far.
+    pub fn finish(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+/// One-shot CRC-32 of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
 
 /// The canonical wire payload layout: every field's values packed
 /// contiguously, field regions concatenated in record order into one
@@ -118,6 +192,16 @@ pub enum WireError {
         /// Bytes the message carries.
         got: usize,
     },
+    /// Frame checksum mismatch: the bytes were corrupted in transit.
+    /// Raised by [`WireMsg::read_from`] **before** any decode touches
+    /// the payload; retrieve it from the `io::Error` with
+    /// [`wire_error_in`].
+    Corrupt {
+        /// CRC-32 the receiver computed over the frame bytes.
+        expected: u32,
+        /// CRC-32 the frame carried.
+        got: u32,
+    },
 }
 
 impl std::fmt::Display for WireError {
@@ -138,11 +222,38 @@ impl std::fmt::Display for WireError {
             WireError::Geometry { expected, got } => {
                 write!(f, "payload geometry: mapping needs {expected} bytes, message has {got}")
             }
+            WireError::Corrupt { expected, got } => {
+                write!(
+                    f,
+                    "frame corrupt: computed crc32 {expected:#010x}, frame carries {got:#010x}"
+                )
+            }
         }
     }
 }
 
 impl std::error::Error for WireError {}
+
+/// The typed [`WireError`] inside an `io::Error`, if it carries one.
+///
+/// [`WireMsg::read_from`] reports checksum failures as
+/// `io::ErrorKind::InvalidData` wrapping a [`WireError::Corrupt`]; use
+/// this to tell in-transit corruption (worth a retry against a live
+/// peer) apart from protocol violations and plain transport failures:
+///
+/// ```
+/// # use llama::transport::{wire_error_in, WireError};
+/// # let err = std::io::Error::new(
+/// #     std::io::ErrorKind::InvalidData,
+/// #     WireError::Corrupt { expected: 1, got: 2 },
+/// # );
+/// if let Some(WireError::Corrupt { .. }) = wire_error_in(&err) {
+///     // count it, drop the peer, re-dispatch the work
+/// }
+/// ```
+pub fn wire_error_in(e: &io::Error) -> Option<&WireError> {
+    e.get_ref()?.downcast_ref::<WireError>()
+}
 
 /// The record-dimension descriptor shipped in every message header:
 /// record name plus each flattened field as `dotted.path:type`, e.g.
@@ -310,12 +421,16 @@ const MAX_HEADER_STRING: usize = 1 << 20;
 const MAX_RANK: usize = crate::view::MAX_RANK;
 
 impl WireMsg {
-    /// Number of records the extents span.
+    /// Number of records the extents span (saturating — a garbage
+    /// header with overflowing extents must not wrap into a small,
+    /// plausible-looking count).
     pub fn record_count(&self) -> usize {
-        self.extents.iter().product::<u64>() as usize
+        let n = self.extents.iter().fold(1u64, |acc, &e| acc.saturating_mul(e));
+        usize::try_from(n).unwrap_or(usize::MAX)
     }
 
-    /// Serialized frame size in bytes (header + payload).
+    /// Serialized frame size in bytes (header + payload + trailing
+    /// CRC-32).
     pub fn frame_len(&self) -> usize {
         4 + 2 + 1 + 1
             + self.extents.len() * 8
@@ -326,6 +441,7 @@ impl WireMsg {
             + 4
             + 8
             + self.payload.len()
+            + 4
     }
 
     /// Write one framed message.
@@ -340,41 +456,55 @@ impl WireMsg {
     /// extents          rank × u64
     /// record_len       u32      then that many UTF-8 bytes
     /// fingerprint_len  u32      then that many UTF-8 bytes
-    /// blob_count       u32      payload blob geometry (v1: always 1)
+    /// blob_count       u32      payload blob geometry (always 1)
     /// blob_len         u64      per blob
     /// payload          blob_len bytes
+    /// crc32            u32      CRC-32 of every preceding frame byte
     /// ```
     pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
-        w.write_all(&WIRE_MAGIC)?;
-        w.write_all(&self.version.to_le_bytes())?;
-        w.write_all(&[strategy_code(self.strategy), self.extents.len() as u8])?;
-        for &e in &self.extents {
-            w.write_all(&e.to_le_bytes())?;
-        }
-        w.write_all(&(self.record.len() as u32).to_le_bytes())?;
-        w.write_all(self.record.as_bytes())?;
-        w.write_all(&(self.fingerprint.len() as u32).to_le_bytes())?;
-        w.write_all(self.fingerprint.as_bytes())?;
-        w.write_all(&1u32.to_le_bytes())?;
-        w.write_all(&(self.payload.len() as u64).to_le_bytes())?;
-        w.write_all(&self.payload)
+        let crc = {
+            let mut cw = CrcWriter { inner: &mut *w, crc: Crc32::new() };
+            cw.write_all(&WIRE_MAGIC)?;
+            cw.write_all(&self.version.to_le_bytes())?;
+            cw.write_all(&[strategy_code(self.strategy), self.extents.len() as u8])?;
+            for &e in &self.extents {
+                cw.write_all(&e.to_le_bytes())?;
+            }
+            cw.write_all(&(self.record.len() as u32).to_le_bytes())?;
+            cw.write_all(self.record.as_bytes())?;
+            cw.write_all(&(self.fingerprint.len() as u32).to_le_bytes())?;
+            cw.write_all(self.fingerprint.as_bytes())?;
+            cw.write_all(&1u32.to_le_bytes())?;
+            cw.write_all(&(self.payload.len() as u64).to_le_bytes())?;
+            cw.write_all(&self.payload)?;
+            cw.crc.finish()
+        };
+        w.write_all(&crc.to_le_bytes())
     }
 
     /// Read one framed message (see [`write_to`](WireMsg::write_to) for
-    /// the layout). Malformed frames — bad magic, unknown version or
-    /// strategy, oversized header fields, unsupported blob geometry —
-    /// fail with [`io::ErrorKind::InvalidData`].
+    /// the layout), verifying the trailing CRC-32 **before returning**
+    /// — corrupted frames never reach a decoder. Malformed frames — bad
+    /// magic, unknown version or strategy, oversized header fields,
+    /// unsupported blob geometry — fail with
+    /// [`io::ErrorKind::InvalidData`]; checksum mismatches additionally
+    /// carry a typed [`WireError::Corrupt`] (see [`wire_error_in`]).
+    /// Truncations fail with `UnexpectedEof`. Allocation stays bounded
+    /// on garbage: header strings are capped at 1 MiB up front, and the
+    /// payload buffer grows with bytes actually read, so a corrupt
+    /// `blob_len` cannot drive an unbounded upfront allocation.
     pub fn read_from<Rd: Read>(r: &mut Rd) -> io::Result<WireMsg> {
+        let mut cr = CrcReader { inner: &mut *r, crc: Crc32::new() };
         let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
+        cr.read_exact(&mut magic)?;
         if magic != WIRE_MAGIC {
             return Err(bad_frame("bad magic"));
         }
-        let version = u16::from_le_bytes(read_array(r)?);
+        let version = u16::from_le_bytes(read_array(&mut cr)?);
         if version != WIRE_VERSION {
             return Err(bad_frame("unsupported wire version"));
         }
-        let [strategy, rank] = read_array(r)?;
+        let [strategy, rank] = read_array(&mut cr)?;
         let strategy = strategy_from_code(strategy).ok_or_else(|| bad_frame("bad strategy"))?;
         let rank = rank as usize;
         if rank == 0 || rank > MAX_RANK {
@@ -382,21 +512,68 @@ impl WireMsg {
         }
         let mut extents = Vec::with_capacity(rank);
         for _ in 0..rank {
-            extents.push(u64::from_le_bytes(read_array(r)?));
+            extents.push(u64::from_le_bytes(read_array(&mut cr)?));
         }
-        let record = read_string(r)?;
-        let fingerprint = read_string(r)?;
-        let blob_count = u32::from_le_bytes(read_array(r)?);
+        let record = read_string(&mut cr)?;
+        let fingerprint = read_string(&mut cr)?;
+        let blob_count = u32::from_le_bytes(read_array(&mut cr)?);
         if blob_count != 1 {
             return Err(bad_frame("unsupported blob geometry"));
         }
-        let blob_len = u64::from_le_bytes(read_array(r)?);
-        if blob_len > usize::MAX as u64 {
-            return Err(bad_frame("payload too large"));
+        let blob_len = u64::from_le_bytes(read_array(&mut cr)?);
+        let blob_len = usize::try_from(blob_len).map_err(|_| bad_frame("payload too large"))?;
+        // Pre-reserve at most the header-string cap; beyond that the
+        // buffer grows only as bytes actually arrive, so a garbage
+        // length cannot allocate terabytes before the EOF shows up.
+        let mut payload = Vec::with_capacity(blob_len.min(MAX_HEADER_STRING));
+        let got = (&mut cr).take(blob_len as u64).read_to_end(&mut payload)?;
+        if got < blob_len {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "wire frame: payload truncated",
+            ));
         }
-        let mut payload = vec![0u8; blob_len as usize];
-        r.read_exact(&mut payload)?;
+        let computed = cr.crc.finish();
+        let stored = u32::from_le_bytes(read_array(r)?);
+        if computed != stored {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                WireError::Corrupt { expected: computed, got: stored },
+            ));
+        }
         Ok(WireMsg { version, record, fingerprint, extents, strategy, payload })
+    }
+}
+
+/// `Read` adapter folding everything it reads into a [`Crc32`].
+struct CrcReader<'a, R> {
+    inner: &'a mut R,
+    crc: Crc32,
+}
+
+impl<R: Read> Read for CrcReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+}
+
+/// `Write` adapter folding everything it writes into a [`Crc32`].
+struct CrcWriter<'a, W> {
+    inner: &'a mut W,
+    crc: Crc32,
+}
+
+impl<W: Write> Write for CrcWriter<'_, W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
     }
 }
 
@@ -580,9 +757,9 @@ mod tests {
         ));
 
         // Unknown version.
-        let mut v2 = msg;
-        v2.version = 2;
-        assert!(matches!(decode_adopt::<P, _>(v2, (Dyn(8u32),)), Err(WireError::Version(2))));
+        let mut v3 = msg;
+        v3.version = 3;
+        assert!(matches!(decode_adopt::<P, _>(v3, (Dyn(8u32),)), Err(WireError::Version(3))));
     }
 
     #[test]
@@ -627,5 +804,70 @@ mod tests {
         let mut bad = frame;
         bad[4] = 0xFF;
         assert!(WireMsg::read_from(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn crc32_known_answers() {
+        // IEEE check value plus the incremental-update identity.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn payload_corruption_is_caught_before_decode() {
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(6u32),)), &HeapAlloc);
+        fill(&mut src, 6);
+        let msg = encode(&src);
+        let mut frame = Vec::new();
+        msg.write_to(&mut frame).unwrap();
+
+        // Flip one bit in every payload byte in turn: the CRC catches
+        // each one with the typed Corrupt error, never a decode.
+        let payload_start = frame.len() - 4 - msg.payload.len();
+        for i in payload_start..frame.len() - 4 {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x10;
+            let err = WireMsg::read_from(&mut bad.as_slice()).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+            assert!(
+                matches!(wire_error_in(&err), Some(WireError::Corrupt { .. })),
+                "payload byte {i}: expected Corrupt, got {err:?}"
+            );
+        }
+        // A corrupted stored checksum is equally fatal.
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        let err = WireMsg::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(matches!(wire_error_in(&err), Some(WireError::Corrupt { .. })));
+        // The pristine frame still parses.
+        assert_eq!(WireMsg::read_from(&mut frame.as_slice()).unwrap(), msg);
+    }
+
+    #[test]
+    fn garbage_blob_len_fails_without_huge_allocation() {
+        // Hand-build a frame whose header claims an absurd payload
+        // length and then ends: read_from must fail with EOF after
+        // reading what's there — not allocate the claimed bytes.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&WIRE_MAGIC);
+        frame.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        frame.push(0); // strategy BlobMemcpy
+        frame.push(1); // rank 1
+        frame.extend_from_slice(&4u64.to_le_bytes());
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.push(b'R');
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.push(b'F');
+        frame.extend_from_slice(&1u32.to_le_bytes()); // blob_count
+        frame.extend_from_slice(&(u64::MAX).to_le_bytes()); // blob_len
+        let err = WireMsg::read_from(&mut frame.as_slice()).unwrap_err();
+        let ok = err.kind() == io::ErrorKind::UnexpectedEof
+            || err.kind() == io::ErrorKind::InvalidData;
+        assert!(ok, "unexpected error kind: {err:?}");
     }
 }

@@ -1,0 +1,155 @@
+//! Fault-injection tests for the coordinator's panic isolation and
+//! retry path (`docs/SERVING.md` §5).
+//!
+//! Checks the module-doc invariants: a panicking job never takes its
+//! worker thread down (subsequent jobs on the same worker complete), a
+//! panic surfaces as a typed `error` on the job's own [`JobResult`]
+//! (never as a coordinator crash), the retry policy re-dispatches up to
+//! `max_attempts` with the attempt count reported, and the fault
+//! counters in [`Metrics`] account for every injected event.
+
+use std::time::Duration;
+
+use llama::coordinator::{Backend, Config, Coordinator, JobSpec, Layout, RetryPolicy};
+use llama::fault::{FaultConfig, FaultPlan};
+
+/// Smallest useful job — fault-handling overhead dominates, which is
+/// the point.
+fn tiny_spec() -> JobSpec {
+    JobSpec {
+        id: 0,
+        layout: Layout::Aos,
+        backend: Backend::NativeScalar,
+        n: 4,
+        steps: 1,
+        seed: 1,
+        threads: 1,
+    }
+}
+
+/// A retry policy with backoffs measured in microseconds, so tests stay
+/// fast while still exercising the sleep path.
+fn fast_retry(max_attempts: u32) -> RetryPolicy {
+    RetryPolicy {
+        max_attempts,
+        base: Duration::from_micros(50),
+        cap: Duration::from_micros(200),
+    }
+}
+
+/// Every attempt of every job panics: each job must fail with a typed
+/// "job panicked" error after exactly `max_attempts` attempts, and the
+/// single worker must survive all of them (3 jobs, 1 worker — results
+/// arriving at all proves the thread outlived each panic).
+#[test]
+fn panicking_jobs_fail_typed_and_the_worker_survives() {
+    let cfg = FaultConfig { panic_first_attempts: u32::MAX, ..FaultConfig::default() };
+    let mut c = Coordinator::start(Config {
+        workers: 1,
+        retry: fast_retry(2),
+        faults: Some(FaultPlan::new(7, cfg)),
+        ..Config::default()
+    });
+    let ing = c.ingest(); // keep a metrics handle past `finish`
+    for _ in 0..3 {
+        c.submit(tiny_spec());
+    }
+    let results = c.finish();
+
+    assert_eq!(results.len(), 3, "every admitted job must report a result");
+    for r in &results {
+        let err = r.error.as_deref().expect("a panicking job must carry an error");
+        assert!(
+            err.contains("job panicked") && err.contains("injected fault"),
+            "error must be the typed panic message, got: {err}"
+        );
+        assert_eq!(r.attempts, 2, "both attempts must have been used");
+    }
+    assert_eq!(ing.metrics().panics(), 6, "2 attempts x 3 jobs all panicked");
+    assert_eq!(ing.metrics().retries(), 3, "one re-dispatch per job");
+}
+
+/// A scripted first-attempt panic followed by clean attempts: the retry
+/// path must recover every job, reporting `attempts == 2` and a `None`
+/// error, with the panic still counted.
+#[test]
+fn retry_recovers_jobs_that_panic_once() {
+    let cfg = FaultConfig { panic_first_attempts: 1, ..FaultConfig::default() };
+    let mut c = Coordinator::start(Config {
+        workers: 2,
+        retry: fast_retry(3),
+        faults: Some(FaultPlan::new(11, cfg)),
+        ..Config::default()
+    });
+    let ing = c.ingest();
+    for _ in 0..4 {
+        c.submit(tiny_spec());
+    }
+    let results = c.finish();
+
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert_eq!(r.error, None, "the retry must have recovered the job");
+        assert_eq!(r.attempts, 2, "first attempt panicked, second succeeded");
+        assert!(r.threads >= 1, "a successful job reports its granted budget");
+    }
+    assert_eq!(ing.metrics().panics(), 4, "exactly the scripted first attempts");
+    assert_eq!(ing.metrics().retries(), 4);
+    assert_eq!(ing.metrics().corrupt_frames(), 0);
+}
+
+/// Injected delays slow jobs down but never fail them: no retries, no
+/// panics, first-attempt success across the board.
+#[test]
+fn injected_delays_do_not_fail_jobs() {
+    let cfg = FaultConfig {
+        p_job_delay: 1024, // every job
+        delay: Duration::from_millis(1),
+        ..FaultConfig::default()
+    };
+    let mut c = Coordinator::start(Config {
+        workers: 2,
+        retry: fast_retry(2),
+        faults: Some(FaultPlan::new(13, cfg)),
+        ..Config::default()
+    });
+    let ing = c.ingest();
+    for _ in 0..4 {
+        c.submit(tiny_spec());
+    }
+    let results = c.finish();
+
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert_eq!(r.error, None);
+        assert_eq!(r.attempts, 1, "a delay is not a failure");
+        assert!(r.exec_time >= Duration::from_millis(1), "the delay is part of exec time");
+    }
+    assert_eq!(ing.metrics().panics(), 0);
+    assert_eq!(ing.metrics().retries(), 0);
+}
+
+/// With no fault plan armed, the retry machinery is inert: single
+/// attempts, zero fault counters — the pre-fault-layer behavior.
+#[test]
+fn unarmed_plan_changes_nothing() {
+    let mut c = Coordinator::start(Config {
+        workers: 2,
+        retry: fast_retry(3), // retries available, never needed
+        ..Config::default()
+    });
+    let ing = c.ingest();
+    for _ in 0..4 {
+        c.submit(tiny_spec());
+    }
+    let results = c.finish();
+
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert_eq!(r.error, None);
+        assert_eq!(r.attempts, 1);
+    }
+    assert_eq!(ing.metrics().panics(), 0);
+    assert_eq!(ing.metrics().retries(), 0);
+    assert_eq!(ing.metrics().corrupt_frames(), 0);
+}
