@@ -1,0 +1,134 @@
+//! Experiment E12 — the autotuner end to end: record an access trace
+//! from the n-body workload on its starting layout (AoS), let the
+//! planner pick, and measure the recommended layout against the
+//! starting one — plus the one-time live-migration cost the plan
+//! amortizes and the per-retrace record+plan overhead.
+//!
+//! Expected shape: the n-body trace sends AoS to multi-blob SoA
+//! (asserted in every mode — the planner's headline decision), and at
+//! full size the tuned row beats the starting row on wall clock
+//! (asserted in full mode only; smoke sizes are noise). The migration
+//! row is a single relayout+verify of the whole view: its cost is paid
+//! once and amortized over every subsequent step, which is the
+//! autotuner's bet.
+//!
+//! Run: `cargo bench --bench tune [-- N]`  (default N=16384;
+//! LLAMA_BENCH_SMOKE=1 shrinks to a smoke run; LLAMA_THREADS overrides
+//! the migration row's worker count, default 4; LLAMA_BENCH_JSON=<dir>
+//! writes BENCH_tune.json)
+
+use llama::bench::{black_box, smoke, Bencher};
+use llama::blob::{alloc_view, AlignedAlloc, BlobStorage};
+use llama::extents::Dyn;
+use llama::mapping::field_access_count::FieldAccessCount;
+use llama::nbody::{init_particles, views, Particle};
+use llama::tune::{migrate_live, AccessTrace, Candidate, Planner};
+
+fn main() {
+    let arg_n: Option<usize> =
+        std::env::args().skip(1).find(|a| !a.starts_with('-')).and_then(|a| a.parse().ok());
+    let fast = smoke();
+    let n = arg_n.unwrap_or(if fast { 2048 } else { 16384 });
+    let threads = llama::shard::thread_count_or(4);
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
+    let e = (Dyn(n as u32),);
+    let init = init_particles(n, 1);
+
+    println!("autotune (E12): n={n}, starting layout aos, {threads}-thread migration\n");
+
+    // Record: one instrumented SIMD step on the starting layout.
+    let fac: FieldAccessCount<Particle, _> = FieldAccessCount::new(views::AosMap::new(e));
+    let mut traced = alloc_view(fac, &AlignedAlloc::<64>);
+    views::fill_view(&mut traced, &init);
+    traced.mapping().reset(); // the trace covers the workload, not the fill
+    views::update_simd::<8, _, _>(&mut traced);
+    views::move_simd::<8, _, _>(&mut traced);
+    let trace = AccessTrace::record(&traced).with_origin("aos");
+    assert!(trace.stable && trace.total_accesses() > 0);
+
+    // Plan over the layouts this bench instantiates, and pin the
+    // decision: the n-body pattern must send AoS to multi-blob SoA in
+    // every mode (guards the cost model, not the machine).
+    let planner = Planner::new();
+    let native = [Candidate::Aos, Candidate::SoaMb, Candidate::Aosoa { lanes: 8 }];
+    let plan = planner.recommend_among(&trace, &native);
+    println!("{}", plan.render_table());
+    assert_eq!(plan.chosen, Candidate::SoaMb, "n-body trace must recommend SoA-MB");
+    assert!(plan.is_migration());
+
+    // The workload rows: one SIMD n-body step per iteration, identical
+    // kernel code, only the mapping differs.
+    let mut v_aos = views::make_aos_view(&init);
+    b.bench("nbody step  aos (start)", n as u64, || {
+        views::update_simd::<8, _, _>(&mut v_aos);
+        views::move_simd::<8, _, _>(&mut v_aos);
+        black_box(v_aos.storage().blob_len(0));
+    });
+    let mut v_soa = views::make_soa_view(&init);
+    b.bench("nbody step  soa-mb (tuned)", n as u64, || {
+        views::update_simd::<8, _, _>(&mut v_soa);
+        views::move_simd::<8, _, _>(&mut v_soa);
+        black_box(v_soa.storage().blob_len(0));
+    });
+
+    // The one-time migration cost (alloc + parallel copy + bit-identity
+    // verify of every cell) the plan amortizes over future steps.
+    let v_start = views::make_aos_view(&init);
+    b.bench(&format!("migrate aos -> soa-mb {threads}T"), n as u64, || {
+        let (dst, rep) =
+            migrate_live(&v_start, views::SoaMbMap::new(e), &AlignedAlloc::<64>, threads);
+        black_box((dst.count(), rep.bytes_moved));
+    });
+
+    // The per-retrace overhead the coordinator pays: freeze the
+    // counters coherently, build the trace, score the candidates.
+    b.bench("trace record + plan", 1, || {
+        let t = AccessTrace::record(&traced).with_origin("aos");
+        let p = planner.recommend_among(&t, &native);
+        black_box(p.chosen);
+    });
+
+    println!("{}", b.render_table("autotune (per record)", Some("nbody step  aos (start)")));
+
+    // The headline claim, asserted where it is signal: at full size the
+    // recommended layout beats the starting one.
+    if !fast {
+        let med = |name: &str| {
+            b.results().iter().find(|m| m.name == name).expect("row exists").median
+        };
+        assert!(
+            med("nbody step  soa-mb (tuned)") < med("nbody step  aos (start)"),
+            "recommended layout must beat the starting layout at n={n}"
+        );
+    }
+
+    // Schema guard (smoke mode, i.e. CI): the measurement-key set of
+    // BENCH_tune.json must stay diffable across commits.
+    if fast {
+        let mut want: Vec<String> = vec![
+            "nbody step  aos (start)".into(),
+            "nbody step  soa-mb (tuned)".into(),
+            format!("migrate aos -> soa-mb {threads}T"),
+            "trace record + plan".into(),
+        ];
+        want.sort();
+        let mut got: Vec<String> = b.results().iter().map(|m| m.name.clone()).collect();
+        got.sort();
+        assert_eq!(got, want, "tune-table measurement keys drifted");
+        println!("smoke schema guard OK: {} tune keys", got.len());
+    }
+
+    let written = llama::bench::emit_json(
+        "tune",
+        &[
+            ("n", n.to_string()),
+            ("threads", threads.to_string()),
+            ("smoke", (fast as u8).to_string()),
+        ],
+        &[("tune", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
+    if let Some(path) = written {
+        println!("perf trajectory written to {}", path.display());
+    }
+}

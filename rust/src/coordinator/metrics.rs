@@ -29,6 +29,10 @@ pub struct Metrics {
     jobs_panicked: AtomicU64,
     job_retries: AtomicU64,
     corrupt_frames: AtomicU64,
+    // Adaptive relayout (see `crate::tune` and `Config::autotune`).
+    traces_recorded: AtomicU64,
+    relayouts_performed: AtomicU64,
+    relayouts_skipped: AtomicU64,
 }
 
 impl Metrics {
@@ -90,6 +94,22 @@ impl Metrics {
     /// ([`WireError::Corrupt`](crate::transport::WireError::Corrupt)).
     pub fn on_corrupt_frame(&self) {
         self.corrupt_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an access trace captured from an instrumented native job
+    /// run (autotune mode).
+    pub fn on_trace_recorded(&self) {
+        self.traces_recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a planner decision that *changed* a job key's layout.
+    pub fn on_relayout_performed(&self) {
+        self.relayouts_performed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a planner decision that confirmed the layout in use.
+    pub fn on_relayout_skipped(&self) {
+        self.relayouts_skipped.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a dispatched batch of `size` jobs.
@@ -195,6 +215,21 @@ impl Metrics {
         self.corrupt_frames.load(Ordering::Relaxed)
     }
 
+    /// Access traces recorded by autotune's instrumented runs.
+    pub fn traces_recorded(&self) -> u64 {
+        self.traces_recorded.load(Ordering::Relaxed)
+    }
+
+    /// Planner decisions that changed a job key's layout.
+    pub fn relayouts_performed(&self) -> u64 {
+        self.relayouts_performed.load(Ordering::Relaxed)
+    }
+
+    /// Planner decisions that confirmed the layout in use.
+    pub fn relayouts_skipped(&self) -> u64 {
+        self.relayouts_skipped.load(Ordering::Relaxed)
+    }
+
     /// Render a summary block.
     pub fn render(&self) -> String {
         let (s, c, f) = self.job_counts();
@@ -204,6 +239,7 @@ impl Metrics {
              batches: {} (mean size {:.2}, max {})\n\
              queue: depth {} (max {}), rejected {} (full {rf}, deadline {rd}, quota {rq})\n\
              faults: {} panics caught, {} retries, {} corrupt frames\n\
+             tune: {} traces, {} relayouts, {} confirmations\n\
              mean queue {:?}, mean exec {:?}, mean admission wait {:?}\n",
             self.batches(),
             self.mean_batch_size(),
@@ -214,6 +250,9 @@ impl Metrics {
             self.panics(),
             self.retries(),
             self.corrupt_frames(),
+            self.traces_recorded(),
+            self.relayouts_performed(),
+            self.relayouts_skipped(),
             self.mean_queue_time(),
             self.mean_exec_time(),
             self.mean_admission_wait(),

@@ -114,6 +114,21 @@ pub struct Config {
     /// ([`crate::fault::FaultPlan::job_fault`]) — the chaos-testing
     /// hook. `None` (the default) injects nothing.
     pub faults: Option<FaultPlan>,
+    /// Adaptive relayout (`false` by default, the existing behavior):
+    /// when set, the first native job of each batch key — and every
+    /// [`RETRACE_EVERY`]-th thereafter, so the choice follows traffic
+    /// shifts — runs on a [`FieldAccessCount`]-instrumented view; the
+    /// recorded [`crate::tune::AccessTrace`] is scored by the
+    /// [`crate::tune::Planner`] over the layouts the native engine can
+    /// run, and the winner overrides the key's layout for subsequent
+    /// jobs. Traces and relayout decisions land in [`Metrics`]
+    /// (`traces_recorded` / `relayouts_performed` /
+    /// `relayouts_skipped`). Results stay exact: the instrumented run
+    /// computes the same physics, only the storage layout of later
+    /// jobs changes.
+    ///
+    /// [`FieldAccessCount`]: crate::mapping::field_access_count::FieldAccessCount
+    pub autotune: bool,
 }
 
 impl Default for Config {
@@ -128,7 +143,50 @@ impl Default for Config {
             client_quota: 0,
             retry: RetryPolicy::default(),
             faults: None,
+            autotune: false,
         }
+    }
+}
+
+/// Native jobs per batch key between instrumented re-traces in
+/// autotune mode ([`Config::autotune`]): a decision is reused this many
+/// times, then the next job re-traces so the layout choice tracks
+/// shifting traffic.
+pub const RETRACE_EVERY: u32 = 8;
+
+/// Per-coordinator autotune state: the planner's latest decision per
+/// batch key, plus the metrics registry the decisions are counted in.
+struct TuneShared {
+    decisions: Mutex<std::collections::HashMap<(Layout, Backend, usize), TuneDecision>>,
+    metrics: Arc<Metrics>,
+}
+
+/// The layout the planner chose for one batch key, and how many jobs
+/// ran on it since the trace that chose it.
+struct TuneDecision {
+    layout: Layout,
+    jobs_since_trace: u32,
+}
+
+/// The candidate the cost model scores for a native [`Layout`] (bf16 is
+/// a PJRT artifact; natively it runs as f32 SoA, so it maps there).
+fn layout_candidate(l: Layout) -> crate::tune::Candidate {
+    match l {
+        Layout::Aos => crate::tune::Candidate::Aos,
+        Layout::SoaMb | Layout::Bf16 => crate::tune::Candidate::SoaMb,
+        Layout::Aosoa => crate::tune::Candidate::Aosoa { lanes: 8 },
+    }
+}
+
+/// The native [`Layout`] that realizes a planner candidate. Only called
+/// on candidates from the coordinator's own restricted set, but total
+/// anyway: column-ish exotics degrade to SoA-MB, the closest runnable
+/// layout.
+fn candidate_layout(c: crate::tune::Candidate) -> Layout {
+    match c {
+        crate::tune::Candidate::Aos => Layout::Aos,
+        crate::tune::Candidate::Aosoa { .. } => Layout::Aosoa,
+        _ => Layout::SoaMb,
     }
 }
 
@@ -248,6 +306,12 @@ impl Coordinator {
         });
 
         // Workers.
+        let tune: Option<Arc<TuneShared>> = config.autotune.then(|| {
+            Arc::new(TuneShared {
+                decisions: Mutex::new(std::collections::HashMap::new()),
+                metrics: metrics.clone(),
+            })
+        });
         let mut workers = Vec::new();
         for widx in 0..config.workers.max(1) {
             let rx = batch_rx.clone();
@@ -257,6 +321,7 @@ impl Coordinator {
             let native_threads = config.native_threads;
             let retry = config.retry;
             let faults = config.faults.clone();
+            let tune = tune.clone();
             let wmetrics = metrics.clone();
             workers.push(std::thread::spawn(move || loop {
                 let next = { rx.lock().unwrap().recv() };
@@ -298,7 +363,13 @@ impl Coordinator {
                                     JobFault::Delay(d) => std::thread::sleep(d),
                                     JobFault::None => {}
                                 }
-                                run_job(&q.spec, engine.as_ref(), kernel_pool, native_threads)
+                                run_job(
+                                    &q.spec,
+                                    engine.as_ref(),
+                                    kernel_pool,
+                                    native_threads,
+                                    tune.as_deref(),
+                                )
                             }));
                         let attempt_result = match caught {
                             Ok(r) => r,
@@ -367,6 +438,13 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// An owning handle to the metrics registry, outliving
+    /// [`Coordinator::finish`] (which consumes the coordinator) —
+    /// the registry is shared, so counters keep reflecting the run.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
     /// Close the queue, wait for all admitted jobs, return their results
     /// sorted by id.
     ///
@@ -424,12 +502,18 @@ fn run_job(
     engine: Option<&PjrtService>,
     pool: Option<&WorkerPool>,
     default_want: usize,
+    tune: Option<&TuneShared>,
 ) -> anyhow::Result<(f64, usize)> {
     let init = init_particles(spec.n, spec.seed);
     let e0 = total_energy(&init);
-    let (finals, threads): (Vec<ParticleData>, usize) = match spec.backend {
-        Backend::Pjrt => (run_pjrt(spec, engine, &init)?, 1),
-        Backend::NativeScalar | Backend::NativeSimd => run_native(spec, &init, pool, default_want),
+    let (finals, threads): (Vec<ParticleData>, usize) = match (spec.backend, tune) {
+        (Backend::Pjrt, _) => (run_pjrt(spec, engine, &init)?, 1),
+        (Backend::NativeScalar | Backend::NativeSimd, Some(t)) => {
+            run_native_tuned(spec, &init, pool, default_want, t)
+        }
+        (Backend::NativeScalar | Backend::NativeSimd, None) => {
+            run_native(spec, &init, pool, default_want)
+        }
     };
     let e1 = total_energy(&finals);
     Ok((((e1 - e0) / e0).abs(), threads))
@@ -462,57 +546,166 @@ fn run_native(
     };
     let simd = spec.backend == Backend::NativeSimd;
 
-    fn steps<M, S>(
-        v: &mut View<Particle, M, S>,
-        simd: bool,
-        n_steps: usize,
-        pool: Option<&WorkerPool>,
-        threads: usize,
-    ) where
-        M: SimdAccess<Particle>,
-        S: BlobStorage + Send + Sync,
-    {
-        for _ in 0..n_steps {
-            match (pool, simd) {
-                (Some(pool), true) => {
-                    views::update_simd_par_on::<8, _, _>(v, pool, threads);
-                    views::move_simd_par_on::<8, _, _>(v, pool, threads);
-                }
-                (Some(pool), false) => {
-                    views::update_scalar_par_on(v, pool, threads);
-                    views::move_scalar_par_on(v, pool, threads);
-                }
-                (None, true) => {
-                    views::update_simd_par_scoped::<8, _, _>(v, threads);
-                    views::move_simd_par_scoped::<8, _, _>(v, threads);
-                }
-                (None, false) => {
-                    views::update_scalar_par(v, threads);
-                    views::move_scalar_par(v, threads);
-                }
-            }
-        }
-    }
-
     let finals = match spec.layout {
         Layout::Aos => {
             let mut v = views::make_aos_view(init);
-            steps(&mut v, simd, spec.steps, pool, threads);
+            native_steps(&mut v, simd, spec.steps, pool, threads);
             views::snapshot_view(&v)
         }
         Layout::SoaMb | Layout::Bf16 => {
             // Native bf16 falls back to f32 SoA (bf16 is a PJRT artifact).
             let mut v = views::make_soa_view(init);
-            steps(&mut v, simd, spec.steps, pool, threads);
+            native_steps(&mut v, simd, spec.steps, pool, threads);
             views::snapshot_view(&v)
         }
         Layout::Aosoa => {
             let mut v = views::make_aosoa_view(init);
-            steps(&mut v, simd, spec.steps, pool, threads);
+            native_steps(&mut v, simd, spec.steps, pool, threads);
             views::snapshot_view(&v)
         }
     };
     (finals, threads)
+}
+
+/// The layout-generic native stepping loop (hoisted from [`run_native`]
+/// so the instrumented autotune run reuses it unchanged on
+/// `FieldAccessCount`-wrapped mappings).
+fn native_steps<M, S>(
+    v: &mut View<Particle, M, S>,
+    simd: bool,
+    n_steps: usize,
+    pool: Option<&WorkerPool>,
+    threads: usize,
+) where
+    M: SimdAccess<Particle>,
+    S: BlobStorage + Send + Sync,
+{
+    for _ in 0..n_steps {
+        match (pool, simd) {
+            (Some(pool), true) => {
+                views::update_simd_par_on::<8, _, _>(v, pool, threads);
+                views::move_simd_par_on::<8, _, _>(v, pool, threads);
+            }
+            (Some(pool), false) => {
+                views::update_scalar_par_on(v, pool, threads);
+                views::move_scalar_par_on(v, pool, threads);
+            }
+            (None, true) => {
+                views::update_simd_par_scoped::<8, _, _>(v, threads);
+                views::move_simd_par_scoped::<8, _, _>(v, threads);
+            }
+            (None, false) => {
+                views::update_scalar_par(v, threads);
+                views::move_scalar_par(v, threads);
+            }
+        }
+    }
+}
+
+/// Autotuned native execution ([`Config::autotune`]): reuse the batch
+/// key's fresh planner decision if one exists, otherwise run this job
+/// instrumented, record its [`crate::tune::AccessTrace`], and let the
+/// planner pick the layout the key runs on next.
+///
+/// The decision map is locked only around lookup/update — the job
+/// itself (trace run included) executes outside the lock, so workers
+/// tracing different keys never serialize each other.
+fn run_native_tuned(
+    spec: &JobSpec,
+    init: &[ParticleData],
+    pool: Option<&WorkerPool>,
+    default_want: usize,
+    tune: &TuneShared,
+) -> (Vec<ParticleData>, usize) {
+    let key = spec.batch_key();
+    // Decide under the lock: run on the decided layout, or re-trace.
+    let mode: Result<Layout, Layout> = {
+        let mut map = tune.decisions.lock().unwrap();
+        match map.get_mut(&key) {
+            Some(d) if d.jobs_since_trace < RETRACE_EVERY => {
+                d.jobs_since_trace += 1;
+                Ok(d.layout)
+            }
+            Some(d) => Err(d.layout), // decision went stale: re-trace
+            None => Err(spec.layout), // first sighting of this key
+        }
+    };
+    match mode {
+        Ok(layout) => {
+            let eff = JobSpec { layout, ..spec.clone() };
+            run_native(&eff, init, pool, default_want)
+        }
+        Err(current) => {
+            let (finals, threads, trace) =
+                run_native_traced(spec, current, init, pool, default_want);
+            tune.metrics.on_trace_recorded();
+            // Restrict the planner to the layouts the native engine
+            // runs; the trace's origin makes the cost model charge
+            // migration only to actual layout changes.
+            let plan = crate::tune::Planner::new().recommend_among(
+                &trace,
+                &[
+                    crate::tune::Candidate::Aos,
+                    crate::tune::Candidate::SoaMb,
+                    crate::tune::Candidate::Aosoa { lanes: 8 },
+                ],
+            );
+            let chosen = candidate_layout(plan.chosen);
+            if chosen != current {
+                tune.metrics.on_relayout_performed();
+            } else {
+                tune.metrics.on_relayout_skipped();
+            }
+            tune.decisions
+                .lock()
+                .unwrap()
+                .insert(key, TuneDecision { layout: chosen, jobs_since_trace: 0 });
+            (finals, threads)
+        }
+    }
+}
+
+/// Run one native job on a [`FieldAccessCount`]-instrumented view of
+/// `layout`, returning the physics result plus the recorded trace.
+/// Instrumentation counts with relaxed atomics on the hot path; the
+/// physics is identical to [`run_native`] at the same layout.
+///
+/// [`FieldAccessCount`]: crate::mapping::field_access_count::FieldAccessCount
+fn run_native_traced(
+    spec: &JobSpec,
+    layout: Layout,
+    init: &[ParticleData],
+    pool: Option<&WorkerPool>,
+    default_want: usize,
+) -> (Vec<ParticleData>, usize, crate::tune::AccessTrace) {
+    use crate::blob::{alloc_view, AlignedAlloc};
+    use crate::mapping::field_access_count::FieldAccessCount;
+
+    let want = if spec.threads > 0 { spec.threads } else { default_want };
+    let lease = pool.map(|p| p.lease(want));
+    let threads = match &lease {
+        Some(lease) => lease.threads(),
+        None => if want > 0 { want } else { crate::shard::thread_count() },
+    };
+    let simd = spec.backend == Backend::NativeSimd;
+    let ext = (crate::extents::Dyn(init.len() as u32),);
+    let origin = layout_candidate(layout).name();
+
+    macro_rules! traced {
+        ($map:expr) => {{
+            let mut v = alloc_view(FieldAccessCount::new($map), &AlignedAlloc::<64>);
+            views::fill_view(&mut v, init);
+            native_steps(&mut v, simd, spec.steps, pool, threads);
+            let trace = crate::tune::AccessTrace::record(&v).with_origin(&origin);
+            (views::snapshot_view(&v), trace)
+        }};
+    }
+    let (finals, trace) = match layout {
+        Layout::Aos => traced!(views::AosMap::new(ext)),
+        Layout::SoaMb | Layout::Bf16 => traced!(views::SoaMbMap::new(ext)),
+        Layout::Aosoa => traced!(views::AosoaMap::new(ext)),
+    };
+    (finals, threads, trace)
 }
 
 fn run_pjrt(
@@ -748,6 +941,55 @@ mod tests {
         assert_eq!(results.len(), 6);
         let m_max = results.iter().map(|r| r.batch_id).max().unwrap();
         assert!(m_max < 6); // batched into <= 6 batches
+    }
+
+    #[test]
+    fn autotune_relays_hot_keys_to_the_planner_choice() {
+        let mut c = Coordinator::start(Config {
+            workers: 2,
+            max_batch: 4,
+            autotune: true,
+            ..Config::default()
+        });
+        let m = c.metrics_handle();
+        // Two batch keys: an AoS key (the n-body pattern is
+        // column-friendly, so the planner relayouts it to SoA) and a
+        // SoA key (already optimal: the trace confirms it).
+        for _ in 0..4 {
+            c.submit(spec(Layout::Aos, Backend::NativeSimd, 64, 2));
+            c.submit(spec(Layout::SoaMb, Backend::NativeScalar, 64, 2));
+        }
+        let results = c.finish();
+        assert_eq!(results.len(), 8);
+        for r in &results {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.energy_drift < 1e-2);
+            assert!(r.threads >= 1);
+        }
+        // At least one instrumented run per key; every trace produced
+        // exactly one decision; the AoS key's decision changed layout
+        // and the SoA key's confirmed it.
+        assert!(m.traces_recorded() >= 2, "one trace per batch key");
+        assert!(m.relayouts_performed() >= 1, "AoS key should relayout");
+        assert!(m.relayouts_skipped() >= 1, "SoA key should be confirmed");
+        assert_eq!(
+            m.relayouts_performed() + m.relayouts_skipped(),
+            m.traces_recorded(),
+            "every trace ends in exactly one decision"
+        );
+        assert!(m.render().contains("tune:"));
+    }
+
+    #[test]
+    fn autotune_off_records_nothing() {
+        let mut c =
+            Coordinator::start(Config { workers: 1, max_batch: 2, ..Config::default() });
+        let m = c.metrics_handle();
+        c.submit(spec(Layout::Aos, Backend::NativeScalar, 64, 1));
+        let results = c.finish();
+        assert!(results[0].error.is_none());
+        assert_eq!(m.traces_recorded(), 0);
+        assert_eq!(m.relayouts_performed() + m.relayouts_skipped(), 0);
     }
 
     #[test]

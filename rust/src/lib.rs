@@ -121,6 +121,13 @@
 //!   dispatched on the persistent worker pool → [`pool`]
 //!   ([`pool::WorkerPool`]; `LLAMA_POOL`) with NUMA-aware placement →
 //!   [`numa`] (`LLAMA_NUMA`, [`blob::FirstTouchAlloc`])
+//! - §4 closing the loop: access-pattern-driven adaptive relayout →
+//!   [`tune`] ([`tune::AccessTrace`] recorded via the instrumentation
+//!   `snapshot()` APIs, the deterministic cost model and
+//!   [`tune::Planner`], live double-buffered migration through the
+//!   parallel copy engine → [`tune::migrate_live`], and the
+//!   coordinator's per-job-key adaptation via
+//!   [`coordinator::Config::autotune`])
 //! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
 //! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
 //!   (PJRT behind the `pjrt` cargo feature), with bounded, quota-aware job
@@ -145,6 +152,9 @@
 //!   semantics ([`coordinator::Admission`]), the per-client quota
 //!   model, and the failure model (frame CRC coverage, retry/backoff,
 //!   chaos-test matrix).
+//! - `docs/TUNING.md` — the autotuner: the trace JSON schema, every
+//!   cost-model term and its default weight, candidate gating rules, and
+//!   the migration safety argument.
 
 pub mod bench;
 pub mod blob;
@@ -163,6 +173,7 @@ pub mod shard;
 pub mod simd;
 pub mod testing;
 pub mod transport;
+pub mod tune;
 pub mod view;
 
 /// Convenience re-exports covering the common 90% of the API.
@@ -201,6 +212,9 @@ pub mod prelude {
     pub use crate::transport::{
         crc32, decode_adopt, decode_into, decode_into_par, encode, encode_par, wire_error_in,
         Crc32, WireError, WireMapping, WireMsg, WIRE_VERSION,
+    };
+    pub use crate::tune::{
+        migrate_live, AccessTrace, Candidate, CostParams, LayoutPlan, MigrationReport, Planner,
     };
     pub use crate::view::{
         Chunk, FieldRefMut, IndexOf, RecordRef, RecordRefMut, SubRecordRef, View,

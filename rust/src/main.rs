@@ -5,6 +5,9 @@
 //! - `serve`    read job lines from stdin, execute, print results
 //! - `heatmap`  §4 instrumentation demo: ASCII heatmap + CSV of access patterns
 //! - `trace`    §4 FieldAccessCount demo: per-field access table
+//! - `tune`     autotuner: record an access trace from a workload run,
+//!   print the planner's ranked layout recommendation, optionally JSON-dump
+//!   the trace and demonstrate the live migration
 //! - `compress` §3 Bytesplit demo: compression-ratio table
 //! - `artifacts-check` compile every AOT artifact and report
 //!
@@ -25,6 +28,7 @@ fn main() {
         "serve" => cmd_serve(rest),
         "heatmap" => cmd_heatmap(rest),
         "trace" => cmd_trace(rest),
+        "tune" => cmd_tune(rest),
         "compress" => cmd_compress(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
         "help" | "--help" | "-h" => {
@@ -58,6 +62,12 @@ COMMANDS:
            options: [--workers 2] [--retries 0]
   heatmap  [--n 256] [--granularity 64] [--csv out.csv]
   trace    [--n 256] [--steps 2]
+  tune     [--n 1024] [--steps 2] [--seed 1] [--layout aos|soa|aosoa]
+           [--backend scalar|simd] [--json trace.json] [--migrate]
+           [--threads 1]
+           record an n-body access trace on the starting layout, print
+           the cost-model ranking (docs/TUNING.md); --json dumps the
+           trace, --migrate runs the recommended live relayout
   compress [--n 65536]
   artifacts-check
 
@@ -239,6 +249,96 @@ fn cmd_trace(rest: &[String]) -> i32 {
     }
     println!("field access counts after {steps} n-body steps, n={n}:");
     print!("{}", view.mapping().render_table());
+    0
+}
+
+fn cmd_tune(rest: &[String]) -> i32 {
+    use llama::blob::{alloc_view, AlignedAlloc};
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::nbody::{init_particles, views, Particle};
+    use llama::tune::{migrate_live, AccessTrace, Candidate, Planner};
+
+    let n = opt_usize(rest, "--n", 1024);
+    let steps = opt_usize(rest, "--steps", 2);
+    let threads = opt_usize(rest, "--threads", 1).max(1);
+    let seed = opt_usize(rest, "--seed", 1) as u64;
+    let layout = opt(rest, "--layout").unwrap_or_else(|| "aos".into());
+    let simd = !matches!(opt(rest, "--backend").as_deref(), Some("scalar"));
+    let init = init_particles(n, seed);
+    let ext = (llama::extents::Dyn(n as u32),);
+
+    macro_rules! lab {
+        ($map:expr, $origin:expr) => {{
+            let fac: FieldAccessCount<Particle, _> = FieldAccessCount::new($map);
+            let mut v = alloc_view(fac, &AlignedAlloc::<64>);
+            views::fill_view(&mut v, &init);
+            v.mapping().reset(); // don't count the fill
+            for _ in 0..steps {
+                if simd {
+                    views::update_simd::<8, _, _>(&mut v);
+                    views::move_simd::<8, _, _>(&mut v);
+                } else {
+                    views::update_scalar(&mut v);
+                    views::move_scalar(&mut v);
+                }
+            }
+            let trace = AccessTrace::record(&v).with_origin($origin);
+            println!(
+                "trace: {} records of {}, {} accesses after {steps} n-body steps on {}{}:",
+                trace.n,
+                trace.record,
+                trace.total_accesses(),
+                $origin,
+                if trace.stable { "" } else { " (unstable snapshot)" },
+            );
+            print!("{}", v.mapping().render_table());
+            let plan = Planner::new().recommend(&trace);
+            println!("\nplanner ranking (cost model terms, see docs/TUNING.md):");
+            print!("{}", plan.render_table());
+            if plan.is_migration() {
+                println!("\nrecommendation: migrate {} -> {}", $origin, plan.chosen.name());
+            } else {
+                println!("\nrecommendation: keep {}", plan.chosen.name());
+            }
+            if let Some(path) = opt(rest, "--json") {
+                std::fs::write(&path, trace.to_json()).expect("write trace json");
+                println!("wrote {path}");
+            }
+            if rest.iter().any(|a| a == "--migrate") && plan.is_migration() {
+                // Demonstrate the double-buffered relayout for winners
+                // the native engine instantiates here.
+                match plan.chosen {
+                    Candidate::SoaMb => {
+                        let (_dst, r) =
+                            migrate_live(&v, views::SoaMbMap::new(ext), &AlignedAlloc::<64>, threads);
+                        println!("{}", r.summary());
+                    }
+                    Candidate::Aos => {
+                        let (_dst, r) =
+                            migrate_live(&v, views::AosMap::new(ext), &AlignedAlloc::<64>, threads);
+                        println!("{}", r.summary());
+                    }
+                    Candidate::Aosoa { lanes: 8 } => {
+                        let (_dst, r) =
+                            migrate_live(&v, views::AosoaMap::new(ext), &AlignedAlloc::<64>, threads);
+                        println!("{}", r.summary());
+                    }
+                    other => {
+                        println!("--migrate: no native instantiation for {} here", other.name())
+                    }
+                }
+            }
+        }};
+    }
+    match layout.as_str() {
+        "aos" => lab!(views::AosMap::new(ext), "aos"),
+        "soa" => lab!(views::SoaMbMap::new(ext), "soa-mb"),
+        "aosoa" => lab!(views::AosoaMap::new(ext), "aosoa8"),
+        other => {
+            eprintln!("supported tune layouts: aos, soa, aosoa (got '{other}')");
+            return 2;
+        }
+    }
     0
 }
 

@@ -32,6 +32,29 @@ pub struct AccessCounters {
     writes: Vec<AtomicU64>,
 }
 
+/// A coherent point-in-time copy of the per-field counters.
+///
+/// Produced by [`FieldAccessCount::snapshot`]. Unlike the ad-hoc
+/// [`FieldAccessCount::field_counts`] reads, every counter in the snapshot
+/// belongs to the same cut: no access was recorded between the two read
+/// passes that produced it (see `snapshot` for the protocol).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AccessSnapshot {
+    /// `(reads, writes)` per flattened field index.
+    pub counts: Vec<(u64, u64)>,
+    /// Whether the double-read stabilized. `false` only under sustained
+    /// concurrent traffic that outran the bounded retries; the last pass
+    /// is still returned so callers can degrade gracefully.
+    pub stable: bool,
+}
+
+impl AccessSnapshot {
+    /// Sum of all reads and writes in the snapshot.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|&(r, w)| r + w).sum()
+    }
+}
+
 /// One row of the access report.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct FieldAccessRow {
@@ -77,6 +100,39 @@ impl<R: RecordDim, M: MemoryAccess<R>> FieldAccessCount<R, M> {
             self.counters.reads[field].load(Ordering::Relaxed),
             self.counters.writes[field].load(Ordering::Relaxed),
         )
+    }
+
+    /// Read *all* counters coherently.
+    ///
+    /// Individual relaxed loads can interleave with concurrent accesses,
+    /// so a naive loop over [`FieldAccessCount::field_counts`] may mix
+    /// counts from different instants. `snapshot` reads the whole counter
+    /// vector repeatedly until two consecutive passes agree — then no
+    /// counter changed between those passes, so the returned values form a
+    /// single consistent cut. On a quiescent or read-only view the first
+    /// retry already matches; under sustained concurrent writes the
+    /// retries are bounded and the last pass is returned with
+    /// `stable = false`.
+    pub fn snapshot(&self) -> AccessSnapshot {
+        let read_all = || -> Vec<(u64, u64)> {
+            (0..R::FIELDS.len())
+                .map(|f| {
+                    (
+                        self.counters.reads[f].load(Ordering::Relaxed),
+                        self.counters.writes[f].load(Ordering::Relaxed),
+                    )
+                })
+                .collect()
+        };
+        let mut prev = read_all();
+        for _ in 0..8 {
+            let cur = read_all();
+            if cur == prev {
+                return AccessSnapshot { counts: cur, stable: true };
+            }
+            prev = cur;
+        }
+        AccessSnapshot { counts: prev, stable: false }
     }
 
     /// Reset all counters to zero.
@@ -236,6 +292,27 @@ mod tests {
         let table = v.mapping().render_table();
         assert!(table.contains("field"));
         assert!(table.contains("TOTAL"));
+    }
+
+    #[test]
+    fn snapshot_is_stable_and_matches_report() {
+        let fac = FieldAccessCount::new(SoA::<P, _>::new((Dyn(8u32),)));
+        let mut v = alloc_view(fac, &HeapAlloc);
+        for i in 0..8usize {
+            v.set(&[i], p::x, i as f64);
+            let _ = v.get::<f32, _>(&[i], p::m);
+        }
+        let snap = v.mapping().snapshot();
+        assert!(snap.stable);
+        assert_eq!(snap.counts.len(), 2);
+        assert_eq!(snap.counts[p::x.i()], (0, 8));
+        assert_eq!(snap.counts[p::m.i()], (8, 0));
+        assert_eq!(snap.total(), 16);
+        // Snapshot of a quiescent view equals the ad-hoc report.
+        let rep = v.mapping().report();
+        for (f, row) in rep.iter().enumerate() {
+            assert_eq!(snap.counts[f], (row.reads, row.writes));
+        }
     }
 
     #[test]

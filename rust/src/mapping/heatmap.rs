@@ -19,6 +19,20 @@ use crate::blob::BlobStorage;
 use crate::mapping::{Mapping, MemoryAccess, PhysicalMapping, SimdAccess};
 use crate::record::{RecordDim, Scalar};
 
+/// A coherent point-in-time copy of the per-granule counters of every
+/// blob, produced by [`Heatmap::snapshot`] (same double-read protocol as
+/// `FieldAccessCount::snapshot`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HeatSnapshot {
+    /// Granule size in bytes (the mapping's `GRANULARITY`).
+    pub granularity: usize,
+    /// `counts[blob][granule]`.
+    pub blobs: Vec<Vec<u64>>,
+    /// Whether the double-read stabilized (see
+    /// [`crate::mapping::field_access_count::AccessSnapshot::stable`]).
+    pub stable: bool,
+}
+
 /// Count accesses per `GRANULARITY`-byte granule of every blob, forwarding
 /// to the inner physical mapping `M`.
 #[derive(Clone, Debug)]
@@ -58,6 +72,29 @@ impl<R: RecordDim, M: PhysicalMapping<R> + MemoryAccess<R>, const GRANULARITY: u
     /// Snapshot of the per-granule counts for `blob`.
     pub fn blob_counts(&self, blob: usize) -> Vec<u64> {
         self.counters[blob].iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Read all granule counters of all blobs coherently: the full counter
+    /// matrix is re-read until two consecutive passes agree (bounded
+    /// retries; under sustained concurrent traffic the last pass is
+    /// returned with `stable = false`). [`Heatmap::blob_counts`] remains
+    /// the cheap per-blob read when cross-blob consistency is not needed.
+    pub fn snapshot(&self) -> HeatSnapshot {
+        let read_all = || -> Vec<Vec<u64>> {
+            self.counters
+                .iter()
+                .map(|b| b.iter().map(|c| c.load(Ordering::Relaxed)).collect())
+                .collect()
+        };
+        let mut prev = read_all();
+        for _ in 0..8 {
+            let cur = read_all();
+            if cur == prev {
+                return HeatSnapshot { granularity: GRANULARITY, blobs: cur, stable: true };
+            }
+            prev = cur;
+        }
+        HeatSnapshot { granularity: GRANULARITY, blobs: prev, stable: false }
     }
 
     /// Reset all counters.
@@ -241,6 +278,21 @@ mod tests {
         let counts = v.mapping().blob_counts(0);
         assert_eq!(counts[1], 1);
         assert_eq!(counts[2], 1);
+    }
+
+    #[test]
+    fn snapshot_matches_blob_counts() {
+        let hm = Heatmap::<P, _, 8>::new(SoA::<P, _>::new((Dyn(4u32),)));
+        let mut v = alloc_view(hm, &HeapAlloc);
+        v.set(&[0], p::x, 1.0f64);
+        v.set(&[0], p::m, 2.0f32);
+        let snap = v.mapping().snapshot();
+        assert!(snap.stable);
+        assert_eq!(snap.granularity, 8);
+        assert_eq!(snap.blobs.len(), 2);
+        for (b, counts) in snap.blobs.iter().enumerate() {
+            assert_eq!(counts, &v.mapping().blob_counts(b));
+        }
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! The cost model: score a candidate layout against an [`AccessTrace`].
+//!
+//! Deterministic and purely arithmetic — same trace, same params, same
+//! score — so planner decisions are unit-testable with golden traces. The
+//! candidate set and the per-candidate terms come straight from the
+//! `docs/MAPPINGS.md` feature matrix; the terms and their default weights
+//! are documented in `docs/TUNING.md` §2. In brief, a candidate's cost is
+//!
+//! `traffic + capacity + blobs + boundary + migration`
+//!
+//! - **traffic** — per-field `accesses × effective_bytes × dilution ÷
+//!   simd`: column layouts fetch dense, SIMD-able columns; AoS drags whole
+//!   records through the cache for the fields it touches; bitpack shrinks
+//!   the bytes but pays a per-access shift/mask multiplier.
+//! - **capacity** — bytes resident while the hot loop runs (hot columns
+//!   for column layouts, all records for interleaved layouts), weighted
+//!   small: it only decides when traffic does not.
+//! - **blobs** — a fixed per-blob management fee (allocation, NUMA
+//!   placement, transport geometry): what `Split` buys over SoA-MB.
+//! - **boundary** — adjacent columns inside a *single* blob share cache
+//!   lines at their seams, so parallel writers false-share: charged per
+//!   hot write to SoA-SB (and to `Split`'s cold blob on cold writes).
+//! - **migration** — relayout bytes amortized over
+//!   [`CostParams::horizon`] future trace periods; charged only when the
+//!   trace's origin layout is known and differs.
+
+use crate::record::Selection;
+use crate::tune::trace::AccessTrace;
+
+/// A candidate layout the planner can recommend.
+///
+/// These are *shapes*, not concrete mapping instances: a candidate plus
+/// the record dimension and extents determines the mapping type to
+/// instantiate (`docs/TUNING.md` §3 lists the reference instantiation of
+/// each).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Candidate {
+    /// `SoA<_, _, MultiBlob>` — one blob per field column.
+    SoaMb,
+    /// `SoA<_, _, SingleBlob>` — all columns packed into one blob.
+    SoaSb,
+    /// `AoS` (natural alignment) — one record after another.
+    Aos,
+    /// `AoSoA<_, _, LANES>` — interleaved blocks of `lanes` records.
+    Aosoa {
+        /// Block size in records.
+        lanes: usize,
+    },
+    /// `Split` at `hot`: hot fields as SoA-MB columns, the remaining
+    /// (cold) fields packed into a single blob.
+    Split {
+        /// The contiguous flattened-field range that is hot.
+        hot: Selection,
+    },
+    /// `BitpackIntSoADyn` with `bits` bits per value (all-integral
+    /// records whose observed values fit `bits`).
+    BitpackInt {
+        /// Bits per stored value (incl. sign bit for signed fields).
+        bits: u32,
+    },
+}
+
+impl Candidate {
+    /// Stable lowercase name (used as [`AccessTrace::origin`] and in
+    /// reports), e.g. `"soa-mb"`, `"aosoa8"`, `"split[0..3]"`,
+    /// `"bitpack10"`.
+    pub fn name(&self) -> String {
+        match *self {
+            Candidate::SoaMb => "soa-mb".to_string(),
+            Candidate::SoaSb => "soa-sb".to_string(),
+            Candidate::Aos => "aos".to_string(),
+            Candidate::Aosoa { lanes } => format!("aosoa{lanes}"),
+            Candidate::Split { hot } => format!("split[{}..{}]", hot.start, hot.start + hot.len),
+            Candidate::BitpackInt { bits } => format!("bitpack{bits}"),
+        }
+    }
+}
+
+/// Weights and knobs of the cost model (defaults in `docs/TUNING.md` §2).
+#[derive(Clone, Copy, Debug)]
+pub struct CostParams {
+    /// Traffic divisor for SIMD-able dense columns (SoA, Split).
+    pub simd_factor: f64,
+    /// Traffic divisor for AoSoA blocks: slightly below
+    /// [`CostParams::simd_factor`] for block-boundary and tail overhead.
+    pub aosoa_simd_factor: f64,
+    /// Per-access multiplier for bitpacked columns (shift/mask cost).
+    pub bitpack_access_cost: f64,
+    /// Weight of hot-resident bytes (cache/capacity pressure).
+    pub capacity_weight: f64,
+    /// Fixed fee per allocated blob (placement, registration, transport
+    /// geometry), in traffic units.
+    pub blob_cost: f64,
+    /// Per-write fee for columns sharing one blob (seam false sharing).
+    pub boundary_write_cost: f64,
+    /// Fraction of total accesses the hot field set must cover
+    /// ([`hot_fields`] takes the smallest prefix reaching it).
+    pub hot_coverage: f64,
+    /// Trace periods a migration's cost amortizes over.
+    pub horizon: f64,
+    /// Cost per byte moved by a migration.
+    pub migration_byte_cost: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            simd_factor: 2.0,
+            aosoa_simd_factor: 1.8,
+            bitpack_access_cost: 4.0,
+            capacity_weight: 0.05,
+            blob_cost: 64.0,
+            boundary_write_cost: 0.05,
+            hot_coverage: 0.9,
+            horizon: 10.0,
+            migration_byte_cost: 1.0,
+        }
+    }
+}
+
+/// A candidate's scored terms (all in the same abstract traffic units).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cost {
+    /// Access traffic (dilution- and SIMD-adjusted bytes).
+    pub traffic: f64,
+    /// Weighted hot-resident footprint.
+    pub capacity: f64,
+    /// Per-blob management fees.
+    pub blobs: f64,
+    /// Seam false-sharing fees.
+    pub boundary: f64,
+    /// Amortized relayout cost (0 for the origin layout).
+    pub migration: f64,
+}
+
+impl Cost {
+    /// The scalar the planner ranks by.
+    pub fn total(&self) -> f64 {
+        self.traffic + self.capacity + self.blobs + self.boundary + self.migration
+    }
+}
+
+/// The hot field set: the smallest access-count-descending prefix of
+/// fields covering at least `coverage` of all accesses, returned as
+/// ascending flattened indices. A trace with zero accesses is all hot.
+pub fn hot_fields(trace: &AccessTrace, coverage: f64) -> Vec<usize> {
+    let total = trace.total_accesses();
+    if total == 0 {
+        return (0..trace.fields.len()).collect();
+    }
+    let mut order: Vec<usize> = (0..trace.fields.len()).collect();
+    // Stable sort by count descending; ties keep field order (determinism).
+    order.sort_by(|&a, &b| trace.fields[b].accesses().cmp(&trace.fields[a].accesses()));
+    let target = coverage * total as f64;
+    let mut hot = Vec::new();
+    let mut cum = 0u64;
+    for f in order {
+        hot.push(f);
+        cum += trace.fields[f].accesses();
+        if cum as f64 >= target {
+            break;
+        }
+    }
+    hot.sort_unstable();
+    hot
+}
+
+/// The hot set as a contiguous flattened-field [`Selection`], if it is one
+/// (and a *proper*, non-empty subset of the record) — the precondition for
+/// offering a [`Candidate::Split`].
+pub fn hot_selection(hot: &[usize], field_count: usize) -> Option<Selection> {
+    let (&first, &last) = (hot.first()?, hot.last()?);
+    let contiguous = last - first + 1 == hot.len();
+    if contiguous && hot.len() < field_count {
+        Some(Selection::new(first, hot.len()))
+    } else {
+        None
+    }
+}
+
+/// Score `cand` against `trace`. Deterministic; lower is better.
+pub fn score(trace: &AccessTrace, cand: &Candidate, p: &CostParams) -> Cost {
+    let n = trace.n as f64;
+    let fields = &trace.fields;
+    let record_bytes: f64 = trace.record_bytes() as f64;
+    let accessed_bytes: f64 =
+        fields.iter().filter(|f| f.accesses() > 0).map(|f| f.ty.size() as f64).sum();
+    let hot = hot_fields(trace, p.hot_coverage);
+
+    let eff_size = |fi: usize| -> f64 {
+        match *cand {
+            Candidate::BitpackInt { bits } if fields[fi].ty.is_integral() => bits as f64 / 8.0,
+            _ => fields[fi].ty.size() as f64,
+        }
+    };
+
+    // -- traffic -----------------------------------------------------------
+    let mut traffic = 0.0;
+    for (fi, f) in fields.iter().enumerate() {
+        let acc = f.accesses() as f64;
+        if acc == 0.0 {
+            continue;
+        }
+        let (dilution, simd, cpu) = match *cand {
+            // Dense, vectorizable columns.
+            Candidate::SoaMb | Candidate::SoaSb => (1.0, p.simd_factor, 1.0),
+            // Hot columns are SoA; cold columns live dense in one blob but
+            // are accessed too rarely to vectorize profitably.
+            Candidate::Split { hot: sel } => {
+                if sel.contains(fi) {
+                    (1.0, p.simd_factor, 1.0)
+                } else {
+                    (1.0, 1.0, 1.0)
+                }
+            }
+            // Field-dense lanes inside blocks, block-boundary overhead.
+            Candidate::Aosoa { .. } => (1.0, p.aosoa_simd_factor, 1.0),
+            // Every access drags the whole record's cache footprint for
+            // the accessed share of it; scalar walk.
+            Candidate::Aos => {
+                let d = if accessed_bytes > 0.0 { record_bytes / accessed_bytes } else { 1.0 };
+                (d.max(1.0), 1.0, 1.0)
+            }
+            // Dense shrunk columns, but shift/mask on every access.
+            Candidate::BitpackInt { .. } => (1.0, 1.0, p.bitpack_access_cost),
+        };
+        traffic += acc * eff_size(fi) * dilution * cpu / simd;
+    }
+
+    // -- capacity ----------------------------------------------------------
+    let resident = match *cand {
+        Candidate::SoaMb | Candidate::SoaSb | Candidate::Split { .. }
+        | Candidate::BitpackInt { .. } => {
+            // Columns are segregated: only hot columns stay resident.
+            hot.iter().map(|&f| n * eff_size(f)).sum::<f64>()
+        }
+        Candidate::Aos => n * record_bytes,
+        Candidate::Aosoa { lanes } => {
+            let n_pad = (trace.n.div_ceil(lanes.max(1)) * lanes.max(1)) as f64;
+            n_pad * record_bytes
+        }
+    };
+    let capacity = resident * p.capacity_weight;
+
+    // -- blobs -------------------------------------------------------------
+    let blob_count = match *cand {
+        Candidate::SoaMb | Candidate::BitpackInt { .. } => fields.len(),
+        Candidate::SoaSb | Candidate::Aos | Candidate::Aosoa { .. } => 1,
+        Candidate::Split { hot: sel } => sel.len + 1,
+    };
+    let blobs = blob_count as f64 * p.blob_cost;
+
+    // -- boundary ----------------------------------------------------------
+    let boundary = match *cand {
+        Candidate::SoaSb => {
+            let hot_writes: u64 = hot.iter().map(|&f| fields[f].writes).sum();
+            hot_writes as f64 * p.boundary_write_cost
+        }
+        Candidate::Split { hot: sel } => {
+            let cold_writes: u64 = fields
+                .iter()
+                .enumerate()
+                .filter(|&(fi, _)| !sel.contains(fi))
+                .map(|(_, f)| f.writes)
+                .sum();
+            cold_writes as f64 * p.boundary_write_cost
+        }
+        _ => 0.0,
+    };
+
+    // -- migration ---------------------------------------------------------
+    let migration = match &trace.origin {
+        Some(origin) if *origin != cand.name() => {
+            // Read every source byte, write every destination byte.
+            let moved = n * record_bytes + n * (0..fields.len()).map(eff_size).sum::<f64>();
+            moved * p.migration_byte_cost / p.horizon.max(1.0)
+        }
+        _ => 0.0,
+    };
+
+    Cost { traffic, capacity, blobs, boundary, migration }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::record::ScalarType;
+    use crate::tune::trace::FieldTrace;
+
+    fn trace(n: usize, rows: &[(&str, ScalarType, u64, u64)]) -> AccessTrace {
+        AccessTrace {
+            record: "T".into(),
+            n,
+            origin: None,
+            stable: true,
+            fields: rows
+                .iter()
+                .map(|&(name, ty, reads, writes)| FieldTrace {
+                    field: name.into(),
+                    ty,
+                    reads,
+                    writes,
+                    value_bits: None,
+                })
+                .collect(),
+            heat: None,
+        }
+    }
+
+    #[test]
+    fn hot_fields_coverage_prefix() {
+        let t = trace(
+            16,
+            &[
+                ("a", ScalarType::F32, 1000, 0),
+                ("b", ScalarType::F32, 10, 0),
+                ("c", ScalarType::F32, 2000, 0),
+            ],
+        );
+        // a + c cover 3000/3010 > 0.9.
+        assert_eq!(hot_fields(&t, 0.9), vec![0, 2]);
+        // Everything hot when nothing was accessed.
+        let empty = trace(16, &[("a", ScalarType::F32, 0, 0), ("b", ScalarType::F32, 0, 0)]);
+        assert_eq!(hot_fields(&empty, 0.9), vec![0, 1]);
+    }
+
+    #[test]
+    fn hot_selection_requires_contiguous_proper_subset() {
+        assert_eq!(hot_selection(&[1, 2, 3], 6), Some(Selection::new(1, 3)));
+        assert_eq!(hot_selection(&[0, 2], 6), None); // gap
+        assert_eq!(hot_selection(&[0, 1, 2], 3), None); // not proper
+        assert_eq!(hot_selection(&[], 3), None);
+    }
+
+    #[test]
+    fn soa_beats_aos_on_simd_traffic() {
+        let t = trace(
+            1024,
+            &[("x", ScalarType::F32, 100_000, 10_000), ("y", ScalarType::F32, 100_000, 10_000)],
+        );
+        let p = CostParams::default();
+        let soa = score(&t, &Candidate::SoaMb, &p);
+        let aos = score(&t, &Candidate::Aos, &p);
+        assert!(soa.total() < aos.total());
+        // Both fields accessed => AoS dilution is 1; the gap is pure SIMD.
+        assert!((aos.traffic / soa.traffic - p.simd_factor).abs() < 1e-9);
+    }
+
+    #[test]
+    fn origin_layout_pays_no_migration() {
+        let t = trace(64, &[("x", ScalarType::F32, 100, 0)]).with_origin("aos");
+        let p = CostParams::default();
+        assert_eq!(score(&t, &Candidate::Aos, &p).migration, 0.0);
+        assert!(score(&t, &Candidate::SoaMb, &p).migration > 0.0);
+        // Unknown origin: nobody is charged.
+        let t2 = trace(64, &[("x", ScalarType::F32, 100, 0)]);
+        assert_eq!(score(&t2, &Candidate::SoaMb, &p).migration, 0.0);
+    }
+
+    #[test]
+    fn bitpack_shrinks_capacity_but_pays_cpu() {
+        let t = trace(100_000, &[("k", ScalarType::U32, 1000, 0)]);
+        let p = CostParams::default();
+        let soa = score(&t, &Candidate::SoaMb, &p);
+        let bp = score(&t, &Candidate::BitpackInt { bits: 10 }, &p);
+        assert!(bp.capacity < soa.capacity);
+        assert!(bp.traffic > soa.traffic);
+    }
+}

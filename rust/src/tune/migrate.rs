@@ -1,0 +1,209 @@
+//! `migrate_live`: double-buffered relayout that readers never block on.
+//!
+//! Migration allocates the destination view, fills it through the
+//! layout-aware parallel copy engine ([`crate::copy::copy_view_par`] —
+//! whole-blob memcpy, per-field runs, parallel runs at
+//! `shard_bounds`-proven boundaries, or the scalar fallback, whichever
+//! the mapping pair supports), verifies bit-identity against the source,
+//! and returns the new view plus a [`MigrationReport`].
+//!
+//! **Safety/liveness argument** (details in `docs/TUNING.md` §4): the
+//! source is taken by *shared* borrow. Concurrent readers keep reading
+//! the old buffers for the whole copy — nothing is mutated in place, the
+//! new layout materializes in fresh blobs ("double buffering"), and the
+//! caller swaps views only after the function returns with verification
+//! passed. Writers must be quiesced for the duration (the borrow checker
+//! enforces exactly this: a `&View` outstanding means no `&mut View`),
+//! which is the same contract a quiescent-state relayout has in the C++
+//! library.
+//!
+//! Verification reads every `(record, field)` cell through *both*
+//! mappings' own access paths and compares the `f64` bit patterns —
+//! exact for every scalar type the record dimension supports (the same
+//! `f64` fabric the field-wise copy converts through, so a lossy
+//! *computed* destination such as a too-narrow bitpack fails loudly here
+//! rather than corrupting silently).
+
+use crate::blob::{alloc_view, BlobAlloc, BlobStorage};
+use crate::copy::{copy_view_par, CopyStrategy};
+use crate::extents::Extents;
+use crate::mapping::{Mapping, MemoryAccess};
+use crate::record::RecordDim;
+use crate::view::{load_as_f64, View};
+
+/// What a migration did and what it cost.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MigrationReport {
+    /// The copy fast path the mapping pair supported.
+    pub strategy: CopyStrategy,
+    /// Records migrated.
+    pub records: usize,
+    /// Payload bytes involved (source blobs read + destination blobs
+    /// written).
+    pub bytes_moved: usize,
+    /// Worker threads requested for the parallel copy.
+    pub threads: usize,
+    /// `(record, field)` cells verified bit-identical.
+    pub verified: usize,
+}
+
+impl MigrationReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "migrated {} records ({} B) via {:?} on {} thread(s), {} cells verified",
+            self.records, self.bytes_moved, self.strategy, self.threads, self.verified
+        )
+    }
+}
+
+/// Relayout `src` into a freshly allocated view with mapping
+/// `dst_mapping`, double-buffered: `src` is only read (shared borrow), so
+/// concurrent readers proceed untouched while the copy runs on up to
+/// `threads` workers. Asserts bit-identity of every cell before
+/// returning; panics (with the offending index and field) if the
+/// destination mapping cannot represent a source value.
+///
+/// The destination extents must span the same number of records as the
+/// source.
+pub fn migrate_live<R, MS, SS, MD, A>(
+    src: &View<R, MS, SS>,
+    dst_mapping: MD,
+    alloc: &A,
+    threads: usize,
+) -> (View<R, MD, A::Storage>, MigrationReport)
+where
+    R: RecordDim,
+    MS: MemoryAccess<R>,
+    SS: BlobStorage + Sync,
+    MD: MemoryAccess<R>,
+    A: BlobAlloc,
+    A::Storage: Send + Sync,
+{
+    assert_eq!(
+        src.count(),
+        dst_mapping.extents().count(),
+        "migrate_live: destination extents span a different record count"
+    );
+    let mut dst = alloc_view(dst_mapping, alloc);
+    let strategy = copy_view_par(src, &mut dst, threads);
+    let verified = verify_bit_identical(src, &dst);
+    let src_bytes: usize = (0..MS::BLOB_COUNT).map(|b| src.mapping().blob_size(b)).sum();
+    let dst_bytes: usize = (0..MD::BLOB_COUNT).map(|b| dst.mapping().blob_size(b)).sum();
+    let report = MigrationReport {
+        strategy,
+        records: src.count(),
+        bytes_moved: src_bytes + dst_bytes,
+        threads,
+        verified,
+    };
+    (dst, report)
+}
+
+/// Compare every `(record, field)` cell of two views through their own
+/// mappings' read paths, as `f64` bit patterns. Returns the number of
+/// cells checked; panics on the first mismatch.
+pub fn verify_bit_identical<R, MS, SS, MD, SD>(
+    a: &View<R, MS, SS>,
+    b: &View<R, MD, SD>,
+) -> usize
+where
+    R: RecordDim,
+    MS: MemoryAccess<R>,
+    SS: BlobStorage,
+    MD: MemoryAccess<R>,
+    SD: BlobStorage,
+{
+    assert_eq!(a.count(), b.count(), "verify_bit_identical: extents differ");
+    let e = *a.extents();
+    let rank = <MS::Extents as Extents>::RANK;
+    let mut idx = [0usize; crate::view::MAX_RANK];
+    let mut cells = 0usize;
+    if e.count() == 0 {
+        return 0;
+    }
+    loop {
+        for f in 0..R::FIELDS.len() {
+            let va = load_as_f64(a, &idx[..rank], f);
+            let vb = load_as_f64(b, &idx[..rank], f);
+            assert!(
+                va.to_bits() == vb.to_bits(),
+                "migration not bit-identical at {:?} field {}: {} != {}",
+                &idx[..rank],
+                R::FIELDS[f].dotted(),
+                va,
+                vb,
+            );
+            cells += 1;
+        }
+        if !crate::extents::advance_index(&e, &mut idx[..rank]) {
+            return cells;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::HeapAlloc;
+    use crate::extents::Dyn;
+    use crate::mapping::aos::AoS;
+    use crate::mapping::soa::SoA;
+
+    crate::record! {
+        pub struct P, mod p {
+            x: f64,
+            k: u32,
+        }
+    }
+
+    crate::record! {
+        pub struct K, mod kk {
+            k: u32,
+        }
+    }
+
+    #[test]
+    fn migrate_soa_to_aos_verifies() {
+        let n = 16usize;
+        let mut src = crate::blob::alloc_view(SoA::<P, _>::new((Dyn(n as u32),)), &HeapAlloc);
+        for i in 0..n {
+            src.set(&[i], p::x, (i as f64).sqrt());
+            src.set(&[i], p::k, (i * 3) as u32);
+        }
+        for threads in [1usize, 2] {
+            let (dst, report) =
+                migrate_live(&src, AoS::<P, _>::new((Dyn(n as u32),)), &HeapAlloc, threads);
+            assert_eq!(report.records, n);
+            assert_eq!(report.threads, threads);
+            assert_eq!(report.verified, n * 2);
+            assert!(report.bytes_moved > 0);
+            for i in 0..n {
+                assert_eq!(dst.get::<f64, _>(&[i], p::x), (i as f64).sqrt());
+                assert_eq!(dst.get::<u32, _>(&[i], p::k), (i * 3) as u32);
+            }
+            assert!(!report.summary().is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different record count")]
+    fn extent_mismatch_panics() {
+        let src = crate::blob::alloc_view(SoA::<P, _>::new((Dyn(8u32),)), &HeapAlloc);
+        let _ = migrate_live(&src, AoS::<P, _>::new((Dyn(9u32),)), &HeapAlloc, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not bit-identical")]
+    fn lossy_destination_fails_loudly() {
+        // A 4-bit dynamic bitpack cannot hold k = 100: verification must
+        // catch the wrap instead of returning a corrupt view.
+        let mut src = crate::blob::alloc_view(SoA::<K, _>::new((Dyn(4u32),)), &HeapAlloc);
+        for i in 0..4usize {
+            src.set(&[i], kk::k, 100u32);
+        }
+        let dst_map =
+            crate::mapping::bitpack_int::BitpackIntSoADyn::<K, _>::new((Dyn(4u32),), 4);
+        let _ = migrate_live(&src, dst_map, &HeapAlloc, 1);
+    }
+}

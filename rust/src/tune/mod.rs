@@ -1,0 +1,66 @@
+//! Access-pattern-driven adaptive relayout: the autotuner.
+//!
+//! The paper's §4 instrumentation mappings ([`FieldAccessCount`],
+//! [`Heatmap`]) *observe* access patterns; this subsystem closes the loop
+//! and lets the library *choose* layouts from what it observed:
+//!
+//! 1. [`trace`] — freeze the instrumentation counters into a serializable
+//!    [`AccessTrace`] (per-field read/write counts, scalar widths,
+//!    extents, optional heatmap histogram, observed value bits), via the
+//!    atomically-consistent `snapshot()` APIs.
+//! 2. [`cost`] — score every candidate layout (SoA-SB/MB, AoS,
+//!    AoSoA{8,16}, `Split` hot/cold by access-count quantile, bitpack
+//!    for low-entropy integral fields) with a deterministic cost model
+//!    built on the `docs/MAPPINGS.md` feature matrix.
+//! 3. [`plan`] — [`Planner::recommend`] ranks the candidates into a
+//!    [`LayoutPlan`]; offline, unit-testable with golden traces.
+//! 4. [`migrate`] — [`migrate_live`] relayouts through the parallel copy
+//!    engine, double-buffered so readers never block, with bit-identity
+//!    asserted against the source.
+//!
+//! The live consumers are the coordinator (per-job-key layout adaptation
+//! when [`crate::coordinator::Config::autotune`] is set) and the
+//! `llama-lab tune` CLI subcommand. Reference: `docs/TUNING.md`.
+//!
+//! ```
+//! use llama::extents::Dyn;
+//! use llama::mapping::field_access_count::FieldAccessCount;
+//! use llama::mapping::soa::SoA;
+//! use llama::tune::{AccessTrace, Planner};
+//!
+//! llama::record! {
+//!     pub struct P, mod p {
+//!         x: f32,
+//!         m: f32,
+//!     }
+//! }
+//!
+//! // Run a workload on an instrumented view...
+//! let fac = FieldAccessCount::new(SoA::<P, _>::new((Dyn(64u32),)));
+//! let mut v = llama::blob::alloc_view(fac, &llama::blob::HeapAlloc);
+//! for i in 0..64usize {
+//!     v.set(&[i], p::x, i as f32);
+//!     let _ = v.get::<f32, _>(&[i], p::x);
+//! }
+//! // ...freeze the counters and ask the planner.
+//! let trace = AccessTrace::record(&v).with_origin("soa-mb");
+//! let plan = Planner::new().recommend(&trace);
+//! assert_eq!(plan.chosen, plan.scored[0].0);
+//! ```
+//!
+//! [`FieldAccessCount`]: crate::mapping::field_access_count::FieldAccessCount
+//! [`Heatmap`]: crate::mapping::heatmap::Heatmap
+//! [`AccessTrace`]: trace::AccessTrace
+//! [`Planner::recommend`]: plan::Planner::recommend
+//! [`LayoutPlan`]: plan::LayoutPlan
+//! [`migrate_live`]: migrate::migrate_live
+
+pub mod cost;
+pub mod migrate;
+pub mod plan;
+pub mod trace;
+
+pub use cost::{hot_fields, hot_selection, score, Candidate, Cost, CostParams};
+pub use migrate::{migrate_live, verify_bit_identical, MigrationReport};
+pub use plan::{LayoutPlan, Planner};
+pub use trace::{AccessTrace, FieldTrace, HeatTrace};

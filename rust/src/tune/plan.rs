@@ -1,0 +1,240 @@
+//! `Planner`: turn an [`AccessTrace`] into a ranked [`LayoutPlan`].
+//!
+//! Offline and deterministic: the planner enumerates the candidate
+//! layouts that are *valid* for the trace (Split only when the hot set is
+//! a contiguous proper field range, bitpack only when every field is
+//! integral with known observed value bits), scores each with
+//! [`crate::tune::cost::score`], and returns all candidates ranked plus
+//! the winner. Golden-trace tests live in `tests/tune.rs`; the live
+//! consumer is the coordinator's per-job-key adaptation and the
+//! `llama-lab tune` CLI.
+
+use crate::tune::cost::{hot_fields, hot_selection, score, Candidate, Cost, CostParams};
+use crate::tune::trace::AccessTrace;
+
+/// The layout planner (a [`CostParams`] holder; construction is free).
+#[derive(Clone, Debug, Default)]
+pub struct Planner {
+    /// Cost-model weights used for every recommendation.
+    pub params: CostParams,
+}
+
+/// The planner's verdict: every scored candidate, ranked best-first.
+#[derive(Clone, Debug)]
+pub struct LayoutPlan {
+    /// The winning candidate (`scored[0].0`).
+    pub chosen: Candidate,
+    /// All valid candidates with their cost terms, ascending total.
+    pub scored: Vec<(Candidate, Cost)>,
+    /// The hot field set the plan was computed from (ascending indices).
+    pub hot: Vec<usize>,
+    /// The trace's origin layout, carried over for migration decisions.
+    pub origin: Option<String>,
+}
+
+impl LayoutPlan {
+    /// Whether acting on the plan means relayouting (origin known and
+    /// different from the winner).
+    pub fn is_migration(&self) -> bool {
+        match &self.origin {
+            Some(o) => *o != self.chosen.name(),
+            None => false,
+        }
+    }
+
+    /// Render the ranked candidates as an aligned text table (the
+    /// `llama-lab tune` output).
+    pub fn render_table(&self) -> String {
+        let names: Vec<String> = self.scored.iter().map(|(c, _)| c.name()).collect();
+        let w = names.iter().map(String::len).max().unwrap_or(9).max(9);
+        let mut out = format!(
+            "{:w$}  {:>12}  {:>12}  {:>8}  {:>10}  {:>12}  {:>14}\n",
+            "candidate", "traffic", "capacity", "blobs", "boundary", "migration", "total",
+            w = w
+        );
+        for ((cand, cost), name) in self.scored.iter().zip(&names) {
+            let marker = if *cand == self.chosen { "*" } else { " " };
+            out.push_str(&format!(
+                "{:w$}  {:>12.1} {marker} {:>11.1}  {:>8.1}  {:>10.1}  {:>12.1}  {:>14.1}\n",
+                name,
+                cost.traffic,
+                cost.capacity,
+                cost.blobs,
+                cost.boundary,
+                cost.migration,
+                cost.total(),
+                w = w
+            ));
+        }
+        out
+    }
+}
+
+impl Planner {
+    /// A planner with default [`CostParams`].
+    pub fn new() -> Self {
+        Planner::default()
+    }
+
+    /// A planner with explicit weights.
+    pub fn with_params(params: CostParams) -> Self {
+        Planner { params }
+    }
+
+    /// The candidates valid for `trace` under `params` (the default
+    /// enumeration used by [`Planner::recommend`]).
+    ///
+    /// Always: SoA-MB, SoA-SB, AoS, AoSoA{8,16}. Conditionally:
+    /// - `Split` when the hot set ([`hot_fields`] at
+    ///   [`CostParams::hot_coverage`]) is a contiguous *proper* field
+    ///   range — `Selection` is a contiguous flattened span, so a
+    ///   non-contiguous hot set degrades to plain SoA;
+    /// - `BitpackInt` when every field is integral and has observed
+    ///   [`crate::tune::trace::FieldTrace::value_bits`], with `bits` the
+    ///   maximum any field needs — and only if that actually shrinks the
+    ///   widest field.
+    pub fn candidates(&self, trace: &AccessTrace) -> Vec<Candidate> {
+        let mut cands = vec![
+            Candidate::SoaMb,
+            Candidate::SoaSb,
+            Candidate::Aos,
+            Candidate::Aosoa { lanes: 8 },
+            Candidate::Aosoa { lanes: 16 },
+        ];
+        let hot = hot_fields(trace, self.params.hot_coverage);
+        if let Some(sel) = hot_selection(&hot, trace.fields.len()) {
+            cands.push(Candidate::Split { hot: sel });
+        }
+        if !trace.fields.is_empty() && trace.fields.iter().all(|f| f.ty.is_integral()) {
+            let bits = trace.fields.iter().map(|f| f.value_bits.unwrap_or(0)).max().unwrap_or(0);
+            let widest = trace.fields.iter().map(|f| 8 * f.ty.size() as u32).max().unwrap_or(0);
+            let known = trace.fields.iter().all(|f| f.value_bits.is_some());
+            if known && bits >= 1 && bits < widest {
+                cands.push(Candidate::BitpackInt { bits });
+            }
+        }
+        cands
+    }
+
+    /// Score the default candidate set and rank it.
+    pub fn recommend(&self, trace: &AccessTrace) -> LayoutPlan {
+        self.recommend_among(trace, &self.candidates(trace))
+    }
+
+    /// Score an explicit candidate set and rank it (the coordinator
+    /// restricts to the layouts its native engine can run).
+    ///
+    /// Ranking is by ascending [`Cost::total`]; ties keep enumeration
+    /// order, so the result is deterministic. Panics on an empty set.
+    pub fn recommend_among(&self, trace: &AccessTrace, cands: &[Candidate]) -> LayoutPlan {
+        assert!(!cands.is_empty(), "recommend_among: empty candidate set");
+        let mut scored: Vec<(Candidate, Cost)> =
+            cands.iter().map(|c| (*c, score(trace, c, &self.params))).collect();
+        // Stable sort: equal totals keep the enumeration order.
+        scored.sort_by(|a, b| {
+            a.1.total().partial_cmp(&b.1.total()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        LayoutPlan {
+            chosen: scored[0].0,
+            scored,
+            hot: hot_fields(trace, self.params.hot_coverage),
+            origin: trace.origin.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::record::ScalarType;
+    use crate::tune::trace::FieldTrace;
+
+    fn trace(n: usize, rows: &[(&str, ScalarType, u64, u64, Option<u32>)]) -> AccessTrace {
+        AccessTrace {
+            record: "T".into(),
+            n,
+            origin: None,
+            stable: true,
+            fields: rows
+                .iter()
+                .map(|&(name, ty, reads, writes, value_bits)| FieldTrace {
+                    field: name.into(),
+                    ty,
+                    reads,
+                    writes,
+                    value_bits,
+                })
+                .collect(),
+            heat: None,
+        }
+    }
+
+    #[test]
+    fn candidate_enumeration_gates() {
+        let p = Planner::new();
+        // Floats: no bitpack. Uniform: hot = all fields, no Split.
+        let uniform = trace(
+            64,
+            &[
+                ("a", ScalarType::F32, 100, 10, None),
+                ("b", ScalarType::F32, 100, 10, None),
+            ],
+        );
+        let cands = p.candidates(&uniform);
+        assert!(!cands.iter().any(|c| matches!(c, Candidate::Split { .. })));
+        assert!(!cands.iter().any(|c| matches!(c, Candidate::BitpackInt { .. })));
+        assert_eq!(cands.len(), 5);
+
+        // Contiguous hot prefix: Split offered with the right selection.
+        let hotcold = trace(
+            64,
+            &[
+                ("a", ScalarType::F32, 100_000, 0, None),
+                ("b", ScalarType::F32, 100_000, 0, None),
+                ("c", ScalarType::F32, 1, 0, None),
+            ],
+        );
+        let cands = p.candidates(&hotcold);
+        assert!(cands
+            .iter()
+            .any(|c| *c == Candidate::Split { hot: crate::record::Selection::new(0, 2) }));
+
+        // All-integral with known bits: bitpack offered at the max need.
+        let ints = trace(
+            64,
+            &[
+                ("k", ScalarType::U32, 10, 0, Some(7)),
+                ("l", ScalarType::U16, 10, 0, Some(11)),
+            ],
+        );
+        let cands = p.candidates(&ints);
+        assert!(cands.iter().any(|c| *c == Candidate::BitpackInt { bits: 11 }));
+
+        // Bits as wide as the widest field: not worth offering.
+        let wide = trace(64, &[("k", ScalarType::U16, 10, 0, Some(16))]);
+        assert!(!p.candidates(&wide).iter().any(|c| matches!(c, Candidate::BitpackInt { .. })));
+    }
+
+    #[test]
+    fn plan_is_ranked_and_rendered() {
+        let p = Planner::new();
+        let t = trace(
+            1024,
+            &[
+                ("x", ScalarType::F32, 50_000, 5_000, None),
+                ("y", ScalarType::F32, 50_000, 5_000, None),
+            ],
+        )
+        .with_origin("aos");
+        let plan = p.recommend(&t);
+        assert_eq!(plan.chosen, plan.scored[0].0);
+        for w in plan.scored.windows(2) {
+            assert!(w[0].1.total() <= w[1].1.total());
+        }
+        assert!(plan.is_migration() || plan.chosen.name() == "aos");
+        let table = plan.render_table();
+        assert!(table.contains("candidate"));
+        assert!(table.contains("soa-mb"));
+        assert!(table.contains('*'));
+    }
+}

@@ -1,0 +1,370 @@
+//! `AccessTrace`: a serializable snapshot of what a workload did to a view.
+//!
+//! The instrumentation mappings (§4: [`FieldAccessCount`], [`Heatmap`])
+//! count accesses as a side effect; a trace freezes those counters into a
+//! plain-data struct the planner ([`crate::tune::plan`]) can score offline:
+//! per-field read/write counts, scalar types and widths, the record
+//! extent, optionally a heatmap histogram, and — for the bitpack
+//! candidate — the number of significant bits actually observed in each
+//! integral field's values.
+//!
+//! Traces are recorded through the atomically-consistent `snapshot()` APIs
+//! ([`FieldAccessCount::snapshot`], [`Heatmap::snapshot`]), so a trace
+//! taken while workers are still running is a coherent cut, not a smear of
+//! counter reads. `to_json` serializes the trace (schema 1) for
+//! `llama-lab tune --json` and offline analysis.
+
+use crate::blob::BlobStorage;
+use crate::extents::Extents;
+use crate::mapping::field_access_count::{AccessSnapshot, FieldAccessCount};
+use crate::mapping::heatmap::Heatmap;
+use crate::mapping::{MemoryAccess, PhysicalMapping};
+use crate::record::{RecordDim, ScalarType};
+use crate::view::View;
+
+/// One field's share of an [`AccessTrace`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FieldTrace {
+    /// Dotted field path, e.g. `"pos.x"`.
+    pub field: String,
+    /// Scalar type of the field.
+    pub ty: ScalarType,
+    /// Loads observed.
+    pub reads: u64,
+    /// Stores observed.
+    pub writes: u64,
+    /// Significant bits needed to represent every value observed in this
+    /// field (integral fields only; filled by
+    /// [`AccessTrace::scan_value_bits`]). For signed fields this includes
+    /// the two's-complement sign bit, matching `BitpackIntSoA`'s `BITS`
+    /// semantics.
+    pub value_bits: Option<u32>,
+}
+
+impl FieldTrace {
+    /// Total accesses (reads + writes).
+    pub fn accesses(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+/// Optional heatmap histogram attached to a trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HeatTrace {
+    /// Granule size in bytes.
+    pub granularity: usize,
+    /// `counts[blob][granule]`.
+    pub blobs: Vec<Vec<u64>>,
+}
+
+/// A frozen access pattern: what one workload did to one view.
+///
+/// All fields are public plain data — golden traces for planner tests are
+/// constructed literally, recorded traces come from [`AccessTrace::record`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccessTrace {
+    /// Record dimension name (for reports).
+    pub record: String,
+    /// Records spanned by the traced view.
+    pub n: usize,
+    /// The layout the trace was recorded on, as a
+    /// [`crate::tune::cost::Candidate`] name (e.g. `"aos"`), if known.
+    /// The cost model charges migration cost only to candidates that
+    /// differ from the origin.
+    pub origin: Option<String>,
+    /// Whether the counter snapshot behind this trace was stable (see
+    /// [`AccessSnapshot::stable`]). Hand-built traces are stable.
+    pub stable: bool,
+    /// Per-field counts, in flattened field order.
+    pub fields: Vec<FieldTrace>,
+    /// Optional heatmap histogram ([`AccessTrace::attach_heat`]).
+    pub heat: Option<HeatTrace>,
+}
+
+impl AccessTrace {
+    /// Build a trace from a counter snapshot plus `R`'s field metadata.
+    pub fn from_snapshot<R: RecordDim>(n: usize, snap: &AccessSnapshot) -> Self {
+        assert_eq!(
+            snap.counts.len(),
+            R::FIELDS.len(),
+            "snapshot field count does not match record dimension"
+        );
+        AccessTrace {
+            record: R::NAME.to_string(),
+            n,
+            origin: None,
+            stable: snap.stable,
+            fields: R::FIELDS
+                .iter()
+                .zip(&snap.counts)
+                .map(|(fld, &(reads, writes))| FieldTrace {
+                    field: fld.dotted(),
+                    ty: fld.ty,
+                    reads,
+                    writes,
+                    value_bits: None,
+                })
+                .collect(),
+            heat: None,
+        }
+    }
+
+    /// Record a trace from a [`FieldAccessCount`]-instrumented view.
+    pub fn record<R, M, S>(view: &View<R, FieldAccessCount<R, M>, S>) -> Self
+    where
+        R: RecordDim,
+        M: MemoryAccess<R>,
+        S: BlobStorage,
+    {
+        Self::from_snapshot::<R>(view.count(), &view.mapping().snapshot())
+    }
+
+    /// Tag the trace with the layout it was recorded on (a
+    /// [`crate::tune::cost::Candidate`] name).
+    pub fn with_origin(mut self, origin: &str) -> Self {
+        self.origin = Some(origin.to_string());
+        self
+    }
+
+    /// Attach the histogram of a [`Heatmap`]-instrumented view.
+    pub fn attach_heat<R, M, S, const G: usize>(&mut self, view: &View<R, Heatmap<R, M, G>, S>)
+    where
+        R: RecordDim,
+        M: PhysicalMapping<R> + MemoryAccess<R>,
+        S: BlobStorage,
+    {
+        let snap = view.mapping().snapshot();
+        self.stable &= snap.stable;
+        self.heat = Some(HeatTrace { granularity: snap.granularity, blobs: snap.blobs });
+    }
+
+    /// Scan the view's current *values* and fill
+    /// [`FieldTrace::value_bits`] for every integral field.
+    ///
+    /// Access counters cannot see values, but the bitpack candidate needs
+    /// to know how many bits the data actually uses. The scan reads every
+    /// record once through the view's own mapping (any layout), so it
+    /// costs one pass and is exact.
+    pub fn scan_value_bits<R, M, S>(&mut self, view: &View<R, M, S>)
+    where
+        R: RecordDim,
+        M: MemoryAccess<R>,
+        S: BlobStorage,
+    {
+        assert_eq!(self.fields.len(), R::FIELDS.len());
+        let integral: Vec<usize> =
+            (0..R::FIELDS.len()).filter(|&f| R::FIELDS[f].ty.is_integral()).collect();
+        if integral.is_empty() {
+            return;
+        }
+        let mut bits = vec![1u32; R::FIELDS.len()];
+        let e = *view.extents();
+        let rank = <M::Extents as Extents>::RANK;
+        let mut idx = [0usize; crate::view::MAX_RANK];
+        if e.count() > 0 {
+            loop {
+                for &f in &integral {
+                    let v = load_as_i128(view, &idx[..rank], f);
+                    bits[f] = bits[f].max(needed_bits(v, R::FIELDS[f].ty));
+                }
+                if !crate::extents::advance_index(&e, &mut idx[..rank]) {
+                    break;
+                }
+            }
+        }
+        for &f in &integral {
+            self.fields[f].value_bits = Some(bits[f]);
+        }
+    }
+
+    /// Sum of all reads and writes.
+    pub fn total_accesses(&self) -> u64 {
+        self.fields.iter().map(FieldTrace::accesses).sum()
+    }
+
+    /// Packed bytes of one record (sum of leaf sizes).
+    pub fn record_bytes(&self) -> usize {
+        self.fields.iter().map(|f| f.ty.size()).sum()
+    }
+
+    /// Serialize as JSON (trace schema 1, documented in `docs/TUNING.md`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256);
+        out.push_str("{\n");
+        out.push_str("  \"schema\": 1,\n");
+        out.push_str(&format!("  \"record\": \"{}\",\n", esc(&self.record)));
+        out.push_str(&format!("  \"n\": {},\n", self.n));
+        match &self.origin {
+            Some(o) => out.push_str(&format!("  \"origin\": \"{}\",\n", esc(o))),
+            None => out.push_str("  \"origin\": null,\n"),
+        }
+        out.push_str(&format!("  \"stable\": {},\n", self.stable));
+        out.push_str("  \"fields\": [\n");
+        for (i, f) in self.fields.iter().enumerate() {
+            let vb = match f.value_bits {
+                Some(b) => b.to_string(),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "    {{\"field\": \"{}\", \"type\": \"{}\", \"size\": {}, \
+                 \"reads\": {}, \"writes\": {}, \"value_bits\": {}}}{}\n",
+                esc(&f.field),
+                f.ty.name(),
+                f.ty.size(),
+                f.reads,
+                f.writes,
+                vb,
+                if i + 1 < self.fields.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n");
+        match &self.heat {
+            None => out.push_str("  \"heat\": null\n"),
+            Some(h) => {
+                out.push_str("  \"heat\": {\n");
+                out.push_str(&format!("    \"granularity\": {},\n", h.granularity));
+                out.push_str("    \"blobs\": [\n");
+                for (bi, blob) in h.blobs.iter().enumerate() {
+                    let cells: Vec<String> = blob.iter().map(u64::to_string).collect();
+                    out.push_str(&format!(
+                        "      [{}]{}\n",
+                        cells.join(","),
+                        if bi + 1 < h.blobs.len() { "," } else { "" }
+                    ));
+                }
+                out.push_str("    ]\n");
+                out.push_str("  }\n");
+            }
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Minimal JSON string escaping (field names come from `record!` idents,
+/// record names from user strings).
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Load `(idx, field)` as `i128` (exact for all integral scalar types).
+fn load_as_i128<R, M, S>(view: &View<R, M, S>, idx: &[usize], field: usize) -> i128
+where
+    R: RecordDim,
+    M: MemoryAccess<R>,
+    S: BlobStorage,
+{
+    use crate::record::ScalarType as St;
+    match R::FIELDS[field].ty {
+        St::I8 => view.get::<i8, _>(idx, field) as i128,
+        St::I16 => view.get::<i16, _>(idx, field) as i128,
+        St::I32 => view.get::<i32, _>(idx, field) as i128,
+        St::I64 => view.get::<i64, _>(idx, field) as i128,
+        St::U8 => view.get::<u8, _>(idx, field) as i128,
+        St::U16 => view.get::<u16, _>(idx, field) as i128,
+        St::U32 => view.get::<u32, _>(idx, field) as i128,
+        St::U64 => view.get::<u64, _>(idx, field) as i128,
+        St::Bool => view.get::<bool, _>(idx, field) as i128,
+        other => panic!("load_as_i128 on non-integral field type {}", other.name()),
+    }
+}
+
+/// Smallest `BITS` a `BitpackIntSoA` column needs to hold `v` losslessly:
+/// unsigned fields need `ceil(log2(v + 1))` bits, signed fields store
+/// two's complement so the sign bit is included.
+fn needed_bits(v: i128, ty: ScalarType) -> u32 {
+    let bits = if ty.is_signed_integral() {
+        let m = if v < 0 { !v } else { v };
+        129 - m.leading_zeros() // magnitude bits + sign bit
+    } else {
+        128 - v.leading_zeros()
+    };
+    bits.clamp(1, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::{alloc_view, HeapAlloc};
+    use crate::extents::Dyn;
+    use crate::mapping::soa::SoA;
+
+    crate::record! {
+        pub struct T, mod t {
+            x: f64,
+            k: u32,
+            s: i16,
+        }
+    }
+
+    #[test]
+    fn record_and_json_roundtrip_shape() {
+        let fac = FieldAccessCount::new(SoA::<T, _>::new((Dyn(8u32),)));
+        let mut v = alloc_view(fac, &HeapAlloc);
+        for i in 0..8usize {
+            v.set(&[i], t::x, i as f64);
+            v.set(&[i], t::k, (i * 100) as u32);
+        }
+        for i in 0..8usize {
+            let _ = v.get::<f64, _>(&[i], t::x);
+        }
+        let mut trace = AccessTrace::record(&v).with_origin("soa-mb");
+        trace.scan_value_bits(&v);
+        assert_eq!(trace.record, "T");
+        assert_eq!(trace.n, 8);
+        assert!(trace.stable);
+        assert_eq!(trace.fields[0].reads, 8);
+        assert_eq!(trace.fields[0].writes, 8);
+        assert_eq!(trace.fields[1].writes, 8);
+        assert_eq!(trace.fields[0].value_bits, None); // float
+        assert_eq!(trace.fields[1].value_bits, Some(10)); // max 700 -> 10 bits
+        assert_eq!(trace.fields[2].value_bits, Some(1)); // all zero
+        assert_eq!(trace.total_accesses(), 32);
+        assert_eq!(trace.record_bytes(), 8 + 4 + 2);
+        let json = trace.to_json();
+        assert!(json.contains("\"schema\": 1"));
+        assert!(json.contains("\"origin\": \"soa-mb\""));
+        assert!(json.contains("\"field\": \"k\""));
+        assert!(json.contains("\"value_bits\": 10"));
+        assert!(json.contains("\"heat\": null"));
+    }
+
+    #[test]
+    fn heat_attaches() {
+        use crate::mapping::heatmap::Heatmap;
+        let hm = Heatmap::<T, _, 8>::new(SoA::<T, _>::new((Dyn(4u32),)));
+        let mut v = alloc_view(hm, &HeapAlloc);
+        v.set(&[0], t::x, 1.0f64);
+        let snap = v.mapping().snapshot();
+        let mut trace = AccessTrace {
+            record: "T".into(),
+            n: 4,
+            origin: None,
+            stable: true,
+            fields: vec![],
+            heat: None,
+        };
+        trace.attach_heat(&v);
+        let heat = trace.heat.as_ref().unwrap();
+        assert_eq!(heat.granularity, 8);
+        assert_eq!(heat.blobs, snap.blobs);
+        assert!(trace.to_json().contains("\"granularity\": 8"));
+    }
+
+    #[test]
+    fn needed_bits_signed_and_unsigned() {
+        use crate::record::ScalarType as St;
+        assert_eq!(needed_bits(0, St::U32), 1);
+        assert_eq!(needed_bits(1, St::U32), 1);
+        assert_eq!(needed_bits(2, St::U32), 2);
+        assert_eq!(needed_bits(1023, St::U32), 10);
+        assert_eq!(needed_bits(1024, St::U32), 11);
+        assert_eq!(needed_bits(0, St::I32), 1);
+        assert_eq!(needed_bits(-1, St::I32), 1);
+        assert_eq!(needed_bits(1, St::I32), 2);
+        assert_eq!(needed_bits(-2, St::I32), 2);
+        assert_eq!(needed_bits(127, St::I8), 8);
+        assert_eq!(needed_bits(-128, St::I8), 8);
+        assert_eq!(needed_bits(u64::MAX as i128, St::U64), 64);
+    }
+}

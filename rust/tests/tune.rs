@@ -1,0 +1,285 @@
+//! Autotuner integration tests: golden-trace planner decisions (the
+//! cost model's three headline outcomes) and the live-migration
+//! bit-identity property over every source mapping × recommended
+//! target × thread count.
+
+use llama::blob::{alloc_view, HeapAlloc};
+use llama::extents::Dyn;
+use llama::mapping::MemoryAccess;
+use llama::record::{ScalarType, Selection};
+use llama::testing::{forall, Rng};
+use llama::tune::{migrate_live, AccessTrace, Candidate, FieldTrace, Planner};
+
+llama::record! {
+    pub struct R, mod r {
+        a: f64,
+        b: f32,
+        c: u32,
+        d: i16,
+    }
+}
+
+/// A hand-built golden trace (stable, no heatmap).
+fn golden(n: usize, rows: &[(&str, ScalarType, u64, u64, Option<u32>)]) -> AccessTrace {
+    AccessTrace {
+        record: "R".into(),
+        n,
+        origin: None,
+        stable: true,
+        fields: rows
+            .iter()
+            .map(|&(name, ty, reads, writes, value_bits)| FieldTrace {
+                field: name.into(),
+                ty,
+                reads,
+                writes,
+                value_bits,
+            })
+            .collect(),
+        heat: None,
+    }
+}
+
+/// The hot/cold golden trace: two heavily-accessed leading fields, two
+/// nearly-idle trailing ones. The hot set {a, b} covers > 90% of the
+/// accesses and is a contiguous proper prefix, so `Split` is offered —
+/// and wins: it matches SoA-MB's hot traffic, pays only ~15 units of
+/// cold de-vectorization, and saves a 64-unit blob fee (3 blobs vs 4).
+fn hotcold_trace() -> AccessTrace {
+    golden(
+        256,
+        &[
+            ("a", ScalarType::F64, 100_000, 10_000, None),
+            ("b", ScalarType::F32, 100_000, 10_000, None),
+            ("c", ScalarType::U32, 5, 0, None),
+            ("d", ScalarType::I16, 5, 0, None),
+        ],
+    )
+}
+
+/// The uniform golden trace: every field equally accessed. The hot set
+/// is the whole record (no Split candidate), and SoA-MB edges out
+/// SoA-SB because the single-blob seam fee on 4000 hot writes (200
+/// units) exceeds the 192-unit blob-fee saving.
+fn uniform_trace() -> AccessTrace {
+    golden(
+        256,
+        &[
+            ("a", ScalarType::F64, 10_000, 1_000, None),
+            ("b", ScalarType::F32, 10_000, 1_000, None),
+            ("c", ScalarType::U32, 10_000, 1_000, None),
+            ("d", ScalarType::I16, 10_000, 1_000, None),
+        ],
+    )
+}
+
+/// The narrow-int golden trace: a huge, rarely-touched all-integral
+/// record whose observed values fit 10 bits. Capacity dominates
+/// traffic, so bitpack's 4× per-access CPU fee is irrelevant next to
+/// shrinking every 32-bit column to 10 bits.
+fn narrow_int_trace() -> AccessTrace {
+    golden(
+        1_000_000,
+        &[
+            ("k", ScalarType::U32, 1_000, 0, Some(10)),
+            ("l", ScalarType::U16, 1_000, 0, Some(6)),
+        ],
+    )
+}
+
+#[test]
+fn golden_hotcold_trace_plans_split() {
+    let plan = Planner::new().recommend(&hotcold_trace());
+    assert_eq!(
+        plan.chosen,
+        Candidate::Split { hot: Selection::new(0, 2) },
+        "hot/cold trace must split at the hot prefix:\n{}",
+        plan.render_table()
+    );
+    assert_eq!(plan.hot, vec![0, 1]);
+    // The margin is the blob fee minus the cold de-vectorization.
+    let split = plan.scored[0].1.total();
+    let soa_mb = plan
+        .scored
+        .iter()
+        .find(|(c, _)| *c == Candidate::SoaMb)
+        .map(|(_, cost)| cost.total())
+        .unwrap();
+    assert!(soa_mb - split > 40.0 && soa_mb - split < 64.0, "margin {}", soa_mb - split);
+}
+
+#[test]
+fn golden_uniform_trace_plans_soa_mb() {
+    let plan = Planner::new().recommend(&uniform_trace());
+    assert_eq!(
+        plan.chosen,
+        Candidate::SoaMb,
+        "uniform trace must pick plain multi-blob SoA:\n{}",
+        plan.render_table()
+    );
+    // No Split candidate: the hot set is the whole record.
+    assert_eq!(plan.hot, vec![0, 1, 2, 3]);
+    assert!(!plan.scored.iter().any(|(c, _)| matches!(c, Candidate::Split { .. })));
+    // AoS pays the full un-vectorized traffic: ~2x total.
+    let soa = plan.scored[0].1.total();
+    let aos = plan
+        .scored
+        .iter()
+        .find(|(c, _)| *c == Candidate::Aos)
+        .map(|(_, cost)| cost.total())
+        .unwrap();
+    assert!(aos > 1.9 * soa, "aos {aos} vs soa {soa}");
+}
+
+#[test]
+fn golden_narrow_int_trace_plans_bitpack() {
+    let plan = Planner::new().recommend(&narrow_int_trace());
+    assert_eq!(
+        plan.chosen,
+        Candidate::BitpackInt { bits: 10 },
+        "capacity-bound narrow ints must bitpack:\n{}",
+        plan.render_table()
+    );
+    // The win is capacity, not traffic.
+    let bp = &plan.scored[0].1;
+    let soa = plan
+        .scored
+        .iter()
+        .find(|(c, _)| *c == Candidate::SoaMb)
+        .map(|(_, cost)| *cost)
+        .unwrap();
+    assert!(bp.capacity < soa.capacity / 2.0);
+    assert!(bp.traffic > soa.traffic);
+}
+
+#[test]
+fn origin_breaks_ties_toward_staying_put() {
+    // Same uniform trace, but recorded *on* SoA-MB: every other
+    // candidate now pays amortized migration, so the winner must not
+    // change, and is not flagged as a migration.
+    let t = uniform_trace().with_origin("soa-mb");
+    let plan = Planner::new().recommend(&t);
+    assert_eq!(plan.chosen, Candidate::SoaMb);
+    assert!(!plan.is_migration());
+    // And an AoS-origin trace of the same workload *is* a migration.
+    let t2 = uniform_trace().with_origin("aos");
+    let plan2 = Planner::new().recommend(&t2);
+    assert_eq!(plan2.chosen, Candidate::SoaMb);
+    assert!(plan2.is_migration());
+}
+
+/// Fill any mapping of `R` with a deterministic pseudo-random pattern.
+fn fill<M: MemoryAccess<R>>(v: &mut llama::view::View<R, M, llama::blob::HeapStorage>, n: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        v.set(&[i], r::a, rng.f64_range(-1e6, 1e6));
+        v.set(&[i], r::b, rng.f64_range(-1e3, 1e3) as f32);
+        v.set(&[i], r::c, rng.next_u64() as u32);
+        v.set(&[i], r::d, rng.range_i64(-30000, 30000) as i16);
+    }
+}
+
+#[test]
+fn prop_migrate_live_bit_identical_all_mappings() {
+    // `migrate_live` itself asserts per-cell bit-identity (through both
+    // mappings' own read paths) and panics on any mismatch — the
+    // property is that it *returns* for every source mapping, into both
+    // planner-recommended targets, at every thread count, with the full
+    // cell count verified.
+    use llama::mapping::aos::{AoS, MinPad, Packed};
+    use llama::mapping::aosoa::AoSoA;
+    use llama::mapping::bytesplit::Bytesplit;
+    use llama::mapping::changetype::ChangeType;
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::mapping::heatmap::Heatmap;
+    use llama::mapping::null::NullMapping;
+    use llama::mapping::one::One;
+    use llama::mapping::soa::{MultiBlob, SingleBlob, SoA};
+    use llama::mapping::split::Split;
+
+    // The two targets the golden traces recommend: plain SoA-MB
+    // (uniform) and Split at the hot prefix {a, b} (hot/cold).
+    assert_eq!(Planner::new().recommend(&uniform_trace()).chosen, Candidate::SoaMb);
+    assert_eq!(
+        Planner::new().recommend(&hotcold_trace()).chosen,
+        Candidate::Split { hot: Selection::new(0, 2) }
+    );
+
+    const FIRST: u64 = 0b0011;
+    const REST: u64 = 0b1100;
+    type MHot = SoA<R, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, FIRST>;
+    type MCold = SoA<R, (Dyn<u32>,), MultiBlob, llama::extents::RowMajor, REST>;
+
+    fn migrates<M>(m: M, n: usize, seed: u64, threads: usize) -> bool
+    where
+        M: MemoryAccess<R> + Clone,
+        M::Extents: llama::extents::Extents<ArrayIndex = [usize; 1]>,
+    {
+        let e = (Dyn(n as u32),);
+        let mut src = alloc_view(m, &HeapAlloc);
+        fill(&mut src, n, seed);
+        // Uniform recommendation: SoA multi-blob.
+        let (_dst, rep) =
+            migrate_live(&src, SoA::<R, _, MultiBlob>::new(e), &HeapAlloc, threads);
+        if rep.verified != n * 4 || rep.records != n || rep.threads != threads {
+            return false;
+        }
+        // Hot/cold recommendation: Split at Selection::new(0, 2).
+        let sel = Selection::new(0, 2);
+        let (_dst, rep) = migrate_live(
+            &src,
+            Split::new(MHot::new(e), MCold::new(e), sel),
+            &HeapAlloc,
+            threads,
+        );
+        rep.verified == n * 4 && rep.records == n
+    }
+
+    forall("migrate-all-mappings", 4, |g| (g.range(1, 48), g.next_u64()), |&(n, seed)| {
+        let e = (Dyn(n as u32),);
+        let sel = Selection::new(0, 2);
+        [1usize, 2, 4].iter().all(|&threads| {
+            migrates(AoS::<R, _>::new(e), n, seed, threads)
+                && migrates(AoS::<R, _, Packed>::new(e), n, seed, threads)
+                && migrates(AoS::<R, _, MinPad>::new(e), n, seed, threads)
+                && migrates(SoA::<R, _, MultiBlob>::new(e), n, seed, threads)
+                && migrates(SoA::<R, _, SingleBlob>::new(e), n, seed, threads)
+                && migrates(AoSoA::<R, _, 8>::new(e), n, seed, threads)
+                && migrates(Bytesplit::<R, _>::new(e), n, seed, threads)
+                && migrates(ChangeType::<R, R, _>::new(SoA::<R, _>::new(e)), n, seed, threads)
+                && migrates(Heatmap::<R, _, 8>::new(SoA::<R, _>::new(e)), n, seed, threads)
+                && migrates(FieldAccessCount::new(AoS::<R, _>::new(e)), n, seed, threads)
+                && migrates(NullMapping::<R, _>::new(e), n, seed, threads)
+                && migrates(One::<R, _>::new(e), n, seed, threads)
+                && migrates(Split::new(MHot::new(e), MCold::new(e), sel), n, seed, threads)
+        })
+    });
+}
+
+#[test]
+fn recorded_nbody_trace_recommends_a_column_layout() {
+    // End-to-end: instrument the real n-body workload on AoS, record,
+    // and check the planner sends it to a column layout — the same
+    // decision the coordinator's autotune mode makes.
+    use llama::blob::{alloc_view as av, AlignedAlloc};
+    use llama::mapping::field_access_count::FieldAccessCount;
+    use llama::nbody::{init_particles, views, Particle};
+
+    let n = 64usize;
+    let fac: FieldAccessCount<Particle, _> =
+        FieldAccessCount::new(views::AosMap::new((Dyn(n as u32),)));
+    let mut v = av(fac, &AlignedAlloc::<64>);
+    views::fill_view(&mut v, &init_particles(n, 1));
+    v.mapping().reset();
+    views::update_scalar(&mut v);
+    views::move_scalar(&mut v);
+    let trace = AccessTrace::record(&v).with_origin("aos");
+    assert!(trace.stable);
+    assert!(trace.total_accesses() > 0);
+    let plan = Planner::new().recommend_among(
+        &trace,
+        &[Candidate::Aos, Candidate::SoaMb, Candidate::Aosoa { lanes: 8 }],
+    );
+    assert_eq!(plan.chosen, Candidate::SoaMb, "{}", plan.render_table());
+    assert!(plan.is_migration());
+}
