@@ -4,14 +4,18 @@
 Input layout (what the CI ``perf-trajectory`` job accumulates on the
 ``perf-trajectory`` branch)::
 
-    runs/<utc-stamp>-<sha>/BENCH_<tag>.json   # llama bench schema 1
+    runs/<utc-stamp>-<sha>/BENCH_<tag>.json   # llama bench schema 1 or 2
 
 Output: one Markdown file per bench tag under ``--out`` (default
 ``trends/``), each with a per-measurement table — latest ns/item, delta
 vs the previous run, best/worst across history — and a Unicode
 sparkline trend over the (chronologically sorted) runs, plus an
-``index.md`` linking them. Standard library only, by design: the
-trajectory branch must stay renderable on a bare CI runner.
+``index.md`` linking them. Schema-2 rows may carry a ``counters``
+object (hardware counters via perf_event_open); rows that have one get
+cache-misses-per-item and its own trend column, rows without (schema 1,
+or runners where counters were unavailable) render ``—`` there.
+Standard library only, by design: the trajectory branch must stay
+renderable on a bare CI runner.
 
 Usage::
 
@@ -44,7 +48,7 @@ def load_runs(runs_dir: Path):
             except (OSError, json.JSONDecodeError) as e:
                 print(f"warning: skipping {f}: {e}", file=sys.stderr)
                 continue
-            if data.get("schema") != 1:
+            if data.get("schema") not in (1, 2):
                 print(f"warning: skipping {f}: unknown schema", file=sys.stderr)
                 continue
             benches[data.get("bench", f.stem)] = data
@@ -53,8 +57,24 @@ def load_runs(runs_dir: Path):
     return runs
 
 
+def cache_misses_per_item(m):
+    """``counters.cache_misses / items`` for one measurement row, or
+    ``None`` when the row carries no counters (schema 1, or a runner
+    where perf_event_open was unavailable — "unmeasured", never zero).
+    """
+    counters = m.get("counters")
+    if not counters or "cache_misses" not in counters:
+        return None
+    items = m.get("items", 0)
+    if not items:
+        return None
+    return float(counters["cache_misses"]) / float(items)
+
+
 def series_by_measurement(runs, tag):
-    """``{(group, name): [(run_name, ns_per_item), ...]}`` for one bench."""
+    """``{(group, name): [(run_name, ns_per_item, cm_per_item), ...]}``
+    for one bench; ``cm_per_item`` is ``None`` on counter-less rows.
+    """
     series = {}
     for run_name, benches in runs:
         data = benches.get(tag)
@@ -63,7 +83,9 @@ def series_by_measurement(runs, tag):
         for group in data.get("groups", []):
             for m in group.get("measurements", []):
                 key = (group.get("name", "?"), m["name"])
-                series.setdefault(key, []).append((run_name, float(m["ns_per_item"])))
+                series.setdefault(key, []).append(
+                    (run_name, float(m["ns_per_item"]), cache_misses_per_item(m))
+                )
     return series
 
 
@@ -102,18 +124,22 @@ def render_bench(tag, runs, out_dir: Path):
         f"# Perf trajectory — `{tag}`",
         "",
         f"{len(run_names)} run(s); latest: `{run_names[-1]}`. Values are ns/item "
-        "(lower is better); the trend column spans the full history, oldest to "
-        "newest.",
+        "(lower is better); the trend columns span the full history, oldest to "
+        "newest. `cm/item` is hardware cache misses per item (schema-2 rows "
+        "with live counters; `—` where unmeasured).",
         "",
-        "| group | measurement | latest | Δ prev | best | worst | trend |",
-        "|---|---|---:|---:|---:|---:|---|",
+        "| group | measurement | latest | Δ prev | best | worst | trend | cm/item | cm trend |",
+        "|---|---|---:|---:|---:|---:|---|---:|---|",
     ]
     for (group, name) in sorted(series):
         points = series[(group, name)]
-        values = [v for _, v in points]
+        values = [v for _, v, _ in points]
+        misses = [cm for _, _, cm in points]
         prev = values[-2] if len(values) >= 2 else None
+        cm_latest = misses[-1]
+        cm_present = [cm for cm in misses if cm is not None]
         lines.append(
-            "| {} | `{}` | {} | {} | {} | {} | `{}` |".format(
+            "| {} | `{}` | {} | {} | {} | {} | `{}` | {} | {} |".format(
                 group,
                 name,
                 fmt_ns(values[-1]),
@@ -121,6 +147,8 @@ def render_bench(tag, runs, out_dir: Path):
                 fmt_ns(min(values)),
                 fmt_ns(max(values)),
                 sparkline(values),
+                fmt_ns(cm_latest) if cm_latest is not None else "—",
+                f"`{sparkline(cm_present)}`" if cm_present else "—",
             )
         )
     lines.append("")

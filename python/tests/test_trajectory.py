@@ -1,8 +1,8 @@
 """Tests for the perf-trajectory renderer (stdlib only, no jax needed).
 
 The fixtures below are SYNTHETIC bench JSONs in the llama bench schema
-(schema 1) — hand-written shapes for exercising the renderer, not real
-measurements.
+(schema 1, and schema 2 with optional per-row ``counters`` objects) —
+hand-written shapes for exercising the renderer, not real measurements.
 """
 
 import json
@@ -14,10 +14,15 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 import render_trajectory as rt  # noqa: E402
 
 
-def bench_json(tag, rows):
+def bench_json(tag, rows, schema=1, counters=None):
+    """One synthetic BENCH_<tag>.json. ``counters`` maps a row name to
+    its counters object (schema-2 rows that carried live counters);
+    unmapped rows omit the key, like real degraded rows do.
+    """
+    counters = counters or {}
     return {
         "bench": tag,
-        "schema": 1,
+        "schema": schema,
         "meta": {"n": "4096", "smoke": "1"},
         "groups": [
             {
@@ -30,11 +35,25 @@ def bench_json(tag, rows):
                         "samples": 3,
                         "items": 4096,
                         "ns_per_item": ns,
+                        **({"counters": counters[name]} if name in counters else {}),
                     }
                     for name, ns in rows
                 ],
             }
         ],
+    }
+
+
+def counters_obj(instructions=81920, cache_misses=2048):
+    return {
+        "instructions": instructions,
+        "cycles": instructions * 2,
+        "cache_references": cache_misses * 4,
+        "cache_misses": cache_misses,
+        "branch_misses": 17,
+        "time_enabled_ns": 1000000,
+        "time_running_ns": 1000000,
+        "multiplexed": False,
     }
 
 
@@ -90,7 +109,9 @@ def test_series_collects_chronological_values(tmp_path):
     runs = make_history(tmp_path)
     series = rt.series_by_measurement(rt.load_runs(runs), "pool")
     pooled = series[("g", "dispatch small pooled")]
-    assert [v for _, v in pooled] == [3.0, 2.5]
+    assert [v for _, v, _ in pooled] == [3.0, 2.5]
+    # Schema-1 fixtures carry no counters: every cm slot is None.
+    assert [cm for _, _, cm in pooled] == [None, None]
 
 
 def test_sparkline_shapes():
@@ -122,3 +143,78 @@ def test_cli_roundtrip(tmp_path):
     assert rt.main([str(runs), "--out", str(out)]) == 0
     assert (out / "index.md").exists()
     assert rt.main([str(tmp_path / "missing"), "--out", str(out)]) == 2
+
+
+def test_schema_2_loads_and_unknown_schema_skipped(tmp_path):
+    runs = tmp_path / "runs"
+    write_run(
+        runs,
+        "20260801T000000Z-dddddddddddd",
+        {
+            "pool": bench_json("pool", [("row", 3.0)], schema=2),
+            "weird": bench_json("weird", [("row", 1.0)], schema=3),
+        },
+    )
+    loaded = rt.load_runs(runs)
+    assert len(loaded) == 1
+    assert set(loaded[0][1]) == {"pool"}  # schema 3 skipped, schema 2 kept
+
+
+def test_cache_misses_per_item_extraction():
+    m = {"items": 4096, "ns_per_item": 1.0, "counters": counters_obj(cache_misses=8192)}
+    assert rt.cache_misses_per_item(m) == 2.0
+    # Absent counters, absent cache_misses, and zero items all mean
+    # "unmeasured", never zero.
+    assert rt.cache_misses_per_item({"items": 4096}) is None
+    assert rt.cache_misses_per_item({"items": 4096, "counters": {}}) is None
+    assert rt.cache_misses_per_item({"items": 0, "counters": counters_obj()}) is None
+
+
+def test_mixed_counter_rows_render_cm_column(tmp_path):
+    # One schema-2 file mixing a counters-bearing row with a degraded
+    # row, plus an old schema-1 run of the same bench in the history:
+    # the renderer must handle all three row kinds in one table.
+    runs = tmp_path / "runs"
+    write_run(
+        runs,
+        "20260801T000000Z-dddddddddddd",
+        {"fs": bench_json("fs", [("contended", 10.0), ("padded", 2.0)])},
+    )
+    write_run(
+        runs,
+        "20260802T000000Z-eeeeeeeeeeee",
+        {
+            "fs": bench_json(
+                "fs",
+                [("contended", 9.0), ("padded", 2.1)],
+                schema=2,
+                counters={"contended": counters_obj(cache_misses=40960)},
+            )
+        },
+    )
+    out = tmp_path / "trends"
+    written = rt.render_all(runs, out)
+    assert {tag for tag, _ in written} == {"fs"}
+    md = (out / "fs.md").read_text()
+    assert "cm/item" in md
+    # contended: 40960 misses / 4096 items = 10 cm/item in the latest run.
+    contended_row = next(line for line in md.splitlines() if "`contended`" in line)
+    assert "10.00" in contended_row
+    # padded never carried counters: em-dash, not zero, in both cm cells.
+    padded_row = next(line for line in md.splitlines() if "`padded`" in line)
+    assert padded_row.rstrip("| ").endswith("—")
+    assert padded_row.count("—") >= 2
+    # The wall-clock columns still work for both rows (old behavior).
+    assert "9.00" in contended_row and "2.10" in padded_row
+
+
+def test_schema1_only_history_renders_unchanged(tmp_path):
+    # Pure old-format history: the new columns appear but hold only
+    # em-dashes, and nothing else about the table changed.
+    runs = make_history(tmp_path)
+    out = tmp_path / "trends"
+    rt.render_all(runs, out)
+    md = (out / "pool.md").read_text()
+    for line in md.splitlines():
+        if "dispatch small" in line:
+            assert line.count("—") >= 2

@@ -176,6 +176,12 @@ fn main() {
          bitpack pays shift/mask on every access; both save the same storage at 32 bits."
     );
 
-    llama::bench::emit_json("bitpack", &[("n", n.to_string())], &[("int", &b_int), ("float", &b)])
-        .expect("writing LLAMA_BENCH_JSON output");
+    println!("counters: {}", llama::counters::status_line());
+
+    llama::bench::emit_json(
+        "bitpack",
+        &[("n", n.to_string()), ("counters", llama::counters::meta_tag().to_string())],
+        &[("int", &b_int), ("float", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
 }

@@ -112,6 +112,12 @@ fn main() {
     let table = b.render_table("Bytesplit access cost (scattered bytes)", Some("sum adc via SoA"));
     println!("{table}");
 
-    llama::bench::emit_json("bytesplit", &[("n", n.to_string())], &[("access", &b)])
-        .expect("writing LLAMA_BENCH_JSON output");
+    println!("counters: {}", llama::counters::status_line());
+
+    llama::bench::emit_json(
+        "bytesplit",
+        &[("n", n.to_string()), ("counters", llama::counters::meta_tag().to_string())],
+        &[("access", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
 }

@@ -140,12 +140,15 @@ fn main() {
         println!("smoke schema guard OK: {} copy keys", got.len());
     }
 
+    println!("counters: {}", llama::counters::status_line());
+
     let written = llama::bench::emit_json(
         "copy",
         &[
             ("n", n.to_string()),
             ("threads", threads.to_string()),
             ("smoke", (fast as u8).to_string()),
+            ("counters", llama::counters::meta_tag().to_string()),
         ],
         &[("copy", &b)],
     )

@@ -109,9 +109,15 @@ fn main() {
          constant-folded linearization (the shared-memory-view use case)."
     );
 
+    println!("counters: {}", llama::counters::status_line());
+
     llama::bench::emit_json(
         "extents",
-        &[("side", SIDE.to_string()), ("reps", reps.to_string())],
+        &[
+            ("side", SIDE.to_string()),
+            ("reps", reps.to_string()),
+            ("counters", llama::counters::meta_tag().to_string()),
+        ],
         &[("stencil", &b)],
     )
     .expect("writing LLAMA_BENCH_JSON output");

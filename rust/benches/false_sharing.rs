@@ -1,0 +1,152 @@
+//! Experiment E13 — false sharing on per-worker counters: adjacent
+//! `AtomicU64`s on one cache line vs `CachePadded<AtomicU64>` one line
+//! apart vs thread-local accumulation with a single final store.
+//!
+//! This is the conviction instrument behind the E13 audit: the pool's
+//! lease word and the `FieldAccessCount` per-field counters follow the
+//! same "one hot word per worker/field, words adjacent in a Vec" shape
+//! as the `contended` row here. Expected shape: `local-merge ≤ padded ≪
+//! contended` at ≥ 2 threads (contended pays a line ping-pong per
+//! increment), and `padded ≈ contended` at 1 thread (padding only
+//! changes *placement*, not the increment). With counters live
+//! (`llama::counters`), the contended row also shows the cache-miss
+//! rate the data volume cannot explain — the false-sharing signature
+//! wall clock alone can't attribute.
+//!
+//! Run: `cargo bench --bench false_sharing`  (LLAMA_BENCH_SMOKE=1
+//! shrinks to a smoke run; LLAMA_THREADS overrides the worker count,
+//! default 4; LLAMA_BENCH_JSON=<dir> writes BENCH_false_sharing.json)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use llama::bench::{black_box, smoke, Bencher};
+use llama::pool::WorkerPool;
+use llama::util::CachePadded;
+
+fn main() {
+    let fast = smoke();
+    let threads = llama::shard::thread_count_or(4);
+    let iters: u64 = if fast { 20_000 } else { 2_000_000 };
+    let mut b = if fast { Bencher::new(1, 3) } else { Bencher::new(3, 15) };
+
+    let pool = WorkerPool::with_pinning(threads, false);
+    let items = threads as u64 * iters;
+
+    println!(
+        "false sharing: {threads} workers x {iters} increments, \
+         each worker on its own counter"
+    );
+    println!("counters: {}\n", llama::counters::status_line());
+
+    // Row 1: counters adjacent in one Vec — consecutive AtomicU64s,
+    // eight to a cache line, so distinct workers' increments contend.
+    {
+        let slots: Vec<AtomicU64> = (0..threads).map(|_| AtomicU64::new(0)).collect();
+        b.bench(&format!("increment contended   {threads}T"), items, || {
+            pool.run_scoped(
+                (0..threads)
+                    .map(|k| {
+                        let slot = &slots[k];
+                        move || {
+                            for _ in 0..iters {
+                                slot.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            black_box(&slots);
+        });
+    }
+
+    // Row 2: the E13 fix — one counter per cache line. Same atomic
+    // traffic per worker, no cross-worker line bouncing.
+    {
+        let slots: Vec<CachePadded<AtomicU64>> =
+            (0..threads).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
+        b.bench(&format!("increment padded      {threads}T"), items, || {
+            pool.run_scoped(
+                (0..threads)
+                    .map(|k| {
+                        let slot = &slots[k];
+                        move || {
+                            for _ in 0..iters {
+                                slot.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            black_box(&slots);
+        });
+    }
+
+    // Row 3: the no-sharing floor — accumulate thread-locally, publish
+    // once. What the padded row would cost if the atomic RMW itself
+    // were free of coherence traffic.
+    {
+        let slots: Vec<CachePadded<AtomicU64>> =
+            (0..threads).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
+        b.bench(&format!("increment local-merge {threads}T"), items, || {
+            pool.run_scoped(
+                (0..threads)
+                    .map(|k| {
+                        let slot = &slots[k];
+                        move || {
+                            let mut local = 0u64;
+                            for _ in 0..iters {
+                                local = black_box(local + 1);
+                            }
+                            slot.store(local, Ordering::Relaxed);
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            black_box(&slots);
+        });
+    }
+
+    println!(
+        "{}",
+        b.render_table(
+            "per-worker counter increment (per increment)",
+            Some(&format!("increment contended   {threads}T")),
+        )
+    );
+    println!(
+        "expected shape: local-merge <= padded << contended at >=2 threads;\n\
+         the pool lease word and FieldAccessCount counters are padded\n\
+         (llama::util::CachePadded) on the strength of this row pair —\n\
+         rust/tests/false_sharing.rs pins padded <= contended."
+    );
+
+    // Schema guard (smoke mode, i.e. CI): the measurement-key set of
+    // BENCH_false_sharing.json must stay diffable across commits.
+    if fast {
+        let mut want: Vec<String> = vec![
+            format!("increment contended   {threads}T"),
+            format!("increment padded      {threads}T"),
+            format!("increment local-merge {threads}T"),
+        ];
+        want.sort();
+        let mut got: Vec<String> = b.results().iter().map(|m| m.name.clone()).collect();
+        got.sort();
+        assert_eq!(got, want, "false-sharing-table measurement keys drifted");
+        println!("smoke schema guard OK: {} false-sharing keys", got.len());
+    }
+
+    let written = llama::bench::emit_json(
+        "false_sharing",
+        &[
+            ("iters", iters.to_string()),
+            ("threads", threads.to_string()),
+            ("smoke", (fast as u8).to_string()),
+            ("counters", llama::counters::meta_tag().to_string()),
+        ],
+        &[("false_sharing", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
+    if let Some(path) = written {
+        println!("perf trajectory written to {}", path.display());
+    }
+}

@@ -312,6 +312,8 @@ fn main() {
         );
     }
 
+    println!("counters: {}", llama::counters::status_line());
+
     // Machine-readable perf trajectory (uploaded as a CI artifact).
     let written = llama::bench::emit_json(
         "fig3",
@@ -319,6 +321,7 @@ fn main() {
             ("n", n.to_string()),
             ("threads", par_threads.to_string()),
             ("smoke", (fast as u8).to_string()),
+            ("counters", llama::counters::meta_tag().to_string()),
         ],
         &[("update", &b_update), ("move", &b)],
     )

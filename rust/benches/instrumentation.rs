@@ -92,14 +92,21 @@ fn main() {
     row!(4096);
     println!("\npaper reference: 8x at granularity 1 B with 64-bit counters.");
 
-    // FieldAccessCount memory: 2 counters per field, independent of n.
+    // FieldAccessCount memory: 2 cache-line-padded counters per field
+    // (64 B each since the E13 false-sharing fix), independent of n.
     println!(
         "\nFieldAccessCount memory: {} B for {} fields (payload {} B) -> negligible, as in §4",
-        7 * 2 * 8,
+        7 * 2 * llama::util::CACHE_LINE,
         7,
         payload
     );
 
-    llama::bench::emit_json("instrumentation", &[("n", n.to_string())], &[("runtime", &b)])
-        .expect("writing LLAMA_BENCH_JSON output");
+    println!("counters: {}", llama::counters::status_line());
+
+    llama::bench::emit_json(
+        "instrumentation",
+        &[("n", n.to_string()), ("counters", llama::counters::meta_tag().to_string())],
+        &[("runtime", &b)],
+    )
+    .expect("writing LLAMA_BENCH_JSON output");
 }

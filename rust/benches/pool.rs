@@ -49,9 +49,10 @@ fn main() {
 
     println!(
         "dispatch latency: {threads}-way par_for_each, scoped spawn vs pooled vs pinned\n\
-         (pinned pool NUMA-pinned: {}, one multiply-add per record)\n",
+         (pinned pool NUMA-pinned: {}, one multiply-add per record)",
         pinned.is_pinned()
     );
+    println!("counters: {}\n", llama::counters::status_line());
 
     for (label, n) in sizes {
         let e = (Dyn(n as u32),);
@@ -119,6 +120,7 @@ fn main() {
             ("threads", threads.to_string()),
             ("pinned_effective", (pinned.is_pinned() as u8).to_string()),
             ("smoke", (fast as u8).to_string()),
+            ("counters", llama::counters::meta_tag().to_string()),
         ],
         &[("dispatch", &b)],
     )

@@ -169,12 +169,15 @@ fn main() {
         println!("smoke schema guard OK: {} transport keys", got.len());
     }
 
+    println!("counters: {}", llama::counters::status_line());
+
     let written = llama::bench::emit_json(
         "transport",
         &[
             ("n", n.to_string()),
             ("threads", threads.to_string()),
             ("smoke", (fast as u8).to_string()),
+            ("counters", llama::counters::meta_tag().to_string()),
         ],
         &[("transport", &b)],
     )

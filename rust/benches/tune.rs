@@ -118,12 +118,15 @@ fn main() {
         println!("smoke schema guard OK: {} tune keys", got.len());
     }
 
+    println!("counters: {}", llama::counters::status_line());
+
     let written = llama::bench::emit_json(
         "tune",
         &[
             ("n", n.to_string()),
             ("threads", threads.to_string()),
             ("smoke", (fast as u8).to_string()),
+            ("counters", llama::counters::meta_tag().to_string()),
         ],
         &[("tune", &b)],
     )

@@ -10,9 +10,26 @@
 //! trajectory when `LLAMA_BENCH_JSON=<dir>` is set ([`emit_json`]): one
 //! `BENCH_<tag>.json` per bench binary, uploaded as a CI artifact so
 //! regressions are diffable across commits.
+//!
+//! # Counter mode
+//!
+//! Where the platform allows it ([`crate::counters`]), every measured
+//! row additionally gets one hardware-counter run: after the timed
+//! samples, `f` runs once more under a `perf_event_open` group and the
+//! row records multiplex-scaled instructions / cycles / cache
+//! references / cache misses / branch misses
+//! ([`Measurement::counters`]). Counter-grade numbers are deterministic
+//! where wall clock is noisy — two identical single-threaded runs agree
+//! on instructions within 1% — which is what makes layout wins and
+//! regressions provable across CI runs. When counters are unavailable
+//! (`LLAMA_COUNTERS=off`, `perf_event_paranoid`, seccomp, Miri,
+//! non-Linux) the harness degrades silently: rows keep their wall-clock
+//! fields and simply omit the `counters` JSON object — never zeros.
 
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::counters::{CounterError, CounterGroup, Counters};
 
 /// Prevent the optimizer from discarding a computed value.
 #[inline(always)]
@@ -42,6 +59,9 @@ pub struct Measurement {
     pub samples: usize,
     /// Work items per iteration (for per-item rates), 0 if unset.
     pub items: u64,
+    /// Hardware counters for one extra run of the workload, when the
+    /// platform delivers them (`None` = wall-clock-only row).
+    pub counters: Option<Counters>,
 }
 
 impl Measurement {
@@ -54,11 +74,25 @@ impl Measurement {
     }
 }
 
+/// Hardware-counter state of one [`Bencher`]: probed lazily on the
+/// first `bench` call, demoted to `Down` on the first failure so one
+/// flaky counter read can't abort a bench run.
+enum CounterState {
+    /// No `bench` call yet — nothing opened.
+    Unprobed,
+    /// Open group; every subsequent measurement gets a counter run.
+    Live(CounterGroup),
+    /// Counters are off/unavailable; rows stay wall-clock-only. The
+    /// typed reason is kept for [`Bencher::counter_error`].
+    Down(CounterError),
+}
+
 /// Benchmark runner with fixed warmup/sample counts.
 pub struct Bencher {
     warmup: usize,
     samples: usize,
     results: Vec<Measurement>,
+    counters: CounterState,
 }
 
 impl Default for Bencher {
@@ -69,8 +103,17 @@ impl Default for Bencher {
 
 impl Bencher {
     /// Runner with `warmup` discarded runs and `samples` timed runs.
+    /// Counter mode follows `LLAMA_COUNTERS` (probed on first use).
     pub fn new(warmup: usize, samples: usize) -> Self {
-        Bencher { warmup, samples, results: Vec::new() }
+        Bencher { warmup, samples, results: Vec::new(), counters: CounterState::Unprobed }
+    }
+
+    /// Runner whose counter path is pre-failed with `err` — tests use
+    /// this to assert the degradation behavior (rows must *omit* the
+    /// counters object, not emit zeros) without depending on what the
+    /// host machine permits.
+    pub fn with_counter_error(warmup: usize, samples: usize, err: CounterError) -> Self {
+        Bencher { warmup, samples, results: Vec::new(), counters: CounterState::Down(err) }
     }
 
     /// Honor smoke mode (see [`smoke`]): fewer samples for CI.
@@ -83,6 +126,11 @@ impl Bencher {
     }
 
     /// Time `f`, which performs `items` units of work per call.
+    ///
+    /// After the timed samples, when counters are live, `f` runs once
+    /// more under the hardware-counter group (outside any timing, so
+    /// the wall-clock fields are undisturbed) and the row carries the
+    /// scaled counts.
     pub fn bench<F: FnMut()>(&mut self, name: &str, items: u64, mut f: F) -> &Measurement {
         for _ in 0..self.warmup {
             f();
@@ -100,14 +148,53 @@ impl Bencher {
             times.iter().map(|t| if *t > median { *t - median } else { median - *t }).collect();
         devs.sort();
         let mad = devs[devs.len() / 2];
+        let counters = self.count_one_run(&mut f);
         self.results.push(Measurement {
             name: name.to_string(),
             median,
             mad,
             samples: self.samples,
             items,
+            counters,
         });
         self.results.last().unwrap()
+    }
+
+    /// One counter-measured run of `f`, if counters are (still) live.
+    /// The first failure demotes the Bencher to wall-clock-only — a
+    /// mid-run error must not abort the bench or fake zeros.
+    fn count_one_run<F: FnMut()>(&mut self, f: &mut F) -> Option<Counters> {
+        if matches!(self.counters, CounterState::Unprobed) {
+            self.counters = match CounterGroup::open() {
+                Ok(group) => CounterState::Live(group),
+                Err(err) => CounterState::Down(err),
+            };
+        }
+        let CounterState::Live(group) = &self.counters else {
+            return None;
+        };
+        match group.measure(f) {
+            Ok(((), counters)) => Some(counters),
+            Err(err) => {
+                self.counters = CounterState::Down(err);
+                None
+            }
+        }
+    }
+
+    /// Whether this Bencher's rows are getting hardware counters (false
+    /// before the first `bench` call and after any counter failure).
+    pub fn counters_live(&self) -> bool {
+        matches!(self.counters, CounterState::Live(_))
+    }
+
+    /// Why counters are down, if they are (`None` while live or before
+    /// the first `bench` call probes them).
+    pub fn counter_error(&self) -> Option<&CounterError> {
+        match &self.counters {
+            CounterState::Down(err) => Some(err),
+            _ => None,
+        }
     }
 
     /// All measurements so far.
@@ -116,19 +203,24 @@ impl Bencher {
     }
 
     /// Render an aligned results table; `baseline` (if given) adds a
-    /// relative-speed column against the named measurement.
+    /// relative-speed column against the named measurement. Rows that
+    /// carried hardware counters additionally get `instr/item` and
+    /// `cmiss/item` columns (the whole table gains them when any row
+    /// has counters; counter-less rows show `-`).
     pub fn render_table(&self, title: &str, baseline: Option<&str>) -> String {
         let base = baseline
             .and_then(|b| self.results.iter().find(|m| m.name == b))
             .map(|m| m.median.as_nanos() as f64);
+        let counted = self.results.iter().any(|m| m.counters.is_some());
         let w = self.results.iter().map(|m| m.name.len()).max().unwrap_or(4).max(4);
         let mut out = format!("== {title} ==\n");
         out.push_str(&format!(
-            "{:w$}  {:>12}  {:>10}  {:>12}{}\n",
+            "{:w$}  {:>12}  {:>10}  {:>12}{}{}\n",
             "name",
             "median",
             "mad",
             "ns/item",
+            if counted { "  instr/item  cmiss/item" } else { "" },
             if base.is_some() { "  rel" } else { "" },
             w = w
         ));
@@ -136,12 +228,25 @@ impl Bencher {
             let rel = base
                 .map(|b| format!("  {:>5.2}x", b / m.median.as_nanos() as f64))
                 .unwrap_or_default();
+            let counts = if counted {
+                match &m.counters {
+                    Some(c) => format!(
+                        "  {:>10.2}  {:>10.4}",
+                        c.instructions_per_item(m.items),
+                        c.cache_misses_per_item(m.items)
+                    ),
+                    None => format!("  {:>10}  {:>10}", "-", "-"),
+                }
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
-                "{:w$}  {:>12}  {:>10}  {:>12.2}{}\n",
+                "{:w$}  {:>12}  {:>10}  {:>12.2}{}{}\n",
                 m.name,
                 format_duration(m.median),
                 format_duration(m.mad),
                 m.ns_per_item(),
+                counts,
                 rel,
                 w = w
             ));
@@ -158,9 +263,17 @@ impl Bencher {
 /// carries run parameters (problem size, thread count); `groups` one
 /// entry per [`Bencher`] (e.g. the update and move tables of Figure 3).
 ///
-/// Schema (`"schema": 1`):
+/// Schema (`"schema": 2`):
 /// `{bench, schema, meta: {k: v}, groups: [{name, measurements: [{name,
-/// median_ns, mad_ns, samples, items, ns_per_item}]}]}`.
+/// median_ns, mad_ns, samples, items, ns_per_item, counters?}]}]}`.
+///
+/// The optional `counters` object (schema 2, only on rows measured with
+/// live hardware counters — degraded rows *omit* the key rather than
+/// emitting zeros) is `{instructions, cycles, cache_references,
+/// cache_misses, branch_misses, time_enabled_ns, time_running_ns,
+/// multiplexed}`, counts multiplex-scaled (see [`crate::counters`]).
+/// Schema 1 files (pre-counter history) differ only in lacking the key,
+/// so the trajectory renderer accepts both.
 pub fn emit_json(
     tag: &str,
     meta: &[(&str, String)],
@@ -185,7 +298,7 @@ pub fn emit_json_to(
 
     let mut out = String::from("{\n");
     out.push_str(&format!("  \"bench\": {},\n", json_str(tag)));
-    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"schema\": 2,\n");
     out.push_str("  \"meta\": {");
     for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
@@ -199,15 +312,34 @@ pub fn emit_json_to(
         out.push_str(&format!("    {{\"name\": {}, \"measurements\": [\n", json_str(name)));
         let ms = bencher.results();
         for (mi, m) in ms.iter().enumerate() {
+            // Rows without live counters omit the object entirely — a
+            // consumer must never mistake "unmeasured" for "zero".
+            let counters = m.counters.as_ref().map_or_else(String::new, |c| {
+                format!(
+                    ", \"counters\": {{\"instructions\": {}, \"cycles\": {}, \
+                     \"cache_references\": {}, \"cache_misses\": {}, \
+                     \"branch_misses\": {}, \"time_enabled_ns\": {}, \
+                     \"time_running_ns\": {}, \"multiplexed\": {}}}",
+                    c.instructions,
+                    c.cycles,
+                    c.cache_references,
+                    c.cache_misses,
+                    c.branch_misses,
+                    c.time_enabled_ns,
+                    c.time_running_ns,
+                    c.multiplexed,
+                )
+            });
             out.push_str(&format!(
                 "      {{\"name\": {}, \"median_ns\": {}, \"mad_ns\": {}, \
-                 \"samples\": {}, \"items\": {}, \"ns_per_item\": {:.4}}}{}\n",
+                 \"samples\": {}, \"items\": {}, \"ns_per_item\": {:.4}{}}}{}\n",
                 json_str(&m.name),
                 m.median.as_nanos(),
                 m.mad.as_nanos(),
                 m.samples,
                 m.items,
                 m.ns_per_item(),
+                counters,
                 if mi + 1 < ms.len() { "," } else { "" },
             ));
         }
@@ -308,7 +440,7 @@ mod tests {
         let _ = std::fs::remove_dir(&dir);
         assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_selftest.json");
         assert!(text.contains("\"bench\": \"selftest\""));
-        assert!(text.contains("\"schema\": 1"));
+        assert!(text.contains("\"schema\": 2"));
         assert!(text.contains("\"n\": \"10\""));
         assert!(text.contains("\"fast op\""));
         assert!(text.contains("\"slow \\\"op\\\"\""));
@@ -320,5 +452,55 @@ mod tests {
                 == text.chars().filter(|&c| c == close).count()
         };
         assert!(bal('{', '}') && bal('[', ']'));
+    }
+
+    #[test]
+    fn degraded_counters_omit_the_json_key_not_zeros() {
+        // A Bencher whose counter path failed (here: simulated Denied,
+        // the perf_event_paranoid case) must emit schema-2 rows WITHOUT
+        // a counters object — zeros would poison the trajectory.
+        let dir = std::env::temp_dir().join(format!("llama-bench-nocnt-{}", std::process::id()));
+        let mut b =
+            Bencher::with_counter_error(0, 3, crate::counters::CounterError::Denied);
+        b.bench("row", 10, || {});
+        assert!(!b.counters_live());
+        assert_eq!(b.counter_error(), Some(&crate::counters::CounterError::Denied));
+        assert!(b.results()[0].counters.is_none());
+        let path = emit_json_to(&dir, "nocnt", &[], &[("g", &b)]).expect("write");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+        assert!(text.contains("\"schema\": 2"));
+        assert!(!text.contains("counters"));
+        // The table renders without the counter columns.
+        let table = b.render_table("t", None);
+        assert!(!table.contains("instr/item"));
+    }
+
+    #[test]
+    fn live_counters_attach_to_rows_and_json() {
+        // Environment-dependent by nature: on machines where the PMU is
+        // reachable this exercises the full attach path; elsewhere it
+        // asserts the graceful degradation (typed error, no counters).
+        let mut b = Bencher::new(0, 2);
+        let mut acc = 0u64;
+        b.bench("spin", 1_000, || {
+            for i in 0..1_000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        let m = &b.results()[0];
+        match &m.counters {
+            Some(c) => {
+                assert!(b.counters_live());
+                assert!(c.instructions > 0, "a 1000-iteration spin retires instructions");
+                let table = b.render_table("t", None);
+                assert!(table.contains("instr/item"));
+            }
+            None => {
+                let err = b.counter_error().expect("no counters must come with a reason");
+                assert!(!err.to_string().is_empty());
+            }
+        }
     }
 }

@@ -1,0 +1,831 @@
+//! Hardware performance counters via a hand-declared `perf_event_open`
+//! (no crates — same pattern as [`crate::numa`]'s `sched_setaffinity`).
+//!
+//! Wall-clock medians are the wrong currency for layout work: they are
+//! CI-noisy (frequency scaling, co-tenants, scheduler jitter), while the
+//! paper's central claim is about *memory behavior*. What a mapping
+//! change actually buys is visible in instruction and cache-event
+//! counts, which are deterministic for a fixed single-threaded kernel
+//! (morello's iai_callgrind benches make the same argument with
+//! simulated cache geometry). This module reads the real thing:
+//!
+//! - One **counter group** ([`CounterGroup`]) per measured row: five
+//!   `PERF_TYPE_HARDWARE` events — instructions (group leader), cycles,
+//!   cache references, cache misses, branch misses — opened on the
+//!   calling thread, kernel/hypervisor excluded so
+//!   `perf_event_paranoid <= 2` suffices.
+//! - Read with `PERF_FORMAT_GROUP | PERF_FORMAT_TOTAL_TIME_ENABLED |
+//!   PERF_FORMAT_TOTAL_TIME_RUNNING`: one `read(2)` returns every
+//!   event of the group from the same scheduling interval, plus the
+//!   enabled/running times that let us **scale for multiplexing** (the
+//!   PMU has finite slots; when the kernel time-shares them,
+//!   `time_running < time_enabled` and the raw counts are extrapolated
+//!   by `enabled/running` — flagged via [`Counters::multiplexed`]).
+//! - A **typed fallback** ([`CounterError`]): forbidden environments —
+//!   `LLAMA_COUNTERS=off`, non-Linux, Miri, seccomp,
+//!   `perf_event_paranoid`, missing PMU (common on CI VMs) — yield a
+//!   diagnosable error, never a panic and never fake zeros. The bench
+//!   harness ([`crate::bench::Bencher`]) degrades to wall-clock-only
+//!   rows, so every existing bench keeps working unchanged.
+//!
+//! The group-read **decoder** ([`decode_group_read`], [`GroupReading`])
+//! is pure byte parsing, unit-tested against hand-built fixtures and
+//! runs everywhere including Miri; only [`CounterGroup::open`] and the
+//! read itself touch the kernel.
+//!
+//! Counts cover the **calling thread only** (`pid = 0`, no `inherit`):
+//! a parallel bench row counts its submitting thread's share, which for
+//! the pool's "shard 0 on the caller" dispatch is one shard's worth of
+//! work plus the dispatch itself. Single-threaded rows are covered
+//! exactly — those are the rows whose instruction counts two identical
+//! runs reproduce within 1% (`rust/tests/counters.rs` asserts this).
+
+use std::sync::OnceLock;
+
+/// Why hardware counters are not being read. Every variant is a
+/// *graceful* outcome: callers fall back to wall-clock measurement and
+/// JSON rows simply omit the `counters` object.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CounterError {
+    /// Disabled by `LLAMA_COUNTERS=off` — the forced-fallback knob CI
+    /// and tests use to exercise the degradation path deterministically.
+    Off,
+    /// The platform cannot deliver counters: non-Linux, Miri, a kernel
+    /// without `perf_event_open`, or no PMU behind it (common on
+    /// virtualized CI runners).
+    Unsupported,
+    /// The kernel refused access: `perf_event_paranoid` too strict, a
+    /// seccomp filter, or missing capabilities in a container.
+    Denied,
+    /// A syscall failed for a reason the buckets above don't cover.
+    Syscall {
+        /// Which call failed (`"perf_event_open"`, `"ioctl"`, `"read"`).
+        op: &'static str,
+        /// The raw errno.
+        errno: i32,
+    },
+    /// The group read returned fewer bytes than its header + values
+    /// require.
+    ShortRead {
+        /// Bytes actually available.
+        got: usize,
+        /// Bytes the declared layout needs.
+        want: usize,
+    },
+    /// The group read reported a different event count than the group
+    /// was opened with.
+    EventCount {
+        /// `nr` from the read buffer.
+        got: u64,
+        /// Events the group holds.
+        want: u64,
+    },
+    /// `time_running == 0`: the PMU never scheduled the group, so the
+    /// raw values carry no information (and cannot be scaled).
+    NeverRan,
+}
+
+impl std::fmt::Display for CounterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CounterError::Off => write!(f, "disabled by LLAMA_COUNTERS=off"),
+            CounterError::Unsupported => {
+                write!(f, "perf_event_open unsupported on this platform/kernel")
+            }
+            CounterError::Denied => {
+                write!(f, "denied: perf_event_paranoid/seccomp forbids counters")
+            }
+            CounterError::Syscall { op, errno } => write!(f, "{op} failed (errno {errno})"),
+            CounterError::ShortRead { got, want } => {
+                write!(f, "short group read: {got} bytes, want {want}")
+            }
+            CounterError::EventCount { got, want } => {
+                write!(f, "group read reported {got} events, want {want}")
+            }
+            CounterError::NeverRan => write!(f, "counter group was never scheduled"),
+        }
+    }
+}
+
+impl std::error::Error for CounterError {}
+
+/// Counter measurement mode, from `LLAMA_COUNTERS`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CounterMode {
+    /// Try to open counters; degrade to a typed [`CounterError`] when
+    /// the platform refuses (the default).
+    Auto,
+    /// Never open counters ([`CounterGroup::open`] returns
+    /// [`CounterError::Off`]) — the deterministic fallback for CI
+    /// assertions and for opting out of the extra per-row run.
+    Off,
+}
+
+/// `LLAMA_COUNTERS=on|off` (default `on` — unavailable platforms
+/// degrade by themselves). Malformed values log once and keep the
+/// default, mirroring `LLAMA_NUMA`/`LLAMA_POOL` handling. Parsed once
+/// per process.
+pub fn mode() -> CounterMode {
+    static MODE: OnceLock<CounterMode> = OnceLock::new();
+    *MODE.get_or_init(|| {
+        let raw = std::env::var("LLAMA_COUNTERS").ok();
+        match parse_counters_env(raw.as_deref()) {
+            Some(m) => m,
+            None => {
+                eprintln!(
+                    "llama: ignoring malformed LLAMA_COUNTERS={:?} (want on|off); \
+                     counters stay on",
+                    raw.unwrap_or_default()
+                );
+                CounterMode::Auto
+            }
+        }
+    })
+}
+
+/// Parse an `LLAMA_COUNTERS` value (`None` result = malformed; unset is
+/// the default, on). Kept separate from the environment so it is
+/// testable without process-global `setenv`.
+fn parse_counters_env(s: Option<&str>) -> Option<CounterMode> {
+    match s.map(str::trim) {
+        None | Some("") | Some("on") | Some("1") => Some(CounterMode::Auto),
+        Some("off") | Some("0") => Some(CounterMode::Off),
+        Some(_) => None,
+    }
+}
+
+/// The five measured hardware events, in group order. Index 0 is the
+/// group leader; [`decode_group_read`] values and [`Counters`] fields
+/// follow this order.
+const EVENTS: [(&str, u64); 5] = [
+    ("instructions", PERF_COUNT_HW_INSTRUCTIONS),
+    ("cycles", PERF_COUNT_HW_CPU_CYCLES),
+    ("cache_references", PERF_COUNT_HW_CACHE_REFERENCES),
+    ("cache_misses", PERF_COUNT_HW_CACHE_MISSES),
+    ("branch_misses", PERF_COUNT_HW_BRANCH_MISSES),
+];
+
+// PERF_TYPE_HARDWARE event configs (uapi/linux/perf_event.h).
+const PERF_COUNT_HW_CPU_CYCLES: u64 = 0;
+const PERF_COUNT_HW_INSTRUCTIONS: u64 = 1;
+const PERF_COUNT_HW_CACHE_REFERENCES: u64 = 2;
+const PERF_COUNT_HW_CACHE_MISSES: u64 = 3;
+const PERF_COUNT_HW_BRANCH_MISSES: u64 = 5;
+
+/// Bytes of one full group read: `nr`, `time_enabled`, `time_running`,
+/// then one `u64` per event.
+const GROUP_READ_BYTES: usize = 24 + EVENTS.len() * 8;
+
+/// One decoded `PERF_FORMAT_GROUP` read buffer, before scaling: the
+/// scheduling times plus the raw (unscaled) per-event values in
+/// [`EVENTS`] order. Produced by [`decode_group_read`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupReading {
+    /// Nanoseconds the group was enabled.
+    pub time_enabled: u64,
+    /// Nanoseconds the group was actually scheduled on the PMU.
+    pub time_running: u64,
+    /// Raw event values, one per opened event, in group order.
+    pub values: Vec<u64>,
+}
+
+impl GroupReading {
+    /// Whether the kernel time-shared the PMU under this reading (the
+    /// raw values then cover only `time_running` of the `time_enabled`
+    /// window and must be scaled).
+    pub fn multiplexed(&self) -> bool {
+        self.time_running < self.time_enabled
+    }
+
+    /// Extrapolate the raw values to the full enabled window:
+    /// `value * time_enabled / time_running`, in 128-bit intermediate
+    /// arithmetic so large counts cannot overflow. Identity when the
+    /// group was never descheduled. `Err(NeverRan)` when
+    /// `time_running == 0` — the values carry no information.
+    pub fn scaled(&self) -> Result<Vec<u64>, CounterError> {
+        if self.time_running == 0 {
+            return Err(CounterError::NeverRan);
+        }
+        Ok(self
+            .values
+            .iter()
+            .map(|&v| (v as u128 * self.time_enabled as u128 / self.time_running as u128) as u64)
+            .collect())
+    }
+}
+
+/// Decode one `read(2)` buffer of a counter group opened with
+/// `PERF_FORMAT_GROUP | PERF_FORMAT_TOTAL_TIME_ENABLED |
+/// PERF_FORMAT_TOTAL_TIME_RUNNING`:
+///
+/// ```text
+/// u64 nr            events in the group (must equal `want_events`)
+/// u64 time_enabled  ns the group was enabled
+/// u64 time_running  ns the group was scheduled on the PMU
+/// u64 value[nr]     raw counts, in group-open order
+/// ```
+///
+/// Pure byte parsing (little-endian, the native order everywhere this
+/// crate targets) — testable against hand-built fixtures with no
+/// syscall, including under Miri.
+pub fn decode_group_read(buf: &[u8], want_events: usize) -> Result<GroupReading, CounterError> {
+    let u64_at = |off: usize| {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&buf[off..off + 8]);
+        u64::from_le_bytes(b)
+    };
+    if buf.len() < 24 {
+        return Err(CounterError::ShortRead { got: buf.len(), want: 24 });
+    }
+    let nr = u64_at(0);
+    if nr != want_events as u64 {
+        return Err(CounterError::EventCount { got: nr, want: want_events as u64 });
+    }
+    let want = 24 + want_events * 8;
+    if buf.len() < want {
+        return Err(CounterError::ShortRead { got: buf.len(), want });
+    }
+    Ok(GroupReading {
+        time_enabled: u64_at(8),
+        time_running: u64_at(16),
+        values: (0..want_events).map(|i| u64_at(24 + i * 8)).collect(),
+    })
+}
+
+/// One multiplex-scaled counter measurement of a code region on the
+/// calling thread. All counts are extrapolated to the full enabled
+/// window when the PMU was time-shared (see [`Counters::multiplexed`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Counters {
+    /// Retired instructions.
+    pub instructions: u64,
+    /// CPU cycles.
+    pub cycles: u64,
+    /// Cache references (last-level, per the generalized HW event).
+    pub cache_references: u64,
+    /// Cache misses.
+    pub cache_misses: u64,
+    /// Mispredicted branches.
+    pub branch_misses: u64,
+    /// Nanoseconds the group was enabled.
+    pub time_enabled_ns: u64,
+    /// Nanoseconds the group was scheduled on the PMU.
+    pub time_running_ns: u64,
+    /// Whether the counts were extrapolated (`time_running <
+    /// time_enabled`). Multiplexed counts are estimates; single-group
+    /// readers on an idle PMU are exact.
+    pub multiplexed: bool,
+}
+
+impl Counters {
+    /// Scale and shape one decoded group reading.
+    pub fn from_reading(r: &GroupReading) -> Result<Counters, CounterError> {
+        if r.values.len() != EVENTS.len() {
+            return Err(CounterError::EventCount {
+                got: r.values.len() as u64,
+                want: EVENTS.len() as u64,
+            });
+        }
+        let v = r.scaled()?;
+        Ok(Counters {
+            instructions: v[0],
+            cycles: v[1],
+            cache_references: v[2],
+            cache_misses: v[3],
+            branch_misses: v[4],
+            time_enabled_ns: r.time_enabled,
+            time_running_ns: r.time_running,
+            multiplexed: r.multiplexed(),
+        })
+    }
+
+    /// Instructions per work item (`items == 0` returns the raw count).
+    pub fn instructions_per_item(&self, items: u64) -> f64 {
+        if items == 0 {
+            return self.instructions as f64;
+        }
+        self.instructions as f64 / items as f64
+    }
+
+    /// Cache misses per work item (`items == 0` returns the raw count).
+    pub fn cache_misses_per_item(&self, items: u64) -> f64 {
+        if items == 0 {
+            return self.cache_misses as f64;
+        }
+        self.cache_misses as f64 / items as f64
+    }
+}
+
+/// An open hardware-counter group on the calling thread (see the module
+/// docs for the event set and read format). Obtained via
+/// [`CounterGroup::open`]; file descriptors are closed on drop.
+///
+/// The group must be read from the thread it was opened on — the bench
+/// harness opens one per [`crate::bench::Bencher`] and measures on the
+/// bench's calling thread.
+#[derive(Debug)]
+pub struct CounterGroup {
+    /// Event fds in [`EVENTS`] order; `fds[0]` is the group leader.
+    fds: Vec<i32>,
+}
+
+impl CounterGroup {
+    /// Open the counter group under the process-wide [`mode`]
+    /// (`LLAMA_COUNTERS`). The `Err` path is the *expected* outcome on
+    /// locked-down machines — treat it as "measure wall-clock only".
+    pub fn open() -> Result<CounterGroup, CounterError> {
+        CounterGroup::open_with(mode())
+    }
+
+    /// Open under an explicit mode, bypassing the environment — tests
+    /// use this to exercise both the forced-off and the live path
+    /// without process-global `setenv`.
+    pub fn open_with(mode: CounterMode) -> Result<CounterGroup, CounterError> {
+        match mode {
+            CounterMode::Off => Err(CounterError::Off),
+            CounterMode::Auto => sys::open_group(),
+        }
+    }
+
+    /// Number of events in the group.
+    pub fn event_count(&self) -> usize {
+        self.fds.len()
+    }
+
+    /// Measure `f`: reset the group, enable it, run `f`, disable, read
+    /// and scale. Returns `f`'s output plus the [`Counters`]. An error
+    /// mid-measurement still returns typed — callers demote to
+    /// wall-clock-only and keep going.
+    pub fn measure<T>(&self, f: impl FnOnce() -> T) -> Result<(T, Counters), CounterError> {
+        sys::group_ioctl(&self.fds, sys::PERF_EVENT_IOC_RESET)?;
+        sys::group_ioctl(&self.fds, sys::PERF_EVENT_IOC_ENABLE)?;
+        let out = f();
+        sys::group_ioctl(&self.fds, sys::PERF_EVENT_IOC_DISABLE)?;
+        let reading = sys::read_group(&self.fds)?;
+        Ok((out, Counters::from_reading(&reading)?))
+    }
+}
+
+impl Drop for CounterGroup {
+    fn drop(&mut self) {
+        sys::close_all(&self.fds);
+    }
+}
+
+/// Process-cached availability probe: open a group, measure a trivial
+/// region, drop it. `Ok` means live counters; the `Err` is the typed
+/// reason rows will lack a `counters` object. Benches put this in their
+/// JSON meta and status line so a trajectory reader can tell "no
+/// counters on that runner" from "bench predates counter mode".
+pub fn available() -> &'static Result<(), CounterError> {
+    static PROBE: OnceLock<Result<(), CounterError>> = OnceLock::new();
+    PROBE.get_or_init(|| {
+        let group = CounterGroup::open()?;
+        let (_, counters) = group.measure(|| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = std::hint::black_box(acc.wrapping_add(i));
+            }
+            acc
+        })?;
+        // A PMU that schedules the group but counts nothing is as
+        // useless as no PMU (seen on some paravirtualized runners).
+        if counters.instructions == 0 {
+            return Err(CounterError::Unsupported);
+        }
+        Ok(())
+    })
+}
+
+/// Human status for bench output: `live` or `unavailable (<reason>)`.
+/// CI greps for this line to assert the fallback path engaged rather
+/// than crashed.
+pub fn status_line() -> String {
+    match available() {
+        Ok(()) => "live".to_string(),
+        Err(e) => format!("unavailable ({e})"),
+    }
+}
+
+/// One-word availability tag for `BENCH_*.json` meta
+/// (`live|off|denied|unsupported|error`).
+pub fn meta_tag() -> &'static str {
+    match available() {
+        Ok(()) => "live",
+        Err(CounterError::Off) => "off",
+        Err(CounterError::Denied) => "denied",
+        Err(CounterError::Unsupported) => "unsupported",
+        Err(_) => "error",
+    }
+}
+
+/// Names of the measured events, in group (and [`Counters`] field)
+/// order — the `counters` JSON object uses exactly these keys.
+pub fn event_names() -> [&'static str; 5] {
+    [EVENTS[0].0, EVENTS[1].0, EVENTS[2].0, EVENTS[3].0, EVENTS[4].0]
+}
+
+// ---------------------------------------------------------------------------
+// Kernel interface: hand-declared perf_event_open / ioctl / read / close
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_os = "linux", not(miri), any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use super::{CounterError, CounterGroup, GroupReading, EVENTS, GROUP_READ_BYTES};
+
+    // perf_event_open has no glibc wrapper: go through syscall(2).
+    #[cfg(target_arch = "x86_64")]
+    const SYS_PERF_EVENT_OPEN: i64 = 298;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_PERF_EVENT_OPEN: i64 = 241;
+
+    const PERF_TYPE_HARDWARE: u32 = 0;
+    /// `PERF_ATTR_SIZE_VER0`: the 64-byte original attr. Every field we
+    /// set lives in those first 64 bytes, and older kernels accept this
+    /// size unconditionally — maximum compatibility.
+    const PERF_ATTR_SIZE_VER0: u32 = 64;
+
+    // attr.flags bits (bitfield in the C header, plain u64 here).
+    const FLAG_DISABLED: u64 = 1 << 0;
+    const FLAG_EXCLUDE_KERNEL: u64 = 1 << 5;
+    const FLAG_EXCLUDE_HV: u64 = 1 << 6;
+
+    // read_format bits.
+    const PERF_FORMAT_TOTAL_TIME_ENABLED: u64 = 1 << 0;
+    const PERF_FORMAT_TOTAL_TIME_RUNNING: u64 = 1 << 1;
+    const PERF_FORMAT_GROUP: u64 = 1 << 3;
+
+    const PERF_FLAG_FD_CLOEXEC: u64 = 1 << 3;
+
+    // Group-wide ioctls on the leader fd; arg = PERF_IOC_FLAG_GROUP.
+    pub(super) const PERF_EVENT_IOC_ENABLE: u64 = 0x2400;
+    pub(super) const PERF_EVENT_IOC_DISABLE: u64 = 0x2401;
+    pub(super) const PERF_EVENT_IOC_RESET: u64 = 0x2403;
+    const PERF_IOC_FLAG_GROUP: u64 = 1;
+
+    // errno values we classify (asm-generic, valid on both arches).
+    const EPERM: i32 = 1;
+    const ENOENT: i32 = 2;
+    const EACCES: i32 = 13;
+    const ENODEV: i32 = 19;
+    const ENOSYS: i32 = 38;
+    const EOPNOTSUPP: i32 = 95;
+
+    /// Mirrors the first 128 bytes of the kernel's `perf_event_attr`
+    /// (through `sig_data`); we pass `size = 64` so only the VER0
+    /// prefix is ever read. Unions of the C header are collapsed to
+    /// their first member; the `flags` bitfield is a plain `u64`.
+    #[repr(C)]
+    #[derive(Default)]
+    struct PerfEventAttr {
+        type_: u32,
+        size: u32,
+        config: u64,
+        sample_period_or_freq: u64,
+        sample_type: u64,
+        read_format: u64,
+        flags: u64,
+        wakeup_events_or_watermark: u32,
+        bp_type: u32,
+        config1: u64,
+        config2: u64,
+        branch_sample_type: u64,
+        sample_regs_user: u64,
+        sample_stack_user: u32,
+        clockid: i32,
+        sample_regs_intr: u64,
+        aux_watermark: u32,
+        sample_max_stack: u16,
+        reserved_2: u16,
+        aux_sample_size: u32,
+        reserved_3: u32,
+        sig_data: u64,
+    }
+
+    extern "C" {
+        /// `syscall(2)` — the only way at `perf_event_open` without libc.
+        fn syscall(num: i64, ...) -> i64;
+        /// `ioctl(2)`; glibc/musl symbol, request is unsigned long.
+        fn ioctl(fd: i32, request: u64, ...) -> i32;
+        /// `read(2)`.
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        /// `close(2)`.
+        fn close(fd: i32) -> i32;
+        /// glibc's and musl's thread-local errno address.
+        fn __errno_location() -> *mut i32;
+    }
+
+    fn errno() -> i32 {
+        // SAFETY: __errno_location returns a valid thread-local address
+        // for the life of the thread on every Linux libc we target.
+        unsafe { *__errno_location() }
+    }
+
+    fn classify_open_errno(errno: i32) -> CounterError {
+        match errno {
+            EACCES | EPERM => CounterError::Denied,
+            ENOENT | ENODEV | ENOSYS | EOPNOTSUPP => CounterError::Unsupported,
+            e => CounterError::Syscall { op: "perf_event_open", errno: e },
+        }
+    }
+
+    /// Open all [`EVENTS`] as one group on the calling thread, any CPU.
+    pub(super) fn open_group() -> Result<CounterGroup, CounterError> {
+        let mut fds: Vec<i32> = Vec::with_capacity(EVENTS.len());
+        for (i, (_, config)) in EVENTS.iter().enumerate() {
+            let attr = PerfEventAttr {
+                type_: PERF_TYPE_HARDWARE,
+                size: PERF_ATTR_SIZE_VER0,
+                config: *config,
+                read_format: PERF_FORMAT_GROUP
+                    | PERF_FORMAT_TOTAL_TIME_ENABLED
+                    | PERF_FORMAT_TOTAL_TIME_RUNNING,
+                // Only the leader starts disabled: enabling the leader
+                // with PERF_IOC_FLAG_GROUP flips the whole group, and
+                // members created enabled simply follow the leader's
+                // scheduling.
+                flags: FLAG_EXCLUDE_KERNEL
+                    | FLAG_EXCLUDE_HV
+                    | if i == 0 { FLAG_DISABLED } else { 0 },
+                ..PerfEventAttr::default()
+            };
+            let group_fd: i64 = if i == 0 { -1 } else { fds[0] as i64 };
+            // SAFETY: `attr` is a valid, fully-initialized struct whose
+            // declared `size` covers only bytes we initialize; the
+            // kernel copies it during the call and does not retain the
+            // pointer. pid=0 / cpu=-1 is "this thread, any CPU".
+            let fd = unsafe {
+                syscall(
+                    SYS_PERF_EVENT_OPEN,
+                    &attr as *const PerfEventAttr,
+                    0i64,
+                    -1i64,
+                    group_fd,
+                    PERF_FLAG_FD_CLOEXEC,
+                )
+            };
+            if fd < 0 {
+                let e = errno();
+                close_all(&fds);
+                return Err(classify_open_errno(e));
+            }
+            fds.push(fd as i32);
+        }
+        Ok(CounterGroup { fds })
+    }
+
+    /// Issue a group-wide ioctl (reset/enable/disable) on the leader.
+    pub(super) fn group_ioctl(fds: &[i32], request: u64) -> Result<(), CounterError> {
+        // SAFETY: fds[0] is a live perf event fd owned by the group;
+        // these ioctls read only their integer argument.
+        let rc = unsafe { ioctl(fds[0], request, PERF_IOC_FLAG_GROUP) };
+        if rc < 0 {
+            return Err(CounterError::Syscall { op: "ioctl", errno: errno() });
+        }
+        Ok(())
+    }
+
+    /// One `read(2)` of the whole group from the leader, decoded.
+    pub(super) fn read_group(fds: &[i32]) -> Result<GroupReading, CounterError> {
+        let mut buf = [0u8; GROUP_READ_BYTES];
+        // SAFETY: `buf` is a valid writable buffer of the length passed.
+        let n = unsafe { read(fds[0], buf.as_mut_ptr(), buf.len()) };
+        if n < 0 {
+            return Err(CounterError::Syscall { op: "read", errno: errno() });
+        }
+        super::decode_group_read(&buf[..n as usize], EVENTS.len())
+    }
+
+    pub(super) fn close_all(fds: &[i32]) {
+        for &fd in fds {
+            // SAFETY: each fd was returned by perf_event_open and is
+            // closed exactly once (Vec dropped right after).
+            unsafe {
+                close(fd);
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::PerfEventAttr;
+
+        #[test]
+        fn attr_layout_matches_the_kernel_header() {
+            // The struct must mirror uapi perf_event_attr through
+            // sig_data (128 bytes), with read_format/flags in the VER0
+            // prefix at their kernel offsets.
+            assert_eq!(std::mem::size_of::<PerfEventAttr>(), 128);
+            assert_eq!(std::mem::align_of::<PerfEventAttr>(), 8);
+            let a = PerfEventAttr::default();
+            let base = &a as *const PerfEventAttr as usize;
+            assert_eq!(&a.config as *const u64 as usize - base, 8);
+            assert_eq!(&a.read_format as *const u64 as usize - base, 32);
+            assert_eq!(&a.flags as *const u64 as usize - base, 40);
+            assert_eq!(&a.config1 as *const u64 as usize - base, 56);
+            assert_eq!(&a.sig_data as *const u64 as usize - base, 120);
+        }
+    }
+}
+
+/// Stub kernel interface for platforms that cannot deliver counters
+/// (non-Linux, Miri, exotic arches): open always reports
+/// [`CounterError::Unsupported`], so the group methods below are
+/// unreachable but keep the one [`CounterGroup`] type compiling
+/// everywhere.
+#[cfg(not(all(target_os = "linux", not(miri), any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    use super::{CounterError, CounterGroup, GroupReading};
+
+    pub(super) const PERF_EVENT_IOC_ENABLE: u64 = 0x2400;
+    pub(super) const PERF_EVENT_IOC_DISABLE: u64 = 0x2401;
+    pub(super) const PERF_EVENT_IOC_RESET: u64 = 0x2403;
+
+    pub(super) fn open_group() -> Result<CounterGroup, CounterError> {
+        Err(CounterError::Unsupported)
+    }
+
+    pub(super) fn group_ioctl(_fds: &[i32], _request: u64) -> Result<(), CounterError> {
+        Err(CounterError::Unsupported)
+    }
+
+    pub(super) fn read_group(_fds: &[i32]) -> Result<GroupReading, CounterError> {
+        Err(CounterError::Unsupported)
+    }
+
+    pub(super) fn close_all(_fds: &[i32]) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Little-endian group-read fixture: `nr`, `time_enabled`,
+    /// `time_running`, then `values`.
+    fn fixture(nr: u64, te: u64, tr: u64, values: &[u64]) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(24 + values.len() * 8);
+        buf.extend_from_slice(&nr.to_le_bytes());
+        buf.extend_from_slice(&te.to_le_bytes());
+        buf.extend_from_slice(&tr.to_le_bytes());
+        for v in values {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf
+    }
+
+    #[test]
+    fn decodes_a_normal_unmultiplexed_read() {
+        let buf = fixture(5, 1_000_000, 1_000_000, &[100, 200, 50, 10, 5]);
+        let r = decode_group_read(&buf, 5).unwrap();
+        assert_eq!(r.time_enabled, 1_000_000);
+        assert_eq!(r.time_running, 1_000_000);
+        assert_eq!(r.values, vec![100, 200, 50, 10, 5]);
+        assert!(!r.multiplexed());
+        // Identity scaling when the group was never descheduled.
+        assert_eq!(r.scaled().unwrap(), vec![100, 200, 50, 10, 5]);
+        let c = Counters::from_reading(&r).unwrap();
+        assert_eq!(c.instructions, 100);
+        assert_eq!(c.cycles, 200);
+        assert_eq!(c.cache_references, 50);
+        assert_eq!(c.cache_misses, 10);
+        assert_eq!(c.branch_misses, 5);
+        assert!(!c.multiplexed);
+    }
+
+    #[test]
+    fn scales_a_multiplexed_read_by_enabled_over_running() {
+        // Scheduled for a quarter of the window: counts extrapolate 4x.
+        let buf = fixture(5, 1_000_000, 250_000, &[100, 200, 50, 10, 5]);
+        let r = decode_group_read(&buf, 5).unwrap();
+        assert!(r.multiplexed());
+        assert_eq!(r.scaled().unwrap(), vec![400, 800, 200, 40, 20]);
+        let c = Counters::from_reading(&r).unwrap();
+        assert_eq!(c.instructions, 400);
+        assert!(c.multiplexed);
+        assert_eq!(c.time_enabled_ns, 1_000_000);
+        assert_eq!(c.time_running_ns, 250_000);
+    }
+
+    #[test]
+    fn scaling_truncates_and_survives_huge_counts() {
+        // 3 * 3 / 2 = 4.5 -> truncates to 4 (integer extrapolation).
+        let r = GroupReading { time_enabled: 3, time_running: 2, values: vec![3; 5] };
+        assert_eq!(r.scaled().unwrap(), vec![4; 5]);
+        // u64-scale counts with 2x scaling would overflow 64-bit
+        // intermediate math; 128-bit keeps it exact.
+        let big = u64::MAX / 2;
+        let r = GroupReading { time_enabled: 2, time_running: 1, values: vec![big; 5] };
+        assert_eq!(r.scaled().unwrap(), vec![big * 2; 5]);
+    }
+
+    #[test]
+    fn zero_values_scale_to_zero_not_error() {
+        // A group that ran but observed nothing is a valid reading —
+        // "omit zeros" policy applies to *errors*, not measured zeros.
+        let buf = fixture(5, 1_000, 500, &[0, 0, 0, 0, 0]);
+        let r = decode_group_read(&buf, 5).unwrap();
+        assert_eq!(r.scaled().unwrap(), vec![0; 5]);
+    }
+
+    #[test]
+    fn never_scheduled_group_is_a_typed_error() {
+        let buf = fixture(5, 1_000_000, 0, &[7, 7, 7, 7, 7]);
+        let r = decode_group_read(&buf, 5).unwrap();
+        assert_eq!(r.scaled(), Err(CounterError::NeverRan));
+        assert_eq!(Counters::from_reading(&r), Err(CounterError::NeverRan));
+    }
+
+    #[test]
+    fn wrong_event_count_is_rejected() {
+        // nr = 0: a "zero-event" read — the kernel never produces this
+        // for a 5-event group, so it must be a typed error, not zeros.
+        let buf = fixture(0, 1_000, 1_000, &[]);
+        assert_eq!(
+            decode_group_read(&buf, 5),
+            Err(CounterError::EventCount { got: 0, want: 5 })
+        );
+        let buf = fixture(3, 1_000, 1_000, &[1, 2, 3]);
+        assert_eq!(
+            decode_group_read(&buf, 5),
+            Err(CounterError::EventCount { got: 3, want: 5 })
+        );
+    }
+
+    #[test]
+    fn short_reads_are_rejected_at_both_boundaries() {
+        // Shorter than the 24-byte header...
+        assert_eq!(
+            decode_group_read(&[], 5),
+            Err(CounterError::ShortRead { got: 0, want: 24 })
+        );
+        let buf = fixture(5, 1_000, 1_000, &[1, 2, 3, 4, 5]);
+        assert_eq!(
+            decode_group_read(&buf[..23], 5),
+            Err(CounterError::ShortRead { got: 23, want: 24 })
+        );
+        // ...and a truncated value array.
+        assert_eq!(
+            decode_group_read(&buf[..40], 5),
+            Err(CounterError::ShortRead { got: 40, want: 64 })
+        );
+        // The exact boundary decodes.
+        assert!(decode_group_read(&buf[..64], 5).is_ok());
+    }
+
+    #[test]
+    fn env_parsing() {
+        assert_eq!(parse_counters_env(None), Some(CounterMode::Auto));
+        assert_eq!(parse_counters_env(Some("")), Some(CounterMode::Auto));
+        assert_eq!(parse_counters_env(Some("on")), Some(CounterMode::Auto));
+        assert_eq!(parse_counters_env(Some("1")), Some(CounterMode::Auto));
+        assert_eq!(parse_counters_env(Some(" off ")), Some(CounterMode::Off));
+        assert_eq!(parse_counters_env(Some("0")), Some(CounterMode::Off));
+        assert_eq!(parse_counters_env(Some("maybe")), None);
+    }
+
+    #[test]
+    fn forced_off_mode_never_opens() {
+        assert!(matches!(
+            CounterGroup::open_with(CounterMode::Off),
+            Err(CounterError::Off)
+        ));
+    }
+
+    #[test]
+    fn open_is_graceful_everywhere() {
+        // Whatever this machine allows, open() must return a typed
+        // result — never panic. (Under Miri and off Linux this is the
+        // Unsupported stub; on locked-down runners, Denied.)
+        match CounterGroup::open_with(CounterMode::Auto) {
+            Ok(g) => {
+                assert_eq!(g.event_count(), 5);
+                // A live group must measure something for a real spin.
+                let (sum, c) = g
+                    .measure(|| {
+                        let mut acc = 0u64;
+                        for i in 0..10_000u64 {
+                            acc = std::hint::black_box(acc.wrapping_add(i));
+                        }
+                        acc
+                    })
+                    .expect("open group must be readable");
+                assert_eq!(sum, (0..10_000).sum::<u64>());
+                assert!(c.instructions > 0);
+            }
+            Err(e) => {
+                // Typed, displayable, and not the env-off variant (we
+                // passed Auto explicitly).
+                assert_ne!(e, CounterError::Off);
+                assert!(!e.to_string().is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn event_names_match_group_order() {
+        assert_eq!(
+            event_names(),
+            ["instructions", "cycles", "cache_references", "cache_misses", "branch_misses"]
+        );
+    }
+}

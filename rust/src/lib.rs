@@ -128,7 +128,10 @@
 //!   parallel copy engine → [`tune::migrate_live`], and the
 //!   coordinator's per-job-key adaptation via
 //!   [`coordinator::Config::autotune`])
-//! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`
+//! - evaluation workload (Fig. 3) → [`nbody`], `benches/fig3_nbody.rs`,
+//!   measured in wall clock *and* hardware counters → [`counters`]
+//!   (`perf_event_open`; `LLAMA_COUNTERS`) via [`bench`], with
+//!   false-sharing hardening → [`util::CachePadded`]
 //! - AOT/PJRT execution of the Pallas/JAX lowering → [`runtime`], [`coordinator`]
 //!   (PJRT behind the `pjrt` cargo feature), with bounded, quota-aware job
 //!   ingestion → [`coordinator::Ingest`], layout-aware view transport
@@ -161,6 +164,7 @@ pub mod blob;
 pub mod compress;
 pub mod coordinator;
 pub mod copy;
+pub mod counters;
 pub mod extents;
 pub mod fault;
 pub mod mapping;
@@ -174,6 +178,7 @@ pub mod simd;
 pub mod testing;
 pub mod transport;
 pub mod tune;
+pub mod util;
 pub mod view;
 
 /// Convenience re-exports covering the common 90% of the API.
@@ -204,8 +209,10 @@ pub mod prelude {
         Bf16, Field, FieldIndex, FieldTag, GroupTag, Leaf, RecordDim, Scalar, ScalarType, Sel,
         Selection, F16,
     };
+    pub use crate::counters::{CounterError, CounterGroup, Counters};
     pub use crate::numa::{NumaPolicy, Topology};
     pub use crate::pool::{Lease, WorkerPool};
+    pub use crate::util::CachePadded;
     pub use crate::shard::{thread_count, thread_count_or, ShardCursor, ViewShards};
     pub use crate::simd::{Simd, SimdElem};
     pub use crate::fault::{FaultConfig, FaultPlan, FaultyStream, JobFault};

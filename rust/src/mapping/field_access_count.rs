@@ -19,17 +19,27 @@ use crate::blob::BlobStorage;
 use crate::mapping::{Mapping, MemoryAccess, SimdAccess};
 use crate::record::{RecordDim, Scalar};
 use crate::simd::{Simd, SimdElem};
+use crate::util::CachePadded;
 
 /// Per-field access counters for one instrumented view.
 ///
 /// Shared (`Arc`) between mapping clones, so cloning a view keeps counting
 /// into the same tallies — matching C++ LLAMA where the counters live with
 /// the mapping instance.
+///
+/// Each counter is cache-line padded (E13 false-sharing audit): a
+/// parallel traversal has every shard incrementing the *same* field's
+/// counter — that contention is true sharing and padding cannot remove
+/// it — but unpadded, eight adjacent `AtomicU64`s shared one line, so
+/// incrementing field 0's read counter also bounced fields 1–3's
+/// read/write lines across cores. Padding decouples the fields. Memory
+/// goes from 16 B to 128 B per field, still negligible against the §4
+/// budget (2 counters per field, independent of `n`).
 #[derive(Debug, Default)]
 pub struct AccessCounters {
     /// reads[f], writes[f] per flattened field index.
-    reads: Vec<AtomicU64>,
-    writes: Vec<AtomicU64>,
+    reads: Vec<CachePadded<AtomicU64>>,
+    writes: Vec<CachePadded<AtomicU64>>,
 }
 
 /// A coherent point-in-time copy of the per-field counters.
@@ -81,8 +91,8 @@ impl<R: RecordDim, M: MemoryAccess<R>> FieldAccessCount<R, M> {
         FieldAccessCount {
             inner,
             counters: Arc::new(AccessCounters {
-                reads: (0..n).map(|_| AtomicU64::new(0)).collect(),
-                writes: (0..n).map(|_| AtomicU64::new(0)).collect(),
+                reads: (0..n).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+                writes: (0..n).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             }),
             _pd: std::marker::PhantomData,
         }

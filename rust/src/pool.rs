@@ -70,6 +70,7 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crate::blob::{blob_spans, BlobBytes, BlobStorage};
 use crate::numa::{self, NumaPolicy};
+use crate::util::CachePadded;
 
 /// A queued, lifetime-erased job plus its batch bookkeeping.
 struct Job {
@@ -126,9 +127,14 @@ struct JobCell {
 }
 
 /// State shared between the pool handle and its workers.
+///
+/// The mutex and the condvar are each padded to their own cache line
+/// (E13 false-sharing audit): workers spin-lock the cell while parked
+/// submitters hammer the condvar word, and co-locating the two made
+/// every lock acquisition also bounce the condvar's line.
 struct Shared {
-    cell: Mutex<JobCell>,
-    work: Condvar,
+    cell: CachePadded<Mutex<JobCell>>,
+    work: CachePadded<Condvar>,
 }
 
 impl Shared {
@@ -196,8 +202,11 @@ pub struct WorkerPool {
     /// of a dispatch is tagged `node_ids[(k - 1) % len]`… see
     /// [`node_of_slot`](WorkerPool::node_of_slot).
     node_ids: Vec<usize>,
-    /// Advisory thread budget not currently leased out.
-    available: AtomicUsize,
+    /// Advisory thread budget not currently leased out. Padded: leases
+    /// are taken/returned by CAS from concurrent coordinator workers,
+    /// and unpadded this word shared a line with the read-mostly
+    /// `node_ids`/`workers` Vec headers (E13 audit).
+    available: CachePadded<AtomicUsize>,
     /// Worker threads ever spawned — stays equal to
     /// [`worker_count`](WorkerPool::worker_count) for the pool's whole
     /// life: workers are never respawned.
@@ -218,8 +227,12 @@ impl WorkerPool {
     pub fn with_pinning(threads: usize, pin: bool) -> WorkerPool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
-            cell: Mutex::new(JobCell { jobs: VecDeque::new(), generation: 0, shutdown: false }),
-            work: Condvar::new(),
+            cell: CachePadded::new(Mutex::new(JobCell {
+                jobs: VecDeque::new(),
+                generation: 0,
+                shutdown: false,
+            })),
+            work: CachePadded::new(Condvar::new()),
         });
         let topo = numa::probe();
         let pin = pin && topo.is_multi_node();
@@ -247,7 +260,7 @@ impl WorkerPool {
             shared,
             workers,
             node_ids,
-            available: AtomicUsize::new(threads),
+            available: CachePadded::new(AtomicUsize::new(threads)),
             spawned,
         }
     }

@@ -1,0 +1,128 @@
+//! Small shared utilities. Currently: [`CachePadded`], the fix the
+//! false-sharing audit (experiment E13, `benches/false_sharing.rs`)
+//! prescribes for convicted concurrent structures.
+//!
+//! # False sharing
+//!
+//! Two atomics that live on the same 64-byte cache line ping-pong that
+//! line between cores even when each core only ever touches its *own*
+//! atomic: every `fetch_add` takes the line exclusive, invalidating the
+//! other core's copy. The counters are logically independent but
+//! physically coupled — that coupling is "false" sharing, and it shows
+//! up in hardware counters as a cache-miss rate far above what the data
+//! volume justifies (see `llama::counters`).
+//!
+//! [`CachePadded<T>`] breaks the coupling by aligning `T` to the cache
+//! line, so two consecutive `CachePadded<AtomicU64>`s can never share
+//! one. The cost is memory: 64 bytes per counter instead of 8. Use it
+//! for *per-worker / per-shard* hot counters with a bounded count
+//! (pool lease words, shard access counters); do NOT use it for bulk
+//! per-element state like `Heatmap`'s line counters, where an 8×
+//! memory bloat would defeat the instrument (§4 of the paper keeps
+//! that overhead at 8 B per granule deliberately).
+//!
+//! 64 bytes covers x86-64 and current aarch64 cores. Some Apple/ARM
+//! designs prefetch line *pairs* (128 B); we stick with 64 like the
+//! kernel's `____cacheline_aligned` default — the bench measures the
+//! actual machine, so a pair-prefetch penalty would still be caught.
+
+/// The alignment [`CachePadded`] enforces, in bytes.
+pub const CACHE_LINE: usize = 64;
+
+/// Pads and aligns `T` to a 64-byte cache line so that adjacent values
+/// in a `Vec` or struct never share a line. Transparent to use:
+/// `Deref`/`DerefMut` pass through to `T`, so wrapping an
+/// `AtomicU64` leaves every `.load()` / `.fetch_add()` call site
+/// unchanged.
+#[derive(Clone, Copy, Default, PartialEq, Eq, Hash)]
+#[repr(align(64))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap `value`, padding it to a full cache line.
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+
+    /// Unwrap, discarding the padding.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for CachePadded<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("CachePadded").field(&self.value).finish()
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        Self::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn layout_is_at_least_one_cache_line() {
+        assert_eq!(std::mem::align_of::<CachePadded<AtomicU64>>(), CACHE_LINE);
+        assert_eq!(std::mem::size_of::<CachePadded<AtomicU64>>(), CACHE_LINE);
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), CACHE_LINE);
+        assert_eq!(std::mem::size_of::<CachePadded<u8>>(), CACHE_LINE);
+        // Larger-than-a-line payloads round up to whole lines.
+        assert_eq!(std::mem::size_of::<CachePadded<[u8; 65]>>(), 2 * CACHE_LINE);
+    }
+
+    #[test]
+    fn adjacent_vec_elements_never_share_a_line() {
+        let v: Vec<CachePadded<AtomicU64>> =
+            (0..4).map(|i| CachePadded::new(AtomicU64::new(i))).collect();
+        for pair in v.windows(2) {
+            let a = &*pair[0] as *const AtomicU64 as usize;
+            let b = &*pair[1] as *const AtomicU64 as usize;
+            assert!(a / CACHE_LINE != b / CACHE_LINE, "elements share line");
+        }
+    }
+
+    #[test]
+    fn deref_passes_through() {
+        let c = CachePadded::new(AtomicU64::new(7));
+        c.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(c.load(Ordering::Relaxed), 10);
+        assert_eq!(c.into_inner().into_inner(), 10);
+
+        let mut m = CachePadded::new(5u32);
+        *m += 1;
+        assert_eq!(*m, 6);
+        assert_eq!(CachePadded::from(6u32), m);
+        assert_eq!(format!("{m:?}"), "CachePadded(6)");
+    }
+
+    #[test]
+    fn default_and_clone() {
+        let d: CachePadded<u64> = CachePadded::default();
+        assert_eq!(*d, 0);
+        let c = d;
+        assert_eq!(*c, 0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Integration tests for the hardware-counter measurement mode
+//! (`llama::counters` + its `llama::bench` wiring), exercising the
+//! guarantees the E13/counter-mode work promises:
+//!
+//! - degradation is *graceful and typed*: `LLAMA_COUNTERS=off` and a
+//!   simulated `Denied` both keep every bench working, and JSON rows
+//!   **omit** the `counters` object rather than emitting zeros;
+//! - when counters are live, two identical single-threaded runs of a
+//!   fixed kernel agree on retired instructions within 1% — the
+//!   determinism wall-clock sampling cannot offer.
+//!
+//! The live-path tests skip (with a printed reason) on machines where
+//! `perf_event_open` is refused — CI asserts the *fallback*, not the
+//! numbers.
+
+use llama::bench::{black_box, emit_json_to, Bencher};
+use llama::counters::{self, CounterError, CounterGroup, CounterMode, Counters};
+
+/// The fixed-work kernel for determinism checks: branch-free integer
+/// arithmetic, no allocation, no syscalls — its retired-instruction
+/// count is a property of the code, not the machine's mood.
+fn fixed_kernel(n: u64) -> u64 {
+    let mut acc = 0x9e37_79b9_7f4a_7c15u64;
+    for i in 0..n {
+        acc = black_box(acc.rotate_left(7).wrapping_mul(i | 1));
+    }
+    acc
+}
+
+#[test]
+fn forced_off_is_typed_and_total() {
+    // The explicit-mode constructor bypasses the environment, so this
+    // holds on every machine, every platform, and under Miri.
+    match CounterGroup::open_with(CounterMode::Off) {
+        Err(CounterError::Off) => {}
+        other => panic!("forced-off open must yield CounterError::Off, got {other:?}"),
+    }
+}
+
+#[test]
+fn env_off_degrades_the_whole_process() {
+    // `mode()` caches the env var process-wide, so flipping it needs a
+    // child process, not setenv in this multithreaded harness: re-exec
+    // this same test binary filtered to the child fn below.
+    if std::env::var_os("LLAMA_COUNTERS_CHILD").is_some() {
+        return; // we *are* the child; the child fn does the asserting
+    }
+    let exe = std::env::current_exe().expect("test binary path");
+    let out = std::process::Command::new(exe)
+        .args(["--exact", "child_env_off_body", "--nocapture"])
+        .env("LLAMA_COUNTERS", "off")
+        .env("LLAMA_COUNTERS_CHILD", "1")
+        .output()
+        .expect("spawning child test process");
+    assert!(
+        out.status.success(),
+        "child with LLAMA_COUNTERS=off failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("child saw counters off"),
+        "child ran but never hit its assertions:\n{stdout}"
+    );
+}
+
+/// Body of the `env_off` child: only meaningful with
+/// `LLAMA_COUNTERS=off` in the environment (the parent sets it).
+#[test]
+fn child_env_off_body() {
+    if std::env::var_os("LLAMA_COUNTERS_CHILD").is_none() {
+        return; // running as part of the normal suite: nothing to do
+    }
+    assert_eq!(counters::mode(), CounterMode::Off);
+    assert_eq!(CounterGroup::open().unwrap_err(), CounterError::Off);
+    assert_eq!(counters::meta_tag(), "off");
+    assert!(counters::status_line().contains("off"));
+    // The bench harness keeps working and its rows carry no counters.
+    let mut b = Bencher::new(0, 2);
+    b.bench("row", 100, || {
+        black_box(fixed_kernel(100));
+    });
+    assert!(b.results().iter().all(|m| m.counters.is_none()));
+    println!("child saw counters off");
+}
+
+#[test]
+fn denied_rows_omit_counters_in_json() {
+    // Simulated kernel refusal: the Bencher is constructed as if
+    // perf_event_open had returned EACCES. Rows must omit the object —
+    // a consumer must never mistake "unmeasured" for "zero".
+    let dir = std::env::temp_dir().join(format!("llama-cnt-denied-{}", std::process::id()));
+    let mut b = Bencher::with_counter_error(0, 3, CounterError::Denied);
+    b.bench("kernel", 500, || {
+        black_box(fixed_kernel(500));
+    });
+    assert!(!b.counters_live());
+    assert!(b.results().iter().all(|m| m.counters.is_none()));
+
+    let path = emit_json_to(&dir, "cnt_denied", &[], &[("g", &b)]).expect("emit json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir(&dir);
+    assert!(text.contains("\"schema\": 2"));
+    assert!(text.contains("\"median_ns\""), "wall-clock fields still present");
+    assert!(!text.contains("counters"), "denied run leaked a counters key:\n{text}");
+}
+
+/// Open a live group or skip the calling test with a printed reason.
+fn live_group_or_skip(test: &str) -> Option<CounterGroup> {
+    match CounterGroup::open_with(CounterMode::Auto) {
+        Ok(g) => Some(g),
+        Err(e) => {
+            println!("{test}: skipping, counters unavailable here ({e})");
+            None
+        }
+    }
+}
+
+#[test]
+fn live_measure_yields_plausible_counts() {
+    let Some(group) = live_group_or_skip("live_measure_yields_plausible_counts") else {
+        return;
+    };
+    let (out, c) = match group.measure(|| fixed_kernel(50_000)) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("measure failed mid-flight ({e}); treating as unavailable");
+            return;
+        }
+    };
+    black_box(out);
+    // 50k loop iterations retire at least one instruction each; an idle
+    // single group should also actually get PMU time.
+    assert!(c.instructions >= 50_000, "implausibly few instructions: {c:?}");
+    assert!(c.cycles > 0, "zero cycles: {c:?}");
+    assert!(c.time_enabled_ns > 0 && c.time_running_ns > 0, "no PMU time: {c:?}");
+    assert!(c.time_running_ns <= c.time_enabled_ns, "running exceeds enabled: {c:?}");
+    assert!(c.instructions_per_item(50_000) >= 1.0);
+}
+
+#[test]
+fn live_instruction_counts_are_deterministic_within_1pct() {
+    // The headline property (ISSUE acceptance): two identical
+    // single-threaded runs of a fixed-seed kernel agree on retired
+    // instructions within 1%. Wall clock on a noisy runner cannot do
+    // this; instruction counts can, because the kernel executes the
+    // same instruction stream both times.
+    let Some(group) = live_group_or_skip("live_instruction_counts_are_deterministic_within_1pct")
+    else {
+        return;
+    };
+    let run = |g: &CounterGroup| -> Option<Counters> {
+        match g.measure(|| fixed_kernel(200_000)) {
+            Ok((out, c)) => {
+                black_box(out);
+                Some(c)
+            }
+            Err(e) => {
+                println!("measure failed mid-flight ({e}); treating as unavailable");
+                None
+            }
+        }
+    };
+    // Warm once (first-run effects: page faults on the code path).
+    let _ = run(&group);
+    let (Some(a), Some(b)) = (run(&group), run(&group)) else { return };
+    if a.multiplexed || b.multiplexed {
+        // Extrapolated counts are estimates; the determinism claim is
+        // only made for unshared PMU time.
+        println!("skipping: PMU multiplexed during the runs");
+        return;
+    }
+    let (lo, hi) = (a.instructions.min(b.instructions), a.instructions.max(b.instructions));
+    assert!(lo > 0);
+    let rel = (hi - lo) as f64 / hi as f64;
+    assert!(
+        rel <= 0.01,
+        "instruction counts diverged by {:.3}% ({} vs {})",
+        rel * 100.0,
+        a.instructions,
+        b.instructions
+    );
+}
+
+#[test]
+fn live_rows_carry_counters_in_json() {
+    // End-to-end through the bench harness: when this machine has live
+    // counters, emitted rows carry the object with all five events.
+    if let Err(e) = counters::available() {
+        println!("live_rows_carry_counters_in_json: skipping ({e})");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("llama-cnt-live-{}", std::process::id()));
+    let mut b = Bencher::new(1, 2);
+    b.bench("kernel", 10_000, || {
+        black_box(fixed_kernel(10_000));
+    });
+    let m = &b.results()[0];
+    let Some(c) = &m.counters else {
+        // Probe said live but the Bencher's own group failed (e.g. fd
+        // limit): still a graceful path, with a typed reason.
+        let err = b.counter_error().expect("counter-less row needs a reason");
+        println!("live probe but bencher degraded ({err}); accepting fallback");
+        return;
+    };
+    assert!(c.instructions > 0);
+    let path = emit_json_to(&dir, "cnt_live", &[], &[("g", &b)]).expect("emit json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir(&dir);
+    for key in counters::event_names() {
+        assert!(text.contains(&format!("\"{key}\"")), "missing {key} in:\n{text}");
+    }
+    assert!(text.contains("\"multiplexed\""));
+}
