@@ -32,11 +32,16 @@
 //! errors) and workers crash-exit after a seeded number of requests.
 //! CI runs this under two fixed seeds (see `docs/SERVING.md` §5).
 //!
-//! Run: `cargo run --example distributed_nbody -- [n] [steps] [workers]`
+//! Run: `cargo run --example distributed_nbody -- [n] [steps] [workers]
+//! [--tcp]` — `--tcp` swaps the Unix socket for TCP loopback (the
+//! serving tier's transport); the protocol and all assertions are
+//! identical.
 
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
 use std::process::Command;
 
 use llama::blob::{alloc_view, BlobStorage, HeapAlloc, HeapStorage};
@@ -61,6 +66,56 @@ const EXIT_CORRUPT_REQUEST: i32 = 4;
 /// Shard `s`'s record range out of `n` particles split `nshards` ways.
 fn shard_range(s: usize, nshards: usize, n: usize) -> (usize, usize) {
     (s * n / nshards, (s + 1) * n / nshards)
+}
+
+/// Transport-agnostic byte stream: the identical protocol runs over a
+/// Unix domain socket (default) or TCP loopback (`--tcp`).
+enum Sock {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Read for Sock {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Sock::Unix(s) => s.read(buf),
+            Sock::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Sock {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Sock::Unix(s) => s.write(buf),
+            Sock::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Sock::Unix(s) => s.flush(),
+            Sock::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// The parent's listener for worker rendezvous, over either transport.
+enum Rendezvous {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Rendezvous {
+    fn accept(&self) -> io::Result<Sock> {
+        match self {
+            Rendezvous::Unix(l) => l.accept().map(|(s, _)| Sock::Unix(s)),
+            Rendezvous::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                Sock::Tcp(s)
+            }),
+        }
+    }
 }
 
 /// Copy one particle record between two views (possibly different
@@ -171,13 +226,14 @@ fn is_disconnect(e: &io::Error) -> bool {
 /// Corrupt requests exit with [`EXIT_CORRUPT_REQUEST`]; an armed fault
 /// plan crash-exits with [`EXIT_INJECTED_CRASH`] after a seeded number
 /// of served requests.
-fn worker_serve<M, F>(
-    stream: &mut UnixStream,
+fn worker_serve<S, M, F>(
+    stream: &mut S,
     widx: usize,
     make: &F,
     crash_after: Option<u64>,
 ) -> io::Result<i32>
 where
+    S: Read + Write,
     M: MemoryAccess<Particle>,
     M::Extents: Extents<ArrayIndex = [usize; 1]>,
     F: Fn(Ext1) -> M,
@@ -242,7 +298,14 @@ where
 }
 
 fn worker_main(sock: &str, widx: usize) -> io::Result<i32> {
-    let mut stream = UnixStream::connect(sock)?;
+    // A `tcp:HOST:PORT` rendezvous string selects the TCP transport.
+    let mut stream = if let Some(addr) = sock.strip_prefix("tcp:") {
+        let s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        Sock::Tcp(s)
+    } else {
+        Sock::Unix(UnixStream::connect(sock)?)
+    };
     // Hello: identify ourselves so the parent maps streams to peer
     // slots regardless of connection order.
     stream.write_all(&[widx as u8])?;
@@ -272,7 +335,7 @@ fn layout_name(widx: usize) -> &'static str {
 // Parent side
 // ---------------------------------------------------------------------------
 
-type Peer = FaultyStream<UnixStream>;
+type Peer = FaultyStream<Sock>;
 type ShardView = View<Particle, WireMapping<Particle, Ext1>, HeapStorage>;
 
 /// Read one shard reply and adopt it zero-copy, folding every failure
@@ -308,16 +371,19 @@ fn main() -> io::Result<()> {
         std::process::exit(code);
     }
 
-    let n: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(96);
-    let steps: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(3);
-    let nworkers: usize = args.get(3).and_then(|a| a.parse().ok()).unwrap_or(3).clamp(2, 8);
+    let tcp = args.iter().any(|a| a == "--tcp");
+    let pos: Vec<&String> = args.iter().skip(1).filter(|a| a.as_str() != "--tcp").collect();
+    let n: usize = pos.first().and_then(|a| a.parse().ok()).unwrap_or(96);
+    let steps: usize = pos.get(1).and_then(|a| a.parse().ok()).unwrap_or(3);
+    let nworkers: usize = pos.get(2).and_then(|a| a.parse().ok()).unwrap_or(3).clamp(2, 8);
     let plan = FaultPlan::from_env();
     let chaos = plan.is_some();
     // Without a seed the wrapper is an exact passthrough — one code
     // path, faults only when armed.
     let plan = plan.unwrap_or_else(|| FaultPlan::new(0, FaultConfig::default()));
     println!(
-        "distributed n-body: n={n}, {steps} steps, {nworkers} workers (parent layout AoS){}",
+        "distributed n-body: n={n}, {steps} steps, {nworkers} workers (parent layout AoS), {}{}",
+        if tcp { "tcp loopback" } else { "unix socket" },
         if chaos { format!(", chaos seed {}", plan.seed()) } else { String::new() }
     );
 
@@ -332,10 +398,21 @@ fn main() -> io::Result<()> {
     }
     let serial_snap = views::snapshot_view(&serial);
 
-    // Rendezvous socket in the temp dir, keyed by pid.
-    let sock = std::env::temp_dir().join(format!("llama-dnbody-{}.sock", std::process::id()));
-    let _ = std::fs::remove_file(&sock);
-    let listener = UnixListener::bind(&sock)?;
+    // Rendezvous: a pid-keyed Unix socket in the temp dir, or a TCP
+    // loopback listener on an OS-picked port (workers get `tcp:ADDR`).
+    let mut unix_path: Option<PathBuf> = None;
+    let (listener, sock) = if tcp {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        let addr = format!("tcp:{}", l.local_addr()?);
+        (Rendezvous::Tcp(l), addr)
+    } else {
+        let path = std::env::temp_dir().join(format!("llama-dnbody-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let l = UnixListener::bind(&path)?;
+        let addr = path.to_string_lossy().into_owned();
+        unix_path = Some(path);
+        (Rendezvous::Unix(l), addr)
+    };
 
     // Spawn the workers from this same binary and collect their hellos.
     let exe = std::env::current_exe()?;
@@ -346,9 +423,9 @@ fn main() -> io::Result<()> {
             Command::new(&exe).arg("--worker").arg(&sock).arg(w.to_string()).spawn()?,
         );
     }
-    let mut slots: Vec<Option<UnixStream>> = (0..nworkers).map(|_| None).collect();
+    let mut slots: Vec<Option<Sock>> = (0..nworkers).map(|_| None).collect();
     for _ in 0..nworkers {
-        let (mut s, _) = listener.accept()?;
+        let mut s = listener.accept()?;
         let mut hello = [0u8; 1];
         s.read_exact(&mut hello)?;
         slots[hello[0] as usize] = Some(s);
@@ -449,7 +526,9 @@ fn main() -> io::Result<()> {
     for mut c in children {
         statuses.push(c.wait()?);
     }
-    let _ = std::fs::remove_file(&sock);
+    if let Some(path) = &unix_path {
+        let _ = std::fs::remove_file(path);
+    }
 
     println!("state broadcast: strategy {broadcast_strategy:?}, frame {frame_bytes} bytes/req");
     if chaos {

@@ -246,7 +246,9 @@ impl RetryPolicy {
 /// The layout-lab coordinator. See module docs.
 pub struct Coordinator {
     ingest: Ingest,
-    results_rx: mpsc::Receiver<JobResult>,
+    /// `None` once [`Coordinator::take_results`] handed the stream to an
+    /// external consumer (the serving tier's result router).
+    results_rx: Option<mpsc::Receiver<JobResult>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
@@ -262,7 +264,15 @@ impl Coordinator {
             config.workers.max(1),
             metrics.clone(),
         );
-        let (batch_tx, batch_rx) = mpsc::channel::<(u64, Vec<Queued>)>();
+        // The dispatcher→worker hand-off is *bounded* (one in-flight
+        // batch per worker beyond the ones being executed): with an
+        // unbounded channel the dispatcher would drain the ingestion
+        // queue into the channel as fast as it can pop, and
+        // `queue_capacity` would bound nothing — admission control
+        // (QueueFull, quotas, retry-after hints) only bites if admitted
+        // work actually accumulates in the queue while workers are busy.
+        let (batch_tx, batch_rx) =
+            mpsc::sync_channel::<(u64, Vec<Queued>)>(config.workers.max(1));
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let (results_tx, results_rx) = mpsc::channel::<JobResult>();
 
@@ -414,7 +424,26 @@ impl Coordinator {
         }
         drop(results_tx);
 
-        Coordinator { ingest, results_rx, dispatcher: Some(dispatcher), workers, metrics }
+        Coordinator {
+            ingest,
+            results_rx: Some(results_rx),
+            dispatcher: Some(dispatcher),
+            workers,
+            metrics,
+        }
+    }
+
+    /// Take ownership of the result stream: every [`JobResult`] the
+    /// workers produce, in completion order, ending when the
+    /// coordinator drains after [`Ingest::close`].
+    ///
+    /// For streaming consumers (the TCP serving tier routes results to
+    /// waiting connections as they complete) instead of the batch
+    /// collection in [`Coordinator::finish`]. Can be taken once;
+    /// afterwards `finish` only joins the threads and returns an empty
+    /// vec — the stream owner has the results.
+    pub fn take_results(&mut self) -> Option<mpsc::Receiver<JobResult>> {
+        self.results_rx.take()
     }
 
     /// Submit a job, blocking without a deadline while the queue is
@@ -450,15 +479,19 @@ impl Coordinator {
     ///
     /// Outstanding [`Ingest`] handles fail with [`SubmitError::Closed`]
     /// from here on; quiesce producer threads first if every submission
-    /// must be admitted.
+    /// must be admitted. If [`Coordinator::take_results`] was called,
+    /// the stream owner has the results: this joins the threads and
+    /// returns an empty vec.
     pub fn finish(mut self) -> Vec<JobResult> {
         self.ingest.close(); // dispatcher drains the queue and exits
         let admitted = self.ingest.admitted() as usize; // exact after close
         let mut results = Vec::with_capacity(admitted);
-        for _ in 0..admitted {
-            match self.results_rx.recv() {
-                Ok(r) => results.push(r),
-                Err(_) => break,
+        if let Some(rx) = &self.results_rx {
+            for _ in 0..admitted {
+                match rx.recv() {
+                    Ok(r) => results.push(r),
+                    Err(_) => break,
+                }
             }
         }
         if let Some(d) = self.dispatcher.take() {

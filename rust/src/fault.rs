@@ -176,6 +176,21 @@ impl FaultConfig {
             delay: Duration::from_millis(2),
         }
     }
+
+    /// The [`chaos`](FaultConfig::chaos) stream rates with every job
+    /// knob zeroed: wire-level havoc (short reads, torn writes,
+    /// injected errors, bit flips) without perturbing job execution.
+    /// The TCP serving soak uses it so conservation and bit-identity
+    /// assertions isolate the *connection* lifecycle — job-level chaos
+    /// has its own tests.
+    pub fn stream_chaos() -> FaultConfig {
+        FaultConfig {
+            panic_first_attempts: 0,
+            p_job_panic: 0,
+            p_job_delay: 0,
+            ..FaultConfig::chaos()
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -493,6 +508,20 @@ mod tests {
         };
         let plan = FaultPlan::new(9, cfg);
         assert_eq!(plan.job_fault(4, 0), JobFault::Delay(Duration::from_millis(3)));
+    }
+
+    #[test]
+    fn stream_chaos_leaves_jobs_alone() {
+        let cfg = FaultConfig::stream_chaos();
+        let full = FaultConfig::chaos();
+        assert_eq!(cfg.p_read_bit_flip, full.p_read_bit_flip);
+        assert_eq!(cfg.p_torn_write, full.p_torn_write);
+        let plan = FaultPlan::new(77, cfg);
+        for job in 0..64u64 {
+            for attempt in 0..3u32 {
+                assert_eq!(plan.job_fault(job, attempt), JobFault::None);
+            }
+        }
     }
 
     #[test]

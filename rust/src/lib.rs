@@ -136,7 +136,10 @@
 //!   (PJRT behind the `pjrt` cargo feature), with bounded, quota-aware job
 //!   ingestion → [`coordinator::Ingest`], layout-aware view transport
 //!   across processes → [`transport`] (checksummed v2 frames;
-//!   `examples/distributed_nbody.rs`), and deterministic fault injection
+//!   `examples/distributed_nbody.rs`), a supervised TCP front-end with
+//!   connection deadlines, typed error/reply frames, and graceful drain
+//!   → [`serve`] ([`serve::Server`] / [`serve::Client`];
+//!   `llama-lab serve --listen`), and deterministic fault injection
 //!   for chaos-testing the whole serving path → [`fault`]
 //!   (`LLAMA_FAULT_SEED`, [`coordinator::RetryPolicy`])
 //!
@@ -173,6 +176,7 @@ pub mod numa;
 pub mod pool;
 pub mod record;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod simd;
 pub mod testing;
@@ -216,9 +220,14 @@ pub mod prelude {
     pub use crate::shard::{thread_count, thread_count_or, ShardCursor, ViewShards};
     pub use crate::simd::{Simd, SimdElem};
     pub use crate::fault::{FaultConfig, FaultPlan, FaultyStream, JobFault};
+    pub use crate::serve::{
+        Client, ClientConfig, ClientError, DrainOutcome, RemoteResult, ServeConfig, ServeMetrics,
+        ServeReport, Server,
+    };
     pub use crate::transport::{
         crc32, decode_adopt, decode_into, decode_into_par, encode, encode_par, wire_error_in,
-        Crc32, WireError, WireMapping, WireMsg, WIRE_VERSION,
+        Crc32, CtrlFrame, TimeoutPhase, WireError, WireMapping, WireMsg, CTRL_MAGIC, MAX_PAYLOAD,
+        WIRE_VERSION,
     };
     pub use crate::tune::{
         migrate_live, AccessTrace, Candidate, CostParams, LayoutPlan, MigrationReport, Planner,

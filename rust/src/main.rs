@@ -13,6 +13,8 @@
 //!
 //! Argument parsing is hand-rolled (offline image carries no clap).
 
+use std::time::Duration;
+
 use llama::coordinator::{
     render_results, Backend, Config, Coordinator, JobSpec, Layout, RetryPolicy,
 };
@@ -26,6 +28,7 @@ fn main() {
     let code = match cmd {
         "run" => cmd_run(rest),
         "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
         "heatmap" => cmd_heatmap(rest),
         "trace" => cmd_trace(rest),
         "tune" => cmd_tune(rest),
@@ -60,6 +63,16 @@ COMMANDS:
   serve    read jobs from stdin, one per line:
            <layout> <backend> <n> <steps> [seed] [threads]
            options: [--workers 2] [--retries 0]
+           --listen ADDR  serve the typed TCP wire protocol instead
+           (docs/SERVING.md §6); stdin EOF or a 'quit' line starts the
+           graceful drain. Options: [--max-conns 64] [--idle-ms 30000]
+           [--frame-ms 2000] [--io-ms 2000] [--drain-ms 5000]
+           [--queue 1024] [--quota 0] [--workers 2] [--retries 0]
+  submit   --connect HOST:PORT submit jobs to a listening server:
+           [--layout soa] [--backend simd] [--n 1024] [--steps 10]
+           [--seed 1] [--threads 0] [--client 0] [--repeat 1]
+           [--retries 4]  (reconnects and honors server retry_after
+                           hints; quota/draining rejections are final)
   heatmap  [--n 256] [--granularity 64] [--csv out.csv]
   trace    [--n 256] [--steps 2]
   tune     [--n 1024] [--steps 2] [--seed 1] [--layout aos|soa|aosoa]
@@ -134,6 +147,9 @@ fn cmd_run(rest: &[String]) -> i32 {
 }
 
 fn cmd_serve(rest: &[String]) -> i32 {
+    if let Some(addr) = opt(rest, "--listen") {
+        return cmd_serve_listen(rest, &addr);
+    }
     let workers = opt_usize(rest, "--workers", 2);
     use std::io::BufRead;
     let stdin = std::io::stdin();
@@ -187,6 +203,119 @@ fn cmd_serve(rest: &[String]) -> i32 {
     println!("--- serving status ---");
     print!("{}", ing.metrics().render());
     i32::from(results.iter().any(|r| r.error.is_some()))
+}
+
+/// `serve --listen ADDR`: the supervised TCP front-end. Blocks until
+/// stdin EOF (or a `quit` line), then drains gracefully and prints the
+/// status block CI greps (`conns:` counters + the `drain:` verdict).
+fn cmd_serve_listen(rest: &[String], addr: &str) -> i32 {
+    use llama::serve::{DrainOutcome, ServeConfig, Server};
+
+    let opt_ms = |name: &str, default: usize| {
+        Duration::from_millis(opt_usize(rest, name, default) as u64)
+    };
+    let cfg = ServeConfig {
+        max_connections: opt_usize(rest, "--max-conns", 64),
+        idle_timeout: opt_ms("--idle-ms", 30_000),
+        frame_timeout: opt_ms("--frame-ms", 2_000),
+        io_timeout: opt_ms("--io-ms", 2_000),
+        drain_timeout: opt_ms("--drain-ms", 5_000),
+        ..ServeConfig::default()
+    };
+    let coord = Config {
+        workers: opt_usize(rest, "--workers", 2),
+        max_batch: 8,
+        engine: None, // PJRT submits fail typed in the Result frame
+        retry: RetryPolicy::retries(opt_usize(rest, "--retries", 0) as u32),
+        queue_capacity: opt_usize(rest, "--queue", 1024),
+        client_quota: opt_usize(rest, "--quota", 0),
+        faults: FaultPlan::from_env(),
+        ..Config::default()
+    };
+    let server = match Server::bind(addr, coord, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            return 1;
+        }
+    };
+    println!("listening on {}", server.local_addr());
+
+    // A driving script (CI uses a fifo) owns the lifetime: the drain
+    // starts on stdin EOF or an explicit `quit` line.
+    use std::io::BufRead;
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        match line {
+            Ok(l) if l.trim() == "quit" => break,
+            Ok(_) => continue,
+            Err(_) => break,
+        }
+    }
+
+    let report = server.shutdown();
+    println!("--- serving status ---");
+    print!("{}", report.coordinator.render());
+    print!("{}", report.render());
+    i32::from(report.outcome != DrainOutcome::Completed)
+}
+
+/// `submit --connect HOST:PORT`: the wire client. Retries through
+/// transport failures and server backpressure hints; exits nonzero if
+/// any job ultimately failed.
+fn cmd_submit(rest: &[String]) -> i32 {
+    use llama::serve::{Client, ClientConfig};
+
+    let Some(addr) = opt(rest, "--connect") else {
+        eprintln!("submit requires --connect HOST:PORT");
+        return 2;
+    };
+    let layout = opt(rest, "--layout").and_then(|s| Layout::parse(&s)).unwrap_or(Layout::SoaMb);
+    let backend =
+        opt(rest, "--backend").and_then(|s| Backend::parse(&s)).unwrap_or(Backend::NativeSimd);
+    let n = opt_usize(rest, "--n", 1024);
+    let steps = opt_usize(rest, "--steps", 10);
+    let seed = opt_usize(rest, "--seed", 1) as u64;
+    let threads = opt_usize(rest, "--threads", 0);
+    let repeat = opt_usize(rest, "--repeat", 1);
+    let cfg = ClientConfig {
+        client_id: opt_usize(rest, "--client", 0) as u64,
+        retry: RetryPolicy::retries(opt_usize(rest, "--retries", 4) as u32),
+        faults: FaultPlan::from_env(),
+        ..ClientConfig::default()
+    };
+    let mut client = match Client::new(addr.as_str(), cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("resolve {addr}: {e}");
+            return 1;
+        }
+    };
+    let mut failures = 0;
+    for i in 0..repeat {
+        let spec = JobSpec { id: 0, layout, backend, n, steps, seed: seed + i as u64, threads };
+        match client.submit(&spec) {
+            Ok(r) => {
+                let err = r
+                    .error
+                    .as_deref()
+                    .map(|e| format!(" — error: {e}"))
+                    .unwrap_or_default();
+                println!(
+                    "job {}: {} attempt(s), {} thread(s), exec {:?}, drift {:.3e}, {:.0} steps/s{}",
+                    r.id, r.attempts, r.threads, r.exec_time, r.energy_drift, r.steps_per_sec, err
+                );
+                if r.error.is_some() {
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("job {i}: {e}");
+                failures += 1;
+            }
+        }
+    }
+    i32::from(failures > 0)
 }
 
 fn cmd_heatmap(rest: &[String]) -> i32 {

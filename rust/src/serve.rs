@@ -1,0 +1,1595 @@
+//! Supervised TCP serving front-end for the coordinator.
+//!
+//! [`Server`] binds a `TcpListener` and speaks the [`CtrlFrame`]
+//! protocol (magic `LLWc`, same `WIRE_VERSION`/CRC discipline as view
+//! frames): clients send `Submit`, the server answers with exactly one
+//! typed reply per submit — `Result`, `QueueFull{retry_after_ms}`,
+//! `QuotaExceeded`, `Corrupt`, `Draining`, `Shed` or `TimedOut` — so
+//! every failure that used to die at the process edge (the ingest
+//! backpressure hint above all) crosses the wire as data.
+//!
+//! Connection lifecycle (full state machine in `docs/SERVING.md` §6):
+//!
+//! - **Accept-time shedding.** At most [`ServeConfig::max_connections`]
+//!   connections are served; one over the cap gets a typed
+//!   [`CtrlFrame::Shed`] with a reconnect hint instead of a silent
+//!   close.
+//! - **Idle timeout.** A connection with no frame in progress must send
+//!   a byte within [`ServeConfig::idle_timeout`] or it is evicted with
+//!   `TimedOut{phase: Idle}`.
+//! - **Partial-frame deadline** (slow-loris protection). Once the first
+//!   byte of a frame arrives, the whole frame must land within
+//!   [`ServeConfig::frame_timeout`] or the client gets
+//!   `TimedOut{phase: MidFrame}` and a disconnect. Both budgets are
+//!   enforced with `set_read_timeout` windows that shrink as the
+//!   deadline nears — a trickling client cannot reset them.
+//! - **Graceful drain.** [`Server::shutdown`] stops accepting, replies
+//!   `Draining` to new submits, flushes in-flight jobs under
+//!   [`ServeConfig::drain_timeout`], then hard-aborts whatever is left
+//!   (socket shutdown; running jobs are detached — Rust threads cannot
+//!   be killed). The [`ServeReport`] renders the outcome plus exact
+//!   connection/frame counters.
+//!
+//! [`Client`] is the matching caller: it reconnects, honors server
+//! `retry_after` hints (sleeping the hinted backoff before
+//! resubmitting), and falls back to [`RetryPolicy`] backoff for
+//! transport-level failures. The whole lifecycle is chaos-tested by
+//! threading [`crate::fault::FaultyStream`] over the client side of
+//! real sockets (`rust/tests/serve.rs`).
+//!
+//! Everything here is std-only: `TcpListener`/`TcpStream`, one thread
+//! per connection (the cap bounds them), `mpsc` for result routing.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{self, Read};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ingest::{Admission, Ingest, SubmitError};
+use crate::coordinator::job::{Backend, JobResult, JobSpec, Layout};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::{Config, Coordinator, RetryPolicy};
+use crate::fault::{hash2, FaultConfig, FaultPlan, FaultyStream};
+use crate::transport::{wire_error_in, CtrlFrame, TimeoutPhase, WireError};
+
+/// How often the accept loop re-polls its nonblocking listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Floor for any `set_read_timeout` window: a zero duration would be
+/// rejected by the OS, and sub-millisecond windows just spin.
+const MIN_READ_WINDOW: Duration = Duration::from_millis(1);
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Tunables for the TCP front-end (the coordinator itself is configured
+/// separately via [`Config`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Served-connection cap; one over it is shed with a typed reply.
+    pub max_connections: usize,
+    /// Max quiet time between frames before eviction.
+    pub idle_timeout: Duration,
+    /// Max time from a frame's first byte to its last (slow-loris cap).
+    pub frame_timeout: Duration,
+    /// Write deadline for replies (and the shed notice).
+    pub io_timeout: Duration,
+    /// How long [`Server::shutdown`] waits for in-flight jobs before
+    /// hard-aborting the remaining connections.
+    pub drain_timeout: Duration,
+    /// Reconnect hint carried by the [`CtrlFrame::Shed`] reply.
+    pub shed_retry: Duration,
+    /// Poll granularity for result waits and the drain loop.
+    pub result_poll: Duration,
+    /// Largest particle count a remote submit may request.
+    pub max_job_records: u64,
+    /// Largest step count a remote submit may request.
+    pub max_job_steps: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_connections: 64,
+            idle_timeout: Duration::from_secs(30),
+            frame_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(2),
+            drain_timeout: Duration::from_secs(5),
+            shed_retry: Duration::from_millis(100),
+            result_poll: Duration::from_millis(25),
+            max_job_records: 1 << 20,
+            max_job_steps: 1 << 20,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deadline bookkeeping (pure state machine — Miri-tested)
+// ---------------------------------------------------------------------------
+
+/// Which deadline currently governs a connection's next read, and how
+/// much of it is left.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReadBudget {
+    /// Remaining time before the governing deadline fires.
+    pub remaining: Duration,
+    /// Which timeout fires when `remaining` hits zero.
+    pub phase: TimeoutPhase,
+}
+
+/// Per-connection deadline state machine over *relative* time.
+///
+/// Deliberately clock-free: callers feed it `t0.elapsed()` offsets, so
+/// the logic is deterministic under test (and runs under Miri, which
+/// the socket plumbing cannot). Between frames the **idle** budget
+/// counts from the last completed frame; from the first byte of a frame
+/// until [`FrameClock::frame_done`] the **mid-frame** budget counts
+/// from that first byte — progress inside a frame does *not* extend it,
+/// which is the slow-loris defense.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameClock {
+    idle: Duration,
+    frame: Duration,
+    frame_open: bool,
+    frame_start: Duration,
+    last_done: Duration,
+}
+
+impl FrameClock {
+    /// A fresh connection clock; `now` starts at zero.
+    pub fn new(idle: Duration, frame: Duration) -> FrameClock {
+        FrameClock {
+            idle,
+            frame,
+            frame_open: false,
+            frame_start: Duration::ZERO,
+            last_done: Duration::ZERO,
+        }
+    }
+
+    /// Record that at least one byte arrived at offset `now`. The first
+    /// byte after a completed frame opens the next frame and starts the
+    /// mid-frame budget; later bytes of the same frame change nothing.
+    pub fn byte_read(&mut self, now: Duration) {
+        if !self.frame_open {
+            self.frame_open = true;
+            self.frame_start = now;
+        }
+    }
+
+    /// Record that a full frame was parsed at offset `now`; the idle
+    /// budget restarts here.
+    pub fn frame_done(&mut self, now: Duration) {
+        self.frame_open = false;
+        self.last_done = now;
+    }
+
+    /// Is a frame currently in progress (started but not done)?
+    pub fn mid_frame(&self) -> bool {
+        self.frame_open
+    }
+
+    /// The governing deadline at offset `now`.
+    pub fn budget(&self, now: Duration) -> ReadBudget {
+        if self.frame_open {
+            ReadBudget {
+                remaining: (self.frame_start + self.frame).saturating_sub(now),
+                phase: TimeoutPhase::MidFrame,
+            }
+        } else {
+            ReadBudget {
+                remaining: (self.last_done + self.idle).saturating_sub(now),
+                phase: TimeoutPhase::Idle,
+            }
+        }
+    }
+}
+
+/// Typed payload carried by deadline-expiry `io::Error`s, so the
+/// failure classifier can tell *which* phase fired without re-deriving
+/// it from clock state.
+#[derive(Clone, Copy, Debug)]
+pub struct DeadlineExpired {
+    /// Which budget ran out.
+    pub phase: TimeoutPhase,
+}
+
+impl std::fmt::Display for DeadlineExpired {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "connection deadline expired ({})", self.phase)
+    }
+}
+
+impl std::error::Error for DeadlineExpired {}
+
+fn deadline_expired(phase: TimeoutPhase) -> io::Error {
+    io::Error::new(io::ErrorKind::TimedOut, DeadlineExpired { phase })
+}
+
+/// A [`Read`] over a `TcpStream` that enforces a [`FrameClock`]: every
+/// read gets a `set_read_timeout` window no longer than the remaining
+/// budget (floor [`MIN_READ_WINDOW`]), so a client trickling one byte
+/// per window still hits the frame deadline.
+struct DeadlineReader<'a> {
+    stream: &'a TcpStream,
+    clock: &'a mut FrameClock,
+    t0: Instant,
+}
+
+impl Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let budget = self.clock.budget(self.t0.elapsed());
+        if budget.remaining.is_zero() {
+            return Err(deadline_expired(budget.phase));
+        }
+        self.stream.set_read_timeout(Some(budget.remaining.max(MIN_READ_WINDOW)))?;
+        let mut inner: &TcpStream = self.stream;
+        match inner.read(buf) {
+            Ok(0) => Ok(0),
+            Ok(n) => {
+                self.clock.byte_read(self.t0.elapsed());
+                Ok(n)
+            }
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                Err(deadline_expired(budget.phase))
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Read-failure taxonomy
+// ---------------------------------------------------------------------------
+
+/// Why a frame read failed, reduced to the server's response policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ReadFailure {
+    /// A connection deadline fired; reply `TimedOut{phase}`, close.
+    TimedOut(TimeoutPhase),
+    /// CRC mismatch; reply `Corrupt{expected, got}`, close.
+    Corrupt {
+        expected: u32,
+        got: u32,
+    },
+    /// Framed garbage (bad magic/version/kind/field); reply
+    /// `Corrupt{0, 0}`, close.
+    Malformed,
+    /// Peer went away (EOF, reset, broken pipe); close silently.
+    Disconnected,
+    /// Anything else the OS produced; close silently.
+    Io,
+}
+
+fn classify_read_failure(e: &io::Error, mid_frame: bool) -> ReadFailure {
+    if let Some(d) = e.get_ref().and_then(|b| b.downcast_ref::<DeadlineExpired>()) {
+        return ReadFailure::TimedOut(d.phase);
+    }
+    if matches!(e.kind(), io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock) {
+        let phase = if mid_frame { TimeoutPhase::MidFrame } else { TimeoutPhase::Idle };
+        return ReadFailure::TimedOut(phase);
+    }
+    if let Some(WireError::Corrupt { expected, got }) = wire_error_in(e) {
+        return ReadFailure::Corrupt { expected: *expected, got: *got };
+    }
+    if e.kind() == io::ErrorKind::InvalidData {
+        return ReadFailure::Malformed;
+    }
+    match e.kind() {
+        io::ErrorKind::UnexpectedEof
+        | io::ErrorKind::ConnectionReset
+        | io::ErrorKind::ConnectionAborted
+        | io::ErrorKind::BrokenPipe => ReadFailure::Disconnected,
+        _ => ReadFailure::Io,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+/// Front-end counters, separate from the coordinator's job
+/// [`Metrics`] — these count *connections and frames*.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    accepted: AtomicU64,
+    active: AtomicU64,
+    shed: AtomicU64,
+    idle_evicted: AtomicU64,
+    slow_frames: AtomicU64,
+    disconnects: AtomicU64,
+    corrupt_frames: AtomicU64,
+    malformed: AtomicU64,
+    submits: AtomicU64,
+    results_sent: AtomicU64,
+    rejects_queue_full: AtomicU64,
+    rejects_quota: AtomicU64,
+    draining_replies: AtomicU64,
+    in_flight: AtomicU64,
+    orphaned: AtomicU64,
+}
+
+impl ServeMetrics {
+    /// Connections admitted past the cap check.
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Acquire)
+    }
+
+    /// Connections currently being served.
+    pub fn active(&self) -> u64 {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// Connections refused at accept time with a `Shed` reply.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Acquire)
+    }
+
+    /// Connections evicted by the idle timeout.
+    pub fn idle_evicted(&self) -> u64 {
+        self.idle_evicted.load(Ordering::Acquire)
+    }
+
+    /// Connections evicted by the partial-frame (slow-loris) deadline.
+    pub fn slow_frames(&self) -> u64 {
+        self.slow_frames.load(Ordering::Acquire)
+    }
+
+    /// Connections that dropped without a clean protocol ending.
+    pub fn disconnects(&self) -> u64 {
+        self.disconnects.load(Ordering::Acquire)
+    }
+
+    /// Frames rejected for CRC mismatch.
+    pub fn corrupt_frames(&self) -> u64 {
+        self.corrupt_frames.load(Ordering::Acquire)
+    }
+
+    /// Frames rejected as framed garbage (bad magic/kind/field or an
+    /// out-of-policy submit).
+    pub fn malformed(&self) -> u64 {
+        self.malformed.load(Ordering::Acquire)
+    }
+
+    /// Submit frames received.
+    pub fn submits(&self) -> u64 {
+        self.submits.load(Ordering::Acquire)
+    }
+
+    /// Result frames delivered.
+    pub fn results_sent(&self) -> u64 {
+        self.results_sent.load(Ordering::Acquire)
+    }
+
+    /// `QueueFull` replies sent (the retry-after hint crossing the wire).
+    pub fn rejects_queue_full(&self) -> u64 {
+        self.rejects_queue_full.load(Ordering::Acquire)
+    }
+
+    /// `QuotaExceeded` replies sent.
+    pub fn rejects_quota(&self) -> u64 {
+        self.rejects_quota.load(Ordering::Acquire)
+    }
+
+    /// `Draining` replies sent.
+    pub fn draining_replies(&self) -> u64 {
+        self.draining_replies.load(Ordering::Acquire)
+    }
+
+    /// Jobs admitted whose result has not yet been written back.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Results that completed after their connection gave up (aborted
+    /// drain or vanished client) — computed work with no recipient.
+    pub fn orphaned(&self) -> u64 {
+        self.orphaned.load(Ordering::Acquire)
+    }
+
+    /// Multi-line status block (the `llama-lab serve` epilogue; CI
+    /// greps the `conns:` line).
+    pub fn render(&self) -> String {
+        let timed_out = self.idle_evicted() + self.slow_frames();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "conns: accepted {} · active {} · shed {} · timed out {} (idle {}, mid-frame {})\n",
+            self.accepted(),
+            self.active(),
+            self.shed(),
+            timed_out,
+            self.idle_evicted(),
+            self.slow_frames(),
+        ));
+        s.push_str(&format!(
+            "frames: submits {} · results {} · queue-full {} · quota {} · draining {} · corrupt {} · malformed {} · disconnects {}\n",
+            self.submits(),
+            self.results_sent(),
+            self.rejects_queue_full(),
+            self.rejects_quota(),
+            self.draining_replies(),
+            self.corrupt_frames(),
+            self.malformed(),
+            self.disconnects(),
+        ));
+        s.push_str(&format!("jobs: in flight {} · orphaned {}\n", self.in_flight(), self.orphaned()));
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Result routing
+// ---------------------------------------------------------------------------
+
+/// Routes the coordinator's streaming [`JobResult`]s to the connection
+/// threads waiting on them, by job id.
+///
+/// Three-way state per id: a **waiter** registered before the result
+/// arrived (send it through), an **unclaimed** result that arrived
+/// before its waiter (rare — the submit path registers immediately, but
+/// the router thread races it), or an **abandoned** id whose waiter
+/// gave up (drain abort, vanished client): its result, when it lands,
+/// counts as orphaned and is dropped.
+#[derive(Clone)]
+struct ResultRouter {
+    state: Arc<Mutex<RouterState>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+#[derive(Default)]
+struct RouterState {
+    waiting: HashMap<u64, mpsc::Sender<JobResult>>,
+    unclaimed: HashMap<u64, JobResult>,
+    abandoned: HashSet<u64>,
+}
+
+enum Claim {
+    /// The result already arrived.
+    Ready(Box<JobResult>),
+    /// Registered; the result will arrive on this channel.
+    Wait(mpsc::Receiver<JobResult>),
+}
+
+impl ResultRouter {
+    fn new(metrics: Arc<ServeMetrics>) -> ResultRouter {
+        ResultRouter { state: Arc::new(Mutex::new(RouterState::default())), metrics }
+    }
+
+    /// Deliver one result (router thread).
+    fn route(&self, r: JobResult) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(tx) = st.waiting.remove(&r.id) {
+            if tx.send(r).is_err() {
+                // Waiter hung up between registering and receiving.
+                self.metrics.orphaned.fetch_add(1, Ordering::Relaxed);
+            }
+        } else if st.abandoned.remove(&r.id) {
+            self.metrics.orphaned.fetch_add(1, Ordering::Relaxed);
+        } else {
+            st.unclaimed.insert(r.id, r);
+        }
+    }
+
+    /// Register interest in job `id` (connection thread).
+    fn claim(&self, id: u64) -> Claim {
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.unclaimed.remove(&id) {
+            return Claim::Ready(Box::new(r));
+        }
+        let (tx, rx) = mpsc::channel();
+        st.waiting.insert(id, tx);
+        Claim::Wait(rx)
+    }
+
+    /// The waiter for `id` gives up; its result (if it ever lands) is
+    /// orphaned.
+    fn abandon(&self, id: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.waiting.remove(&id);
+        if st.unclaimed.remove(&id).is_some() {
+            self.metrics.orphaned.fetch_add(1, Ordering::Relaxed);
+        } else {
+            st.abandoned.insert(id);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+const STATE_RUNNING: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+const STATE_ABORTED: u8 = 2;
+
+struct Shared {
+    cfg: ServeConfig,
+    state: AtomicU8,
+    router_done: AtomicBool,
+    metrics: Arc<ServeMetrics>,
+    coord_metrics: Arc<Metrics>,
+    ingest: Ingest,
+    router: ResultRouter,
+    /// `try_clone`d handles of every served connection, for the
+    /// hard-abort path: `Shutdown::Both` on the clone wakes the
+    /// connection thread's blocked read with EOF.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+}
+
+impl Shared {
+    fn state(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+}
+
+/// How a [`Server::shutdown`] drain ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainOutcome {
+    /// Every in-flight job finished and its result was written back
+    /// within the drain deadline.
+    Completed,
+    /// The deadline fired with jobs still in flight; the remaining
+    /// connections were hard-aborted and the jobs detached.
+    TimedOut,
+}
+
+/// Final accounting from [`Server::shutdown`].
+pub struct ServeReport {
+    /// Drain outcome.
+    pub outcome: DrainOutcome,
+    /// Wall time the drain took (deadline-capped when `TimedOut`).
+    pub elapsed: Duration,
+    /// Connections still open when the server force-closed them.
+    pub aborted_connections: u64,
+    /// Front-end counters (final values).
+    pub metrics: Arc<ServeMetrics>,
+    /// The coordinator's job metrics registry (outlives the drain).
+    pub coordinator: Arc<Metrics>,
+}
+
+fn render_drain(outcome: DrainOutcome, elapsed: Duration, aborted: u64) -> String {
+    match outcome {
+        DrainOutcome::Completed => {
+            format!("drain: completed in {elapsed:?} ({aborted} connections aborted)")
+        }
+        DrainOutcome::TimedOut => {
+            format!("drain: timed out after {elapsed:?} ({aborted} connections aborted)")
+        }
+    }
+}
+
+impl ServeReport {
+    /// The one-line drain verdict (CI greps for
+    /// `^drain: (completed|timed out)`).
+    pub fn drain_line(&self) -> String {
+        render_drain(self.outcome, self.elapsed, self.aborted_connections)
+    }
+
+    /// The full `serve` status block: front-end counters plus the
+    /// drain line.
+    pub fn render(&self) -> String {
+        format!("{}{}\n", self.metrics.render(), self.drain_line())
+    }
+}
+
+/// A running TCP front-end. Construct with [`Server::bind`], stop with
+/// [`Server::shutdown`] (graceful drain). Dropping without `shutdown`
+/// hard-aborts.
+pub struct Server {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    coordinator: Option<Coordinator>,
+    accept_thread: Option<JoinHandle<()>>,
+    router_thread: Option<JoinHandle<()>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Start a coordinator under `coord` and serve it on `addr`
+    /// (`"127.0.0.1:0"` picks a free port — read it back with
+    /// [`Server::local_addr`]).
+    pub fn bind<A: ToSocketAddrs>(addr: A, coord: Config, cfg: ServeConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+
+        let mut coordinator = Coordinator::start(coord);
+        let results = coordinator
+            .take_results()
+            .expect("fresh coordinator owns its result stream");
+
+        let metrics = Arc::new(ServeMetrics::default());
+        let router = ResultRouter::new(metrics.clone());
+        let shared = Arc::new(Shared {
+            cfg,
+            state: AtomicU8::new(STATE_RUNNING),
+            router_done: AtomicBool::new(false),
+            metrics,
+            coord_metrics: coordinator.metrics_handle(),
+            ingest: coordinator.ingest(),
+            router: router.clone(),
+            conns: Mutex::new(HashMap::new()),
+        });
+
+        let router_thread = {
+            let shared = shared.clone();
+            thread::spawn(move || {
+                for r in results.iter() {
+                    router.route(r);
+                }
+                shared.router_done.store(true, Ordering::Release);
+            })
+        };
+
+        let conn_threads = Arc::new(Mutex::new(Vec::new()));
+        let accept_thread = {
+            let shared = shared.clone();
+            let conn_threads = conn_threads.clone();
+            thread::spawn(move || accept_loop(&listener, &shared, &conn_threads))
+        };
+
+        Ok(Server {
+            shared,
+            local_addr,
+            coordinator: Some(coordinator),
+            accept_thread: Some(accept_thread),
+            router_thread: Some(router_thread),
+            conn_threads,
+        })
+    }
+
+    /// The bound address (resolved port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Front-end counters (live).
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// The coordinator's job metrics registry (live).
+    pub fn coordinator_metrics(&self) -> Arc<Metrics> {
+        self.shared.coord_metrics.clone()
+    }
+
+    /// Graceful drain: stop accepting, answer new submits with
+    /// `Draining`, wait for in-flight jobs under
+    /// [`ServeConfig::drain_timeout`], then force-close whatever
+    /// remains. See [`DrainOutcome`] for the two endings.
+    pub fn shutdown(mut self) -> ServeReport {
+        let shared = self.shared.clone();
+        shared.state.store(STATE_DRAINING, Ordering::Release);
+        let t0 = Instant::now();
+
+        // The accept loop exits within one poll tick (and drops the
+        // listener, freeing the port).
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+
+        // Flush in-flight jobs under the deadline. Connection threads
+        // keep writing results back while we wait.
+        let mut drained = true;
+        while shared.metrics.in_flight.load(Ordering::Acquire) != 0 {
+            if t0.elapsed() >= shared.cfg.drain_timeout {
+                drained = false;
+                break;
+            }
+            thread::sleep(shared.cfg.result_poll.min(ACCEPT_POLL));
+        }
+
+        let coordinator = self.coordinator.take().expect("shutdown consumes the server once");
+        let aborted;
+        if drained {
+            // Nothing in flight: closing ingestion and joining the
+            // coordinator threads is prompt by construction.
+            let _ = coordinator.finish();
+            // finish() dropped the result senders; the router sees EOF.
+            if let Some(h) = self.router_thread.take() {
+                let _ = h.join();
+            }
+            // Evict connections that are idle-parked in a read: a
+            // best-effort Draining notice, then a socket shutdown wakes
+            // them with EOF (no result writes are pending — in-flight
+            // is zero).
+            let conns: Vec<TcpStream> =
+                shared.conns.lock().unwrap().drain().map(|(_, s)| s).collect();
+            aborted = conns.len() as u64;
+            for s in &conns {
+                let _ = CtrlFrame::Draining.write_to(&mut &*s);
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            for h in self.conn_threads.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+        } else {
+            // Hard abort: running jobs cannot be killed (Rust threads),
+            // so detach them. Waiters observe ABORTED within one poll
+            // tick and abandon their ids; socket shutdown wakes any
+            // blocked reads.
+            shared.state.store(STATE_ABORTED, Ordering::Release);
+            let conns: Vec<TcpStream> =
+                shared.conns.lock().unwrap().drain().map(|(_, s)| s).collect();
+            aborted = conns.len() as u64;
+            for s in &conns {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            for h in self.conn_threads.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+            // Drop, not finish(): Drop only closes ingestion, so this
+            // never blocks on the detached jobs; the router thread
+            // (also detached) exits once the last worker does.
+            drop(coordinator);
+            drop(self.router_thread.take());
+        }
+
+        ServeReport {
+            outcome: if drained { DrainOutcome::Completed } else { DrainOutcome::TimedOut },
+            elapsed: t0.elapsed(),
+            aborted_connections: aborted,
+            metrics: shared.metrics.clone(),
+            coordinator: shared.coord_metrics.clone(),
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // `shutdown` leaves `coordinator` empty; a raw drop hard-aborts.
+        if self.coordinator.is_some() {
+            self.shared.state.store(STATE_ABORTED, Ordering::Release);
+            for (_, s) in self.shared.conns.lock().unwrap().drain() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            if let Some(h) = self.accept_thread.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept loop + per-connection protocol
+// ---------------------------------------------------------------------------
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>, threads: &Arc<Mutex<Vec<JoinHandle<()>>>>) {
+    let mut next_conn = 0u64;
+    loop {
+        if shared.state() != STATE_RUNNING {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The accepted socket may inherit the listener's
+                // nonblocking flag; the protocol threads expect
+                // timeout-based blocking reads.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_write_timeout(Some(shared.cfg.io_timeout));
+
+                let m = &shared.metrics;
+                if m.active.load(Ordering::Acquire) >= shared.cfg.max_connections as u64 {
+                    m.shed.fetch_add(1, Ordering::Relaxed);
+                    let mut s = &stream;
+                    let _ = CtrlFrame::Shed { retry_after_ms: ms(shared.cfg.shed_retry) }
+                        .write_to(&mut s);
+                    let _ = stream.shutdown(Shutdown::Both);
+                    continue;
+                }
+                m.accepted.fetch_add(1, Ordering::Relaxed);
+                m.active.fetch_add(1, Ordering::AcqRel);
+
+                let id = next_conn;
+                next_conn += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().unwrap().insert(id, clone);
+                }
+                let sh = shared.clone();
+                let handle = thread::spawn(move || {
+                    serve_conn(&stream, &sh);
+                    sh.conns.lock().unwrap().remove(&id);
+                    sh.metrics.active.fetch_sub(1, Ordering::AcqRel);
+                });
+                let mut ts = threads.lock().unwrap();
+                ts.retain(|h| !h.is_finished());
+                ts.push(handle);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
+            Err(_) => thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Serve one connection until it ends: a loop of (read frame under the
+/// deadline clock) → (handle submit / classify failure).
+fn serve_conn(stream: &TcpStream, sh: &Shared) {
+    let t0 = Instant::now();
+    let mut clock = FrameClock::new(sh.cfg.idle_timeout, sh.cfg.frame_timeout);
+    loop {
+        let frame = {
+            let mut dr = DeadlineReader { stream, clock: &mut clock, t0 };
+            CtrlFrame::read_from(&mut dr)
+        };
+        match frame {
+            Ok(CtrlFrame::Submit { client, layout, backend, n, steps, seed, threads }) => {
+                clock.frame_done(t0.elapsed());
+                let keep = handle_submit(
+                    stream, sh, client, layout, backend, n, steps, seed, threads,
+                );
+                if !keep {
+                    return;
+                }
+            }
+            Ok(_) => {
+                // Reply kinds are server → client only; a client
+                // sending one is framed garbage.
+                sh.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = CtrlFrame::Corrupt { expected: 0, got: 0 }.write_to(&mut &*stream);
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+            Err(e) => {
+                handle_read_failure(&e, &clock, stream, sh);
+                return;
+            }
+        }
+    }
+}
+
+fn handle_read_failure(e: &io::Error, clock: &FrameClock, stream: &TcpStream, sh: &Shared) {
+    let m = &sh.metrics;
+    match classify_read_failure(e, clock.mid_frame()) {
+        ReadFailure::TimedOut(phase) => {
+            match phase {
+                TimeoutPhase::Idle => m.idle_evicted.fetch_add(1, Ordering::Relaxed),
+                TimeoutPhase::MidFrame => m.slow_frames.fetch_add(1, Ordering::Relaxed),
+            };
+            let _ = CtrlFrame::TimedOut { phase }.write_to(&mut &*stream);
+        }
+        ReadFailure::Corrupt { expected, got } => {
+            m.corrupt_frames.fetch_add(1, Ordering::Relaxed);
+            sh.coord_metrics.on_corrupt_frame();
+            let _ = CtrlFrame::Corrupt { expected, got }.write_to(&mut &*stream);
+        }
+        ReadFailure::Malformed => {
+            m.malformed.fetch_add(1, Ordering::Relaxed);
+            sh.coord_metrics.on_corrupt_frame();
+            let _ = CtrlFrame::Corrupt { expected: 0, got: 0 }.write_to(&mut &*stream);
+        }
+        ReadFailure::Disconnected | ReadFailure::Io => {
+            m.disconnects.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Handle one submit end-to-end; returns whether the connection stays
+/// open.
+#[allow(clippy::too_many_arguments)]
+fn handle_submit(
+    stream: &TcpStream,
+    sh: &Shared,
+    client: u64,
+    layout: u8,
+    backend: u8,
+    n: u64,
+    steps: u64,
+    seed: u64,
+    threads: u32,
+) -> bool {
+    let m = &sh.metrics;
+    m.submits.fetch_add(1, Ordering::Relaxed);
+
+    if sh.state() != STATE_RUNNING {
+        m.draining_replies.fetch_add(1, Ordering::Relaxed);
+        let _ = CtrlFrame::Draining.write_to(&mut &*stream);
+        let _ = stream.shutdown(Shutdown::Both);
+        return false;
+    }
+
+    let Some(spec) = decode_submit(&sh.cfg, layout, backend, n, steps, seed, threads) else {
+        m.malformed.fetch_add(1, Ordering::Relaxed);
+        let _ = CtrlFrame::Corrupt { expected: 0, got: 0 }.write_to(&mut &*stream);
+        let _ = stream.shutdown(Shutdown::Both);
+        return false;
+    };
+
+    // In-flight goes up *before* admission so the drain loop can never
+    // observe "queue empty, nothing in flight" between the two.
+    m.in_flight.fetch_add(1, Ordering::AcqRel);
+    let id = match sh.ingest.submit_from(client, spec, Admission::Reject) {
+        Ok(id) => id,
+        Err(e) => {
+            m.in_flight.fetch_sub(1, Ordering::AcqRel);
+            return match e {
+                SubmitError::QueueFull { retry_after } => {
+                    m.rejects_queue_full.fetch_add(1, Ordering::Relaxed);
+                    CtrlFrame::QueueFull { retry_after_ms: ms(retry_after) }
+                        .write_to(&mut &*stream)
+                        .is_ok()
+                }
+                SubmitError::QuotaExceeded { client } => {
+                    m.rejects_quota.fetch_add(1, Ordering::Relaxed);
+                    CtrlFrame::QuotaExceeded { client }.write_to(&mut &*stream).is_ok()
+                }
+                // Unreachable under Admission::Reject; answer like a
+                // full queue with the floor hint.
+                SubmitError::DeadlineExceeded => {
+                    m.rejects_queue_full.fetch_add(1, Ordering::Relaxed);
+                    CtrlFrame::QueueFull { retry_after_ms: 1 }.write_to(&mut &*stream).is_ok()
+                }
+                SubmitError::Closed => {
+                    m.draining_replies.fetch_add(1, Ordering::Relaxed);
+                    let _ = CtrlFrame::Draining.write_to(&mut &*stream);
+                    let _ = stream.shutdown(Shutdown::Both);
+                    false
+                }
+            };
+        }
+    };
+
+    match wait_result(sh, id) {
+        Some(r) => {
+            // Write first, then count the job as flushed: the drain
+            // loop must not abort this socket under us.
+            let ok = result_frame(&r).write_to(&mut &*stream).is_ok();
+            if ok {
+                m.results_sent.fetch_add(1, Ordering::Relaxed);
+            } else {
+                m.disconnects.fetch_add(1, Ordering::Relaxed);
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+            m.in_flight.fetch_sub(1, Ordering::AcqRel);
+            ok
+        }
+        None => {
+            // Aborted drain (or the router died): the job is detached.
+            m.in_flight.fetch_sub(1, Ordering::AcqRel);
+            m.draining_replies.fetch_add(1, Ordering::Relaxed);
+            let _ = CtrlFrame::Draining.write_to(&mut &*stream);
+            let _ = stream.shutdown(Shutdown::Both);
+            false
+        }
+    }
+}
+
+/// Block until job `id`'s result arrives, polling so an aborted drain
+/// is noticed within one tick. `None` means the job was detached.
+fn wait_result(sh: &Shared, id: u64) -> Option<JobResult> {
+    let rx = match sh.router.claim(id) {
+        Claim::Ready(r) => return Some(*r),
+        Claim::Wait(rx) => rx,
+    };
+    loop {
+        match rx.recv_timeout(sh.cfg.result_poll) {
+            Ok(r) => return Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if sh.state() == STATE_ABORTED {
+                    sh.router.abandon(id);
+                    return None;
+                }
+                if sh.router_done.load(Ordering::Acquire) {
+                    // Router exited; one last non-blocking look in case
+                    // it routed to us on its way out.
+                    return match rx.try_recv() {
+                        Ok(r) => Some(r),
+                        Err(_) => {
+                            sh.router.abandon(id);
+                            None
+                        }
+                    };
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                sh.router.abandon(id);
+                return None;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire ↔ coordinator type mapping
+// ---------------------------------------------------------------------------
+
+/// Wire code for a [`Layout`] (the `Submit` frame's `layout` byte).
+pub fn layout_code(l: Layout) -> u8 {
+    match l {
+        Layout::Aos => 0,
+        Layout::SoaMb => 1,
+        Layout::Aosoa => 2,
+        Layout::Bf16 => 3,
+    }
+}
+
+/// Decode a `Submit` layout byte.
+pub fn layout_from_code(c: u8) -> Option<Layout> {
+    match c {
+        0 => Some(Layout::Aos),
+        1 => Some(Layout::SoaMb),
+        2 => Some(Layout::Aosoa),
+        3 => Some(Layout::Bf16),
+        _ => None,
+    }
+}
+
+/// Wire code for a [`Backend`] (the `Submit` frame's `backend` byte).
+pub fn backend_code(b: Backend) -> u8 {
+    match b {
+        Backend::NativeScalar => 0,
+        Backend::NativeSimd => 1,
+        Backend::Pjrt => 2,
+    }
+}
+
+/// Decode a `Submit` backend byte.
+pub fn backend_from_code(c: u8) -> Option<Backend> {
+    match c {
+        0 => Some(Backend::NativeScalar),
+        1 => Some(Backend::NativeSimd),
+        2 => Some(Backend::Pjrt),
+        _ => None,
+    }
+}
+
+/// Duration → whole milliseconds for a wire hint, floored at 1 so a
+/// sub-millisecond hint never round-trips to "retry immediately".
+fn ms(d: Duration) -> u64 {
+    u64::try_from(d.as_millis()).unwrap_or(u64::MAX).max(1)
+}
+
+/// Validate and map a `Submit` frame's fields onto a [`JobSpec`]
+/// (id 0 — admission assigns the real one). `None` = out of policy.
+fn decode_submit(
+    cfg: &ServeConfig,
+    layout: u8,
+    backend: u8,
+    n: u64,
+    steps: u64,
+    seed: u64,
+    threads: u32,
+) -> Option<JobSpec> {
+    if n == 0 || n > cfg.max_job_records || steps > cfg.max_job_steps {
+        return None;
+    }
+    Some(JobSpec {
+        id: 0,
+        layout: layout_from_code(layout)?,
+        backend: backend_from_code(backend)?,
+        n: n as usize,
+        steps: steps as usize,
+        seed,
+        threads: threads as usize,
+    })
+}
+
+fn result_frame(r: &JobResult) -> CtrlFrame {
+    CtrlFrame::Result {
+        id: r.id,
+        attempts: r.attempts,
+        threads: u32::try_from(r.threads).unwrap_or(u32::MAX),
+        exec_ns: u64::try_from(r.exec_time.as_nanos()).unwrap_or(u64::MAX),
+        queue_ns: u64::try_from(r.queue_time.as_nanos()).unwrap_or(u64::MAX),
+        energy_drift: r.energy_drift,
+        steps_per_sec: r.steps_per_sec,
+        error: r.error.clone().unwrap_or_default(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Client-side knobs for [`Client`].
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Identity sent with every submit (per-client quota accounting).
+    pub client_id: u64,
+    /// Attempt budget and transport-failure backoff shape. Server
+    /// `retry_after` hints override the backoff sleep when present.
+    pub retry: RetryPolicy,
+    /// Connect/write deadline.
+    pub io_timeout: Duration,
+    /// Read deadline for a reply — generous, because the server holds
+    /// the connection while the job runs.
+    pub result_timeout: Duration,
+    /// Chaos hook: wrap each connection's stream in a
+    /// [`FaultyStream`] under this plan (site = hash of client id and
+    /// a per-connection counter, so reconnects draw fresh schedules).
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            client_id: 0,
+            retry: RetryPolicy::retries(4),
+            io_timeout: Duration::from_secs(2),
+            result_timeout: Duration::from_secs(60),
+            faults: None,
+        }
+    }
+}
+
+/// A job outcome as seen across the wire.
+#[derive(Clone, Debug)]
+pub struct RemoteResult {
+    /// Server-assigned job id.
+    pub id: u64,
+    /// Execution attempts the coordinator used.
+    pub attempts: u32,
+    /// Threads the job ran with.
+    pub threads: u32,
+    /// Execution wall-clock.
+    pub exec_time: Duration,
+    /// Queue wait.
+    pub queue_time: Duration,
+    /// Relative energy drift (bit-exact across the wire).
+    pub energy_drift: f64,
+    /// Steps per second achieved.
+    pub steps_per_sec: f64,
+    /// The job's typed failure after retries, if any.
+    pub error: Option<String>,
+}
+
+/// Why a [`Client::submit`] gave up.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientError {
+    /// The server is draining/closed; resubmitting there is pointless.
+    Draining,
+    /// This client is at its per-client queue quota.
+    QuotaExceeded {
+        /// The client id the server reported.
+        client: u64,
+    },
+    /// The server answered outside the protocol.
+    Protocol(String),
+    /// The attempt budget ran out on retryable failures.
+    Exhausted {
+        /// Attempts spent.
+        attempts: u32,
+        /// The last failure, human-readable.
+        last: String,
+    },
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Draining => write!(f, "server is draining"),
+            ClientError::QuotaExceeded { client } => {
+                write!(f, "client {client} exceeded its queue quota")
+            }
+            ClientError::Protocol(what) => write!(f, "protocol violation: {what}"),
+            ClientError::Exhausted { attempts, last } => {
+                write!(f, "gave up after {attempts} attempts (last: {last})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// What one wire exchange concluded.
+enum Step {
+    Done(Box<RemoteResult>),
+    Fatal(ClientError),
+    /// Retry after the server's hint.
+    RetryAfter(Duration, String),
+    /// Retry after policy backoff.
+    Backoff(String),
+}
+
+/// Reconnecting submit client for a [`Server`]. One outstanding job per
+/// client (the protocol is strictly request/reply per connection); run
+/// several clients for concurrency.
+pub struct Client {
+    addr: SocketAddr,
+    cfg: ClientConfig,
+    conn: Option<FaultyStream<TcpStream>>,
+    conns_opened: u64,
+    submitted: u64,
+}
+
+impl Client {
+    /// A client for the server at `addr`. Connects lazily on the first
+    /// submit (and re-connects after any transport failure).
+    pub fn new<A: ToSocketAddrs>(addr: A, cfg: ClientConfig) -> io::Result<Client> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "address resolved empty"))?;
+        Ok(Client { addr, cfg, conn: None, conns_opened: 0, submitted: 0 })
+    }
+
+    /// Connections this client has opened (reconnects make it > 1).
+    pub fn conns_opened(&self) -> u64 {
+        self.conns_opened
+    }
+
+    /// Submit one job and wait for its result, retrying through
+    /// transport failures, `QueueFull` (sleeping the server's
+    /// `retry_after_ms` hint) and `Shed` (reconnecting after the hint)
+    /// up to the [`RetryPolicy`] attempt budget. `QuotaExceeded` and
+    /// `Draining` are terminal.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<RemoteResult, ClientError> {
+        self.submitted += 1;
+        let frame = submit_frame(self.cfg.client_id, spec);
+        let max = self.cfg.retry.max_attempts.max(1);
+        let mut last = String::from("no attempt made");
+        for attempt in 1..=max {
+            match self.try_once(&frame) {
+                Step::Done(r) => return Ok(*r),
+                Step::Fatal(e) => return Err(e),
+                Step::RetryAfter(hint, why) => {
+                    last = why;
+                    if attempt < max {
+                        thread::sleep(hint);
+                    }
+                }
+                Step::Backoff(why) => {
+                    last = why;
+                    if attempt < max {
+                        thread::sleep(self.cfg.retry.backoff(attempt, self.submitted));
+                    }
+                }
+            }
+        }
+        Err(ClientError::Exhausted { attempts: max, last })
+    }
+
+    fn disconnect(&mut self) {
+        self.conn = None;
+    }
+
+    fn ensure_conn(&mut self) -> io::Result<&mut FaultyStream<TcpStream>> {
+        if self.conn.is_none() {
+            let stream = TcpStream::connect(self.addr)?;
+            stream.set_nodelay(true)?;
+            stream.set_write_timeout(Some(self.cfg.io_timeout))?;
+            stream.set_read_timeout(Some(self.cfg.result_timeout))?;
+            self.conns_opened += 1;
+            let site = hash2(self.cfg.client_id, self.conns_opened);
+            let wrapped = match &self.cfg.faults {
+                Some(plan) => plan.stream(site, stream),
+                // Default config injects nothing: pure passthrough.
+                None => FaultyStream::new(stream, 0, FaultConfig::default()),
+            };
+            self.conn = Some(wrapped);
+        }
+        Ok(self.conn.as_mut().expect("connection just ensured"))
+    }
+
+    fn try_once(&mut self, frame: &CtrlFrame) -> Step {
+        let wrote = match self.ensure_conn() {
+            Ok(s) => frame.write_to(s),
+            Err(e) => return Step::Backoff(format!("connect: {e}")),
+        };
+        if let Err(e) = wrote {
+            self.disconnect();
+            return Step::Backoff(format!("send: {e}"));
+        }
+        let reply = {
+            let s = self.conn.as_mut().expect("connection present after write");
+            CtrlFrame::read_from(s)
+        };
+        match reply {
+            Ok(CtrlFrame::Result {
+                id,
+                attempts,
+                threads,
+                exec_ns,
+                queue_ns,
+                energy_drift,
+                steps_per_sec,
+                error,
+            }) => Step::Done(Box::new(RemoteResult {
+                id,
+                attempts,
+                threads,
+                exec_time: Duration::from_nanos(exec_ns),
+                queue_time: Duration::from_nanos(queue_ns),
+                energy_drift,
+                steps_per_sec,
+                error: if error.is_empty() { None } else { Some(error) },
+            })),
+            // The connection stays usable after a queue-full reject.
+            Ok(CtrlFrame::QueueFull { retry_after_ms }) => Step::RetryAfter(
+                Duration::from_millis(retry_after_ms.max(1)),
+                format!("queue full, retry after {retry_after_ms} ms"),
+            ),
+            Ok(CtrlFrame::Shed { retry_after_ms }) => {
+                self.disconnect();
+                Step::RetryAfter(
+                    Duration::from_millis(retry_after_ms.max(1)),
+                    "connection shed at accept".into(),
+                )
+            }
+            Ok(CtrlFrame::QuotaExceeded { client }) => {
+                Step::Fatal(ClientError::QuotaExceeded { client })
+            }
+            Ok(CtrlFrame::Draining) => {
+                self.disconnect();
+                Step::Fatal(ClientError::Draining)
+            }
+            Ok(CtrlFrame::Corrupt { .. }) => {
+                // Our frame got mangled in transit; the server closed
+                // the (possibly desynchronized) stream.
+                self.disconnect();
+                Step::Backoff("server rejected the frame as corrupt".into())
+            }
+            Ok(CtrlFrame::TimedOut { phase }) => {
+                self.disconnect();
+                Step::Backoff(format!("server timed the connection out ({phase})"))
+            }
+            Ok(CtrlFrame::Submit { .. }) => {
+                self.disconnect();
+                Step::Fatal(ClientError::Protocol("server sent a Submit frame".into()))
+            }
+            Err(e) => {
+                self.disconnect();
+                Step::Backoff(format!("recv: {e}"))
+            }
+        }
+    }
+}
+
+/// Encode a [`JobSpec`] as the `Submit` frame `client` sends.
+pub fn submit_frame(client: u64, spec: &JobSpec) -> CtrlFrame {
+    CtrlFrame::Submit {
+        client,
+        layout: layout_code(spec.layout),
+        backend: backend_code(spec.backend),
+        n: spec.n as u64,
+        steps: spec.steps as u64,
+        seed: spec.seed,
+        threads: u32::try_from(spec.threads).unwrap_or(u32::MAX),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests (stream-free state machines only — these run under Miri; the
+// socket lifecycle is integration-tested in rust/tests/serve.rs)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn frame_clock_idle_budget_counts_from_last_frame() {
+        let mut c = FrameClock::new(10 * MS, 4 * MS);
+        let b = c.budget(Duration::ZERO);
+        assert_eq!(b.phase, TimeoutPhase::Idle);
+        assert_eq!(b.remaining, 10 * MS);
+
+        // Finish a frame at t=6ms: idle restarts there.
+        c.byte_read(5 * MS);
+        c.frame_done(6 * MS);
+        let b = c.budget(8 * MS);
+        assert_eq!(b.phase, TimeoutPhase::Idle);
+        assert_eq!(b.remaining, 8 * MS);
+
+        // Budget saturates at zero past the deadline.
+        let b = c.budget(20 * MS);
+        assert_eq!(b.remaining, Duration::ZERO);
+        assert_eq!(b.phase, TimeoutPhase::Idle);
+    }
+
+    #[test]
+    fn frame_clock_mid_frame_budget_is_not_extended_by_progress() {
+        let mut c = FrameClock::new(10 * MS, 4 * MS);
+        c.byte_read(2 * MS); // frame opens at t=2ms → deadline t=6ms
+        assert!(c.mid_frame());
+
+        // Trickling bytes do not move the deadline (slow-loris).
+        c.byte_read(3 * MS);
+        c.byte_read(5 * MS);
+        let b = c.budget(5 * MS);
+        assert_eq!(b.phase, TimeoutPhase::MidFrame);
+        assert_eq!(b.remaining, MS);
+
+        let b = c.budget(7 * MS);
+        assert_eq!(b.remaining, Duration::ZERO);
+        assert_eq!(b.phase, TimeoutPhase::MidFrame);
+
+        // Completing the frame closes it and restores the idle phase.
+        c.frame_done(5 * MS);
+        assert!(!c.mid_frame());
+        assert_eq!(c.budget(5 * MS).phase, TimeoutPhase::Idle);
+    }
+
+    fn result(id: u64) -> JobResult {
+        JobResult {
+            id,
+            worker: 0,
+            batch_id: 0,
+            exec_time: Duration::from_millis(3),
+            queue_time: Duration::from_millis(1),
+            energy_drift: 1e-9,
+            steps_per_sec: 1000.0,
+            threads: 1,
+            attempts: 1,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn router_delivers_to_registered_waiter() {
+        let m = Arc::new(ServeMetrics::default());
+        let router = ResultRouter::new(m.clone());
+        let rx = match router.claim(7) {
+            Claim::Wait(rx) => rx,
+            Claim::Ready(_) => panic!("no result routed yet"),
+        };
+        router.route(result(7));
+        assert_eq!(rx.try_recv().expect("routed").id, 7);
+        assert_eq!(m.orphaned(), 0);
+    }
+
+    #[test]
+    fn router_hands_over_early_results() {
+        let m = Arc::new(ServeMetrics::default());
+        let router = ResultRouter::new(m.clone());
+        router.route(result(3)); // result beats the waiter
+        match router.claim(3) {
+            Claim::Ready(r) => assert_eq!(r.id, 3),
+            Claim::Wait(_) => panic!("result should be waiting"),
+        }
+        assert_eq!(m.orphaned(), 0);
+    }
+
+    #[test]
+    fn router_counts_abandoned_results_as_orphaned() {
+        let m = Arc::new(ServeMetrics::default());
+        let router = ResultRouter::new(m.clone());
+
+        // Abandon before the result lands.
+        let _rx = match router.claim(1) {
+            Claim::Wait(rx) => rx,
+            Claim::Ready(_) => panic!("nothing routed"),
+        };
+        router.abandon(1);
+        router.route(result(1));
+        assert_eq!(m.orphaned(), 1);
+
+        // Abandon after the result landed unclaimed.
+        router.route(result(2));
+        router.abandon(2);
+        assert_eq!(m.orphaned(), 2);
+
+        // A dropped receiver at delivery time orphans too.
+        match router.claim(4) {
+            Claim::Wait(rx) => drop(rx),
+            Claim::Ready(_) => panic!("nothing routed"),
+        }
+        router.route(result(4));
+        assert_eq!(m.orphaned(), 3);
+    }
+
+    #[test]
+    fn layout_and_backend_codes_round_trip() {
+        for l in [Layout::Aos, Layout::SoaMb, Layout::Aosoa, Layout::Bf16] {
+            assert_eq!(layout_from_code(layout_code(l)), Some(l));
+        }
+        for b in [Backend::NativeScalar, Backend::NativeSimd, Backend::Pjrt] {
+            assert_eq!(backend_from_code(backend_code(b)), Some(b));
+        }
+        assert_eq!(layout_from_code(200), None);
+        assert_eq!(backend_from_code(200), None);
+    }
+
+    #[test]
+    fn decode_submit_enforces_policy_caps() {
+        let cfg = ServeConfig::default();
+        assert!(decode_submit(&cfg, 0, 0, 64, 10, 1, 0).is_some());
+        assert!(decode_submit(&cfg, 0, 0, 0, 10, 1, 0).is_none(), "n = 0");
+        assert!(
+            decode_submit(&cfg, 0, 0, cfg.max_job_records, 10, 1, 0).is_some(),
+            "n at cap admits"
+        );
+        assert!(
+            decode_submit(&cfg, 0, 0, cfg.max_job_records + 1, 10, 1, 0).is_none(),
+            "n over cap rejects"
+        );
+        assert!(decode_submit(&cfg, 0, 0, 64, cfg.max_job_steps + 1, 1, 0).is_none());
+        assert!(decode_submit(&cfg, 9, 0, 64, 10, 1, 0).is_none(), "bad layout code");
+        assert!(decode_submit(&cfg, 0, 9, 64, 10, 1, 0).is_none(), "bad backend code");
+    }
+
+    #[test]
+    fn ms_floors_at_one_and_saturates() {
+        assert_eq!(ms(Duration::from_micros(10)), 1);
+        assert_eq!(ms(Duration::from_millis(250)), 250);
+        assert_eq!(ms(Duration::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn classify_read_failure_maps_the_taxonomy() {
+        let timed = deadline_expired(TimeoutPhase::MidFrame);
+        assert_eq!(
+            classify_read_failure(&timed, false),
+            ReadFailure::TimedOut(TimeoutPhase::MidFrame),
+            "typed payload wins over the mid_frame flag"
+        );
+
+        let raw_timeout = io::Error::new(io::ErrorKind::TimedOut, "os timeout");
+        assert_eq!(
+            classify_read_failure(&raw_timeout, true),
+            ReadFailure::TimedOut(TimeoutPhase::MidFrame)
+        );
+        assert_eq!(
+            classify_read_failure(&raw_timeout, false),
+            ReadFailure::TimedOut(TimeoutPhase::Idle)
+        );
+
+        let corrupt =
+            io::Error::new(io::ErrorKind::InvalidData, WireError::Corrupt { expected: 7, got: 9 });
+        assert_eq!(
+            classify_read_failure(&corrupt, true),
+            ReadFailure::Corrupt { expected: 7, got: 9 }
+        );
+
+        let malformed = io::Error::new(io::ErrorKind::InvalidData, "bad control magic");
+        assert_eq!(classify_read_failure(&malformed, true), ReadFailure::Malformed);
+
+        let eof = io::Error::new(io::ErrorKind::UnexpectedEof, "eof");
+        assert_eq!(classify_read_failure(&eof, false), ReadFailure::Disconnected);
+        let reset = io::Error::new(io::ErrorKind::ConnectionReset, "reset");
+        assert_eq!(classify_read_failure(&reset, true), ReadFailure::Disconnected);
+        let other = io::Error::new(io::ErrorKind::PermissionDenied, "no");
+        assert_eq!(classify_read_failure(&other, false), ReadFailure::Io);
+    }
+
+    #[test]
+    fn drain_lines_match_the_ci_grep() {
+        let done = render_drain(DrainOutcome::Completed, Duration::from_millis(12), 0);
+        assert!(done.starts_with("drain: completed in "), "{done}");
+        assert!(done.ends_with("(0 connections aborted)"), "{done}");
+        let timed = render_drain(DrainOutcome::TimedOut, Duration::from_secs(5), 3);
+        assert!(timed.starts_with("drain: timed out after "), "{timed}");
+        assert!(timed.ends_with("(3 connections aborted)"), "{timed}");
+    }
+
+    #[test]
+    fn metrics_render_has_the_status_lines() {
+        let m = ServeMetrics::default();
+        m.accepted.store(4, Ordering::Relaxed);
+        m.shed.store(1, Ordering::Relaxed);
+        m.idle_evicted.store(2, Ordering::Relaxed);
+        m.slow_frames.store(1, Ordering::Relaxed);
+        let text = m.render();
+        assert!(text.contains("conns: accepted 4 · active 0 · shed 1 · timed out 3 (idle 2, mid-frame 1)"), "{text}");
+        assert!(text.lines().any(|l| l.starts_with("frames: ")), "{text}");
+        assert!(text.lines().any(|l| l.starts_with("jobs: ")), "{text}");
+    }
+
+    #[test]
+    fn result_frame_is_lossless_for_the_fields_that_cross() {
+        let mut r = result(42);
+        r.attempts = 3;
+        r.threads = 8;
+        r.error = Some("boom".into());
+        let f = result_frame(&r);
+        match f {
+            CtrlFrame::Result { id, attempts, threads, energy_drift, error, .. } => {
+                assert_eq!(id, 42);
+                assert_eq!(attempts, 3);
+                assert_eq!(threads, 8);
+                assert_eq!(energy_drift.to_bits(), r.energy_drift.to_bits());
+                assert_eq!(error, "boom");
+            }
+            other => panic!("expected a Result frame, got {other:?}"),
+        }
+    }
+}

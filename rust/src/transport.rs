@@ -37,7 +37,17 @@
 //! [`WireError::Corrupt`] (retrievable from the `io::Error` via
 //! [`wire_error_in`]), so a flipped bit in transit becomes a clean retry
 //! instead of silently wrong physics. Truncated or garbage frames fail
-//! with bounded allocation — see `docs/SERVING.md` §5 "Failure model".
+//! with bounded allocation — a declared payload beyond [`MAX_PAYLOAD`]
+//! is refused *before any allocation* with a typed
+//! [`WireError::TooLarge`] — see `docs/SERVING.md` §5 "Failure model".
+//!
+//! **Control frames:** alongside the view-payload frame, the serving
+//! tier speaks a small fixed set of CRC-protected control/reply frames
+//! ([`CtrlFrame`], magic `"LLWc"`): job submission and its typed
+//! outcomes — results, backpressure (`QueueFull` carrying the ingest
+//! `retry_after` hint in milliseconds), quota rejection, corruption
+//! reports, drain notices, accept-time shedding, and deadline
+//! disconnects. Byte spec in `docs/SERVING.md` §6.
 
 use std::io::{self, Read, Write};
 
@@ -56,6 +66,18 @@ pub const WIRE_VERSION: u16 = 2;
 
 /// Frame magic ("LLAMA Wire") guarding against misaligned streams.
 pub const WIRE_MAGIC: [u8; 4] = *b"LLWv";
+
+/// Control-frame magic ("LLAMA Wire control") — distinguishes the
+/// serving tier's [`CtrlFrame`]s from view-payload frames on the same
+/// stream family.
+pub const CTRL_MAGIC: [u8; 4] = *b"LLWc";
+
+/// Cap on the *declared* payload length [`WireMsg::read_from`] accepts
+/// (1 GiB). A header claiming more is rejected with a typed
+/// [`WireError::TooLarge`] **before any payload allocation** — a
+/// corrupt or hostile length prefix can neither reserve absurd memory
+/// nor drag the reader through a gigabyte-scale drain.
+pub const MAX_PAYLOAD: usize = 1 << 30;
 
 // ---------------------------------------------------------------------------
 // CRC-32 (IEEE), hand-rolled — same zero-dependency pattern as `numa.rs`
@@ -202,6 +224,14 @@ pub enum WireError {
         /// CRC-32 the frame carried.
         got: u32,
     },
+    /// Header declares a payload longer than [`MAX_PAYLOAD`]. Raised by
+    /// [`WireMsg::read_from`] before any payload allocation.
+    TooLarge {
+        /// Payload length the header declared.
+        declared: u64,
+        /// The cap ([`MAX_PAYLOAD`]).
+        cap: u64,
+    },
 }
 
 impl std::fmt::Display for WireError {
@@ -227,6 +257,9 @@ impl std::fmt::Display for WireError {
                     f,
                     "frame corrupt: computed crc32 {expected:#010x}, frame carries {got:#010x}"
                 )
+            }
+            WireError::TooLarge { declared, cap } => {
+                write!(f, "declared payload length {declared} exceeds the {cap}-byte cap")
             }
         }
     }
@@ -490,9 +523,11 @@ impl WireMsg {
     /// [`io::ErrorKind::InvalidData`]; checksum mismatches additionally
     /// carry a typed [`WireError::Corrupt`] (see [`wire_error_in`]).
     /// Truncations fail with `UnexpectedEof`. Allocation stays bounded
-    /// on garbage: header strings are capped at 1 MiB up front, and the
-    /// payload buffer grows with bytes actually read, so a corrupt
-    /// `blob_len` cannot drive an unbounded upfront allocation.
+    /// on garbage: header strings are capped at 1 MiB up front, a
+    /// declared payload beyond [`MAX_PAYLOAD`] is refused with a typed
+    /// [`WireError::TooLarge`] *before any allocation*, and within the
+    /// cap the payload buffer grows with bytes actually read, so a
+    /// corrupt `blob_len` cannot drive an unbounded upfront allocation.
     pub fn read_from<Rd: Read>(r: &mut Rd) -> io::Result<WireMsg> {
         let mut cr = CrcReader { inner: &mut *r, crc: Crc32::new() };
         let mut magic = [0u8; 4];
@@ -520,8 +555,16 @@ impl WireMsg {
         if blob_count != 1 {
             return Err(bad_frame("unsupported blob geometry"));
         }
-        let blob_len = u64::from_le_bytes(read_array(&mut cr)?);
-        let blob_len = usize::try_from(blob_len).map_err(|_| bad_frame("payload too large"))?;
+        let declared = u64::from_le_bytes(read_array(&mut cr)?);
+        if declared > MAX_PAYLOAD as u64 {
+            // Typed refusal before any payload allocation: a corrupt or
+            // hostile length prefix never reserves memory for itself.
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                WireError::TooLarge { declared, cap: MAX_PAYLOAD as u64 },
+            ));
+        }
+        let blob_len = declared as usize;
         // Pre-reserve at most the header-string cap; beyond that the
         // buffer grows only as bytes actually arrive, so a garbage
         // length cannot allocate terabytes before the EOF shows up.
@@ -613,6 +656,310 @@ fn strategy_from_code(c: u8) -> Option<CopyStrategy> {
         2 => Some(CopyStrategy::FieldRunsPar),
         3 => Some(CopyStrategy::FieldWise),
         _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control frames (serving tier)
+// ---------------------------------------------------------------------------
+
+/// Which deadline a [`CtrlFrame::TimedOut`] disconnect reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeoutPhase {
+    /// No frame in progress: the connection sent nothing for the idle
+    /// budget and was evicted.
+    Idle,
+    /// A frame was started but not finished within the partial-frame
+    /// budget (slow-loris protection).
+    MidFrame,
+}
+
+impl TimeoutPhase {
+    fn code(self) -> u8 {
+        match self {
+            TimeoutPhase::Idle => 0,
+            TimeoutPhase::MidFrame => 1,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<TimeoutPhase> {
+        match c {
+            0 => Some(TimeoutPhase::Idle),
+            1 => Some(TimeoutPhase::MidFrame),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TimeoutPhase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TimeoutPhase::Idle => write!(f, "idle"),
+            TimeoutPhase::MidFrame => write!(f, "mid-frame"),
+        }
+    }
+}
+
+/// One serving-tier control/reply frame (magic [`CTRL_MAGIC`]).
+///
+/// These carry the coordinator's job protocol — submission and every
+/// typed outcome — across a process boundary, so failures that today
+/// die at the edge (the ingest `retry_after` hint, quota rejections,
+/// corruption detection, drain notices) reach the client as data
+/// instead of a silent close. Fields are deliberately primitive
+/// (layout/backend as `u8` codes, durations as integer ns/ms, floats as
+/// IEEE-754 bit patterns) so the transport layer stays independent of
+/// the coordinator's types; `llama::serve` owns the mapping.
+///
+/// Frame layout (all integers little-endian):
+///
+/// ```text
+/// magic     4 bytes  "LLWc"
+/// version   u16      WIRE_VERSION
+/// kind      u8       variant discriminant (0..=7)
+/// body      variant-specific fixed fields, in declaration order
+/// crc32     u32      CRC-32 of every preceding frame byte
+/// ```
+///
+/// Variable-length fields (the result's error string) are `u32` length
+/// + bytes, capped like header strings. A CRC mismatch surfaces as a
+/// typed [`WireError::Corrupt`] via [`wire_error_in`], exactly like
+/// view frames. Byte-level spec: `docs/SERVING.md` §6.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CtrlFrame {
+    /// Client → server: run one job.
+    Submit {
+        /// Client identity for per-client quota accounting.
+        client: u64,
+        /// Layout code (`serve` maps to `coordinator::Layout`).
+        layout: u8,
+        /// Backend code (`serve` maps to `coordinator::Backend`).
+        backend: u8,
+        /// Particle count.
+        n: u64,
+        /// Simulation steps.
+        steps: u64,
+        /// Deterministic init seed.
+        seed: u64,
+        /// Worker thread budget (0 = serial).
+        threads: u32,
+    },
+    /// Server → client: the job finished (successfully or not — a
+    /// non-empty `error` is the job's typed failure after retries).
+    Result {
+        /// Job id the server assigned at admission.
+        id: u64,
+        /// Execution attempts the coordinator used (retries + 1).
+        attempts: u32,
+        /// Threads the job ran with.
+        threads: u32,
+        /// Execution wall-clock, nanoseconds.
+        exec_ns: u64,
+        /// Queue wait, nanoseconds.
+        queue_ns: u64,
+        /// Energy drift (bit-exact IEEE-754 round trip).
+        energy_drift: f64,
+        /// Throughput in steps/s (bit-exact IEEE-754 round trip).
+        steps_per_sec: f64,
+        /// Job error after all retries; empty = success.
+        error: String,
+    },
+    /// Server → client: ingestion queue full; retry after the hinted
+    /// backoff (the `ingest` retry-after estimate, milliseconds).
+    QueueFull {
+        /// Suggested client backoff before resubmitting, ms (≥ 1).
+        retry_after_ms: u64,
+    },
+    /// Server → client: this client is at its per-client queue quota.
+    QuotaExceeded {
+        /// The client id that exceeded its quota.
+        client: u64,
+    },
+    /// Server → client: your last frame failed CRC or was malformed;
+    /// `expected`/`got` echo the checksums when known (`0, 0` for
+    /// framing-level garbage such as a bad magic). The server closes
+    /// the connection after sending this — the stream may be
+    /// desynchronized.
+    Corrupt {
+        /// CRC-32 the server computed.
+        expected: u32,
+        /// CRC-32 the frame carried.
+        got: u32,
+    },
+    /// Server → client: the server is draining (or closed) and accepts
+    /// no new work. Terminal for this server instance.
+    Draining,
+    /// Server → client, at accept time: the connection cap is reached;
+    /// the connection is being shed. Reconnect after the hint.
+    Shed {
+        /// Suggested client backoff before reconnecting, ms.
+        retry_after_ms: u64,
+    },
+    /// Server → client: a connection deadline expired ([`TimeoutPhase`]).
+    /// The server closes the connection after sending this.
+    TimedOut {
+        /// Which deadline fired.
+        phase: TimeoutPhase,
+    },
+}
+
+const K_SUBMIT: u8 = 0;
+const K_RESULT: u8 = 1;
+const K_QUEUE_FULL: u8 = 2;
+const K_QUOTA_EXCEEDED: u8 = 3;
+const K_CORRUPT: u8 = 4;
+const K_DRAINING: u8 = 5;
+const K_SHED: u8 = 6;
+const K_TIMED_OUT: u8 = 7;
+
+impl CtrlFrame {
+    /// The frame's wire discriminant.
+    pub fn kind_code(&self) -> u8 {
+        match self {
+            CtrlFrame::Submit { .. } => K_SUBMIT,
+            CtrlFrame::Result { .. } => K_RESULT,
+            CtrlFrame::QueueFull { .. } => K_QUEUE_FULL,
+            CtrlFrame::QuotaExceeded { .. } => K_QUOTA_EXCEEDED,
+            CtrlFrame::Corrupt { .. } => K_CORRUPT,
+            CtrlFrame::Draining => K_DRAINING,
+            CtrlFrame::Shed { .. } => K_SHED,
+            CtrlFrame::TimedOut { .. } => K_TIMED_OUT,
+        }
+    }
+
+    /// Write one framed control message (layout in the type docs).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        let crc = {
+            let mut cw = CrcWriter { inner: &mut *w, crc: Crc32::new() };
+            cw.write_all(&CTRL_MAGIC)?;
+            cw.write_all(&WIRE_VERSION.to_le_bytes())?;
+            cw.write_all(&[self.kind_code()])?;
+            match self {
+                CtrlFrame::Submit { client, layout, backend, n, steps, seed, threads } => {
+                    cw.write_all(&client.to_le_bytes())?;
+                    cw.write_all(&[*layout, *backend])?;
+                    cw.write_all(&n.to_le_bytes())?;
+                    cw.write_all(&steps.to_le_bytes())?;
+                    cw.write_all(&seed.to_le_bytes())?;
+                    cw.write_all(&threads.to_le_bytes())?;
+                }
+                CtrlFrame::Result {
+                    id,
+                    attempts,
+                    threads,
+                    exec_ns,
+                    queue_ns,
+                    energy_drift,
+                    steps_per_sec,
+                    error,
+                } => {
+                    cw.write_all(&id.to_le_bytes())?;
+                    cw.write_all(&attempts.to_le_bytes())?;
+                    cw.write_all(&threads.to_le_bytes())?;
+                    cw.write_all(&exec_ns.to_le_bytes())?;
+                    cw.write_all(&queue_ns.to_le_bytes())?;
+                    cw.write_all(&energy_drift.to_bits().to_le_bytes())?;
+                    cw.write_all(&steps_per_sec.to_bits().to_le_bytes())?;
+                    cw.write_all(&(error.len() as u32).to_le_bytes())?;
+                    cw.write_all(error.as_bytes())?;
+                }
+                CtrlFrame::QueueFull { retry_after_ms } | CtrlFrame::Shed { retry_after_ms } => {
+                    cw.write_all(&retry_after_ms.to_le_bytes())?;
+                }
+                CtrlFrame::QuotaExceeded { client } => {
+                    cw.write_all(&client.to_le_bytes())?;
+                }
+                CtrlFrame::Corrupt { expected, got } => {
+                    cw.write_all(&expected.to_le_bytes())?;
+                    cw.write_all(&got.to_le_bytes())?;
+                }
+                CtrlFrame::Draining => {}
+                CtrlFrame::TimedOut { phase } => {
+                    cw.write_all(&[phase.code()])?;
+                }
+            }
+            cw.crc.finish()
+        };
+        w.write_all(&crc.to_le_bytes())
+    }
+
+    /// Read one framed control message, verifying the trailing CRC-32
+    /// before returning. Error taxonomy matches
+    /// [`WireMsg::read_from`]: malformed frames are
+    /// [`io::ErrorKind::InvalidData`], checksum mismatches carry a
+    /// typed [`WireError::Corrupt`], truncations are `UnexpectedEof`.
+    pub fn read_from<Rd: Read>(r: &mut Rd) -> io::Result<CtrlFrame> {
+        let mut cr = CrcReader { inner: &mut *r, crc: Crc32::new() };
+        let mut magic = [0u8; 4];
+        cr.read_exact(&mut magic)?;
+        if magic != CTRL_MAGIC {
+            return Err(bad_frame("bad control magic"));
+        }
+        let version = u16::from_le_bytes(read_array(&mut cr)?);
+        if version != WIRE_VERSION {
+            return Err(bad_frame("unsupported wire version"));
+        }
+        let [kind] = read_array(&mut cr)?;
+        let frame = match kind {
+            K_SUBMIT => {
+                let client = u64::from_le_bytes(read_array(&mut cr)?);
+                let [layout, backend] = read_array(&mut cr)?;
+                let n = u64::from_le_bytes(read_array(&mut cr)?);
+                let steps = u64::from_le_bytes(read_array(&mut cr)?);
+                let seed = u64::from_le_bytes(read_array(&mut cr)?);
+                let threads = u32::from_le_bytes(read_array(&mut cr)?);
+                CtrlFrame::Submit { client, layout, backend, n, steps, seed, threads }
+            }
+            K_RESULT => {
+                let id = u64::from_le_bytes(read_array(&mut cr)?);
+                let attempts = u32::from_le_bytes(read_array(&mut cr)?);
+                let threads = u32::from_le_bytes(read_array(&mut cr)?);
+                let exec_ns = u64::from_le_bytes(read_array(&mut cr)?);
+                let queue_ns = u64::from_le_bytes(read_array(&mut cr)?);
+                let energy_drift = f64::from_bits(u64::from_le_bytes(read_array(&mut cr)?));
+                let steps_per_sec = f64::from_bits(u64::from_le_bytes(read_array(&mut cr)?));
+                let error = read_string(&mut cr)?;
+                CtrlFrame::Result {
+                    id,
+                    attempts,
+                    threads,
+                    exec_ns,
+                    queue_ns,
+                    energy_drift,
+                    steps_per_sec,
+                    error,
+                }
+            }
+            K_QUEUE_FULL => {
+                CtrlFrame::QueueFull { retry_after_ms: u64::from_le_bytes(read_array(&mut cr)?) }
+            }
+            K_QUOTA_EXCEEDED => {
+                CtrlFrame::QuotaExceeded { client: u64::from_le_bytes(read_array(&mut cr)?) }
+            }
+            K_CORRUPT => {
+                let expected = u32::from_le_bytes(read_array(&mut cr)?);
+                let got = u32::from_le_bytes(read_array(&mut cr)?);
+                CtrlFrame::Corrupt { expected, got }
+            }
+            K_DRAINING => CtrlFrame::Draining,
+            K_SHED => CtrlFrame::Shed { retry_after_ms: u64::from_le_bytes(read_array(&mut cr)?) },
+            K_TIMED_OUT => {
+                let [code] = read_array(&mut cr)?;
+                let phase =
+                    TimeoutPhase::from_code(code).ok_or_else(|| bad_frame("bad timeout phase"))?;
+                CtrlFrame::TimedOut { phase }
+            }
+            _ => return Err(bad_frame("bad control kind")),
+        };
+        let computed = cr.crc.finish();
+        let stored = u32::from_le_bytes(read_array(r)?);
+        if computed != stored {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                WireError::Corrupt { expected: computed, got: stored },
+            ));
+        }
+        Ok(frame)
     }
 }
 
@@ -869,5 +1216,156 @@ mod tests {
         let ok = err.kind() == io::ErrorKind::UnexpectedEof
             || err.kind() == io::ErrorKind::InvalidData;
         assert!(ok, "unexpected error kind: {err:?}");
+    }
+
+    /// Build a syntactically valid view-frame header declaring
+    /// `blob_len` payload bytes, then stop — no payload, no CRC.
+    fn header_declaring(blob_len: u64) -> Vec<u8> {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&WIRE_MAGIC);
+        frame.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        frame.push(0); // strategy BlobMemcpy
+        frame.push(1); // rank 1
+        frame.extend_from_slice(&4u64.to_le_bytes());
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.push(b'R');
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.push(b'F');
+        frame.extend_from_slice(&1u32.to_le_bytes()); // blob_count
+        frame.extend_from_slice(&blob_len.to_le_bytes());
+        frame
+    }
+
+    #[test]
+    fn declared_payload_at_cap_is_not_rejected_upfront() {
+        // Exactly MAX_PAYLOAD passes the cap check; the (absent) payload
+        // then fails as a truncation, not as TooLarge.
+        let frame = header_declaring(MAX_PAYLOAD as u64);
+        let err = WireMsg::read_from(&mut frame.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof, "got {err:?}");
+        assert!(wire_error_in(&err).is_none());
+    }
+
+    #[test]
+    fn declared_payload_over_cap_is_typed_before_allocation() {
+        // One byte over the cap: typed TooLarge, before any allocation —
+        // the frame ends right after the header, so if read_from had
+        // tried to read (or reserve) the payload it would have surfaced
+        // an EOF instead.
+        let frame = header_declaring(MAX_PAYLOAD as u64 + 1);
+        let err = WireMsg::read_from(&mut frame.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        match wire_error_in(&err) {
+            Some(WireError::TooLarge { declared, cap }) => {
+                assert_eq!(*declared, MAX_PAYLOAD as u64 + 1);
+                assert_eq!(*cap, MAX_PAYLOAD as u64);
+            }
+            other => panic!("expected TooLarge, got {other:?} ({err:?})"),
+        }
+        // And the absurd u64::MAX header from the legacy test is now
+        // typed too.
+        let err = WireMsg::read_from(&mut header_declaring(u64::MAX).as_slice()).unwrap_err();
+        assert!(matches!(wire_error_in(&err), Some(WireError::TooLarge { .. })));
+    }
+
+    fn all_ctrl_frames() -> Vec<CtrlFrame> {
+        vec![
+            CtrlFrame::Submit {
+                client: 7,
+                layout: 1,
+                backend: 0,
+                n: 4096,
+                steps: 12,
+                seed: 42,
+                threads: 3,
+            },
+            CtrlFrame::Result {
+                id: 9,
+                attempts: 2,
+                threads: 4,
+                exec_ns: 1_234_567,
+                queue_ns: 89_000,
+                energy_drift: 1.25e-9,
+                steps_per_sec: 1234.5,
+                error: String::new(),
+            },
+            CtrlFrame::Result {
+                id: 10,
+                attempts: 3,
+                threads: 1,
+                exec_ns: 0,
+                queue_ns: 0,
+                energy_drift: -0.0,
+                steps_per_sec: 0.0,
+                error: "job panicked: injected".into(),
+            },
+            CtrlFrame::QueueFull { retry_after_ms: 17 },
+            CtrlFrame::QuotaExceeded { client: 7 },
+            CtrlFrame::Corrupt { expected: 0xDEAD_BEEF, got: 0x0BAD_F00D },
+            CtrlFrame::Draining,
+            CtrlFrame::Shed { retry_after_ms: 100 },
+            CtrlFrame::TimedOut { phase: TimeoutPhase::Idle },
+            CtrlFrame::TimedOut { phase: TimeoutPhase::MidFrame },
+        ]
+    }
+
+    #[test]
+    fn ctrl_frames_round_trip() {
+        for frame in all_ctrl_frames() {
+            let mut buf = Vec::new();
+            frame.write_to(&mut buf).unwrap();
+            let back = CtrlFrame::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(back, frame);
+        }
+        // Several frames back-to-back on one stream parse in order.
+        let mut buf = Vec::new();
+        for frame in all_ctrl_frames() {
+            frame.write_to(&mut buf).unwrap();
+        }
+        let mut r = buf.as_slice();
+        for frame in all_ctrl_frames() {
+            assert_eq!(CtrlFrame::read_from(&mut r).unwrap(), frame);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn ctrl_frame_corruption_and_truncation_are_typed() {
+        let frame = CtrlFrame::Submit {
+            client: 1,
+            layout: 0,
+            backend: 1,
+            n: 64,
+            steps: 3,
+            seed: 5,
+            threads: 0,
+        };
+        let mut buf = Vec::new();
+        frame.write_to(&mut buf).unwrap();
+        // Every single-byte flip is rejected; flips past the fixed
+        // header surface as the typed Corrupt (CRC) error.
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x20;
+            let err = CtrlFrame::read_from(&mut bad.as_slice()).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "byte {i}: {err:?}");
+            if i >= 7 {
+                assert!(
+                    matches!(wire_error_in(&err), Some(WireError::Corrupt { .. })),
+                    "byte {i}: expected Corrupt, got {err:?}"
+                );
+            }
+        }
+        // Truncation anywhere is an error (EOF).
+        for cut in 0..buf.len() {
+            assert!(CtrlFrame::read_from(&mut &buf[..cut]).is_err(), "cut {cut}");
+        }
+        // A view frame on a control stream is refused at the magic.
+        let mut src = alloc_view(SoA::<P, _>::new((Dyn(2u32),)), &HeapAlloc);
+        fill(&mut src, 2);
+        let mut vframe = Vec::new();
+        encode(&src).write_to(&mut vframe).unwrap();
+        let err = CtrlFrame::read_from(&mut vframe.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
     }
 }
